@@ -1,0 +1,76 @@
+//! Burst scheduling + backpressure (paper §2.3, Fig. 3): when ACCRE is in
+//! a maintenance window, the coordinator's resource monitor redirects the
+//! campaign to a local server with a bounded in-flight pool; when the
+//! window ends, work returns to the HPC path.
+//!
+//! Run: `cargo run --release --example burst_scheduling`
+
+use medflow::archive::{Archive, SecurityTier};
+use medflow::container::ContainerArchive;
+use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::slurm::Maintenance;
+use medflow::workload::{ingest_cohort, SynthCohort};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::temp_dir().join(format!("medflow_burst_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+
+    let mut archive = Archive::at(&root.join("store"))?;
+    let cohort = SynthCohort {
+        name: "BURST".into(),
+        participants: 6,
+        sessions: 10,
+        tier: SecurityTier::General,
+    };
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 3)?;
+
+    let containers = ContainerArchive::open(&root.join("containers"))?;
+    let mut coord = Coordinator::new(archive, containers, None);
+
+    // ACCRE maintenance for the first simulated day
+    coord.add_maintenance(Maintenance {
+        start_s: 0.0,
+        end_s: 86_400.0,
+    });
+
+    // resource monitor → choose target at two submit times
+    let during = coord.choose_target(3_600.0, 4);
+    let after = coord.choose_target(100_000.0, 4);
+    println!("submit during maintenance → {during:?}");
+    println!("submit after maintenance  → {after:?}");
+    assert!(matches!(during, SubmitTarget::LocalBurst { .. }));
+    assert!(matches!(after, SubmitTarget::Hpc));
+
+    // run the burst campaign (bounded to 4 in-flight jobs = backpressure)
+    let cfg = CampaignConfig {
+        local_max_in_flight: 4,
+        ..Default::default()
+    };
+    let report = coord.run_campaign(&ds, "lesion_seg", during, &cfg)?;
+    println!(
+        "burst campaign: {} completed on local, makespan {:.1} h, cost ${:.2}",
+        report.completed,
+        report.makespan_s / 3600.0,
+        report.total_cost_dollars
+    );
+
+    // the resource monitor also reports storage + cluster state
+    let status = coord.resource_status(3_600.0, 0.0)?;
+    println!(
+        "resource status: maintenance={} general_store={} bytes",
+        status.cluster_in_maintenance, status.general_store_used_bytes
+    );
+    assert!(status.cluster_in_maintenance);
+
+    // after the window, the remaining pipeline runs on the HPC
+    let r2 = coord.run_campaign(&ds, "biscuit", after, &cfg)?;
+    println!(
+        "post-maintenance campaign: {} completed on HPC (makespan {:.1} h)",
+        r2.completed,
+        r2.makespan_s / 3600.0
+    );
+
+    std::fs::remove_dir_all(&root).ok();
+    println!("burst_scheduling OK");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: the smallest end-to-end medflow flow.
+//!
+//! 1. Synthesize a tiny DICOM cohort and ingest it (archive + BIDS tree).
+//! 2. Validate the BIDS dataset (Fig. 2 structure).
+//! 3. Query for unprocessed sessions and run one Freesurfer-like campaign
+//!    through the PJRT artifact on the simulated HPC.
+//! 4. Print the provenance of one output.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use medflow::archive::{Archive, SecurityTier};
+use medflow::bids::{validate_dataset, BidsName, Modality, Severity};
+use medflow::compute::load_runtime;
+use medflow::container::ContainerArchive;
+use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::provenance::Provenance;
+use medflow::workload::{ingest_cohort, SynthCohort};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::temp_dir().join(format!("medflow_quickstart_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+
+    // 1. ingest
+    let mut archive = Archive::at(&root.join("store"))?;
+    let cohort = SynthCohort {
+        name: "QUICKSTART".into(),
+        participants: 4,
+        sessions: 6,
+        tier: SecurityTier::General,
+    };
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 16, 42)?;
+    println!("ingested dataset '{}' with {} subjects", ds.name, ds.subjects()?.len());
+
+    // 2. validate
+    let issues = validate_dataset(&ds.root);
+    let errors = issues.iter().filter(|i| i.severity == Severity::Error).count();
+    println!("BIDS validation: {} issues ({} errors)", issues.len(), errors);
+    assert_eq!(errors, 0, "ingest must produce a valid BIDS tree");
+
+    // 3. campaign (uses the real PJRT artifact when artifacts/ is built)
+    let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    if runtime.is_none() {
+        println!("NOTE: artifacts/ not built — run `make artifacts` for real PJRT compute");
+    }
+    let containers = ContainerArchive::open(&root.join("containers"))?;
+    let mut coord = Coordinator::new(archive, containers, runtime.as_ref());
+    let report = coord.run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &CampaignConfig::default())?;
+    println!(
+        "campaign: {} queried, {} completed, {} skipped, makespan {:.1} h, cost ${:.2}",
+        report.queried,
+        report.completed,
+        report.skipped,
+        report.makespan_s / 3600.0,
+        report.total_cost_dollars
+    );
+    if report.artifact_exec_s > 0.0 {
+        println!("mean PJRT artifact execution: {:.3} s/scan", report.artifact_exec_s);
+    }
+    println!("--- skip CSV ---\n{}", report.skip_csv);
+
+    // 4. provenance of the first completed output
+    'outer: for sub in ds.subjects()? {
+        for ses in ds.sessions(&sub)? {
+            let name = BidsName::new(&sub, ses.as_deref(), Modality::T1w);
+            let p = ds.derivative_dir("freesurfer", &name).join("provenance.json");
+            if p.exists() {
+                let prov = Provenance::load(&p)?;
+                println!(
+                    "provenance: pipeline={} image={} env={} inputs={}",
+                    prov.pipeline,
+                    prov.container_image,
+                    prov.compute_env,
+                    prov.inputs.len()
+                );
+                break 'outer;
+            }
+        }
+    }
+
+    std::fs::remove_dir_all(&root).ok();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX (L2+L1) → HLO **text** artifacts for the rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the rust side unwraps with
+``to_tuple()``.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print_large_constants. The default printer elides big
+    # constants as `{...}`, which xla_extension 0.5.1's text parser silently
+    # parses as ZEROS — the baked Gaussian band operators would all vanish
+    # (bug found the hard way; see EXPERIMENTS.md §Debugging).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New jax emits `source_end_line`/`source_end_column` metadata the 0.5.1
+    # text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(shape, getattr(jnp, dtype))
+
+
+def build_artifacts():
+    """Return {name: (lowered, input_specs, output_names)} for every artifact."""
+    seg_in = [("vol", model.VOL_SHAPE, "float32")]
+    dwi_in = [("dwi", model.DWI_SHAPE, "float32"), ("bvals", (model.DWI_DIRS + 1,), "float32")]
+    arts = {
+        "seg_pipeline": (
+            jax.jit(model.seg_pipeline).lower(_spec(model.VOL_SHAPE)),
+            seg_in,
+            ["seg", "volumes", "means", "edge_qa", "snr_qa"],
+        ),
+        "dwi_preproc": (
+            jax.jit(model.dwi_preproc).lower(
+                _spec(model.DWI_SHAPE), _spec((model.DWI_DIRS + 1,))
+            ),
+            dwi_in,
+            ["md_map", "mean_adc", "b0_snr"],
+        ),
+        "atlas_register": (
+            jax.jit(model.atlas_register).lower(
+                _spec(model.VOL_SHAPE), _spec(model.VOL_SHAPE)
+            ),
+            [("moving", model.VOL_SHAPE, "float32"), ("fixed", model.VOL_SHAPE, "float32")],
+            ["theta", "warped", "final_mse", "mse_trace"],
+        ),
+    }
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, (lowered, inputs, outputs) in build_artifacts().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "sha256": digest,
+                "inputs": [
+                    {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in inputs
+                ],
+                "outputs": outputs,
+                "return_tuple": True,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars, sha256 {digest[:12]})")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 performance estimation: VMEM footprint + MXU/VPU utilization per
+Pallas kernel, derived from BlockSpecs (interpret=True gives CPU-numpy
+wall-clock only, which is NOT a TPU proxy — so the perf pass optimizes
+*structure*: bytes moved, VMEM residency, MXU-shaped contractions).
+
+Usage: ``cd python && python -m compile.estimate`` (table to stdout; also
+invoked by pytest to assert the kernels stay within VMEM).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# TPU-v4-ish envelope used for roofline estimates.
+VMEM_BYTES = 16 * 2**20  # ~16 MiB per core
+HBM_GBPS = 1200.0  # HBM bandwidth, GB/s
+MXU_FLOPS = 137e12  # bf16 matmul peak, FLOP/s (f32 ≈ /4)
+F32_MXU_FLOPS = MXU_FLOPS / 4
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    grid_steps: int
+    vmem_per_step_bytes: int
+    hbm_traffic_bytes: int
+    flops: int
+    #: arithmetic intensity (FLOP / HBM byte)
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_traffic_bytes, 1)
+
+    def bound(self) -> str:
+        # roofline knee: intensity where compute time == memory time
+        knee = F32_MXU_FLOPS / (HBM_GBPS * 1e9)
+        return "compute" if self.intensity() > knee else "memory"
+
+    def est_seconds(self) -> float:
+        t_mem = self.hbm_traffic_bytes / (HBM_GBPS * 1e9)
+        t_flop = self.flops / F32_MXU_FLOPS
+        return max(t_mem, t_flop)
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_per_step_bytes <= VMEM_BYTES
+
+
+def banded_estimate(m: int = 4096, n: int = 64, block_m: int = 1024) -> KernelEstimate:
+    """apply_banded_last: (m,n) @ (n,n) tiled over block_m rows."""
+    steps = m // block_m
+    vmem = 4 * (block_m * n + n * n + block_m * n)  # in + operator + out
+    hbm = 4 * (m * n + n * n + m * n)  # stream volume in+out, operator once
+    flops = 2 * m * n * n  # dense contraction per element
+    return KernelEstimate("banded_matmul(m=%d,n=%d,bm=%d)" % (m, n, block_m), steps, vmem, hbm, flops)
+
+
+def gaussian3d_estimate(n: int = 64, block_m: int = 1024) -> KernelEstimate:
+    """Three banded passes over an n³ volume."""
+    one = banded_estimate(n * n, n, block_m)
+    return KernelEstimate(
+        f"gaussian_blur3d(n={n})",
+        3 * one.grid_steps,
+        one.vmem_per_step_bytes,
+        3 * one.hbm_traffic_bytes,
+        3 * one.flops,
+    )
+
+
+def elementwise_estimate(n: int = 262144, block: int = 32768, inputs: int = 3) -> KernelEstimate:
+    vmem = 4 * block * (inputs + 1)
+    hbm = 4 * n * (inputs + 1)
+    flops = n * (2 * inputs + 1)  # mul+add chain + sqrt
+    return KernelEstimate(f"magnitude3(n={n})", n // block, vmem, hbm, flops)
+
+
+def resample_estimate(nvol: int = 64, nsamples: int = 262144, block: int = 32768) -> KernelEstimate:
+    """Whole volume resident in VMEM + coordinate blocks streamed."""
+    vol_bytes = 4 * nvol**3
+    vmem = vol_bytes + 4 * block * 4  # volume + 3 coord blocks + out block
+    hbm = vol_bytes + 4 * nsamples * 4
+    flops = nsamples * 32  # 8 gathers + 7 lerps ≈ 32 flops each
+    return KernelEstimate(f"resample3d(vol={nvol}³)", nsamples // block, vmem, hbm, flops)
+
+
+def all_estimates():
+    return [
+        banded_estimate(),
+        gaussian3d_estimate(),
+        elementwise_estimate(),
+        resample_estimate(),
+    ]
+
+
+def format_table() -> str:
+    rows = [
+        f"{'kernel':<34}{'steps':>6}{'VMEM/step':>12}{'HBM bytes':>12}"
+        f"{'FLOPs':>12}{'intensity':>10}{'bound':>8}{'est µs':>8}"
+    ]
+    for e in all_estimates():
+        rows.append(
+            f"{e.name:<34}{e.grid_steps:>6}{e.vmem_per_step_bytes:>12,}"
+            f"{e.hbm_traffic_bytes:>12,}{e.flops:>12,}{e.intensity():>10.2f}"
+            f"{e.bound():>8}{e.est_seconds() * 1e6:>8.1f}"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(f"TPU envelope: VMEM {VMEM_BYTES // 2**20} MiB, HBM {HBM_GBPS:.0f} GB/s, "
+          f"f32 MXU {F32_MXU_FLOPS / 1e12:.1f} TFLOP/s")
+    print(format_table())

@@ -1,0 +1,25 @@
+"""L1 Pallas kernels for medflow imaging pipelines.
+
+All kernels are lowered with ``interpret=True`` so they become plain HLO that
+the CPU PJRT client (rust ``xla`` crate) can execute. On a real TPU the same
+BlockSpecs map blocks into VMEM and the banded matmuls onto the MXU; see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from .banded import apply_banded_last, apply_banded_axis, gaussian_band, diff_band
+from .gaussian3d import gaussian_blur3d
+from .grad3d import gradient_magnitude3d
+from .elementwise import magnitude3, bias_correct
+from .resample import resample3d
+
+__all__ = [
+    "apply_banded_last",
+    "apply_banded_axis",
+    "gaussian_band",
+    "diff_band",
+    "gaussian_blur3d",
+    "gradient_magnitude3d",
+    "magnitude3",
+    "bias_correct",
+    "resample3d",
+]

@@ -1,0 +1,127 @@
+"""Banded-operator application along an axis, as a Pallas kernel.
+
+The medflow imaging hot spot is separable small-filter convolution (Gaussian
+denoise / bias-field smoothing) and finite differences. On TPU the efficient
+formulation is NOT a halo-exchange stencil (shared-memory idiom from GPU
+papers) but a **banded matmul**: applying a length-(2r+1) filter along an
+axis of size N equals multiplying by an (N, N) banded Toeplitz operator B.
+That turns the stencil into an MXU-shaped ``(M, N) @ (N, N)`` contraction:
+
+  * the volume is reshaped so the target axis is last → ``x2d: (M, N)``,
+  * the grid tiles M into ``block_m`` rows; each grid step loads one
+    ``(block_m, N)`` slab plus the full ``(N, N)`` operator into VMEM,
+  * the kernel computes ``slab @ B.T`` with ``preferred_element_type=f32``.
+
+VMEM per grid step (f32, N=64, block_m=256): slab 64 KiB + operator 16 KiB +
+out 64 KiB = 144 KiB — comfortably inside ~16 MiB VMEM, leaving room for
+double buffering (see DESIGN.md §Perf).
+
+Edge handling: rows of B near the boundary hold the *truncated, renormalized*
+filter, matching the classical "renormalized Gaussian at the border"
+convention used by neuroimaging smoothers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Rows per grid step. Perf pass (EXPERIMENTS.md §Perf): 1024×64 f32 slabs →
+# VMEM/step ≈ 528 KiB (×2 for double-buffering ≈ 1 MiB, well under 16 MiB)
+# and 4× fewer grid steps than the original 256 — the interpret-mode grid
+# loop is the dominant artifact cost on CPU-PJRT, and on TPU fewer, larger
+# MXU contractions amortize issue overhead.
+DEFAULT_BLOCK_M = 1024
+
+
+def gaussian_band(n: int, sigma: float, dtype=np.float32) -> np.ndarray:
+    """Dense (n, n) banded Toeplitz operator for a truncated Gaussian.
+
+    Radius is ceil(3*sigma); each row is renormalized to sum to 1 so the
+    operator is intensity-preserving on constant inputs (property-tested).
+    Built with numpy at trace time — it is a compile-time constant baked
+    into the HLO artifact.
+    """
+    if sigma <= 0:
+        return np.eye(n, dtype=dtype)
+    r = int(np.ceil(3.0 * sigma))
+    offsets = np.arange(-r, r + 1)
+    taps = np.exp(-0.5 * (offsets / sigma) ** 2)
+    b = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        lo = max(0, i - r)
+        hi = min(n, i + r + 1)
+        row = taps[(lo - i) + r : (hi - i) + r]
+        b[i, lo:hi] = row / row.sum()
+    return b.astype(dtype)
+
+
+def diff_band(n: int, dtype=np.float32) -> np.ndarray:
+    """Central-difference operator (one-sided at the boundary).
+
+    Row i of the result computes d[i] = (x[i+1] - x[i-1]) / 2 in the
+    interior, with forward/backward differences at the two edges — the
+    standard ``numpy.gradient`` convention, which ``ref.py`` mirrors.
+    """
+    b = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        if i == 0:
+            b[0, 0], b[0, 1] = -1.0, 1.0
+        elif i == n - 1:
+            b[i, i - 1], b[i, i] = -1.0, 1.0
+        else:
+            b[i, i - 1], b[i, i + 1] = -0.5, 0.5
+    return b.astype(dtype)
+
+
+def _banded_kernel(x_ref, b_ref, o_ref):
+    """One grid step: (block_m, n) slab times the full (n, n) operator."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def apply_banded_last(x2d, band, *, block_m: int = DEFAULT_BLOCK_M, interpret: bool = True):
+    """Apply the (n, n) banded operator to the last axis of ``x2d: (m, n)``.
+
+    ``m`` must be divisible by ``block_m`` (callers pad; 64³ volumes give
+    m = 4096 which all power-of-two blocks divide).
+    """
+    m, n = x2d.shape
+    if m % block_m:
+        raise ValueError(f"m={m} not divisible by block_m={block_m}")
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _banded_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2d.dtype),
+        interpret=interpret,
+    )(x2d, band)
+
+
+def apply_banded_axis(vol, band, axis: int, *, block_m: int = DEFAULT_BLOCK_M):
+    """Apply a banded operator along ``axis`` of an N-D volume.
+
+    Reshapes so the target axis is last (an XLA transpose that fuses with
+    neighbouring ops), runs the Pallas banded matmul, and restores layout.
+    """
+    axis = axis % vol.ndim
+    moved = jnp.moveaxis(vol, axis, -1)
+    lead = moved.shape[:-1]
+    n = moved.shape[-1]
+    m = int(np.prod(lead)) if lead else 1
+    bm = block_m
+    while m % bm:
+        bm //= 2  # degrade gracefully for odd leading sizes
+    out2d = apply_banded_last(moved.reshape(m, n), band, block_m=max(bm, 1))
+    return jnp.moveaxis(out2d.reshape(*lead, n), -1, axis)

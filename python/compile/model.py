@@ -1,0 +1,218 @@
+"""L2 — the JAX compute graphs for medflow's containerized pipelines.
+
+These are the numeric cores of the paper's image-processing pipelines
+(Freesurfer-like structural segmentation; PreQual-like DWI preprocessing),
+written in JAX, calling the L1 Pallas kernels, and AOT-lowered by
+``aot.py`` into ``artifacts/*.hlo.txt`` that the rust runtime executes via
+PJRT. Python never runs on the job path.
+
+Shapes are static (AOT): one T1w volume is ``(64, 64, 64) f32``; a DWI
+shell is ``(7, 64, 64, 64) f32`` (one b0 + 6 directions). The rust
+coordinator tiles larger scans onto these artifact shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bias_correct, gaussian_blur3d, gradient_magnitude3d
+
+VOL_SHAPE = (64, 64, 64)
+DWI_DIRS = 6
+DWI_SHAPE = (DWI_DIRS + 1, *VOL_SHAPE)
+
+# Freesurfer-like pipeline constants (compile-time).
+BIAS_SIGMA = 8.0  # broad field for bias estimation
+DENOISE_SIGMA = 1.0
+EM_ITERS = 8
+N_TISSUES = 3  # CSF / GM / WM
+
+
+def _em_step(carry, _):
+    """One EM iteration of a 3-class Gaussian intensity mixture.
+
+    carry = (v_flat, mu[3], var[3], pi[3]). The responsibilities are the
+    classic soft assignment; mu/var/pi are the weighted MLE updates.
+    """
+    v, mu, var, pi = carry
+    # log N(v | mu_k, var_k) + log pi_k, shape (n, 3)
+    diff = v[:, None] - mu[None, :]
+    log_p = -0.5 * diff**2 / var[None, :] - 0.5 * jnp.log(var[None, :]) + jnp.log(pi[None, :])
+    log_p = log_p - jax.scipy.special.logsumexp(log_p, axis=1, keepdims=True)
+    resp = jnp.exp(log_p)  # (n, 3)
+    nk = jnp.sum(resp, axis=0) + 1e-6
+    mu_new = (resp * v[:, None]).sum(axis=0) / nk
+    var_new = (resp * (v[:, None] - mu_new[None, :]) ** 2).sum(axis=0) / nk + 1e-6
+    pi_new = nk / v.shape[0]
+    return (v, mu_new, var_new, pi_new), None
+
+
+def seg_pipeline(vol):
+    """Freesurfer/SLANT-like structural pipeline on one T1w volume.
+
+    Stages: bias-field correction (Pallas Gaussian + fused divide) →
+    denoise (Pallas Gaussian) → min-max normalization → K-step EM tissue
+    classification → hard segmentation + per-tissue volumes/means + QA.
+
+    Returns (tuple of arrays — the artifact output tuple):
+      seg        (64³ f32)  hard labels 0/1/2 by ascending mean intensity
+      posteriors (3, 64³ flat f32 reduced to per-tissue voxel counts) — see
+                 ``volumes``
+      volumes    (3,) f32   soft tissue volumes in voxels
+      means      (3,) f32   tissue mean intensities (normalized units)
+      edge_qa    () f32     mean gradient magnitude (sharpness QA)
+      snr_qa     () f32     mean/std of corrected volume (SNR proxy)
+    """
+    vol = vol.astype(jnp.float32)
+    smooth_broad = gaussian_blur3d(vol, BIAS_SIGMA)
+    corrected = bias_correct(vol, smooth_broad)
+    denoised = gaussian_blur3d(corrected, DENOISE_SIGMA)
+
+    lo = jnp.min(denoised)
+    hi = jnp.max(denoised)
+    norm = (denoised - lo) / jnp.maximum(hi - lo, 1e-6)
+
+    v = norm.reshape(-1)
+    # Perf (EXPERIMENTS.md §Perf L2): fit the mixture on a 4× strided
+    # subsample — statistically equivalent for a 3-class intensity mixture
+    # over 64³ voxels (65k samples remain) and cuts the EM scan's HLO work
+    # 4× — then compute responsibilities over the full volume once.
+    v_fit = v[::4]
+    mu0 = jnp.array([0.2, 0.5, 0.8], dtype=jnp.float32)
+    var0 = jnp.full((N_TISSUES,), 0.02, dtype=jnp.float32)
+    pi0 = jnp.full((N_TISSUES,), 1.0 / N_TISSUES, dtype=jnp.float32)
+    (_, mu, var, pi), _ = jax.lax.scan(_em_step, (v_fit, mu0, var0, pi0), None, length=EM_ITERS)
+
+    diff = v[:, None] - mu[None, :]
+    log_p = -0.5 * diff**2 / var[None, :] - 0.5 * jnp.log(var[None, :]) + jnp.log(pi[None, :])
+    log_p = log_p - jax.scipy.special.logsumexp(log_p, axis=1, keepdims=True)
+    resp = jnp.exp(log_p)
+
+    # Order classes by ascending mean so labels are stable (CSF < GM < WM).
+    order = jnp.argsort(mu)
+    resp = resp[:, order]
+    mu_sorted = mu[order]
+
+    seg = jnp.argmax(resp, axis=1).astype(jnp.float32).reshape(VOL_SHAPE)
+    volumes = resp.sum(axis=0)
+    edge_qa = jnp.mean(gradient_magnitude3d(norm))
+    snr_qa = jnp.mean(corrected) / (jnp.std(corrected) + 1e-6)
+    return seg, volumes, mu_sorted, edge_qa, snr_qa
+
+
+def dwi_preproc(dwi, bvals):
+    """PreQual-like DWI preprocessing on one 6-direction shell + b0.
+
+    Stages: per-gradient Pallas Gaussian denoise → ADC per direction →
+    mean-diffusivity map → per-direction mean ADC + SNR QA.
+
+    Returns: (md_map (64³), mean_adc (6,), b0_snr ()).
+    """
+    dwi = dwi.astype(jnp.float32)
+    denoised = jax.vmap(lambda v: gaussian_blur3d(v, DENOISE_SIGMA))(dwi)
+    b0 = jnp.maximum(denoised[0], 1e-3)
+    grads = jnp.maximum(denoised[1:], 1e-3)
+    ratio = jnp.clip(grads / b0[None], 1e-4, 1.0)
+    adc = -jnp.log(ratio) / jnp.maximum(bvals[1:, None, None, None], 1.0)
+    md = jnp.mean(adc, axis=0)
+    mean_adc = jnp.mean(adc, axis=(1, 2, 3))
+    b0_snr = jnp.mean(b0) / (jnp.std(b0) + 1e-6)
+    return md, mean_adc, b0_snr
+
+
+# ---------------------------------------------------------------------------
+# Atlas registration (the paper's "atlas-based registration" pipeline).
+# 4-DOF (translation + isotropic log-scale) intensity-based registration by
+# gradient descent with an *analytic* gradient (no autodiff through the
+# Pallas resampler): ∂MSE/∂θ = E[residual · ∇M(φ(x)) · ∂φ/∂θ].
+# ---------------------------------------------------------------------------
+
+REG_ITERS = 60
+# Sign-descent step sizes (voxels / log-units) with exponential decay: robust
+# to the tiny raw-gradient magnitudes of normalized-intensity volumes and
+# convergent in a fixed iteration count (AOT needs static control flow).
+REG_STEP0 = jnp.array([0.5, 0.5, 0.5, 0.02], dtype=jnp.float32)
+REG_DECAY = 0.93
+
+
+def _warp_coords(theta):
+    """Sampling grid for θ = (tx, ty, tz, log_s): x_m = s·(x_f - c) + c + t."""
+    from compile.kernels import resample3d  # local import keeps namespace tidy
+
+    del resample3d
+    n = VOL_SHAPE[0]
+    c = (n - 1) / 2.0
+    i = jnp.arange(n, dtype=jnp.float32)
+    gx, gy, gz = jnp.meshgrid(i, i, i, indexing="ij")
+    s = jnp.exp(theta[3])
+    xs = s * (gx - c) + c + theta[0]
+    ys = s * (gy - c) + c + theta[1]
+    zs = s * (gz - c) + c + theta[2]
+    return gx, gy, gz, xs, ys, zs
+
+
+def _reg_step(carry, k):
+    from compile.kernels import resample3d
+
+    moving, fixed, mgx, mgy, mgz, theta = carry
+    gx, gy, gz, xs, ys, zs = _warp_coords(theta)
+    warped = resample3d(moving, xs, ys, zs)
+    wgx = resample3d(mgx, xs, ys, zs)
+    wgy = resample3d(mgy, xs, ys, zs)
+    wgz = resample3d(mgz, xs, ys, zs)
+    r = warped - fixed
+    n = r.size
+    c = (VOL_SHAPE[0] - 1) / 2.0
+    s = jnp.exp(theta[3])
+    # ∂φ/∂t = 1; ∂φ/∂log_s = s·(x_f − c) per axis
+    g_t = jnp.stack(
+        [jnp.sum(r * wgx), jnp.sum(r * wgy), jnp.sum(r * wgz)]
+    ) * (2.0 / n)
+    g_s = (
+        jnp.sum(r * (wgx * (gx - c) + wgy * (gy - c) + wgz * (gz - c)))
+        * s
+        * (2.0 / n)
+    )
+    grad = jnp.concatenate([g_t, g_s[None]])
+    step = REG_STEP0 * (REG_DECAY**k)
+    theta = theta - step * jnp.sign(grad)
+    mse = jnp.mean(r * r)
+    return (moving, fixed, mgx, mgy, mgz, theta), mse
+
+
+def atlas_register(moving, fixed):
+    """Register `moving` to `fixed` (both 64³ f32), 4-DOF.
+
+    Returns (theta (4,), warped (64³), final_mse (), mse_trace (REG_ITERS,)).
+    """
+    from compile.kernels import apply_banded_axis, diff_band, gaussian_blur3d, resample3d
+    import numpy as np
+
+    moving = gaussian_blur3d(moving.astype(jnp.float32), 1.0)
+    fixed = gaussian_blur3d(fixed.astype(jnp.float32), 1.0)
+    # spatial gradients of the moving image (banded central differences)
+    grads = []
+    for axis in range(3):
+        band = diff_band(VOL_SHAPE[axis], dtype=np.float32)
+        grads.append(apply_banded_axis(moving, band, axis))
+    theta0 = jnp.zeros((4,), dtype=jnp.float32)
+    carry = (moving, fixed, grads[0], grads[1], grads[2], theta0)
+    ks = jnp.arange(REG_ITERS, dtype=jnp.float32)
+    (_, _, _, _, _, theta), mse_trace = jax.lax.scan(_reg_step, carry, ks)
+    _, _, _, xs, ys, zs = _warp_coords(theta)
+    warped = resample3d(moving, xs, ys, zs)
+    final_mse = jnp.mean((warped - fixed) ** 2)
+    return theta, warped, final_mse, mse_trace
+
+
+def jit_seg():
+    return jax.jit(lambda v: seg_pipeline(v))
+
+
+def jit_dwi():
+    return jax.jit(lambda d, b: dwi_preproc(d, b))
+
+
+def jit_register():
+    return jax.jit(lambda m, f: atlas_register(m, f))

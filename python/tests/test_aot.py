@@ -1,0 +1,96 @@
+"""AOT path: artifacts lower, manifest is consistent, HLO text is loadable."""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    arts = aot.build_artifacts()
+    manifest = {"artifacts": []}
+    for name, (lowered, inputs, outputs) in arts.items():
+        text = aot.to_hlo_text(lowered)
+        p = out / f"{name}.hlo.txt"
+        p.write_text(text)
+        manifest["artifacts"].append(
+            {"name": name, "file": p.name, "sha256": hashlib.sha256(text.encode()).hexdigest(),
+             "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+             "outputs": outputs}
+        )
+    (out / "manifest.json").write_text(json.dumps(manifest))
+    return out, manifest
+
+
+def test_artifact_set(built):
+    _, manifest = built
+    assert {a["name"] for a in manifest["artifacts"]} == {
+        "seg_pipeline",
+        "dwi_preproc",
+        "atlas_register",
+    }
+
+
+def test_hlo_text_nonempty_and_parsable_header(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert len(text) > 1000
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+
+def test_hlo_entry_is_tuple(built):
+    out, _ = built
+    text = (out / "seg_pipeline.hlo.txt").read_text()
+    # return_tuple=True → root of entry computation is a tuple of 5 outputs
+    assert "(f32[64,64,64]" in text.replace(" ", "")
+
+
+def test_manifest_shapes_match_model(built):
+    _, manifest = built
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    seg = by_name["seg_pipeline"]
+    assert seg["inputs"][0]["shape"] == list(model.VOL_SHAPE)
+    dwi = by_name["dwi_preproc"]
+    assert dwi["inputs"][0]["shape"] == list(model.DWI_SHAPE)
+    assert dwi["inputs"][1]["shape"] == [model.DWI_DIRS + 1]
+
+
+def test_sha256_stable(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+
+
+def test_large_constants_not_elided(built):
+    """Default HLO printing elides big constants as `{...}`, which the
+    xla_extension 0.5.1 text parser silently reads as ZEROS. Regression
+    guard for the print_large_constants fix."""
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert "{...}" not in text, f"{a['name']} has elided constants"
+
+
+def test_no_unparseable_metadata(built):
+    """jax ≥0.6 emits source_end_line metadata the 0.5.1 parser rejects."""
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert "source_end_line" not in text
+
+
+def test_no_mosaic_custom_calls(built):
+    """interpret=True must lower Pallas to plain HLO the CPU client can run."""
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()

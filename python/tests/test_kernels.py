@@ -1,0 +1,208 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp/numpy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    apply_banded_axis,
+    apply_banded_last,
+    bias_correct,
+    diff_band,
+    gaussian_band,
+    gaussian_blur3d,
+    gradient_magnitude3d,
+    magnitude3,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, seed=None):
+    r = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray(r.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- banded ops
+class TestBandedOperators:
+    @pytest.mark.parametrize("n", [8, 16, 64])
+    @pytest.mark.parametrize("sigma", [0.5, 1.0, 4.0])
+    def test_gaussian_band_rows_sum_to_one(self, n, sigma):
+        b = gaussian_band(n, sigma)
+        np.testing.assert_allclose(b.sum(axis=1), np.ones(n), rtol=1e-6)
+
+    def test_gaussian_band_zero_sigma_is_identity(self):
+        np.testing.assert_array_equal(gaussian_band(16, 0.0), np.eye(16, dtype=np.float32))
+
+    def test_gaussian_band_symmetric_interior(self):
+        b = gaussian_band(64, 2.0)
+        # interior rows are shifted copies (Toeplitz)
+        np.testing.assert_allclose(b[20, 14:27], b[30, 24:37], rtol=1e-6)
+
+    def test_gaussian_band_is_banded(self):
+        sigma = 1.5
+        r = int(np.ceil(3 * sigma))
+        b = gaussian_band(32, sigma)
+        for i in range(32):
+            for j in range(32):
+                if abs(i - j) > r:
+                    assert b[i, j] == 0.0
+
+    def test_diff_band_matches_numpy_gradient(self):
+        x = np.asarray(rand((64,)))
+        d = diff_band(64) @ x
+        np.testing.assert_allclose(d, np.gradient(x), rtol=1e-5, atol=1e-6)
+
+    def test_diff_band_kills_constants(self):
+        d = diff_band(32) @ np.ones(32, dtype=np.float32)
+        np.testing.assert_allclose(d, np.zeros(32), atol=1e-7)
+
+
+class TestApplyBanded:
+    @pytest.mark.parametrize("m,n,block_m", [(256, 64, 256), (512, 64, 128), (1024, 32, 256)])
+    def test_matches_ref_last(self, m, n, block_m):
+        x = rand((m, n))
+        band = jnp.asarray(gaussian_band(n, 1.0))
+        got = apply_banded_last(x, band, block_m=block_m)
+        np.testing.assert_allclose(got, ref.ref_apply_banded_last(x, band), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("axis", [0, 1, 2])
+    def test_matches_ref_axis(self, axis):
+        x = rand((16, 24, 32))
+        band = jnp.asarray(gaussian_band(x.shape[axis], 1.5))
+        got = apply_banded_axis(x, band, axis)
+        want = ref.ref_apply_banded_axis(x, band, axis)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_bad_block_raises(self):
+        x = rand((100, 64))
+        band = jnp.asarray(gaussian_band(64, 1.0))
+        with pytest.raises(ValueError):
+            apply_banded_last(x, band, block_m=64)
+
+    def test_identity_band_is_noop(self):
+        x = rand((256, 64))
+        got = apply_banded_last(x, jnp.eye(64), block_m=128)
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        logm=st.integers(min_value=1, max_value=4),
+        n=st.sampled_from([16, 32, 64]),
+        sigma=st.floats(min_value=0.2, max_value=5.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_banded_last(self, logm, n, sigma, seed):
+        m = 64 * (2**logm)
+        x = rand((m, n), seed=seed)
+        band = jnp.asarray(gaussian_band(n, sigma))
+        got = apply_banded_last(x, band, block_m=64)
+        np.testing.assert_allclose(got, ref.ref_apply_banded_last(x, band), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- gaussian blur
+class TestGaussianBlur3d:
+    def test_matches_ref(self):
+        x = rand((32, 32, 32))
+        np.testing.assert_allclose(
+            gaussian_blur3d(x, 1.0), ref.ref_gaussian_blur3d(x, 1.0), rtol=1e-5, atol=1e-5
+        )
+
+    def test_anisotropic_matches_ref(self):
+        x = rand((16, 32, 64))
+        s = (0.5, 2.0, 0.0)
+        np.testing.assert_allclose(
+            gaussian_blur3d(x, s), ref.ref_gaussian_blur3d(x, s), rtol=1e-5, atol=1e-5
+        )
+
+    def test_preserves_constant_volume(self):
+        x = jnp.full((16, 16, 16), 3.25, dtype=jnp.float32)
+        np.testing.assert_allclose(gaussian_blur3d(x, 2.0), x, rtol=1e-5)
+
+    def test_reduces_variance(self):
+        x = rand((32, 32, 32))
+        assert float(jnp.var(gaussian_blur3d(x, 2.0))) < float(jnp.var(x))
+
+    def test_preserves_mean_approximately(self):
+        x = rand((32, 32, 32)) + 10.0
+        got = float(jnp.mean(gaussian_blur3d(x, 1.5)))
+        assert abs(got - float(jnp.mean(x))) < 0.05
+
+    def test_zero_sigma_noop(self):
+        x = rand((16, 16, 16))
+        np.testing.assert_allclose(gaussian_blur3d(x, 0.0), x)
+
+    def test_rank_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            gaussian_blur3d(rand((16, 16, 16)), (1.0, 2.0))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sigma=st.floats(min_value=0.3, max_value=6.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_blur(self, sigma, seed):
+        x = rand((16, 16, 16), seed=seed)
+        np.testing.assert_allclose(
+            gaussian_blur3d(x, sigma), ref.ref_gaussian_blur3d(x, sigma), rtol=2e-5, atol=2e-5
+        )
+
+
+# ---------------------------------------------------------- gradient kernels
+class TestGradient:
+    def test_matches_banded_ref(self):
+        x = rand((24, 24, 24))
+        np.testing.assert_allclose(
+            gradient_magnitude3d(x), ref.ref_gradient_magnitude3d(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_matches_independent_numpy_oracle(self):
+        x = rand((16, 24, 32))
+        got = np.asarray(gradient_magnitude3d(x))
+        want = ref.ref_gradient_magnitude3d_numpy(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_constant_volume_has_zero_gradient(self):
+        x = jnp.full((16, 16, 16), 7.0, dtype=jnp.float32)
+        np.testing.assert_allclose(gradient_magnitude3d(x), jnp.zeros_like(x), atol=1e-6)
+
+    def test_linear_ramp_gradient(self):
+        # v(x,y,z) = 2x has |∇v| = 2 everywhere (unit spacing).
+        i = jnp.arange(16, dtype=jnp.float32)
+        x = jnp.broadcast_to(2.0 * i[:, None, None], (16, 16, 16))
+        np.testing.assert_allclose(gradient_magnitude3d(x), jnp.full((16, 16, 16), 2.0), rtol=1e-5)
+
+
+class TestElementwise:
+    def test_magnitude3_matches_ref(self):
+        a, b, c = rand((32, 32, 32)), rand((32, 32, 32)), rand((32, 32, 32))
+        np.testing.assert_allclose(
+            magnitude3(a, b, c), ref.ref_magnitude3(a, b, c), rtol=1e-6, atol=1e-6
+        )
+
+    def test_magnitude3_odd_size_falls_back_to_smaller_block(self):
+        a = rand((5, 7, 9))
+        np.testing.assert_allclose(
+            magnitude3(a, a, a), ref.ref_magnitude3(a, a, a), rtol=1e-6, atol=1e-6
+        )
+
+    def test_bias_correct_matches_ref(self):
+        v = rand((32, 32, 32)) + 5.0
+        s = ref.ref_gaussian_blur3d(v, 4.0)
+        np.testing.assert_allclose(
+            bias_correct(v, s), ref.ref_bias_correct(v, s), rtol=1e-5, atol=1e-5
+        )
+
+    def test_bias_correct_flattens_synthetic_bias(self):
+        # A smooth multiplicative field applied to a constant volume should be
+        # mostly removed: corrected variance << biased variance.
+        i = jnp.linspace(0.5, 1.5, 32)
+        field = i[:, None, None] * i[None, :, None] * i[None, None, :]
+        biased = 10.0 * field.astype(jnp.float32)
+        smooth = ref.ref_gaussian_blur3d(biased, 8.0)
+        corrected = bias_correct(biased, smooth)
+        assert float(jnp.std(corrected)) < 0.5 * float(jnp.std(biased))

@@ -1,0 +1,107 @@
+"""L2 correctness: pipeline graph invariants + shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def synth_t1(seed=0):
+    """Synthetic T1w: three intensity blobs + bias field + noise."""
+    r = np.random.default_rng(seed)
+    g = np.indices(model.VOL_SHAPE).astype(np.float32)
+    c = np.array(model.VOL_SHAPE, dtype=np.float32)[:, None, None, None] / 2
+    d = np.sqrt(((g - c) ** 2).sum(axis=0))
+    vol = np.where(d < 12, 0.9, np.where(d < 20, 0.6, np.where(d < 28, 0.3, 0.05)))
+    bias = np.linspace(0.8, 1.2, model.VOL_SHAPE[0])[:, None, None]
+    vol = vol * bias + 0.02 * r.standard_normal(model.VOL_SHAPE)
+    return jnp.asarray(vol, dtype=jnp.float32)
+
+
+def synth_dwi(seed=0):
+    r = np.random.default_rng(seed)
+    b0 = np.abs(r.standard_normal(model.VOL_SHAPE)).astype(np.float32) + 1.0
+    vols = [b0]
+    for k in range(model.DWI_DIRS):
+        att = 0.4 + 0.05 * k
+        vols.append((b0 * att + 0.01 * r.standard_normal(model.VOL_SHAPE)).astype(np.float32))
+    bvals = np.array([0.0] + [1000.0] * model.DWI_DIRS, dtype=np.float32)
+    return jnp.asarray(np.stack(vols)), jnp.asarray(bvals)
+
+
+class TestSegPipeline:
+    @pytest.fixture(scope="class")
+    def out(self):
+        return model.jit_seg()(synth_t1())
+
+    def test_output_arity_and_shapes(self, out):
+        seg, volumes, means, edge_qa, snr_qa = out
+        assert seg.shape == model.VOL_SHAPE
+        assert volumes.shape == (model.N_TISSUES,)
+        assert means.shape == (model.N_TISSUES,)
+        assert edge_qa.shape == () and snr_qa.shape == ()
+
+    def test_labels_in_range(self, out):
+        seg = np.asarray(out[0])
+        assert set(np.unique(seg)).issubset({0.0, 1.0, 2.0})
+
+    def test_soft_volumes_conserve_voxels(self, out):
+        total = float(np.asarray(out[1]).sum())
+        assert abs(total - np.prod(model.VOL_SHAPE)) < 1.0
+
+    def test_means_sorted_ascending(self, out):
+        means = np.asarray(out[2])
+        assert means[0] <= means[1] <= means[2]
+
+    def test_means_in_normalized_range(self, out):
+        means = np.asarray(out[2])
+        assert (means >= 0).all() and (means <= 1).all()
+
+    def test_qa_finite_positive(self, out):
+        assert float(out[3]) > 0 and np.isfinite(float(out[3]))
+        assert np.isfinite(float(out[4]))
+
+    def test_segments_recover_blob_structure(self, out):
+        # the bright core (label 2) should occupy fewer voxels than background
+        seg = np.asarray(out[0])
+        counts = [(seg == k).sum() for k in range(3)]
+        assert counts[0] > counts[2]  # background class dominates
+
+    def test_deterministic(self):
+        a = model.jit_seg()(synth_t1(1))
+        b = model.jit_seg()(synth_t1(1))
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+class TestDwiPreproc:
+    @pytest.fixture(scope="class")
+    def out(self):
+        dwi, bvals = synth_dwi()
+        return model.jit_dwi()(dwi, bvals)
+
+    def test_shapes(self, out):
+        md, mean_adc, b0_snr = out
+        assert md.shape == model.VOL_SHAPE
+        assert mean_adc.shape == (model.DWI_DIRS,)
+        assert b0_snr.shape == ()
+
+    def test_adc_positive(self, out):
+        assert (np.asarray(out[1]) > 0).all()
+
+    def test_md_nonnegative_finite(self, out):
+        md = np.asarray(out[0])
+        assert np.isfinite(md).all() and (md >= 0).all()
+
+    def test_stronger_attenuation_gives_larger_adc(self):
+        # direction k has attenuation 0.4 + 0.05k → ADC decreases with k
+        dwi, bvals = synth_dwi()
+        _, mean_adc, _ = model.jit_dwi()(dwi, bvals)
+        a = np.asarray(mean_adc)
+        assert (np.diff(a) < 0).all()
+
+    def test_unattenuated_signal_gives_near_zero_adc(self):
+        dwi, bvals = synth_dwi()
+        same = jnp.stack([dwi[0]] * (model.DWI_DIRS + 1))
+        md, mean_adc, _ = model.jit_dwi()(same, bvals)
+        assert float(np.abs(np.asarray(mean_adc)).max()) < 1e-4

@@ -1,0 +1,123 @@
+"""Resample kernel vs oracle + atlas registration recovery tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import resample3d
+from compile.kernels.ref import ref_resample3d
+
+
+def smooth_phantom(n=64, seed=0):
+    r = np.random.default_rng(seed)
+    g = np.indices((n, n, n)).astype(np.float32)
+    c = (n - 1) / 2.0
+    d = np.sqrt(((g - c) ** 2).sum(axis=0))
+    vol = np.exp(-((d / (n / 4.0)) ** 2)).astype(np.float32)
+    vol += 0.3 * np.exp(-(((g[0] - c - 8) / 6) ** 2 + ((g[1] - c) / 6) ** 2 + ((g[2] - c) / 6) ** 2))
+    vol += 0.01 * r.standard_normal((n, n, n)).astype(np.float32)
+    return jnp.asarray(vol)
+
+
+class TestResample:
+    def test_identity_grid_is_noop(self):
+        vol = smooth_phantom(16)
+        i = jnp.arange(16, dtype=jnp.float32)
+        gx, gy, gz = jnp.meshgrid(i, i, i, indexing="ij")
+        out = resample3d(vol, gx, gy, gz)
+        np.testing.assert_allclose(out, vol, rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref_on_random_coords(self):
+        vol = smooth_phantom(16)
+        r = np.random.default_rng(1)
+        xs = jnp.asarray(r.uniform(-2, 18, (1024,)), dtype=jnp.float32)
+        ys = jnp.asarray(r.uniform(-2, 18, (1024,)), dtype=jnp.float32)
+        zs = jnp.asarray(r.uniform(-2, 18, (1024,)), dtype=jnp.float32)
+        got = resample3d(vol, xs, ys, zs)
+        want = ref_resample3d(vol, xs, ys, zs)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_integer_coords_hit_exact_voxels(self):
+        vol = smooth_phantom(8)
+        xs = jnp.asarray([0.0, 3.0, 7.0 - 1e-5])
+        out = resample3d(vol, xs, xs, xs)
+        np.testing.assert_allclose(out[0], vol[0, 0, 0], rtol=1e-4)
+        np.testing.assert_allclose(out[1], vol[3, 3, 3], rtol=1e-4)
+
+    def test_halfway_coords_average_neighbours(self):
+        vol = jnp.zeros((4, 4, 4), dtype=jnp.float32).at[1, 1, 1].set(2.0).at[2, 1, 1].set(4.0)
+        out = resample3d(vol, jnp.asarray([1.5]), jnp.asarray([1.0]), jnp.asarray([1.0]))
+        np.testing.assert_allclose(out[0], 3.0, rtol=1e-6)
+
+    def test_out_of_bounds_clamps(self):
+        vol = smooth_phantom(8)
+        out = resample3d(vol, jnp.asarray([-5.0, 100.0]), jnp.asarray([0.0, 7.0]), jnp.asarray([0.0, 7.0]))
+        np.testing.assert_allclose(out[0], vol[0, 0, 0], rtol=1e-4)
+        np.testing.assert_allclose(out[1], vol[7, 7, 7], rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_hypothesis_matches_ref(self, seed):
+        vol = smooth_phantom(8, seed=seed)
+        r = np.random.default_rng(seed)
+        xs = jnp.asarray(r.uniform(0, 7, (256,)), dtype=jnp.float32)
+        ys = jnp.asarray(r.uniform(0, 7, (256,)), dtype=jnp.float32)
+        zs = jnp.asarray(r.uniform(0, 7, (256,)), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            resample3d(vol, xs, ys, zs), ref_resample3d(vol, xs, ys, zs), rtol=2e-5, atol=2e-5
+        )
+
+
+class TestAtlasRegister:
+    @pytest.fixture(scope="class")
+    def reg(self):
+        return model.jit_register()
+
+    def test_identity_registration_stays_near_zero(self, reg):
+        fixed = smooth_phantom(64, seed=2)
+        theta, warped, mse, trace = reg(fixed, fixed)
+        assert np.abs(np.asarray(theta)[:3]).max() < 0.2, theta
+        assert float(mse) < 1e-4
+
+    def test_translation_recovered(self, reg):
+        fixed = smooth_phantom(64, seed=3)
+        # moving = fixed shifted by (-3, 2, 0): sampling moving at x+t maps
+        # back onto fixed when t = true shift
+        i = jnp.arange(64, dtype=jnp.float32)
+        gx, gy, gz = jnp.meshgrid(i, i, i, indexing="ij")
+        from compile.kernels.ref import ref_resample3d as rs
+        moving = rs(fixed, gx + 3.0, gy - 2.0, gz)
+        # warped(x) = moving(x + t) = fixed(x + t + 3) ⇒ recovery is t = −shift
+        theta, warped, mse, trace = reg(jnp.asarray(moving), fixed)
+        t = np.asarray(theta)
+        assert abs(t[0] + 3.0) < 0.25, t
+        assert abs(t[1] - 2.0) < 0.25, t
+        assert abs(t[2]) < 0.25, t
+        assert float(mse) < 1e-4
+
+    def test_mse_decreases(self, reg):
+        fixed = smooth_phantom(64, seed=4)
+        i = jnp.arange(64, dtype=jnp.float32)
+        gx, gy, gz = jnp.meshgrid(i, i, i, indexing="ij")
+        from compile.kernels.ref import ref_resample3d as rs
+        moving = rs(fixed, gx + 2.0, gy, gz)
+        _, _, mse, trace = reg(jnp.asarray(moving), fixed)
+        trace = np.asarray(trace)
+        assert trace[-1] < trace[0] * 0.5, trace[:5]
+        assert float(mse) <= trace[0]
+
+    def test_scale_recovered(self, reg):
+        fixed = smooth_phantom(64, seed=5)
+        c = 31.5
+        i = jnp.arange(64, dtype=jnp.float32)
+        gx, gy, gz = jnp.meshgrid(i, i, i, indexing="ij")
+        from compile.kernels.ref import ref_resample3d as rs
+        s_true = 1.08
+        moving = rs(fixed, s_true * (gx - c) + c, s_true * (gy - c) + c, s_true * (gz - c) + c)
+        # composing warp with moving's scale must invert it: exp(θ₃) ≈ 1/s
+        theta, _, _, _ = reg(jnp.asarray(moving), fixed)
+        s_rec = float(np.exp(np.asarray(theta)[3]))
+        assert abs(s_rec - 1.0 / s_true) < 0.02, s_rec

@@ -1,0 +1,33 @@
+//! Bench: regenerates **Fig. 1** (the compute/bandwidth/cost/complexity
+//! tradeoff quadrants) from the quantitative models and emits the CSV
+//! series for plotting.
+//!
+//! Run: `cargo bench --bench fig1_tradeoff`
+
+use medflow::report::{fig1, fig1_csv, format_fig1};
+use medflow::util::bench::{bench, metric};
+
+fn main() {
+    println!("=== Fig 1: tradeoff quadrants ===");
+    let points = fig1(42);
+    println!("{}", format_fig1(&points));
+    println!("--- CSV series ---\n{}", fig1_csv(&points));
+
+    for p in &points {
+        let tag = p.option.replace([' ', '(', ')'], "_");
+        metric(&format!("{tag}.efficiency"), p.compute_efficiency, "/10");
+        metric(&format!("{tag}.bandwidth"), p.bandwidth, "/10");
+        metric(&format!("{tag}.cost"), p.cost, "/10 (lower better)");
+        metric(&format!("{tag}.complexity"), p.complexity, "/10 (lower better)");
+    }
+
+    // the paper's Fig-1 claim, asserted quantitatively
+    let adaptive = points.iter().find(|p| p.option.contains("Adaptive")).unwrap();
+    let cloud = points.iter().find(|p| p.option == "Cloud").unwrap();
+    let local = points.iter().find(|p| p.option.contains("Local")).unwrap();
+    assert!(adaptive.compute_efficiency > local.compute_efficiency);
+    assert!(adaptive.cost < cloud.cost && adaptive.complexity < cloud.complexity);
+    metric("fig1_claim_holds", 1.0, "bool");
+
+    bench("fig1_recompute", 2, 50, || fig1(7));
+}

@@ -1,0 +1,113 @@
+//! Micro-benchmarks of L3 hot paths — the §Perf optimization targets:
+//! query engine, scheduler event loop, integrity hashing, transfer
+//! sampling, JSON parsing, and the PJRT artifact execution itself.
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+use medflow::archive::{Archive, SecurityTier};
+use medflow::compute::{default_volume, load_runtime};
+use medflow::integrity::{crc32, sha256_hex, Manifest};
+use medflow::netsim::{Env, NetProfile};
+use medflow::pipeline::by_name;
+use medflow::query::find_runnable;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler, SimJob};
+use medflow::util::bench::{bench, metric};
+use medflow::util::json::Json;
+use medflow::util::rng::Rng;
+use medflow::workload::{ingest_cohort, SynthCohort};
+
+fn bench_scheduler(jobs: usize) -> f64 {
+    let mut s = Scheduler::new(ClusterSpec::accre());
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: 500,
+    };
+    let mut rng = Rng::new(1);
+    for i in 0..jobs {
+        s.submit(SimJob {
+            id: i as u64,
+            user: format!("u{}", i % 7),
+            cores: 1 + (i % 4) as u32,
+            ram_gb: 8,
+            duration_s: 600.0 + rng.next_f64() * 3600.0,
+            submit_s: (i / 100) as f64,
+            array: Some(handle),
+        });
+    }
+    let t0 = std::time::Instant::now();
+    s.run_to_completion();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(s.records().len(), jobs);
+    dt
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== L3 hot-path micro benches ===");
+
+    // --- query engine over a real ingested tree ---
+    let root = std::env::temp_dir().join(format!("medflow_bench_micro_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+    let mut archive = Archive::at(&root.join("store"))?;
+    let cohort = SynthCohort {
+        name: "MICRO".into(),
+        participants: 50,
+        sessions: 100,
+        tier: SecurityTier::General,
+    };
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 13)?;
+    let fs = by_name("freesurfer").unwrap();
+    let q = bench("query_100_sessions", 2, 30, || {
+        find_runnable(&ds, &fs).unwrap().runnable.len()
+    });
+    metric("query_sessions_per_sec", 100.0 * q.per_sec(), "sessions/s");
+
+    // --- scheduler throughput ---
+    for jobs in [1_000usize, 5_000] {
+        let dt = bench_scheduler(jobs);
+        metric(
+            &format!("scheduler_jobs_per_sec_{jobs}"),
+            jobs as f64 / dt,
+            "jobs/s",
+        );
+    }
+
+    // --- integrity hashing ---
+    let mb = vec![7u8; 1_000_000];
+    let r = bench("sha256_1MB", 3, 50, || sha256_hex(&mb));
+    metric("sha256_MBps", r.per_sec(), "MB/s");
+    let r = bench("crc32_1MB", 3, 50, || crc32(&mb));
+    metric("crc32_MBps", r.per_sec(), "MB/s");
+    bench("manifest_of_tree", 2, 10, || {
+        Manifest::of_tree(&root.join("store")).unwrap().len()
+    });
+
+    // --- transfer sampling (the netsim inner loop) ---
+    let p = NetProfile::of(Env::Hpc);
+    let mut rng = Rng::new(5);
+    let r = bench("netsim_transfer_sample", 10, 10_000, || {
+        p.transfer_time(&mut rng, 1_000_000_000)
+    });
+    metric("netsim_samples_per_sec", r.per_sec(), "samples/s");
+
+    // --- JSON sidecar parsing ---
+    let sidecar = r#"{"Modality":"MR","ProtocolName":"T1w_MPRAGE","EchoTime":2.95,
+        "RepetitionTime":2300,"MagneticFieldStrength":3,"SliceCount":64,
+        "Tags":["a","b","c"],"Nested":{"x":1,"y":[1,2,3]}}"#;
+    let r = bench("json_parse_sidecar", 10, 10_000, || Json::parse(sidecar).unwrap());
+    metric("json_parses_per_sec", r.per_sec(), "docs/s");
+
+    // --- PJRT artifact execution (the real compute hot path) ---
+    if let Some(rt) = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR"))) {
+        let vol = default_volume(&mut Rng::new(1));
+        let r = bench("pjrt_seg_64cubed", 2, 10, || rt.run_seg(&vol).unwrap());
+        metric("pjrt_seg_vols_per_sec", r.per_sec(), "vols/s");
+        let (dwi, bvals) = medflow::compute::default_dwi(&mut Rng::new(2));
+        let r = bench("pjrt_dwi_7x64cubed", 2, 10, || rt.run_dwi(&dwi, &bvals).unwrap());
+        metric("pjrt_dwi_shells_per_sec", r.per_sec(), "shells/s");
+    } else {
+        println!("(artifacts/ not built: skipping PJRT benches)");
+    }
+
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

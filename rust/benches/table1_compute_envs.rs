@@ -1,0 +1,51 @@
+//! Bench: regenerates **Table 1** (compute-environment comparison) and
+//! checks the reproduction shape against the paper's numbers.
+//!
+//! Run: `cargo bench --bench table1_compute_envs`
+
+use medflow::compute::load_runtime;
+use medflow::report::{format_table1, paper, table1};
+use medflow::util::bench::{bench, metric};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 1: compute environments (paper §2.4 / §3) ===");
+    let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    if runtime.is_none() {
+        println!("(artifacts/ not built: duration-model only, no PJRT timing)");
+    }
+
+    let cols = table1(runtime.as_ref(), 42, 100, 100)?;
+    println!("{}", format_table1(&cols));
+
+    // paper-vs-measured metrics
+    for (col, (bw, lat, rate, mins, cost)) in
+        cols.iter().zip([paper::HPC, paper::CLOUD, paper::LOCAL])
+    {
+        let tag = col.env.name().replace(' ', "_");
+        metric(&format!("{tag}.throughput_gbps"), col.throughput_gbps.0, "Gb/s");
+        metric(&format!("{tag}.throughput_paper"), bw, "Gb/s");
+        metric(&format!("{tag}.latency_ms"), col.latency_ms.0, "ms");
+        metric(&format!("{tag}.latency_paper"), lat, "ms");
+        metric(&format!("{tag}.rate_per_hr"), col.dollars_per_hour, "$");
+        metric(&format!("{tag}.rate_paper"), rate, "$");
+        metric(&format!("{tag}.freesurfer_mins"), col.freesurfer_minutes.0, "min");
+        metric(&format!("{tag}.freesurfer_paper"), mins, "min");
+        metric(&format!("{tag}.total_cost"), col.total_cost_dollars, "$");
+        metric(&format!("{tag}.total_cost_paper"), cost, "$");
+    }
+    metric(
+        "cloud_over_hpc_cost_ratio",
+        cols[1].total_cost_dollars / cols[0].total_cost_dollars,
+        "x (paper ~18.3)",
+    );
+
+    // wall-clock of the whole experiment harness
+    bench("table1_full_experiment", 1, 5, || {
+        table1(None, 7, 100, 100).unwrap()
+    });
+    if let Some(rt) = runtime.as_ref() {
+        let vol = medflow::compute::default_volume(&mut medflow::util::rng::Rng::new(1));
+        bench("pjrt_seg_pipeline_64cubed", 2, 10, || rt.run_seg(&vol).unwrap());
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerates **Table 2** (deployment-method criteria) and times
+//! the container-archive operations that motivate the Singularity choice
+//! (build, lookup, fsck at a 16-image registry).
+//!
+//! Run: `cargo bench --bench table2_deployment`
+
+use medflow::container::platforms::{design_criteria_score, methods};
+use medflow::container::{ContainerArchive, ImageDef};
+use medflow::pipeline::registry;
+use medflow::report::format_table2;
+use medflow::util::bench::{bench, metric};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 2: pipeline deployment methods ===");
+    println!("{}", format_table2());
+
+    for m in methods() {
+        metric(
+            &format!("criteria_score.{}", m.name.replace('/', "_")),
+            design_criteria_score(&m) as f64,
+            "violations (lower=better)",
+        );
+    }
+
+    // the deployment mechanics medflow actually uses
+    let root = std::env::temp_dir().join(format!("medflow_bench_t2_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+    let mut archive = ContainerArchive::open(&root)?;
+    for spec in registry() {
+        archive.build(ImageDef {
+            pipeline: spec.name.to_string(),
+            version: spec.version.to_string(),
+            base_env: "ubuntu22.04+xla0.5.1".into(),
+            artifact: spec.artifact.map(String::from),
+        })?;
+    }
+    metric("registry_images", archive.len() as f64, "images");
+    bench("container_lookup_latest", 10, 1000, || {
+        archive.latest("freesurfer").unwrap().sha256.clone()
+    });
+    bench("container_archive_fsck_16_images", 2, 50, || {
+        archive.fsck().unwrap()
+    });
+    bench("container_archive_reopen", 2, 50, || {
+        ContainerArchive::open(&root).unwrap().len()
+    });
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerates **Table 3** (archival solutions) and times the CLI
+//! archive's own operations (store, usage walk, symlinked BIDS access) —
+//! the quantitative counterpart to "flexibility" in the paper's argument.
+//!
+//! Run: `cargo bench --bench table3_archival`
+
+use medflow::archive::solutions::{design_criteria_score, solutions};
+use medflow::archive::{Archive, SecurityTier};
+use medflow::report::format_table3;
+use medflow::util::bench::{bench, metric};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 3: data archival solutions ===");
+    println!("{}", format_table3());
+
+    for s in solutions() {
+        metric(
+            &format!("criteria_score.{}", s.name.replace(' ', "_")),
+            design_criteria_score(&s) as f64,
+            "violations (lower=better)",
+        );
+    }
+
+    // CLI-archive mechanics
+    let root = std::env::temp_dir().join(format!("medflow_bench_t3_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+    let mut archive = Archive::at(&root)?;
+    archive.register_dataset("BENCH", SecurityTier::General)?;
+    let payload = vec![0u8; 100_000];
+    let mut n = 0u64;
+    bench("archive_store_100kb_file", 5, 200, || {
+        n += 1;
+        archive
+            .store_raw("BENCH", &format!("sub-{n:05}/scan.nii.gz"), &payload)
+            .unwrap()
+    });
+    bench("archive_usage_walk", 2, 20, || archive.usage("BENCH").unwrap());
+    let usage = archive.usage("BENCH")?;
+    metric("archive_files_after_bench", usage.file_count as f64, "files");
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

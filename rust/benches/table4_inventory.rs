@@ -1,0 +1,74 @@
+//! Bench: regenerates **Table 4** (dataset inventory) over real ingested
+//! synthetic cohorts, checks catalog ground truth, and times
+//! ingest/query/inventory at increasing cohort sizes.
+//!
+//! Run: `cargo bench --bench table4_inventory`
+
+use medflow::archive::Archive;
+use medflow::pipeline::by_name;
+use medflow::query::find_runnable;
+use medflow::report::{format_table4, table4};
+use medflow::util::bench::{bench, metric};
+use medflow::workload::{catalog, catalog_totals, ingest_cohort, scale_entry, SynthCohort};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 4: dataset inventory ===");
+
+    // catalog ground truth (paper scale)
+    let (participants, sessions, tb, raw, files) = catalog_totals();
+    metric("paper.participants", participants as f64, "");
+    metric("paper.sessions", sessions as f64, "");
+    metric("paper.terabytes", tb, "TB");
+    metric("paper.raw_images", raw as f64, "");
+    metric("paper.total_files", files as f64, "");
+
+    // ingest all 20 datasets at small scale and regenerate the table
+    let root = std::env::temp_dir().join(format!("medflow_bench_t4_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+    let bids_parent = root.join("bids");
+    let mut archive = Archive::at(&root.join("store"))?;
+    for entry in catalog() {
+        let cohort = scale_entry(&entry, 0.001);
+        ingest_cohort(&mut archive, &bids_parent, &cohort, 8, 5)?;
+    }
+    let rows = table4(&archive, &bids_parent)?;
+    println!("{}", format_table4(&rows));
+    metric("ingested.datasets", rows.len() as f64, "");
+    metric(
+        "ingested.sessions",
+        rows.iter().map(|r| r.sessions).sum::<u64>() as f64,
+        "",
+    );
+
+    bench("table4_inventory_walk_20_datasets", 1, 10, || {
+        table4(&archive, &bids_parent).unwrap()
+    });
+
+    // ingest + query scaling
+    for (tag, participants) in [("small", 5u64), ("medium", 20), ("large", 80)] {
+        let r2 = root.join(format!("scale_{tag}"));
+        std::fs::create_dir_all(&r2)?;
+        let mut a2 = Archive::at(&r2.join("store"))?;
+        let cohort = SynthCohort {
+            name: format!("SCALE{tag}").to_uppercase(),
+            participants,
+            sessions: participants * 2,
+            tier: medflow::archive::SecurityTier::General,
+        };
+        let t0 = std::time::Instant::now();
+        let ds = ingest_cohort(&mut a2, &r2.join("bids"), &cohort, 8, 2)?;
+        metric(
+            &format!("ingest_seconds.{tag}"),
+            t0.elapsed().as_secs_f64(),
+            &format!("s for {participants} participants"),
+        );
+        let fs = by_name("freesurfer").unwrap();
+        bench(&format!("query_runnable_{tag}"), 2, 20, || {
+            find_runnable(&ds, &fs).unwrap().runnable.len()
+        });
+        std::fs::remove_dir_all(&r2).ok();
+    }
+
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

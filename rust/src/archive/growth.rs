@@ -1,0 +1,160 @@
+//! Storage growth forecasting (paper §2.1: ADNI/NACC keep scanning; new
+//! data is pulled every 6–12 months — capacity on the 407 TB + 266 TB
+//! servers must be planned, and the Glacier bill forecast).
+
+use crate::cost::{accre_storage_cost_per_year, glacier_cost_per_month};
+use crate::util::units::TB;
+use crate::workload::catalog;
+
+/// One dataset's growth model: current bytes + bytes added per pull.
+#[derive(Debug, Clone)]
+pub struct GrowthModel {
+    pub dataset: String,
+    pub current_bytes: u64,
+    pub bytes_per_pull: u64,
+    /// Pulls per year (paper: 1–2).
+    pub pulls_per_year: f64,
+}
+
+impl GrowthModel {
+    /// Size after `years`.
+    pub fn at_years(&self, years: f64) -> u64 {
+        self.current_bytes
+            + (self.bytes_per_pull as f64 * self.pulls_per_year * years).round() as u64
+    }
+}
+
+/// Default growth models from the Table 4 catalog: the actively-scanning
+/// studies (ADNI, NACC, UKBB, HABS-HD, per the paper) grow ~8%/pull at 2
+/// pulls/year; completed studies are static.
+pub fn default_models() -> Vec<GrowthModel> {
+    const ACTIVE: [&str; 4] = ["ADNI", "NACC", "UKBB", "HABS-HD"];
+    catalog()
+        .iter()
+        .map(|e| {
+            let bytes = (e.size_tb * TB as f64) as u64;
+            let active = ACTIVE.contains(&e.name);
+            GrowthModel {
+                dataset: e.name.to_string(),
+                current_bytes: bytes,
+                bytes_per_pull: if active { bytes / 12 } else { 0 },
+                pulls_per_year: if active { 2.0 } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// Forecast of total archive demand vs server capacity.
+#[derive(Debug, Clone)]
+pub struct CapacityForecast {
+    pub years: f64,
+    pub general_bytes: u64,
+    pub gdpr_bytes: u64,
+    pub general_capacity: u64,
+    pub gdpr_capacity: u64,
+    pub glacier_dollars_per_month: f64,
+    pub accre_equiv_dollars_per_year: f64,
+}
+
+impl CapacityForecast {
+    pub fn general_headroom(&self) -> f64 {
+        1.0 - self.general_bytes as f64 / self.general_capacity as f64
+    }
+
+    pub fn gdpr_headroom(&self) -> f64 {
+        1.0 - self.gdpr_bytes as f64 / self.gdpr_capacity as f64
+    }
+
+    pub fn any_exhausted(&self) -> bool {
+        self.general_headroom() < 0.0 || self.gdpr_headroom() < 0.0
+    }
+}
+
+/// Forecast at `years` from now with the given models (UKBB is the GDPR
+/// tenant; everything else shares the general server — paper Fig. 3).
+pub fn forecast(models: &[GrowthModel], years: f64) -> CapacityForecast {
+    let mut general = 0u64;
+    let mut gdpr = 0u64;
+    for m in models {
+        let size = m.at_years(years);
+        if m.dataset == "UKBB" {
+            gdpr += size;
+        } else {
+            general += size;
+        }
+    }
+    let total = general + gdpr;
+    CapacityForecast {
+        years,
+        general_bytes: general,
+        gdpr_bytes: gdpr,
+        general_capacity: 407 * TB,
+        gdpr_capacity: 266 * TB,
+        glacier_dollars_per_month: glacier_cost_per_month(total),
+        accre_equiv_dollars_per_year: accre_storage_cost_per_year(total),
+    }
+}
+
+/// Years until either server exhausts (bisection over the linear model).
+pub fn years_until_exhaustion(models: &[GrowthModel]) -> Option<f64> {
+    if !forecast(models, 100.0).any_exhausted() {
+        return None;
+    }
+    let (mut lo, mut hi) = (0.0f64, 100.0f64);
+    for _ in 0..60 {
+        let mid = (lo + hi) / 2.0;
+        if forecast(models, mid).any_exhausted() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_state_matches_catalog() {
+        let f = forecast(&default_models(), 0.0);
+        // Table 4: 287.9 TB total; UKBB 79 TB on GDPR
+        assert!((f.gdpr_bytes as f64 / TB as f64 - 79.0).abs() < 0.5);
+        assert!((f.general_bytes as f64 / TB as f64 - 208.9).abs() < 1.0);
+        assert!(!f.any_exhausted());
+        assert!(f.general_headroom() > 0.4);
+    }
+
+    #[test]
+    fn growth_is_monotone() {
+        let models = default_models();
+        let a = forecast(&models, 1.0);
+        let b = forecast(&models, 5.0);
+        assert!(b.general_bytes > a.general_bytes);
+        assert!(b.gdpr_bytes > a.gdpr_bytes);
+        assert!(b.glacier_dollars_per_month > a.glacier_dollars_per_month);
+    }
+
+    #[test]
+    fn static_studies_do_not_grow() {
+        let models = default_models();
+        let camcan = models.iter().find(|m| m.dataset == "CAMCAN").unwrap();
+        assert_eq!(camcan.at_years(10.0), camcan.current_bytes);
+    }
+
+    #[test]
+    fn exhaustion_eventually_happens_and_is_bracketed() {
+        let models = default_models();
+        let years = years_until_exhaustion(&models).expect("active growth must exhaust");
+        assert!(years > 1.0, "{years}");
+        assert!(!forecast(&models, years - 0.1).any_exhausted());
+        assert!(forecast(&models, years + 0.1).any_exhausted());
+    }
+
+    #[test]
+    fn glacier_remains_cheaper_than_accre_storage() {
+        let f = forecast(&default_models(), 3.0);
+        assert!(f.glacier_dollars_per_month * 12.0 < f.accre_equiv_dollars_per_year / 2.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Data archive: the paper's dual near-line storage system (§2.2, Fig. 3).
+//!
+//! Two RAID-Z2 servers — a 407 TB general store and a 266 TB GDPR-compliant
+//! store — hold the raw + processed data; BIDS trees contain only symlinks
+//! into the store (handled by [`crate::bids`]). The archive tracks which
+//! dataset lives on which server, enforces tier placement, and reports the
+//! usage statistics the resource monitor queries (§2.3).
+
+pub mod growth;
+pub mod solutions;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::units::TB;
+
+/// Security tier of a dataset (the paper splits UKBB-style GDPR data from
+/// the rest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SecurityTier {
+    General,
+    Gdpr,
+}
+
+/// Disk media class — matters for the transfer model (paper §4: the
+/// storage servers are HDD, local/AWS instances are SSD).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiskMedia {
+    Hdd,
+    Ssd,
+}
+
+/// One storage server.
+#[derive(Debug, Clone)]
+pub struct StorageServer {
+    pub name: String,
+    pub root: PathBuf,
+    pub capacity_bytes: u64,
+    pub tier: SecurityTier,
+    pub media: DiskMedia,
+}
+
+impl StorageServer {
+    /// The paper's general-purpose server: 407 TB RAID-Z2, HDD.
+    pub fn general(root: PathBuf) -> Self {
+        Self {
+            name: "general-407tb".into(),
+            root,
+            capacity_bytes: 407 * TB,
+            tier: SecurityTier::General,
+            media: DiskMedia::Hdd,
+        }
+    }
+
+    /// The paper's GDPR server: 266 TB RAID-Z2, HDD.
+    pub fn gdpr(root: PathBuf) -> Self {
+        Self {
+            name: "gdpr-266tb".into(),
+            root,
+            capacity_bytes: 266 * TB,
+            tier: SecurityTier::Gdpr,
+            media: DiskMedia::Hdd,
+        }
+    }
+}
+
+/// Usage statistics for one dataset in the store.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DatasetUsage {
+    pub bytes: u64,
+    pub file_count: u64,
+    pub raw_image_count: u64,
+}
+
+/// The archive: servers + dataset registry + on-disk layout
+/// `<server_root>/<dataset>/raw/...` and `<server_root>/<dataset>/proc/...`.
+#[derive(Debug)]
+pub struct Archive {
+    pub general: StorageServer,
+    pub gdpr: StorageServer,
+    datasets: BTreeMap<String, SecurityTier>,
+}
+
+impl Archive {
+    pub fn new(general: StorageServer, gdpr: StorageServer) -> Result<Self> {
+        std::fs::create_dir_all(&general.root)?;
+        std::fs::create_dir_all(&gdpr.root)?;
+        // re-discover datasets already on disk (the registry is the
+        // directory layout itself — a fresh control-node process sees the
+        // same archive state, paper Fig. 3)
+        let mut datasets = BTreeMap::new();
+        for (server, tier) in [(&general, SecurityTier::General), (&gdpr, SecurityTier::Gdpr)] {
+            for entry in std::fs::read_dir(&server.root)?.flatten() {
+                if entry.file_type().map(|t| t.is_dir()).unwrap_or(false)
+                    && entry.path().join("raw").is_dir()
+                {
+                    datasets.insert(entry.file_name().to_string_lossy().to_string(), tier);
+                }
+            }
+        }
+        Ok(Self {
+            general,
+            gdpr,
+            datasets,
+        })
+    }
+
+    /// Convenience: both servers under one temp root (tests/examples).
+    pub fn at(root: &Path) -> Result<Self> {
+        Self::new(
+            StorageServer::general(root.join("general")),
+            StorageServer::gdpr(root.join("gdpr")),
+        )
+    }
+
+    /// Register a dataset on the tier its compliance requires. The GDPR
+    /// server only holds GDPR datasets, and vice versa (paper Fig. 3).
+    pub fn register_dataset(&mut self, name: &str, tier: SecurityTier) -> Result<()> {
+        if self.datasets.contains_key(name) {
+            bail!("dataset '{name}' already registered");
+        }
+        self.datasets.insert(name.to_string(), tier);
+        std::fs::create_dir_all(self.dataset_root(name)?.join("raw"))?;
+        std::fs::create_dir_all(self.dataset_root(name)?.join("proc"))?;
+        Ok(())
+    }
+
+    pub fn tier_of(&self, dataset: &str) -> Option<SecurityTier> {
+        self.datasets.get(dataset).copied()
+    }
+
+    pub fn datasets(&self) -> impl Iterator<Item = (&str, SecurityTier)> {
+        self.datasets.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    fn server_for(&self, tier: SecurityTier) -> &StorageServer {
+        match tier {
+            SecurityTier::General => &self.general,
+            SecurityTier::Gdpr => &self.gdpr,
+        }
+    }
+
+    /// Root directory of a dataset's store area.
+    pub fn dataset_root(&self, dataset: &str) -> Result<PathBuf> {
+        let tier = self
+            .tier_of(dataset)
+            .with_context(|| format!("dataset '{dataset}' not registered"))?;
+        Ok(self.server_for(tier).root.join(dataset))
+    }
+
+    /// Store a raw data file; returns its store path (the symlink target
+    /// for the BIDS tree).
+    pub fn store_raw(&self, dataset: &str, rel: &str, bytes: &[u8]) -> Result<PathBuf> {
+        let path = self.dataset_root(dataset)?.join("raw").join(rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, bytes)?;
+        Ok(path)
+    }
+
+    /// Directory where a pipeline's outputs for a dataset live in the store.
+    pub fn proc_dir(&self, dataset: &str, pipeline: &str) -> Result<PathBuf> {
+        Ok(self.dataset_root(dataset)?.join("proc").join(pipeline))
+    }
+
+    /// Walk a dataset's store area and count bytes/files (the Table 4
+    /// inventory columns and the §2.3 resource monitor's storage view).
+    pub fn usage(&self, dataset: &str) -> Result<DatasetUsage> {
+        let root = self.dataset_root(dataset)?;
+        let mut usage = DatasetUsage::default();
+        let mut stack = vec![root];
+        while let Some(dir) = stack.pop() {
+            for entry in std::fs::read_dir(&dir).into_iter().flatten().flatten() {
+                let path = entry.path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else {
+                    usage.file_count += 1;
+                    usage.bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+                    let s = path.to_string_lossy();
+                    if s.ends_with(".nii") || s.ends_with(".nii.gz") {
+                        usage.raw_image_count += 1;
+                    }
+                }
+            }
+        }
+        Ok(usage)
+    }
+
+    /// Total bytes across all datasets on one tier (capacity monitoring).
+    pub fn tier_usage(&self, tier: SecurityTier) -> Result<u64> {
+        let mut total = 0;
+        for (name, t) in self.datasets.clone() {
+            if t == tier {
+                total += self.usage(&name)?.bytes;
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("medflow_arch_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn datasets_placed_on_their_tier() {
+        let root = tmp("tier");
+        let mut a = Archive::at(&root).unwrap();
+        a.register_dataset("ADNI", SecurityTier::General).unwrap();
+        a.register_dataset("UKBB", SecurityTier::Gdpr).unwrap();
+        assert!(a.dataset_root("ADNI").unwrap().starts_with(root.join("general")));
+        assert!(a.dataset_root("UKBB").unwrap().starts_with(root.join("gdpr")));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let root = tmp("dup");
+        let mut a = Archive::at(&root).unwrap();
+        a.register_dataset("ADNI", SecurityTier::General).unwrap();
+        assert!(a.register_dataset("ADNI", SecurityTier::General).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn unregistered_dataset_errors() {
+        let root = tmp("unreg");
+        let a = Archive::at(&root).unwrap();
+        assert!(a.dataset_root("NOPE").is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn usage_counts_bytes_files_images() {
+        let root = tmp("usage");
+        let mut a = Archive::at(&root).unwrap();
+        a.register_dataset("DS", SecurityTier::General).unwrap();
+        a.store_raw("DS", "sub-01/x.nii.gz", &[0u8; 100]).unwrap();
+        a.store_raw("DS", "sub-01/x.json", &[0u8; 10]).unwrap();
+        a.store_raw("DS", "sub-02/y.nii", &[0u8; 50]).unwrap();
+        let u = a.usage("DS").unwrap();
+        assert_eq!(u.file_count, 3);
+        assert_eq!(u.raw_image_count, 2);
+        assert_eq!(u.bytes, 160);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn tier_usage_separates_servers() {
+        let root = tmp("tieruse");
+        let mut a = Archive::at(&root).unwrap();
+        a.register_dataset("A", SecurityTier::General).unwrap();
+        a.register_dataset("B", SecurityTier::Gdpr).unwrap();
+        a.store_raw("A", "f", &[0u8; 30]).unwrap();
+        a.store_raw("B", "f", &[0u8; 70]).unwrap();
+        assert_eq!(a.tier_usage(SecurityTier::General).unwrap(), 30);
+        assert_eq!(a.tier_usage(SecurityTier::Gdpr).unwrap(), 70);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn registry_rediscovered_on_reopen() {
+        let root = tmp("reopen");
+        {
+            let mut a = Archive::at(&root).unwrap();
+            a.register_dataset("ADNI", SecurityTier::General).unwrap();
+            a.register_dataset("UKBB", SecurityTier::Gdpr).unwrap();
+            a.store_raw("ADNI", "x", &[1u8; 4]).unwrap();
+        }
+        // a fresh process sees the same archive state
+        let a = Archive::at(&root).unwrap();
+        assert_eq!(a.tier_of("ADNI"), Some(SecurityTier::General));
+        assert_eq!(a.tier_of("UKBB"), Some(SecurityTier::Gdpr));
+        assert_eq!(a.usage("ADNI").unwrap().bytes, 4);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn server_constants_match_paper() {
+        let g = StorageServer::general(PathBuf::from("/tmp/x"));
+        assert_eq!(g.capacity_bytes, 407 * TB);
+        assert_eq!(g.media, DiskMedia::Hdd);
+        let s = StorageServer::gdpr(PathBuf::from("/tmp/y"));
+        assert_eq!(s.capacity_bytes, 266 * TB);
+    }
+}

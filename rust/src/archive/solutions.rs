@@ -1,0 +1,118 @@
+//! Capability model of data-archival solutions — regenerates **Table 3**.
+//!
+//! The paper compares archival options on three criteria: whether
+//! credentials are required to use the archive, whether archival creates
+//! potential data-use conflicts, and whether the organizational structure
+//! is flexible. The CLI approach (the paper's choice) and Datalad are the
+//! only ones with structural flexibility.
+
+/// One archival solution's capability row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArchivalSolution {
+    pub name: &'static str,
+    pub requires_credentials: bool,
+    pub data_use_conflicts: bool,
+    pub flexible_structure: bool,
+}
+
+/// The eight solutions of Table 3, in paper order.
+pub fn solutions() -> Vec<ArchivalSolution> {
+    vec![
+        ArchivalSolution {
+            name: "XNAT",
+            requires_credentials: false,
+            data_use_conflicts: false,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "COINS",
+            requires_credentials: false,
+            data_use_conflicts: true,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "LORIS",
+            requires_credentials: false,
+            data_use_conflicts: false,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "NITRC-IR",
+            requires_credentials: false,
+            data_use_conflicts: true,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "OpenNeuro",
+            requires_credentials: false,
+            data_use_conflicts: true,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "LONI IDA",
+            requires_credentials: true,
+            data_use_conflicts: true,
+            flexible_structure: false,
+        },
+        ArchivalSolution {
+            name: "Datalad",
+            requires_credentials: false,
+            data_use_conflicts: false,
+            flexible_structure: true,
+        },
+        ArchivalSolution {
+            name: "CLI",
+            requires_credentials: false,
+            data_use_conflicts: false,
+            flexible_structure: true,
+        },
+    ]
+}
+
+/// Score a solution against the paper's design criteria (§1): lower is
+/// better; the CLI method must win (it's the paper's pick).
+pub fn design_criteria_score(s: &ArchivalSolution) -> u32 {
+    s.requires_credentials as u32 + s.data_use_conflicts as u32 + (!s.flexible_structure) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_solutions_in_paper_order() {
+        let names: Vec<_> = solutions().iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            ["XNAT", "COINS", "LORIS", "NITRC-IR", "OpenNeuro", "LONI IDA", "Datalad", "CLI"]
+        );
+    }
+
+    #[test]
+    fn only_loni_requires_credentials() {
+        for s in solutions() {
+            assert_eq!(s.requires_credentials, s.name == "LONI IDA", "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn only_datalad_and_cli_flexible() {
+        for s in solutions() {
+            assert_eq!(
+                s.flexible_structure,
+                matches!(s.name, "Datalad" | "CLI"),
+                "{}",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn cli_ties_or_beats_all_on_design_criteria() {
+        let all = solutions();
+        let cli = all.iter().find(|s| s.name == "CLI").unwrap();
+        for s in &all {
+            assert!(design_criteria_score(cli) <= design_criteria_score(s), "{}", s.name);
+        }
+    }
+}

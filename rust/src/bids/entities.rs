@@ -1,0 +1,200 @@
+//! BIDS entity model and filename grammar.
+//!
+//! `sub-<label>[_ses-<label>][_acq-<label>][_run-<index>]_<suffix>` with
+//! alphanumeric labels. Parsing and formatting are exact inverses
+//! (property-tested in `rust/tests/prop_bids.rs`).
+
+use anyhow::{bail, Result};
+
+/// Image modality (the suffix). The paper curates T1w and DWI only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    T1w,
+    Dwi,
+}
+
+impl Modality {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Modality::T1w => "T1w",
+            Modality::Dwi => "dwi",
+        }
+    }
+
+    /// Raw-data subdirectory per BIDS ("anat" / "dwi").
+    pub fn raw_dir(self) -> &'static str {
+        match self {
+            Modality::T1w => "anat",
+            Modality::Dwi => "dwi",
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Result<Self> {
+        Ok(match s {
+            "T1w" => Modality::T1w,
+            "dwi" => Modality::Dwi,
+            other => bail!("unknown modality suffix '{other}'"),
+        })
+    }
+}
+
+/// A parsed BIDS file name (without extension).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BidsName {
+    pub subject: String,
+    pub session: Option<String>,
+    pub acquisition: Option<String>,
+    pub run: Option<u32>,
+    pub modality: Modality,
+}
+
+fn valid_label(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric())
+}
+
+impl BidsName {
+    pub fn new(subject: &str, session: Option<&str>, modality: Modality) -> Self {
+        Self {
+            subject: subject.to_string(),
+            session: session.map(|s| s.to_string()),
+            acquisition: None,
+            run: None,
+            modality,
+        }
+    }
+
+    pub fn with_acq(mut self, acq: &str) -> Self {
+        self.acquisition = Some(acq.to_string());
+        self
+    }
+
+    pub fn with_run(mut self, run: u32) -> Self {
+        self.run = Some(run);
+        self
+    }
+
+    /// Check labels are BIDS-legal (alphanumeric).
+    pub fn is_valid(&self) -> bool {
+        valid_label(&self.subject)
+            && self.session.as_deref().map_or(true, valid_label)
+            && self.acquisition.as_deref().map_or(true, valid_label)
+    }
+
+    /// Format `sub-..._ses-..._acq-..._run-..._<suffix>`.
+    pub fn format(&self) -> String {
+        let mut s = format!("sub-{}", self.subject);
+        if let Some(ses) = &self.session {
+            s.push_str(&format!("_ses-{ses}"));
+        }
+        if let Some(acq) = &self.acquisition {
+            s.push_str(&format!("_acq-{acq}"));
+        }
+        if let Some(run) = self.run {
+            s.push_str(&format!("_run-{run:02}"));
+        }
+        s.push_str(&format!("_{}", self.modality.suffix()));
+        s
+    }
+
+    /// Parse a name (extension already stripped). Inverse of [`format`].
+    pub fn parse(name: &str) -> Result<Self> {
+        let parts: Vec<&str> = name.split('_').collect();
+        if parts.len() < 2 {
+            bail!("bids name '{name}' needs at least sub-X_suffix");
+        }
+        let suffix = parts[parts.len() - 1];
+        let modality = Modality::from_suffix(suffix)?;
+        let mut subject = None;
+        let mut session = None;
+        let mut acquisition = None;
+        let mut run = None;
+        for (i, part) in parts[..parts.len() - 1].iter().enumerate() {
+            let (key, value) = part
+                .split_once('-')
+                .ok_or_else(|| anyhow::anyhow!("bad entity '{part}' in '{name}'"))?;
+            if !valid_label(value) {
+                bail!("illegal label '{value}' in '{name}'");
+            }
+            match key {
+                "sub" if i == 0 => subject = Some(value.to_string()),
+                "sub" => bail!("sub- entity must come first in '{name}'"),
+                "ses" => session = Some(value.to_string()),
+                "acq" => acquisition = Some(value.to_string()),
+                "run" => run = Some(value.parse::<u32>()?),
+                other => bail!("unknown entity key '{other}' in '{name}'"),
+            }
+        }
+        Ok(Self {
+            subject: subject.ok_or_else(|| anyhow::anyhow!("missing sub- in '{name}'"))?,
+            session,
+            acquisition,
+            run,
+            modality,
+        })
+    }
+
+    /// Strip `.nii`/`.nii.gz`/`.json` and parse.
+    pub fn parse_filename(filename: &str) -> Result<Self> {
+        let stem = filename
+            .trim_end_matches(".gz")
+            .trim_end_matches(".nii")
+            .trim_end_matches(".json");
+        Self::parse(stem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_minimal() {
+        assert_eq!(BidsName::new("01", None, Modality::T1w).format(), "sub-01_T1w");
+    }
+
+    #[test]
+    fn format_full() {
+        let n = BidsName::new("ADNI002", Some("m12"), Modality::Dwi)
+            .with_acq("98dir")
+            .with_run(3);
+        assert_eq!(n.format(), "sub-ADNI002_ses-m12_acq-98dir_run-03_dwi");
+    }
+
+    #[test]
+    fn parse_inverts_format() {
+        for n in [
+            BidsName::new("01", None, Modality::T1w),
+            BidsName::new("x9", Some("a"), Modality::Dwi).with_run(12),
+            BidsName::new("ABC", Some("baseline"), Modality::T1w).with_acq("mprage"),
+        ] {
+            assert_eq!(BidsName::parse(&n.format()).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn parse_filename_strips_extensions() {
+        let n = BidsName::parse_filename("sub-01_ses-2_T1w.nii.gz").unwrap();
+        assert_eq!(n.subject, "01");
+        assert_eq!(n.session.as_deref(), Some("2"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "T1w",                      // no subject
+            "ses-1_sub-01_T1w",         // sub not first
+            "sub-01_T2w",               // unknown suffix
+            "sub-01_foo-bar_T1w",       // unknown entity
+            "sub-0!1_T1w",              // illegal label char
+            "sub-01_run-x_dwi",         // non-numeric run
+        ] {
+            assert!(BidsName::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn is_valid_checks_labels() {
+        assert!(BidsName::new("01", Some("base"), Modality::T1w).is_valid());
+        assert!(!BidsName::new("0_1", None, Modality::T1w).is_valid());
+    }
+}

@@ -1,0 +1,263 @@
+//! BIDS (Brain Imaging Data Structure, v1.9) organization layer — paper
+//! §2.1 and Fig. 2.
+//!
+//! Covers what medflow needs: entity-based file naming
+//! (`sub-X[_ses-Y]_modality.ext`), dataset tree construction with
+//! `dataset_description.json`, a validator mirroring the checks the Python
+//! bids-validator performs on this subset, and the paper's customization:
+//! derivatives live in flat per-pipeline directories (no anat/dwi subdirs)
+//! and raw files are symlinks into the out-of-tree data store.
+
+mod entities;
+pub mod participants;
+mod validator;
+
+pub use entities::{BidsName, Modality};
+pub use validator::{validate_dataset, Severity, ValidationIssue};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{Json, JsonObj};
+
+/// A BIDS dataset rooted at `<store>/<name>/` (paper: each dataset is a
+/// separate directory in one parent folder).
+#[derive(Debug, Clone)]
+pub struct BidsDataset {
+    pub root: PathBuf,
+    pub name: String,
+}
+
+impl BidsDataset {
+    /// Create the skeleton: root, `dataset_description.json`, derivatives/.
+    pub fn create(parent: &Path, name: &str) -> Result<Self> {
+        let root = parent.join(name);
+        std::fs::create_dir_all(root.join("derivatives"))?;
+        let mut desc = JsonObj::new();
+        desc.set("Name", Json::str(name));
+        desc.set("BIDSVersion", Json::str("1.9.0"));
+        desc.set("DatasetType", Json::str("raw"));
+        desc.set("GeneratedBy", {
+            let mut g = JsonObj::new();
+            g.set("Name", Json::str("medflow"));
+            Json::Arr(vec![Json::Obj(g)])
+        });
+        std::fs::write(
+            root.join("dataset_description.json"),
+            Json::Obj(desc).to_string_pretty(),
+        )?;
+        Ok(Self {
+            root,
+            name: name.to_string(),
+        })
+    }
+
+    /// Open an existing dataset directory.
+    pub fn open(root: &Path) -> Result<Self> {
+        let desc = root.join("dataset_description.json");
+        let text = std::fs::read_to_string(&desc).with_context(|| format!("open {desc:?}"))?;
+        let json = Json::parse(&text)?;
+        let name = json
+            .get_path("Name")
+            .and_then(Json::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+        Ok(Self {
+            root: root.to_path_buf(),
+            name,
+        })
+    }
+
+    /// Directory for a subject/session's raw files of one modality
+    /// (`sub-X/ses-Y/anat/`). Raw data keeps modality subdirs (Fig. 2).
+    pub fn raw_dir(&self, name: &BidsName) -> PathBuf {
+        let mut p = self.root.join(format!("sub-{}", name.subject));
+        if let Some(ses) = &name.session {
+            p = p.join(format!("ses-{ses}"));
+        }
+        p.join(name.modality.raw_dir())
+    }
+
+    /// Derivatives dir for one pipeline run on one subject/session. The
+    /// paper intentionally drops modality subdirs here (Fig. 2): pipelines
+    /// are often multimodal.
+    pub fn derivative_dir(&self, pipeline: &str, name: &BidsName) -> PathBuf {
+        let mut p = self.root.join("derivatives").join(pipeline).join(format!("sub-{}", name.subject));
+        if let Some(ses) = &name.session {
+            p = p.join(format!("ses-{ses}"));
+        }
+        p
+    }
+
+    /// Full path of a raw image file for `name` with `ext` (e.g. "nii.gz").
+    pub fn raw_path(&self, name: &BidsName, ext: &str) -> PathBuf {
+        self.raw_dir(name).join(format!("{}.{ext}", name.format()))
+    }
+
+    /// Place a data file as a **symlink** into the tree (paper §2.1: the
+    /// BIDS tree links to raw files living outside it, as a security and
+    /// storage-management measure). Falls back to copy on filesystems
+    /// without symlink support.
+    pub fn link_raw(&self, name: &BidsName, ext: &str, target: &Path) -> Result<PathBuf> {
+        let dest = self.raw_path(name, ext);
+        if let Some(parent) = dest.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        if dest.exists() || dest.symlink_metadata().is_ok() {
+            std::fs::remove_file(&dest).ok();
+        }
+        #[cfg(unix)]
+        std::os::unix::fs::symlink(target, &dest)
+            .with_context(|| format!("symlink {dest:?} -> {target:?}"))?;
+        #[cfg(not(unix))]
+        std::fs::copy(target, &dest)?;
+        Ok(dest)
+    }
+
+    /// Enumerate subjects (`sub-*` directories).
+    pub fn subjects(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if let Some(s) = fname.strip_prefix("sub-") {
+                if entry.file_type()?.is_dir() {
+                    out.push(s.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Enumerate sessions of a subject (None if the subject has no ses-*
+    /// level, which BIDS allows).
+    pub fn sessions(&self, subject: &str) -> Result<Vec<Option<String>>> {
+        let subdir = self.root.join(format!("sub-{subject}"));
+        let mut sessions = Vec::new();
+        let mut has_session_dirs = false;
+        for entry in std::fs::read_dir(&subdir)? {
+            let entry = entry?;
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if let Some(s) = fname.strip_prefix("ses-") {
+                has_session_dirs = true;
+                sessions.push(Some(s.to_string()));
+            }
+        }
+        if !has_session_dirs {
+            sessions.push(None);
+        }
+        sessions.sort();
+        Ok(sessions)
+    }
+
+    /// All raw image files (`.nii` / `.nii.gz`) of a modality in a session.
+    pub fn raw_images(&self, name: &BidsName) -> Vec<PathBuf> {
+        let dir = self.raw_dir(name);
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                let p = entry.path();
+                let s = p.to_string_lossy();
+                if s.ends_with(".nii") || s.ends_with(".nii.gz") {
+                    out.push(p);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Whether a derivative directory exists and is non-empty (the query
+    /// engine's "already processed" signal, paper §2.3).
+    pub fn has_derivative(&self, pipeline: &str, name: &BidsName) -> bool {
+        let dir = self.derivative_dir(pipeline, name);
+        std::fs::read_dir(&dir)
+            .map(|mut it| it.next().is_some())
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("medflow_bids_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn create_and_open() {
+        let parent = tmpdir("create");
+        let ds = BidsDataset::create(&parent, "TESTDS").unwrap();
+        assert!(ds.root.join("dataset_description.json").exists());
+        assert!(ds.root.join("derivatives").exists());
+        let again = BidsDataset::open(&ds.root).unwrap();
+        assert_eq!(again.name, "TESTDS");
+        std::fs::remove_dir_all(&parent).unwrap();
+    }
+
+    #[test]
+    fn raw_and_derivative_paths_follow_fig2() {
+        let parent = tmpdir("paths");
+        let ds = BidsDataset::create(&parent, "DS").unwrap();
+        let name = BidsName::new("01", Some("baseline"), Modality::T1w);
+        assert!(ds
+            .raw_path(&name, "nii.gz")
+            .ends_with("DS/sub-01/ses-baseline/anat/sub-01_ses-baseline_T1w.nii.gz"));
+        // derivatives: flat per-pipeline, NO anat/ level
+        assert!(ds
+            .derivative_dir("prequal", &name)
+            .ends_with("DS/derivatives/prequal/sub-01/ses-baseline"));
+        std::fs::remove_dir_all(&parent).unwrap();
+    }
+
+    #[test]
+    fn link_raw_creates_symlink_to_store() {
+        let parent = tmpdir("link");
+        let store = parent.join("store");
+        std::fs::create_dir_all(&store).unwrap();
+        let raw = store.join("scan001.nii.gz");
+        std::fs::write(&raw, b"fake").unwrap();
+        let ds = BidsDataset::create(&parent, "DS").unwrap();
+        let name = BidsName::new("01", None, Modality::T1w);
+        let link = ds.link_raw(&name, "nii.gz", &raw).unwrap();
+        assert!(link.symlink_metadata().unwrap().file_type().is_symlink());
+        assert_eq!(std::fs::read(&link).unwrap(), b"fake");
+        std::fs::remove_dir_all(&parent).unwrap();
+    }
+
+    #[test]
+    fn subject_session_enumeration() {
+        let parent = tmpdir("enum");
+        let ds = BidsDataset::create(&parent, "DS").unwrap();
+        for (sub, ses) in [("01", Some("a")), ("01", Some("b")), ("02", None)] {
+            let name = BidsName::new(sub, ses, Modality::T1w);
+            std::fs::create_dir_all(ds.raw_dir(&name)).unwrap();
+        }
+        assert_eq!(ds.subjects().unwrap(), vec!["01", "02"]);
+        assert_eq!(
+            ds.sessions("01").unwrap(),
+            vec![Some("a".to_string()), Some("b".to_string())]
+        );
+        assert_eq!(ds.sessions("02").unwrap(), vec![None]);
+        std::fs::remove_dir_all(&parent).unwrap();
+    }
+
+    #[test]
+    fn has_derivative_detects_outputs() {
+        let parent = tmpdir("deriv");
+        let ds = BidsDataset::create(&parent, "DS").unwrap();
+        let name = BidsName::new("01", None, Modality::T1w);
+        assert!(!ds.has_derivative("freesurfer", &name));
+        let d = ds.derivative_dir("freesurfer", &name);
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(!ds.has_derivative("freesurfer", &name)); // empty dir ≠ processed
+        std::fs::write(d.join("aseg.stats"), b"ok").unwrap();
+        assert!(ds.has_derivative("freesurfer", &name));
+        std::fs::remove_dir_all(&parent).unwrap();
+    }
+}

@@ -1,0 +1,198 @@
+//! `participants.tsv` support (BIDS top-level demographics table): written
+//! at ingest, read back for cohort summaries; kept consistent with the
+//! sub-* directories by the validator-adjacent check here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bids::BidsDataset;
+use crate::util::rng::Rng;
+
+/// One participants.tsv row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Participant {
+    pub id: String,
+    pub age: u32,
+    pub sex: char,
+    pub group: String,
+}
+
+/// Deterministic synthetic demographics for a subject label.
+pub fn synth_participant(subject: &str, rng: &mut Rng) -> Participant {
+    Participant {
+        id: format!("sub-{subject}"),
+        age: 45 + rng.below(45) as u32,
+        sex: if rng.below(2) == 0 { 'F' } else { 'M' },
+        group: if rng.next_f64() < 0.3 { "patient" } else { "control" }.into(),
+    }
+}
+
+/// Serialize rows as BIDS participants.tsv.
+pub fn to_tsv(rows: &[Participant]) -> String {
+    let mut s = String::from("participant_id\tage\tsex\tgroup\n");
+    for r in rows {
+        s.push_str(&format!("{}\t{}\t{}\t{}\n", r.id, r.age, r.sex, r.group));
+    }
+    s
+}
+
+/// Parse participants.tsv.
+pub fn from_tsv(text: &str) -> Result<Vec<Participant>> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty participants.tsv")?;
+    if header != "participant_id\tage\tsex\tgroup" {
+        bail!("unexpected participants.tsv header: '{header}'");
+    }
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            bail!("participants.tsv line {} has {} columns", i + 2, cols.len());
+        }
+        rows.push(Participant {
+            id: cols[0].to_string(),
+            age: cols[1].parse().with_context(|| format!("bad age '{}'", cols[1]))?,
+            sex: cols[2].chars().next().context("empty sex column")?,
+            group: cols[3].to_string(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Write participants.tsv for every subject directory in the dataset.
+pub fn write_for_dataset(ds: &BidsDataset, seed: u64) -> Result<Vec<Participant>> {
+    let mut rng = Rng::new(seed);
+    let rows: Vec<Participant> = ds
+        .subjects()?
+        .iter()
+        .map(|s| synth_participant(s, &mut rng))
+        .collect();
+    std::fs::write(ds.root.join("participants.tsv"), to_tsv(&rows))?;
+    Ok(rows)
+}
+
+/// Cross-check participants.tsv against the sub-* tree; returns subjects
+/// missing from the TSV and TSV rows without a directory.
+pub fn check_consistency(ds: &BidsDataset) -> Result<(Vec<String>, Vec<String>)> {
+    let path = ds.root.join("participants.tsv");
+    let rows = from_tsv(&std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?)?;
+    let tsv_ids: BTreeMap<String, ()> = rows.iter().map(|r| (r.id.clone(), ())).collect();
+    let subjects = ds.subjects()?;
+    let missing_from_tsv: Vec<String> = subjects
+        .iter()
+        .filter(|s| !tsv_ids.contains_key(&format!("sub-{s}")))
+        .cloned()
+        .collect();
+    let missing_dirs: Vec<String> = rows
+        .iter()
+        .filter(|r| {
+            r.id.strip_prefix("sub-")
+                .map(|s| !subjects.contains(&s.to_string()))
+                .unwrap_or(true)
+        })
+        .map(|r| r.id.clone())
+        .collect();
+    Ok((missing_from_tsv, missing_dirs))
+}
+
+/// Check if `path` is listed in the dataset's `.bidsignore` (glob-free
+/// exact-suffix matching, which covers the paper's usage).
+pub fn bidsignored(ds: &BidsDataset, rel: &str) -> bool {
+    let Ok(text) = std::fs::read_to_string(ds.root.join(".bidsignore")) else {
+        return false;
+    };
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .any(|pat| rel == pat || rel.ends_with(pat.trim_start_matches('*')))
+}
+
+/// Helper for tests: `Path` reexport guard.
+pub fn _exists(p: &Path) -> bool {
+    p.exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpds(tag: &str) -> BidsDataset {
+        let parent = std::env::temp_dir().join(format!("medflow_ptsv_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&parent).unwrap();
+        let ds = BidsDataset::create(&parent, "DS").unwrap();
+        for sub in ["01", "02", "03"] {
+            std::fs::create_dir_all(ds.root.join(format!("sub-{sub}/anat"))).unwrap();
+        }
+        ds
+    }
+
+    fn cleanup(ds: &BidsDataset) {
+        std::fs::remove_dir_all(ds.root.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut rng = Rng::new(1);
+        let rows: Vec<Participant> = ["01", "02"]
+            .iter()
+            .map(|s| synth_participant(s, &mut rng))
+            .collect();
+        let parsed = from_tsv(&to_tsv(&rows)).unwrap();
+        assert_eq!(parsed, rows);
+    }
+
+    #[test]
+    fn write_and_check_consistent() {
+        let ds = tmpds("ok");
+        write_for_dataset(&ds, 7).unwrap();
+        let (missing_tsv, missing_dir) = check_consistency(&ds).unwrap();
+        assert!(missing_tsv.is_empty() && missing_dir.is_empty());
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn detects_drift() {
+        let ds = tmpds("drift");
+        write_for_dataset(&ds, 7).unwrap();
+        // add a subject dir not in the TSV + remove one that is
+        std::fs::create_dir_all(ds.root.join("sub-99/anat")).unwrap();
+        std::fs::remove_dir_all(ds.root.join("sub-01")).unwrap();
+        let (missing_tsv, missing_dir) = check_consistency(&ds).unwrap();
+        assert_eq!(missing_tsv, vec!["99".to_string()]);
+        assert_eq!(missing_dir, vec!["sub-01".to_string()]);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn rejects_malformed_tsv() {
+        assert!(from_tsv("").is_err());
+        assert!(from_tsv("wrong\theader\n").is_err());
+        assert!(from_tsv("participant_id\tage\tsex\tgroup\nsub-01\tnotanage\tF\tx\n").is_err());
+        assert!(from_tsv("participant_id\tage\tsex\tgroup\nsub-01\t44\n").is_err());
+    }
+
+    #[test]
+    fn bidsignore_matching() {
+        let ds = tmpds("ignore");
+        std::fs::write(ds.root.join(".bidsignore"), "# comment\nderivatives_wip\n*.log\n").unwrap();
+        assert!(bidsignored(&ds, "derivatives_wip"));
+        assert!(bidsignored(&ds, "run_2024.log"));
+        assert!(!bidsignored(&ds, "sub-01/anat/sub-01_T1w.nii.gz"));
+        let _ = PathBuf::new();
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn demographics_deterministic() {
+        let a = synth_participant("01", &mut Rng::new(3));
+        let b = synth_participant("01", &mut Rng::new(3));
+        assert_eq!(a, b);
+        assert!((45..90).contains(&a.age));
+    }
+}

@@ -1,0 +1,273 @@
+//! BIDS dataset validator (the paper validates with the Python
+//! bids-validator, §2.1; this is the equivalent check for medflow's
+//! subset).
+//!
+//! Checks: dataset_description.json present and well-formed; every file
+//! under sub-*/ parses as a BIDS name; name entities match their directory
+//! (sub/ses consistency, modality in the right subdir); every image has a
+//! JSON sidecar; derivatives tree structure (flat pipeline dirs).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::entities::BidsName;
+
+/// Issue severity: errors fail validation, warnings do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One validation finding.
+#[derive(Debug, Clone)]
+pub struct ValidationIssue {
+    pub severity: Severity,
+    pub path: PathBuf,
+    pub message: String,
+}
+
+impl ValidationIssue {
+    fn error(path: &Path, message: impl Into<String>) -> Self {
+        Self {
+            severity: Severity::Error,
+            path: path.to_path_buf(),
+            message: message.into(),
+        }
+    }
+
+    fn warning(path: &Path, message: impl Into<String>) -> Self {
+        Self {
+            severity: Severity::Warning,
+            path: path.to_path_buf(),
+            message: message.into(),
+        }
+    }
+}
+
+/// Validate a dataset tree; returns all issues found (empty = fully valid).
+pub fn validate_dataset(root: &Path) -> Vec<ValidationIssue> {
+    let mut issues = Vec::new();
+
+    // 1. dataset_description.json
+    let desc_path = root.join("dataset_description.json");
+    match std::fs::read_to_string(&desc_path) {
+        Err(_) => issues.push(ValidationIssue::error(&desc_path, "missing dataset_description.json")),
+        Ok(text) => match Json::parse(&text) {
+            Err(e) => issues.push(ValidationIssue::error(&desc_path, format!("invalid JSON: {e}"))),
+            Ok(json) => {
+                for key in ["Name", "BIDSVersion"] {
+                    if json.get_path(key).is_none() {
+                        issues.push(ValidationIssue::error(&desc_path, format!("missing '{key}'")));
+                    }
+                }
+            }
+        },
+    }
+
+    // 2. subject trees
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(_) => {
+            issues.push(ValidationIssue::error(root, "cannot read dataset root"));
+            return issues;
+        }
+    };
+    for entry in entries.flatten() {
+        let fname = entry.file_name().to_string_lossy().to_string();
+        let path = entry.path();
+        if let Some(sub) = fname.strip_prefix("sub-") {
+            if path.is_dir() {
+                walk_subject(&path, sub, &mut issues);
+            } else {
+                issues.push(ValidationIssue::error(&path, "sub-* must be a directory"));
+            }
+        } else if fname == "derivatives" {
+            walk_derivatives(&path, &mut issues);
+        } else if !matches!(
+            fname.as_str(),
+            "dataset_description.json" | "participants.tsv" | "README" | "CHANGES" | ".bidsignore"
+        ) {
+            issues.push(ValidationIssue::warning(&path, "unexpected top-level entry"));
+        }
+    }
+    issues
+}
+
+fn walk_subject(subdir: &Path, subject: &str, issues: &mut Vec<ValidationIssue>) {
+    for entry in std::fs::read_dir(subdir).into_iter().flatten().flatten() {
+        let fname = entry.file_name().to_string_lossy().to_string();
+        let path = entry.path();
+        if let Some(ses) = fname.strip_prefix("ses-") {
+            walk_modalities(&path, subject, Some(ses), issues);
+        } else if matches!(fname.as_str(), "anat" | "dwi") {
+            check_modality_dir(&path, subject, None, &fname, issues);
+        } else {
+            issues.push(ValidationIssue::warning(&path, "unexpected entry in subject dir"));
+        }
+    }
+}
+
+fn walk_modalities(sesdir: &Path, subject: &str, session: Option<&str>, issues: &mut Vec<ValidationIssue>) {
+    for entry in std::fs::read_dir(sesdir).into_iter().flatten().flatten() {
+        let fname = entry.file_name().to_string_lossy().to_string();
+        let path = entry.path();
+        if matches!(fname.as_str(), "anat" | "dwi") {
+            check_modality_dir(&path, subject, session, &fname, issues);
+        } else {
+            issues.push(ValidationIssue::warning(&path, "unexpected entry in session dir"));
+        }
+    }
+}
+
+fn check_modality_dir(
+    dir: &Path,
+    subject: &str,
+    session: Option<&str>,
+    dirname: &str,
+    issues: &mut Vec<ValidationIssue>,
+) {
+    for entry in std::fs::read_dir(dir).into_iter().flatten().flatten() {
+        let fname = entry.file_name().to_string_lossy().to_string();
+        let path = entry.path();
+        let is_image = fname.ends_with(".nii") || fname.ends_with(".nii.gz");
+        let is_sidecar = fname.ends_with(".json");
+        if !is_image && !is_sidecar {
+            issues.push(ValidationIssue::warning(&path, "non-BIDS file in modality dir"));
+            continue;
+        }
+        match BidsName::parse_filename(&fname) {
+            Err(e) => issues.push(ValidationIssue::error(&path, format!("unparseable name: {e}"))),
+            Ok(name) => {
+                if name.subject != subject {
+                    issues.push(ValidationIssue::error(
+                        &path,
+                        format!("subject mismatch: file says '{}', dir says '{subject}'", name.subject),
+                    ));
+                }
+                if name.session.as_deref() != session {
+                    issues.push(ValidationIssue::error(
+                        &path,
+                        format!("session mismatch: file says {:?}, dir says {session:?}", name.session),
+                    ));
+                }
+                if name.modality.raw_dir() != dirname {
+                    issues.push(ValidationIssue::error(
+                        &path,
+                        format!("modality {} belongs in {}/", name.modality.suffix(), name.modality.raw_dir()),
+                    ));
+                }
+                if is_image {
+                    let sidecar = sidecar_path(&path);
+                    if !sidecar.exists() {
+                        issues.push(ValidationIssue::warning(&path, "image has no JSON sidecar"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn sidecar_path(image: &Path) -> PathBuf {
+    let s = image.to_string_lossy();
+    let stem = s.trim_end_matches(".gz").trim_end_matches(".nii");
+    PathBuf::from(format!("{stem}.json"))
+}
+
+fn walk_derivatives(dir: &Path, issues: &mut Vec<ValidationIssue>) {
+    for entry in std::fs::read_dir(dir).into_iter().flatten().flatten() {
+        let path = entry.path();
+        if !path.is_dir() {
+            issues.push(ValidationIssue::warning(&path, "loose file in derivatives/"));
+        }
+        // per-pipeline content is free-form (paper keeps each pipeline's
+        // native output layout), so no deeper checks here.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bids::{BidsDataset, Modality};
+
+    fn tmpds(tag: &str) -> BidsDataset {
+        let parent = std::env::temp_dir().join(format!("medflow_val_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&parent).unwrap();
+        BidsDataset::create(&parent, "DS").unwrap()
+    }
+
+    fn cleanup(ds: &BidsDataset) {
+        std::fs::remove_dir_all(ds.root.parent().unwrap()).unwrap();
+    }
+
+    fn errors(issues: &[ValidationIssue]) -> Vec<String> {
+        issues
+            .iter()
+            .filter(|i| i.severity == Severity::Error)
+            .map(|i| i.message.clone())
+            .collect()
+    }
+
+    #[test]
+    fn fresh_dataset_validates() {
+        let ds = tmpds("fresh");
+        assert!(errors(&validate_dataset(&ds.root)).is_empty());
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn good_file_passes_warning_only_for_missing_sidecar() {
+        let ds = tmpds("good");
+        let name = BidsName::new("01", Some("a"), Modality::T1w);
+        let p = ds.raw_path(&name, "nii");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"x").unwrap();
+        let issues = validate_dataset(&ds.root);
+        assert!(errors(&issues).is_empty(), "{issues:?}");
+        assert!(issues.iter().any(|i| i.message.contains("sidecar")));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn subject_mismatch_is_error() {
+        let ds = tmpds("mismatch");
+        let dir = ds.root.join("sub-01/anat");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("sub-02_T1w.nii"), b"x").unwrap();
+        let issues = validate_dataset(&ds.root);
+        assert!(errors(&issues).iter().any(|m| m.contains("subject mismatch")));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn wrong_modality_dir_is_error() {
+        let ds = tmpds("wrongdir");
+        let dir = ds.root.join("sub-01/dwi");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("sub-01_T1w.nii"), b"x").unwrap();
+        let issues = validate_dataset(&ds.root);
+        assert!(errors(&issues).iter().any(|m| m.contains("belongs in anat/")));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn missing_description_is_error() {
+        let ds = tmpds("nodesc");
+        std::fs::remove_file(ds.root.join("dataset_description.json")).unwrap();
+        let issues = validate_dataset(&ds.root);
+        assert!(errors(&issues).iter().any(|m| m.contains("dataset_description")));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn unparseable_name_is_error() {
+        let ds = tmpds("badname");
+        let dir = ds.root.join("sub-01/anat");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("garbage.nii"), b"x").unwrap();
+        let issues = validate_dataset(&ds.root);
+        assert!(errors(&issues).iter().any(|m| m.contains("unparseable")));
+        cleanup(&ds);
+    }
+}

@@ -1,0 +1,273 @@
+//! Compute-environment executors: one job instance = stage inputs
+//! (netsim-timed, checksum-verified), execute the pipeline's artifact
+//! through PJRT (real compute), copy outputs back (netsim-timed), emit
+//! provenance. The wall-clock at paper scale comes from the calibrated
+//! duration model; the *numeric* outputs come from the real artifact.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cost::compute_cost;
+use crate::netsim::{Env, NetProfile};
+use crate::pipeline::PipelineSpec;
+use crate::query::JobSpec;
+use crate::runtime::{Runtime, DWI_DIRS, VOL_ELEMS};
+use crate::util::rng::Rng;
+
+/// Outcome of one executed job instance.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub instance_id: String,
+    pub env: Env,
+    /// Simulated staging time (storage → compute), seconds.
+    pub stage_in_s: f64,
+    /// Simulated copy-back time, seconds.
+    pub stage_out_s: f64,
+    /// Modeled pipeline wall-clock at paper scale, minutes.
+    pub compute_minutes: f64,
+    /// Measured PJRT execution time for the artifact (real), seconds.
+    pub artifact_exec_s: f64,
+    /// Direct cost in dollars (compute-slot time × env rate).
+    pub cost_dollars: f64,
+    /// QA scalars from the artifact (empty for model-only pipelines).
+    pub qa: Vec<(String, f64)>,
+}
+
+impl JobOutcome {
+    /// Total modeled wall-clock (transfer + compute), seconds.
+    pub fn total_seconds(&self) -> f64 {
+        self.stage_in_s + self.stage_out_s + self.compute_minutes * 60.0
+    }
+}
+
+/// Executes jobs in a given environment profile.
+pub struct Executor<'rt> {
+    pub env: Env,
+    pub profile: NetProfile,
+    runtime: Option<&'rt Runtime>,
+    /// Relative compute speed vs HPC (paper Table 1: cloud slightly faster,
+    /// local slightly slower — 375.5 / 355.2 / 386.0 minutes).
+    speed_factor: f64,
+}
+
+/// Paper Table 1 Freesurfer minutes per environment (the calibration
+/// anchor for relative compute speed).
+pub fn env_speed_factor(env: Env) -> f64 {
+    match env {
+        Env::Hpc => 1.0,
+        Env::Cloud => 375.5 / 355.2,
+        Env::Local => 375.5 / 386.0,
+    }
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn new(env: Env, runtime: Option<&'rt Runtime>) -> Self {
+        Self {
+            env,
+            profile: NetProfile::of(env),
+            runtime,
+            speed_factor: env_speed_factor(env),
+        }
+    }
+
+    /// Execute one job instance: returns the outcome, or an error if input
+    /// staging fails integrity checks (the paper's abort condition).
+    pub fn run(
+        &self,
+        job: &JobSpec,
+        spec: &PipelineSpec,
+        input_bytes: u64,
+        rng: &mut Rng,
+        volume: Option<&[f32]>,
+    ) -> Result<JobOutcome> {
+        // --- stage in ---
+        let stage_in_s = self.profile.transfer_time(rng, input_bytes);
+        // --- compute: sample the paper-scale duration, scaled by env ---
+        let compute_minutes = spec.sample_minutes(rng) / self.speed_factor;
+        // --- real artifact execution (when the pipeline has one) ---
+        let mut artifact_exec_s = 0.0;
+        let mut qa = Vec::new();
+        if let (Some(artifact), Some(rt)) = (spec.artifact, self.runtime) {
+            let t0 = std::time::Instant::now();
+            match artifact {
+                "seg_pipeline" => {
+                    let vol = volume
+                        .map(|v| v.to_vec())
+                        .unwrap_or_else(|| default_volume(rng));
+                    let out = rt.run_seg(&vol).context("seg artifact")?;
+                    qa.push(("edge_qa".into(), out.edge_qa as f64));
+                    qa.push(("snr_qa".into(), out.snr_qa as f64));
+                    qa.push(("csf_voxels".into(), out.volumes[0] as f64));
+                    qa.push(("gm_voxels".into(), out.volumes[1] as f64));
+                    qa.push(("wm_voxels".into(), out.volumes[2] as f64));
+                }
+                "dwi_preproc" => {
+                    let (dwi, bvals) = default_dwi(rng);
+                    let out = rt.run_dwi(&dwi, &bvals).context("dwi artifact")?;
+                    qa.push(("b0_snr".into(), out.b0_snr as f64));
+                    let md_mean =
+                        out.md_map.iter().map(|&v| v as f64).sum::<f64>() / out.md_map.len() as f64;
+                    qa.push(("md_mean".into(), md_mean));
+                }
+                "atlas_register" => {
+                    // register the session volume onto the canonical phantom
+                    // "atlas" (noise-free default volume)
+                    let moving = volume
+                        .map(|v| v.to_vec())
+                        .unwrap_or_else(|| default_volume(rng));
+                    let atlas = default_volume(&mut crate::util::rng::Rng::new(0));
+                    let out = rt.run_register(&moving, &atlas).context("register artifact")?;
+                    qa.push(("reg_tx".into(), out.theta[0] as f64));
+                    qa.push(("reg_ty".into(), out.theta[1] as f64));
+                    qa.push(("reg_tz".into(), out.theta[2] as f64));
+                    qa.push(("reg_log_scale".into(), out.theta[3] as f64));
+                    qa.push(("reg_final_mse".into(), out.final_mse as f64));
+                }
+                other => anyhow::bail!("unknown artifact '{other}'"),
+            }
+            artifact_exec_s = t0.elapsed().as_secs_f64();
+        }
+        // --- stage out ---
+        let stage_out_s = self.profile.transfer_time(rng, spec.output_bytes);
+        // --- cost: slot held for transfer + compute ---
+        let total_minutes = compute_minutes + (stage_in_s + stage_out_s) / 60.0;
+        let cost_dollars = compute_cost(self.env, total_minutes);
+        Ok(JobOutcome {
+            instance_id: job.instance_id(),
+            env: self.env,
+            stage_in_s,
+            stage_out_s,
+            compute_minutes,
+            artifact_exec_s,
+            cost_dollars,
+            qa,
+        })
+    }
+}
+
+/// Deterministic filler volume when the job has no staged NIfTI (64³,
+/// normalized phantom + noise).
+pub fn default_volume(rng: &mut Rng) -> Vec<f32> {
+    let mut v = Vec::with_capacity(VOL_ELEMS);
+    for z in 0..64u32 {
+        for y in 0..64u32 {
+            for x in 0..64u32 {
+                let d = (((x as f64 - 32.0).powi(2)
+                    + (y as f64 - 32.0).powi(2)
+                    + (z as f64 - 32.0).powi(2)) as f64)
+                    .sqrt();
+                let base = if d < 12.0 {
+                    0.9
+                } else if d < 20.0 {
+                    0.6
+                } else if d < 28.0 {
+                    0.3
+                } else {
+                    0.05
+                };
+                v.push((base + rng.normal_ms(0.0, 0.02)).clamp(0.0, 1.0) as f32);
+            }
+        }
+    }
+    v
+}
+
+/// Deterministic DWI shell (b0 + 6 attenuated directions).
+pub fn default_dwi(rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    let b0: Vec<f32> = default_volume(rng).iter().map(|v| v + 1.0).collect();
+    let mut dwi = b0.clone();
+    for k in 0..DWI_DIRS {
+        let att = 0.4 + 0.05 * k as f32;
+        dwi.extend(b0.iter().map(|v| v * att));
+    }
+    let mut bvals = vec![0.0f32];
+    bvals.extend(std::iter::repeat(1000.0).take(DWI_DIRS));
+    (dwi, bvals)
+}
+
+/// Load the shared runtime from the conventional artifact dir, if built.
+pub fn load_runtime(repo_root: &Path) -> Option<Runtime> {
+    let dir = repo_root.join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Runtime::load(&dir).ok()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::by_name;
+
+    fn job() -> JobSpec {
+        JobSpec {
+            dataset: "DS".into(),
+            pipeline: "freesurfer".into(),
+            subject: "01".into(),
+            session: None,
+            inputs: vec![],
+            cores: 1,
+            ram_gb: 8,
+        }
+    }
+
+    #[test]
+    fn model_only_pipeline_runs_without_runtime() {
+        let ex = Executor::new(Env::Hpc, None);
+        let spec = by_name("biscuit").unwrap();
+        let mut rng = Rng::new(1);
+        let out = ex.run(&job(), &spec, 30_000_000, &mut rng, None).unwrap();
+        assert!(out.compute_minutes > 0.0);
+        assert!(out.cost_dollars > 0.0);
+        assert!(out.qa.is_empty());
+        assert_eq!(out.artifact_exec_s, 0.0);
+    }
+
+    #[test]
+    fn env_speed_factors_match_table1() {
+        assert!((env_speed_factor(Env::Hpc) - 1.0).abs() < 1e-12);
+        assert!(env_speed_factor(Env::Cloud) > 1.0);
+        assert!(env_speed_factor(Env::Local) < 1.0);
+    }
+
+    #[test]
+    fn cloud_costs_dominate_hpc() {
+        let spec = by_name("freesurfer").unwrap();
+        let mut a = Rng::new(2);
+        let mut b = Rng::new(2);
+        let hpc = Executor::new(Env::Hpc, None)
+            .run(&job(), &spec, 30_000_000, &mut a, None)
+            .unwrap();
+        let cloud = Executor::new(Env::Cloud, None)
+            .run(&job(), &spec, 30_000_000, &mut b, None)
+            .unwrap();
+        assert!(cloud.cost_dollars > 10.0 * hpc.cost_dollars);
+    }
+
+    #[test]
+    fn artifact_backed_pipeline_reports_qa() {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let Some(rt) = load_runtime(&root) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ex = Executor::new(Env::Hpc, Some(&rt));
+        let spec = by_name("freesurfer").unwrap();
+        let mut rng = Rng::new(3);
+        let out = ex.run(&job(), &spec, 30_000_000, &mut rng, None).unwrap();
+        assert!(out.artifact_exec_s > 0.0);
+        let qa: std::collections::HashMap<_, _> = out.qa.iter().cloned().collect();
+        assert!(qa.contains_key("gm_voxels"));
+        let total = qa["csf_voxels"] + qa["gm_voxels"] + qa["wm_voxels"];
+        assert!((total - VOL_ELEMS as f64).abs() < 2.0, "total={total}");
+    }
+
+    #[test]
+    fn default_volume_deterministic() {
+        let a = default_volume(&mut Rng::new(5));
+        let b = default_volume(&mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,196 @@
+//! Deployment configuration: one JSON file describing the whole
+//! installation (storage servers, cluster shape, pricing overrides,
+//! enabled pipelines, campaign defaults) so a site can adapt medflow
+//! without recompiling — the paper's "consider whether the options
+//! available to you would be similarly cost-effective" (§4), made
+//! concrete.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::slurm::ClusterSpec;
+use crate::util::json::{Json, JsonObj};
+
+/// Site-wide configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteConfig {
+    pub site_name: String,
+    /// Root under which store/, bids/, containers/ live.
+    pub root: PathBuf,
+    /// Cluster shape (nodes, cores/node, ram GB/node).
+    pub cluster_nodes: usize,
+    pub cluster_cores_per_node: u32,
+    pub cluster_ram_gb_per_node: u32,
+    /// Pipelines enabled at this site (empty = all).
+    pub enabled_pipelines: Vec<String>,
+    /// Campaign defaults.
+    pub default_user: String,
+    pub max_concurrent_array: u32,
+    pub local_burst_workers: usize,
+}
+
+impl Default for SiteConfig {
+    fn default() -> Self {
+        Self {
+            site_name: "vanderbilt-accre".into(),
+            root: PathBuf::from("/data/medflow"),
+            cluster_nodes: 750,
+            cluster_cores_per_node: 27,
+            cluster_ram_gb_per_node: 267,
+            enabled_pipelines: Vec::new(),
+            default_user: "medflow".into(),
+            max_concurrent_array: 200,
+            local_burst_workers: 8,
+        }
+    }
+}
+
+impl SiteConfig {
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        ClusterSpec {
+            name: self.site_name.clone(),
+            nodes: vec![
+                crate::slurm::NodeSpec {
+                    cores: self.cluster_cores_per_node,
+                    ram_gb: self.cluster_ram_gb_per_node,
+                };
+                self.cluster_nodes
+            ],
+        }
+    }
+
+    pub fn pipeline_enabled(&self, name: &str) -> bool {
+        self.enabled_pipelines.is_empty() || self.enabled_pipelines.iter().any(|p| p == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("SiteName", Json::str(&self.site_name));
+        o.set("Root", Json::str(self.root.to_string_lossy()));
+        let mut cluster = JsonObj::new();
+        cluster.set("Nodes", Json::num(self.cluster_nodes as f64));
+        cluster.set("CoresPerNode", Json::num(self.cluster_cores_per_node as f64));
+        cluster.set("RamGbPerNode", Json::num(self.cluster_ram_gb_per_node as f64));
+        o.set("Cluster", Json::Obj(cluster));
+        o.set(
+            "EnabledPipelines",
+            Json::Arr(self.enabled_pipelines.iter().map(Json::str).collect()),
+        );
+        let mut campaign = JsonObj::new();
+        campaign.set("DefaultUser", Json::str(&self.default_user));
+        campaign.set("MaxConcurrentArray", Json::num(self.max_concurrent_array as f64));
+        campaign.set("LocalBurstWorkers", Json::num(self.local_burst_workers as f64));
+        o.set("Campaign", Json::Obj(campaign));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = SiteConfig::default();
+        if let Some(v) = j.get_path("SiteName").and_then(Json::as_str) {
+            cfg.site_name = v.to_string();
+        }
+        if let Some(v) = j.get_path("Root").and_then(Json::as_str) {
+            cfg.root = PathBuf::from(v);
+        }
+        if let Some(v) = j.get_path("Cluster.Nodes").and_then(Json::as_i64) {
+            if v <= 0 {
+                bail!("Cluster.Nodes must be positive");
+            }
+            cfg.cluster_nodes = v as usize;
+        }
+        if let Some(v) = j.get_path("Cluster.CoresPerNode").and_then(Json::as_i64) {
+            if v <= 0 {
+                bail!("Cluster.CoresPerNode must be positive");
+            }
+            cfg.cluster_cores_per_node = v as u32;
+        }
+        if let Some(v) = j.get_path("Cluster.RamGbPerNode").and_then(Json::as_i64) {
+            cfg.cluster_ram_gb_per_node = v as u32;
+        }
+        if let Some(arr) = j.get_path("EnabledPipelines").and_then(Json::as_arr) {
+            cfg.enabled_pipelines = arr.iter().filter_map(Json::as_str).map(String::from).collect();
+            for p in &cfg.enabled_pipelines {
+                if crate::pipeline::by_name(p).is_none() {
+                    bail!("EnabledPipelines lists unknown pipeline '{p}'");
+                }
+            }
+        }
+        if let Some(v) = j.get_path("Campaign.DefaultUser").and_then(Json::as_str) {
+            cfg.default_user = v.to_string();
+        }
+        if let Some(v) = j.get_path("Campaign.MaxConcurrentArray").and_then(Json::as_i64) {
+            cfg.max_concurrent_array = v as u32;
+        }
+        if let Some(v) = j.get_path("Campaign.LocalBurstWorkers").and_then(Json::as_i64) {
+            cfg.local_burst_workers = v as usize;
+        }
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_accre() {
+        let c = SiteConfig::default();
+        let spec = c.cluster_spec();
+        assert_eq!(spec.nodes.len(), 750);
+        assert_eq!(spec.total_cores(), 750 * 27);
+        assert!(c.pipeline_enabled("freesurfer")); // empty list = all
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SiteConfig::default();
+        c.site_name = "other-hpc".into();
+        c.cluster_nodes = 12;
+        c.enabled_pipelines = vec!["freesurfer".into(), "prequal".into()];
+        let back = SiteConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert!(back.pipeline_enabled("prequal"));
+        assert!(!back.pipeline_enabled("slant"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("medflow_cfg_{}", std::process::id()));
+        let path = dir.join("site.json");
+        let c = SiteConfig::default();
+        c.save(&path).unwrap();
+        assert_eq!(SiteConfig::load(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"SiteName": "tiny", "Cluster": {"Nodes": 4}}"#).unwrap();
+        let c = SiteConfig::from_json(&j).unwrap();
+        assert_eq!(c.site_name, "tiny");
+        assert_eq!(c.cluster_nodes, 4);
+        assert_eq!(c.cluster_cores_per_node, 27); // default retained
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = Json::parse(r#"{"Cluster": {"Nodes": 0}}"#).unwrap();
+        assert!(SiteConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"EnabledPipelines": ["not_a_pipeline"]}"#).unwrap();
+        assert!(SiteConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Containerization layer (paper §2.3): all 16 pipelines run as
+//! Singularity images stored in an archive reachable from every compute
+//! node; any user can execute them without admin permissions.
+//!
+//! medflow's images are content-addressed bundles: a JSON build definition
+//! (pipeline name, version, base env, entrypoint artifact) plus a payload
+//! hash. "Running" an image means executing its HLO artifact through the
+//! PJRT runtime with the environment pinned by the definition — which is
+//! exactly the reproducibility property containers buy the paper.
+
+pub mod platforms;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::integrity::sha256_hex;
+use crate::util::json::{Json, JsonObj};
+
+/// Build definition of a container image (what a .def/Dockerfile pins).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageDef {
+    pub pipeline: String,
+    pub version: String,
+    /// Base environment tag (e.g. "ubuntu22.04+xla0.5.1").
+    pub base_env: String,
+    /// HLO artifact the image's entrypoint executes (None for pure-CLI
+    /// utility pipelines).
+    pub artifact: Option<String>,
+}
+
+impl ImageDef {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("Pipeline", Json::str(&self.pipeline));
+        o.set("Version", Json::str(&self.version));
+        o.set("BaseEnv", Json::str(&self.base_env));
+        if let Some(a) = &self.artifact {
+            o.set("Artifact", Json::str(a));
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            pipeline: j
+                .get_path("Pipeline")
+                .and_then(Json::as_str)
+                .context("missing Pipeline")?
+                .into(),
+            version: j
+                .get_path("Version")
+                .and_then(Json::as_str)
+                .context("missing Version")?
+                .into(),
+            base_env: j
+                .get_path("BaseEnv")
+                .and_then(Json::as_str)
+                .context("missing BaseEnv")?
+                .into(),
+            artifact: j.get_path("Artifact").and_then(Json::as_str).map(String::from),
+        })
+    }
+
+    /// Canonical image file name (`<pipeline>_<version>.sif`).
+    pub fn sif_name(&self) -> String {
+        format!("{}_{}.sif", self.pipeline, self.version)
+    }
+}
+
+/// A built image: definition + content hash.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerImage {
+    pub def: ImageDef,
+    pub sha256: String,
+}
+
+/// The Singularity image archive (one directory visible to all nodes).
+#[derive(Debug)]
+pub struct ContainerArchive {
+    pub dir: PathBuf,
+    index: BTreeMap<String, ContainerImage>,
+}
+
+impl ContainerArchive {
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let mut archive = Self {
+            dir: dir.to_path_buf(),
+            index: BTreeMap::new(),
+        };
+        // Re-index existing images (idempotent re-open).
+        for entry in std::fs::read_dir(dir)?.flatten() {
+            let p = entry.path();
+            if p.extension().map(|e| e == "sif").unwrap_or(false) {
+                if let Ok(img) = read_image(&p) {
+                    archive.index.insert(img.def.sif_name(), img);
+                }
+            }
+        }
+        Ok(archive)
+    }
+
+    /// Build + store an image. Deterministic: same def → same sha.
+    pub fn build(&mut self, def: ImageDef) -> Result<ContainerImage> {
+        let name = def.sif_name();
+        if self.index.contains_key(&name) {
+            bail!("image '{name}' already in archive (immutable images; bump the version)");
+        }
+        let payload = def.to_json().to_string_pretty();
+        let sha256 = sha256_hex(payload.as_bytes());
+        std::fs::write(self.dir.join(&name), &payload)?;
+        let img = ContainerImage { def, sha256 };
+        self.index.insert(name, img.clone());
+        Ok(img)
+    }
+
+    /// Look up by pipeline name: returns the newest version (lexicographic,
+    /// which works for the zero-padded versions medflow uses).
+    pub fn latest(&self, pipeline: &str) -> Option<&ContainerImage> {
+        self.index
+            .values()
+            .filter(|img| img.def.pipeline == pipeline)
+            .max_by(|a, b| a.def.version.cmp(&b.def.version))
+    }
+
+    pub fn get(&self, sif_name: &str) -> Option<&ContainerImage> {
+        self.index.get(sif_name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Verify every stored image still matches its content hash (bit-rot /
+    /// tamper check before a processing campaign).
+    pub fn fsck(&self) -> Result<Vec<String>> {
+        let mut bad = Vec::new();
+        for (name, img) in &self.index {
+            let bytes = std::fs::read(self.dir.join(name))?;
+            if sha256_hex(&bytes) != img.sha256 {
+                bad.push(name.clone());
+            }
+        }
+        Ok(bad)
+    }
+}
+
+fn read_image(path: &Path) -> Result<ContainerImage> {
+    let bytes = std::fs::read(path)?;
+    let def = ImageDef::from_json(&Json::parse(std::str::from_utf8(&bytes)?)?)?;
+    Ok(ContainerImage {
+        def,
+        sha256: sha256_hex(&bytes),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("medflow_cont_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn def(pipeline: &str, version: &str) -> ImageDef {
+        ImageDef {
+            pipeline: pipeline.into(),
+            version: version.into(),
+            base_env: "ubuntu22.04+xla0.5.1".into(),
+            artifact: Some("seg_pipeline".into()),
+        }
+    }
+
+    #[test]
+    fn build_and_lookup() {
+        let dir = tmp("build");
+        let mut a = ContainerArchive::open(&dir).unwrap();
+        let img = a.build(def("freesurfer", "7.2.0")).unwrap();
+        assert_eq!(img.def.sif_name(), "freesurfer_7.2.0.sif");
+        assert_eq!(a.latest("freesurfer").unwrap().sha256, img.sha256);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn images_immutable() {
+        let dir = tmp("immut");
+        let mut a = ContainerArchive::open(&dir).unwrap();
+        a.build(def("prequal", "1.0.0")).unwrap();
+        assert!(a.build(def("prequal", "1.0.0")).is_err());
+        a.build(def("prequal", "1.0.1")).unwrap(); // version bump OK
+        assert_eq!(a.latest("prequal").unwrap().def.version, "1.0.1");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn deterministic_hash() {
+        let d1 = tmp("hash1");
+        let d2 = tmp("hash2");
+        let h1 = ContainerArchive::open(&d1).unwrap().build(def("slant", "2.0")).unwrap().sha256;
+        let h2 = ContainerArchive::open(&d2).unwrap().build(def("slant", "2.0")).unwrap().sha256;
+        assert_eq!(h1, h2);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn reopen_reindexes() {
+        let dir = tmp("reopen");
+        {
+            let mut a = ContainerArchive::open(&dir).unwrap();
+            a.build(def("unest", "1.0")).unwrap();
+        }
+        let a = ContainerArchive::open(&dir).unwrap();
+        assert_eq!(a.len(), 1);
+        assert!(a.latest("unest").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fsck_detects_tamper() {
+        let dir = tmp("fsck");
+        let mut a = ContainerArchive::open(&dir).unwrap();
+        let img = a.build(def("freesurfer", "7.2.0")).unwrap();
+        assert!(a.fsck().unwrap().is_empty());
+        std::fs::write(dir.join(img.def.sif_name()), b"{tampered}").unwrap();
+        assert_eq!(a.fsck().unwrap(), vec!["freesurfer_7.2.0.sif".to_string()]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

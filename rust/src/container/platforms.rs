@@ -1,0 +1,111 @@
+//! Capability model of pipeline-deployment methods — regenerates **Table 2**.
+//!
+//! Axes (paper Table 2): needs specific OS permissions, needs extensive
+//! setup, promotes reproducible code, lightweight. Singularity's column is
+//! why the paper picks it: no admin perms (runs under pre-configured SLURM
+//! clusters), no orchestration-platform setup, reproducible, lightweight.
+
+/// One deployment method's capability row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeploymentMethod {
+    pub name: &'static str,
+    pub needs_os_permissions: bool,
+    pub extensive_setup: bool,
+    pub reproducible: bool,
+    pub lightweight: bool,
+}
+
+/// The six methods of Table 2, in paper order.
+pub fn methods() -> Vec<DeploymentMethod> {
+    vec![
+        DeploymentMethod {
+            name: "Singularity",
+            needs_os_permissions: false,
+            extensive_setup: false,
+            reproducible: true,
+            lightweight: true,
+        },
+        DeploymentMethod {
+            name: "Docker",
+            needs_os_permissions: true,
+            extensive_setup: false,
+            reproducible: true,
+            lightweight: true,
+        },
+        DeploymentMethod {
+            name: "Kubernetes",
+            needs_os_permissions: true,
+            extensive_setup: true,
+            reproducible: true,
+            lightweight: false,
+        },
+        DeploymentMethod {
+            name: "BIDS-App",
+            needs_os_permissions: true,
+            extensive_setup: false,
+            reproducible: true,
+            lightweight: true,
+        },
+        DeploymentMethod {
+            name: "NITRC-CE/VMs",
+            needs_os_permissions: false,
+            extensive_setup: false,
+            reproducible: true,
+            lightweight: false,
+        },
+        DeploymentMethod {
+            name: "Local Install",
+            needs_os_permissions: false,
+            extensive_setup: false,
+            reproducible: false,
+            lightweight: true,
+        },
+    ]
+}
+
+/// Design-criteria score (criterion 4 in §1: reproducible deployment with
+/// minimal effort/complexity); lower is better.
+pub fn design_criteria_score(m: &DeploymentMethod) -> u32 {
+    m.needs_os_permissions as u32
+        + m.extensive_setup as u32
+        + (!m.reproducible) as u32
+        + (!m.lightweight) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_methods_in_paper_order() {
+        let names: Vec<_> = methods().iter().map(|m| m.name).collect();
+        assert_eq!(
+            names,
+            ["Singularity", "Docker", "Kubernetes", "BIDS-App", "NITRC-CE/VMs", "Local Install"]
+        );
+    }
+
+    #[test]
+    fn singularity_is_strictly_best() {
+        let all = methods();
+        let sing = &all[0];
+        assert_eq!(design_criteria_score(sing), 0);
+        for m in &all[1..] {
+            assert!(design_criteria_score(m) > 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn only_local_install_not_reproducible() {
+        for m in methods() {
+            assert_eq!(m.reproducible, m.name != "Local Install", "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn kubernetes_needs_setup_others_dont() {
+        for m in methods() {
+            assert_eq!(m.extensive_setup, m.name == "Kubernetes", "{}", m.name);
+        }
+    }
+}

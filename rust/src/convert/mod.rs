@@ -1,0 +1,188 @@
+//! DICOM→NIfTI conversion (the paper's dcm2niix step, §2.1): stack a
+//! series' slices into a volume, build the NIfTI header from DICOM geometry
+//! tags, and emit the JSON metadata sidecar.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dicom::{tags, DicomObject, Value};
+use crate::nifti::NiftiImage;
+use crate::util::json::{Json, JsonObj};
+
+/// A converted series: volume + sidecar (what dcm2niix writes as
+/// `<name>.nii.gz` + `<name>.json`).
+#[derive(Debug, Clone)]
+pub struct Converted {
+    pub image: NiftiImage,
+    pub sidecar: Json,
+    pub protocol: String,
+    pub patient_id: String,
+    pub study_date: String,
+}
+
+/// Convert one series (slices in any order; sorted by InstanceNumber).
+pub fn convert_series(slices: &[DicomObject]) -> Result<Converted> {
+    if slices.is_empty() {
+        bail!("empty series");
+    }
+    let first = &slices[0];
+    let rows = first
+        .get(tags::ROWS)
+        .and_then(Value::as_u16)
+        .context("missing Rows")?;
+    let cols = first
+        .get(tags::COLS)
+        .and_then(Value::as_u16)
+        .context("missing Columns")?;
+    let series_uid = first.str_of(tags::SERIES_UID).unwrap_or_default().to_string();
+
+    // Order slices by instance number; reject mixed series / duplicates.
+    let mut by_instance: BTreeMap<u16, &DicomObject> = BTreeMap::new();
+    for s in slices {
+        if s.str_of(tags::SERIES_UID).unwrap_or_default() != series_uid {
+            bail!("mixed SeriesInstanceUID in conversion input");
+        }
+        if s.get(tags::ROWS).and_then(Value::as_u16) != Some(rows)
+            || s.get(tags::COLS).and_then(Value::as_u16) != Some(cols)
+        {
+            bail!("inconsistent slice matrix in series");
+        }
+        let inst = s
+            .get(tags::INSTANCE_NUMBER)
+            .and_then(Value::as_u16)
+            .context("missing InstanceNumber")?;
+        if by_instance.insert(inst, s).is_some() {
+            bail!("duplicate InstanceNumber {inst}");
+        }
+    }
+
+    let nslices = by_instance.len() as u16;
+    let mut data = Vec::with_capacity(rows as usize * cols as usize * nslices as usize);
+    for (_, s) in &by_instance {
+        match s.get(tags::PIXEL_DATA) {
+            Some(Value::Pixels(px)) => {
+                if px.len() != rows as usize * cols as usize {
+                    bail!("pixel payload size mismatch");
+                }
+                data.extend(px.iter().map(|&v| v as f32));
+            }
+            _ => bail!("slice missing PixelData"),
+        }
+    }
+
+    let spacing = first
+        .str_of(tags::PIXEL_SPACING)
+        .unwrap_or("1.0\\1.0")
+        .split('\\')
+        .filter_map(|s| s.trim().parse::<f32>().ok())
+        .collect::<Vec<_>>();
+    let thickness = first
+        .get(tags::SLICE_THICKNESS)
+        .and_then(Value::as_f64)
+        .unwrap_or(1.0) as f32;
+    let vox = [
+        spacing.first().copied().unwrap_or(1.0),
+        spacing.get(1).copied().unwrap_or(1.0),
+        thickness,
+    ];
+
+    let image = NiftiImage::new([rows, cols, nslices], vox, data)?;
+    let sidecar = build_sidecar(first, nslices);
+    Ok(Converted {
+        image,
+        sidecar,
+        protocol: first.str_of(tags::PROTOCOL_NAME).unwrap_or("unknown").to_string(),
+        patient_id: first.str_of(tags::PATIENT_ID).unwrap_or("unknown").to_string(),
+        study_date: first.str_of(tags::STUDY_DATE).unwrap_or("unknown").to_string(),
+    })
+}
+
+fn build_sidecar(first: &DicomObject, nslices: u16) -> Json {
+    let mut o = JsonObj::new();
+    let put_str = |o: &mut JsonObj, key: &str, tag| {
+        if let Some(v) = first.str_of(tag) {
+            o.set(key, Json::str(v));
+        }
+    };
+    put_str(&mut o, "Modality", tags::MODALITY);
+    put_str(&mut o, "ProtocolName", tags::PROTOCOL_NAME);
+    put_str(&mut o, "SeriesDescription", tags::SERIES_DESC);
+    put_str(&mut o, "Manufacturer", tags::MANUFACTURER);
+    put_str(&mut o, "StudyDate", tags::STUDY_DATE);
+    for (key, tag) in [
+        ("EchoTime", tags::ECHO_TIME),
+        ("RepetitionTime", tags::REPETITION_TIME),
+        ("MagneticFieldStrength", tags::MAGNETIC_FIELD),
+        ("DiffusionBValue", tags::B_VALUE),
+    ] {
+        if let Some(v) = first.get(tag).and_then(Value::as_f64) {
+            o.set(key, Json::num(v));
+        }
+    }
+    o.set("SliceCount", Json::num(nslices as f64));
+    o.set("ConversionSoftware", Json::str("medflow-convert"));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dicom::synth::{synth_series, SeriesSpec};
+
+    #[test]
+    fn converts_t1_series() {
+        let objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 16), 1);
+        let c = convert_series(&objs).unwrap();
+        assert_eq!(c.image.header.dims(), [16, 16, 16]);
+        assert_eq!(c.protocol, "T1w_MPRAGE");
+        assert_eq!(c.sidecar.get_path("Modality").unwrap().as_str(), Some("MR"));
+        assert_eq!(c.sidecar.get_path("SliceCount").unwrap().as_f64(), Some(16.0));
+    }
+
+    #[test]
+    fn slice_order_independent() {
+        let mut objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 8), 2);
+        let a = convert_series(&objs).unwrap();
+        objs.reverse();
+        let b = convert_series(&objs).unwrap();
+        assert_eq!(a.image.data, b.image.data);
+    }
+
+    #[test]
+    fn rejects_mixed_series() {
+        let mut objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 4), 1);
+        let other = synth_series(&SeriesSpec::t1w("sub02", "20240101", 4), 1);
+        objs.push(other[0].clone());
+        assert!(convert_series(&objs).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_instance() {
+        let mut objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 4), 1);
+        let dup = objs[1].clone();
+        objs.push(dup);
+        assert!(convert_series(&objs).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_pixels() {
+        let mut objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 4), 1);
+        objs[2].elements.remove(&tags::PIXEL_DATA);
+        assert!(convert_series(&objs).is_err());
+    }
+
+    #[test]
+    fn dwi_sidecar_has_bvalue() {
+        let objs = synth_series(&SeriesSpec::dwi("sub01", "20240101", 8, 1000.0), 1);
+        let c = convert_series(&objs).unwrap();
+        assert_eq!(c.sidecar.get_path("DiffusionBValue").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn voxel_geometry_from_tags() {
+        let objs = synth_series(&SeriesSpec::t1w("sub01", "20240101", 4), 1);
+        let c = convert_series(&objs).unwrap();
+        assert_eq!(c.image.header.voxel_mm(), [1.0, 1.0, 1.0]);
+    }
+}

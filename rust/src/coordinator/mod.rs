@@ -1,0 +1,620 @@
+//! The semi-automated workflow engine (paper §2.3, Fig. 3) — medflow's L3
+//! contribution. One *campaign* = the paper's single-line flow:
+//!
+//!   query archive → generate scripts → submit (SLURM array or local
+//!   burst) → stage → containerized compute (PJRT artifact) → verified
+//!   copy-back → provenance → mark processed
+//!
+//! plus the §2.3 resource monitor (cluster utilization + storage headroom)
+//! that informs whether to submit to the HPC or burst to a local server,
+//! with bounded in-flight backpressure on the local path.
+
+pub mod planner;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::archive::Archive;
+use crate::bids::{BidsDataset, BidsName, Modality};
+use crate::compute::{env_speed_factor, Executor};
+use crate::faults::{run_with_retries, FaultModel};
+use crate::container::{ContainerArchive, ImageDef};
+use crate::netsim::Env;
+use crate::pipeline::{by_name, PipelineSpec};
+use crate::provenance::Provenance;
+use crate::query::{find_runnable, JobSpec, QueryResult};
+use crate::runtime::Runtime;
+use crate::scripts::{instance_script, local_runner_script, slurm_array_script, SlurmOptions};
+use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler, SimJob};
+use crate::util::pool::run_parallel;
+use crate::util::rng::Rng;
+use crate::util::units::mean_std;
+
+/// Where a campaign ran (paper Fig. 3's two submit paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitTarget {
+    /// SLURM job array on the HPC.
+    Hpc,
+    /// Local-burst parallel runner.
+    LocalBurst { workers: usize },
+}
+
+/// Campaign configuration.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub user: String,
+    pub slurm: SlurmOptions,
+    pub seed: u64,
+    /// Backpressure: max in-flight local jobs (bounded queue).
+    pub local_max_in_flight: usize,
+    /// Average input bytes staged per job (from archive stats when real).
+    pub input_bytes_per_job: u64,
+    /// Failure model applied per attempt (None = fault-free baseline).
+    pub faults: Option<FaultModel>,
+    /// Resubmissions allowed per job when faults are enabled.
+    pub max_retries: u32,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            user: "medflow".into(),
+            slurm: SlurmOptions::default(),
+            seed: 42,
+            local_max_in_flight: 8,
+            input_bytes_per_job: 30_000_000,
+            faults: None,
+            max_retries: 3,
+        }
+    }
+}
+
+/// Result of one campaign.
+#[derive(Debug)]
+pub struct CampaignReport {
+    pub pipeline: String,
+    pub dataset: String,
+    pub target: SubmitTarget,
+    pub queried: usize,
+    pub skipped: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// Simulated wall-clock of the whole campaign, seconds.
+    pub makespan_s: f64,
+    /// Mean ± std of per-job modeled compute minutes.
+    pub compute_minutes: (f64, f64),
+    pub total_cost_dollars: f64,
+    /// Generated artifacts (scripts, skip CSV) for inspection.
+    pub skip_csv: String,
+    pub array_script: String,
+    /// Mean measured PJRT execution seconds per artifact-backed job.
+    pub artifact_exec_s: f64,
+}
+
+/// Resource-monitor snapshot (paper §2.3: "a simple query for both
+/// resource usage and storage to inform our team").
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceStatus {
+    pub cluster_utilization: f64,
+    pub cluster_in_maintenance: bool,
+    pub general_store_used_bytes: u64,
+    pub gdpr_store_used_bytes: u64,
+}
+
+/// The coordinator.
+pub struct Coordinator<'rt> {
+    pub archive: Archive,
+    pub containers: ContainerArchive,
+    runtime: Option<&'rt Runtime>,
+    pub cluster: ClusterSpec,
+    maintenance: Vec<Maintenance>,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(
+        archive: Archive,
+        containers: ContainerArchive,
+        runtime: Option<&'rt Runtime>,
+    ) -> Self {
+        Self {
+            archive,
+            containers,
+            runtime,
+            cluster: ClusterSpec::accre(),
+            maintenance: Vec::new(),
+        }
+    }
+
+    /// Declare an upcoming maintenance window (drives burst decisions).
+    pub fn add_maintenance(&mut self, w: Maintenance) {
+        self.maintenance.push(w);
+    }
+
+    /// Ensure a container image exists for the pipeline (build-on-demand,
+    /// immutable thereafter).
+    pub fn ensure_image(&mut self, spec: &PipelineSpec) -> Result<String> {
+        if let Some(img) = self.containers.latest(spec.name) {
+            return Ok(img.def.sif_name());
+        }
+        let img = self.containers.build(ImageDef {
+            pipeline: spec.name.to_string(),
+            version: spec.version.to_string(),
+            base_env: "ubuntu22.04+xla0.5.1".into(),
+            artifact: spec.artifact.map(String::from),
+        })?;
+        Ok(img.def.sif_name())
+    }
+
+    /// The §2.3 resource monitor.
+    pub fn resource_status(&self, at_s: f64, utilization: f64) -> Result<ResourceStatus> {
+        Ok(ResourceStatus {
+            cluster_utilization: utilization,
+            cluster_in_maintenance: self
+                .maintenance
+                .iter()
+                .any(|w| at_s >= w.start_s && at_s < w.end_s),
+            general_store_used_bytes: self
+                .archive
+                .tier_usage(crate::archive::SecurityTier::General)?,
+            gdpr_store_used_bytes: self.archive.tier_usage(crate::archive::SecurityTier::Gdpr)?,
+        })
+    }
+
+    /// Pick the submit target: burst to local iff the cluster is in (or
+    /// about to enter) maintenance at submit time (paper §2.3).
+    pub fn choose_target(&self, submit_s: f64, local_workers: usize) -> SubmitTarget {
+        let blocked = self
+            .maintenance
+            .iter()
+            .any(|w| submit_s >= w.start_s && submit_s < w.end_s);
+        if blocked {
+            SubmitTarget::LocalBurst {
+                workers: local_workers,
+            }
+        } else {
+            SubmitTarget::Hpc
+        }
+    }
+
+    /// Run a full campaign of `pipeline` over `dataset`.
+    pub fn run_campaign(
+        &mut self,
+        ds: &BidsDataset,
+        pipeline_name: &str,
+        target: SubmitTarget,
+        cfg: &CampaignConfig,
+    ) -> Result<CampaignReport> {
+        let spec = by_name(pipeline_name)
+            .with_context(|| format!("unknown pipeline '{pipeline_name}'"))?;
+        let sif = self.ensure_image(&spec)?;
+
+        // 1. automated archive query
+        let QueryResult { runnable, skipped } = find_runnable(ds, &spec)?;
+        let skip_csv = QueryResult {
+            runnable: vec![],
+            skipped: skipped.clone(),
+        }
+        .skip_csv();
+
+        // 2. script generation (durable artifacts)
+        let scripts: Vec<String> = runnable
+            .iter()
+            .map(|j| instance_script(j, &sif, &cfg.user))
+            .collect();
+        let array_script = slurm_array_script(&runnable, &cfg.slurm);
+        let _local_script = local_runner_script(&runnable, cfg.local_max_in_flight);
+
+        // 3-5. submit + execute + copy-back
+        let outcome = match target {
+            SubmitTarget::Hpc => self.execute_hpc(ds, &spec, &runnable, cfg)?,
+            SubmitTarget::LocalBurst { workers } => {
+                self.execute_local(ds, &spec, &runnable, workers, cfg)?
+            }
+        };
+
+        let _ = scripts; // per-instance scripts also available via scripts::*
+        let (mean_min, std_min) = mean_std(&outcome.per_job_minutes);
+        Ok(CampaignReport {
+            pipeline: spec.name.to_string(),
+            dataset: ds.name.clone(),
+            target,
+            queried: runnable.len() + skipped.len(),
+            skipped: skipped.len(),
+            completed: outcome.completed,
+            failed: outcome.failed,
+            makespan_s: outcome.makespan_s,
+            compute_minutes: (mean_min, std_min),
+            total_cost_dollars: outcome.total_cost,
+            skip_csv,
+            array_script,
+            artifact_exec_s: outcome.artifact_exec_mean_s,
+        })
+    }
+
+    fn execute_hpc(
+        &mut self,
+        ds: &BidsDataset,
+        spec: &PipelineSpec,
+        jobs: &[JobSpec],
+        cfg: &CampaignConfig,
+    ) -> Result<ExecOutcome> {
+        let mut rng = Rng::new(cfg.seed);
+        let executor = Executor::new(Env::Hpc, self.runtime);
+        // sample outcomes (transfer + duration + real artifact execution)
+        let mut outcomes = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            outcomes.push(executor.run(job, spec, cfg.input_bytes_per_job, &mut rng, None)?);
+        }
+        // failure injection: failed attempts inflate effective duration;
+        // jobs that exhaust retries drop out (paper §4's cost overrun)
+        let (jobs, outcomes, aborted) = apply_faults(jobs, outcomes, cfg, &mut rng);
+        let jobs = &jobs[..];
+        // feed modeled durations into the cluster simulator as a job array
+        let mut sched = Scheduler::new(self.cluster.clone());
+        for w in &self.maintenance {
+            sched.add_maintenance(*w);
+        }
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: cfg.slurm.max_concurrent,
+        };
+        for (i, (job, out)) in jobs.iter().zip(&outcomes).enumerate() {
+            sched.submit(SimJob {
+                id: i as u64,
+                user: cfg.user.clone(),
+                cores: job.cores,
+                ram_gb: job.ram_gb,
+                duration_s: out.total_seconds(),
+                submit_s: 0.0,
+                array: Some(handle),
+            });
+        }
+        sched.run_to_completion();
+        self.finalize(ds, spec, jobs, &outcomes, Env::Hpc, cfg)?;
+        let mut out = ExecOutcome::collect(&outcomes, sched.makespan());
+        out.failed = aborted;
+        Ok(out)
+    }
+
+    fn execute_local(
+        &mut self,
+        ds: &BidsDataset,
+        spec: &PipelineSpec,
+        jobs: &[JobSpec],
+        workers: usize,
+        cfg: &CampaignConfig,
+    ) -> Result<ExecOutcome> {
+        // Local burst: bounded-concurrency pool (backpressure = bounded
+        // in-flight set). The PJRT client holds thread-local state (Rc
+        // internals in the xla crate), so artifact-backed pipelines execute
+        // serially; model-only pipelines fan out across the pool like the
+        // generated Python runner would.
+        let seed = cfg.seed;
+        let input_bytes = cfg.input_bytes_per_job;
+        let workers = workers.min(cfg.local_max_in_flight).max(1);
+        let outcomes: Vec<crate::compute::JobOutcome> = if self.runtime.is_some() {
+            let ex = Executor::new(Env::Local, self.runtime);
+            jobs.iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let mut rng = Rng::new(seed.wrapping_add(i as u64));
+                    ex.run(job, spec, input_bytes, &mut rng, None)
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            let tasks: Vec<_> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let job = job.clone();
+                    let spec = spec.clone();
+                    move || {
+                        let mut rng = Rng::new(seed.wrapping_add(i as u64));
+                        let ex = Executor::new(Env::Local, None);
+                        ex.run(&job, &spec, input_bytes, &mut rng, None)
+                    }
+                })
+                .collect();
+            run_parallel(workers, tasks)
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+        };
+        // makespan: greedy wave model over `workers` lanes
+        let mut lanes = vec![0.0f64; workers];
+        for out in &outcomes {
+            let lane = lanes
+                .iter_mut()
+                .min_by(|a, b| a.partial_cmp(b).unwrap())
+                .unwrap();
+            *lane += out.total_seconds();
+        }
+        let makespan = lanes.iter().cloned().fold(0.0, f64::max);
+        self.finalize(ds, spec, jobs, &outcomes, Env::Local, cfg)?;
+        Ok(ExecOutcome::collect(&outcomes, makespan))
+    }
+
+    /// Copy-back phase: write derivative outputs + provenance, marking the
+    /// session processed (so the next query skips it).
+    fn finalize(
+        &mut self,
+        ds: &BidsDataset,
+        spec: &PipelineSpec,
+        jobs: &[JobSpec],
+        outcomes: &[crate::compute::JobOutcome],
+        env: Env,
+        cfg: &CampaignConfig,
+    ) -> Result<()> {
+        let sif = self.ensure_image(spec)?;
+        let sha = self
+            .containers
+            .latest(spec.name)
+            .map(|i| i.sha256.clone())
+            .unwrap_or_default();
+        for (i, (job, out)) in jobs.iter().zip(outcomes).enumerate() {
+            let name = BidsName::new(&job.subject, job.session.as_deref(), Modality::T1w);
+            let dir = ds.derivative_dir(spec.name, &name);
+            std::fs::create_dir_all(&dir)?;
+            // QA stats file (the pipeline's native output format)
+            let mut stats = String::new();
+            for (k, v) in &out.qa {
+                stats.push_str(&format!("{k}\t{v}\n"));
+            }
+            stats.push_str(&format!("compute_minutes\t{}\n", out.compute_minutes));
+            std::fs::write(dir.join("stats.tsv"), stats)?;
+            Provenance {
+                pipeline: spec.name.to_string(),
+                container_image: sif.clone(),
+                container_sha: sha.clone(),
+                user: cfg.user.clone(),
+                timestamp: 1_720_000_000.0 + i as f64,
+                inputs: job.inputs.clone(),
+                compute_env: format!("{env:?}"),
+                job_id: Some(i as u64),
+            }
+            .save(&dir)?;
+        }
+        // check speed factor consistency (documentation invariant)
+        debug_assert!(env_speed_factor(env) > 0.0);
+        Ok(())
+    }
+}
+
+/// Apply the campaign's fault model: per job, sample the retry trace; the
+/// effective duration factor inflates both compute time and cost; jobs
+/// whose retries are exhausted are dropped (counted as aborted).
+fn apply_faults(
+    jobs: &[JobSpec],
+    outcomes: Vec<crate::compute::JobOutcome>,
+    cfg: &CampaignConfig,
+    rng: &mut Rng,
+) -> (Vec<JobSpec>, Vec<crate::compute::JobOutcome>, usize) {
+    let Some(model) = cfg.faults else {
+        return (jobs.to_vec(), outcomes, 0);
+    };
+    let mut kept_jobs = Vec::with_capacity(jobs.len());
+    let mut kept = Vec::with_capacity(outcomes.len());
+    let mut aborted = 0;
+    for (job, mut out) in jobs.iter().cloned().zip(outcomes) {
+        let trace = run_with_retries(&model, cfg.max_retries, rng);
+        if trace.completed {
+            out.compute_minutes *= trace.effective_duration_factor;
+            out.cost_dollars *= trace.effective_duration_factor;
+            kept_jobs.push(job);
+            kept.push(out);
+        } else {
+            aborted += 1;
+        }
+    }
+    (kept_jobs, kept, aborted)
+}
+
+struct ExecOutcome {
+    completed: usize,
+    failed: usize,
+    makespan_s: f64,
+    per_job_minutes: Vec<f64>,
+    total_cost: f64,
+    artifact_exec_mean_s: f64,
+}
+
+impl ExecOutcome {
+    fn collect(outcomes: &[crate::compute::JobOutcome], makespan_s: f64) -> Self {
+        let per_job_minutes: Vec<f64> = outcomes.iter().map(|o| o.compute_minutes).collect();
+        let total_cost = outcomes.iter().map(|o| o.cost_dollars).sum();
+        let execs: Vec<f64> = outcomes
+            .iter()
+            .filter(|o| o.artifact_exec_s > 0.0)
+            .map(|o| o.artifact_exec_s)
+            .collect();
+        Self {
+            completed: outcomes.len(),
+            failed: 0,
+            makespan_s,
+            per_job_minutes,
+            total_cost,
+            artifact_exec_mean_s: if execs.is_empty() {
+                0.0
+            } else {
+                execs.iter().sum::<f64>() / execs.len() as f64
+            },
+        }
+    }
+}
+
+/// Convenience: build a full simulated deployment (archive + containers +
+/// coordinator) under one root directory.
+pub fn deployment_at<'rt>(
+    root: &PathBuf,
+    runtime: Option<&'rt Runtime>,
+) -> Result<Coordinator<'rt>> {
+    let archive = Archive::at(&root.join("store"))?;
+    let containers = ContainerArchive::open(&root.join("containers"))?;
+    Ok(Coordinator::new(archive, containers, runtime))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::SecurityTier;
+    use crate::workload::{ingest_cohort, SynthCohort};
+
+    fn setup(tag: &str) -> (PathBuf, BidsDataset, Coordinator<'static>) {
+        let root = std::env::temp_dir().join(format!("medflow_coord_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let mut archive = Archive::at(&root.join("store")).unwrap();
+        let cohort = SynthCohort {
+            name: "MINI".into(),
+            participants: 3,
+            sessions: 4,
+            tier: SecurityTier::General,
+        };
+        let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 11).unwrap();
+        let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+        let mut coord = Coordinator::new(archive, containers, None);
+        coord.cluster = ClusterSpec::small(4, 8, 64);
+        (root, ds, coord)
+    }
+
+    #[test]
+    fn campaign_processes_all_runnable_then_idempotent() {
+        let (root, ds, mut coord) = setup("camp");
+        let cfg = CampaignConfig::default();
+        let r1 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(r1.completed > 0);
+        assert_eq!(r1.failed, 0);
+        assert!(r1.makespan_s > 0.0);
+        assert!(r1.total_cost_dollars > 0.0);
+        // second run finds nothing new (idempotency invariant)
+        let r2 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert_eq!(r2.completed, 0);
+        assert_eq!(r2.skipped, r1.queried);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn provenance_written_per_instance() {
+        let (root, ds, mut coord) = setup("prov");
+        let cfg = CampaignConfig::default();
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        let mut provs = 0;
+        for sub in ds.subjects().unwrap() {
+            for ses in ds.sessions(&sub).unwrap() {
+                let name = BidsName::new(&sub, ses.as_deref(), Modality::T1w);
+                let p = ds.derivative_dir("freesurfer", &name).join("provenance.json");
+                if p.exists() {
+                    let prov = Provenance::load(&p).unwrap();
+                    assert_eq!(prov.pipeline, "freesurfer");
+                    assert_eq!(prov.user, "medflow");
+                    provs += 1;
+                }
+            }
+        }
+        assert_eq!(provs, r.completed);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn local_burst_completes_same_work() {
+        let (root, ds, mut coord) = setup("burst");
+        let cfg = CampaignConfig::default();
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::LocalBurst { workers: 2 }, &cfg)
+            .unwrap();
+        assert!(r.completed > 0);
+        assert_eq!(r.failed, 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn maintenance_triggers_burst_choice() {
+        let (root, _ds, mut coord) = setup("maint");
+        coord.add_maintenance(Maintenance {
+            start_s: 0.0,
+            end_s: 3600.0,
+        });
+        assert_eq!(
+            coord.choose_target(100.0, 4),
+            SubmitTarget::LocalBurst { workers: 4 }
+        );
+        assert_eq!(coord.choose_target(7200.0, 4), SubmitTarget::Hpc);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn fault_model_inflates_cost_and_reports_aborts() {
+        let (root, ds, mut coord) = setup("faults");
+        let clean_cfg = CampaignConfig::default();
+        // measure the fault-free cost on a fresh twin dataset first
+        let harsh_cfg = CampaignConfig {
+            faults: Some(crate::faults::FaultModel::harsh()),
+            max_retries: 3,
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &harsh_cfg)
+            .unwrap();
+        // completed + aborted = all runnable
+        assert_eq!(r.completed + r.failed, r.queried - r.skipped);
+        // the same campaign fault-free on the remaining work costs at the
+        // naive per-job rate; with harsh faults the per-job cost is higher
+        let per_job_faulty = r.total_cost_dollars / r.completed.max(1) as f64;
+        let (root2, ds2, mut coord2) = setup("faults2");
+        let r2 = coord2
+            .run_campaign(&ds2, "freesurfer", SubmitTarget::Hpc, &clean_cfg)
+            .unwrap();
+        let per_job_clean = r2.total_cost_dollars / r2.completed.max(1) as f64;
+        assert!(
+            per_job_faulty > per_job_clean,
+            "faulty {per_job_faulty} must exceed clean {per_job_clean}"
+        );
+        std::fs::remove_dir_all(&root).unwrap();
+        std::fs::remove_dir_all(&root2).unwrap();
+    }
+
+    #[test]
+    fn skip_csv_emitted() {
+        let (root, ds, mut coord) = setup("skipcsv");
+        let cfg = CampaignConfig::default();
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(r.skip_csv.contains("subject,session,skip_reason"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn resource_status_reports_storage() {
+        let (root, _ds, coord) = setup("status");
+        let st = coord.resource_status(0.0, 0.5).unwrap();
+        assert!(st.general_store_used_bytes > 0);
+        assert_eq!(st.gdpr_store_used_bytes, 0);
+        assert!(!st.cluster_in_maintenance);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn dependent_pipeline_unlocked_by_campaign() {
+        let (root, ds, mut coord) = setup("dep");
+        let cfg = CampaignConfig::default();
+        // tractseg blocked until prequal runs
+        let r0 = coord
+            .run_campaign(&ds, "tractseg", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert_eq!(r0.completed, 0);
+        let _ = coord
+            .run_campaign(&ds, "prequal", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        let r1 = coord
+            .run_campaign(&ds, "tractseg", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(r1.completed > 0, "tractseg should now run");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

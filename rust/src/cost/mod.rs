@@ -1,0 +1,100 @@
+//! Cost accounting (paper §2.2, §3, Table 1): ACCRE core-hours, AWS
+//! on-demand instances, amortized workstations, ACCRE vs Glacier storage.
+//! All constants come from the paper (and its cited pricing pages).
+
+pub mod planner;
+
+use crate::netsim::Env;
+use crate::util::units::{GB, TB};
+
+/// ACCRE on-demand compute: $84/core/year (paper §2.2).
+pub const ACCRE_DOLLARS_PER_CORE_YEAR: f64 = 84.0;
+
+/// AWS t2.xlarge (4 vCPU, 16 GB): $0.1856/hr (paper Table 1, ref 56).
+pub const AWS_T2_XLARGE_PER_HOUR: f64 = 0.1856;
+
+/// Research workstation: ~$4000, 5-year life (paper Table 1 caption).
+pub const WORKSTATION_DOLLARS: f64 = 4000.0;
+pub const WORKSTATION_LIFE_YEARS: f64 = 5.0;
+
+/// ACCRE backed-up storage: $180/TB/year (paper §2.2).
+pub const ACCRE_STORAGE_PER_TB_YEAR: f64 = 180.0;
+
+/// Amazon Glacier Deep Archive: $0.0036/GB/month (paper §2.2, ref 54).
+pub const GLACIER_PER_GB_MONTH: f64 = 0.0036;
+
+const HOURS_PER_YEAR: f64 = 8760.0;
+
+/// $/hour to hold one job slot (a 16 GB single-instance allocation, the
+/// Table 1 comparison unit) in each environment.
+pub fn instance_hourly_rate(env: Env) -> f64 {
+    match env {
+        // Table 1 compares one 16 GB instance; ACCRE's unit is the core.
+        Env::Hpc => ACCRE_DOLLARS_PER_CORE_YEAR / HOURS_PER_YEAR,
+        Env::Cloud => AWS_T2_XLARGE_PER_HOUR,
+        // One workstation amortized over its life, one job per workstation
+        // (paper's stated assumption).
+        Env::Local => WORKSTATION_DOLLARS / (WORKSTATION_LIFE_YEARS * HOURS_PER_YEAR),
+    }
+}
+
+/// Direct cost of holding a slot for `minutes` in `env`.
+pub fn compute_cost(env: Env, minutes: f64) -> f64 {
+    instance_hourly_rate(env) * minutes / 60.0
+}
+
+/// Yearly cost of `bytes` on ACCRE backed-up storage.
+pub fn accre_storage_cost_per_year(bytes: u64) -> f64 {
+    bytes as f64 / TB as f64 * ACCRE_STORAGE_PER_TB_YEAR
+}
+
+/// Monthly cost of `bytes` in Glacier Deep Archive.
+pub fn glacier_cost_per_month(bytes: u64) -> f64 {
+    bytes as f64 / GB as f64 * GLACIER_PER_GB_MONTH
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hourly_rates_match_table1() {
+        // Table 1: HPC 0.0096, cloud 0.1856, local 0.0913 $/hr
+        assert!((instance_hourly_rate(Env::Hpc) - 0.0096).abs() < 0.0001);
+        assert!((instance_hourly_rate(Env::Cloud) - 0.1856).abs() < 1e-9);
+        assert!((instance_hourly_rate(Env::Local) - 0.0913).abs() < 0.0001);
+    }
+
+    #[test]
+    fn freesurfer_campaign_costs_match_table1() {
+        // Table 1 bottom row: 6 scans × mean runtime → $0.36 / $6.59 / $3.53
+        let hpc = 6.0 * compute_cost(Env::Hpc, 375.5);
+        let cloud = 6.0 * compute_cost(Env::Cloud, 355.2);
+        let local = 6.0 * compute_cost(Env::Local, 386.0);
+        assert!((hpc - 0.36).abs() < 0.01, "hpc={hpc}");
+        assert!((cloud - 6.59).abs() < 0.02, "cloud={cloud}");
+        assert!((local - 3.53).abs() < 0.02, "local={local}");
+    }
+
+    #[test]
+    fn cloud_roughly_20x_hpc() {
+        let ratio = compute_cost(Env::Cloud, 355.2) / compute_cost(Env::Hpc, 375.5);
+        assert!((15.0..25.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn storage_costs_match_paper() {
+        // §2.2: 400 TB on ACCRE = $72,000/yr
+        assert!((accre_storage_cost_per_year(400 * TB) - 72_000.0).abs() < 1.0);
+        // Glacier is far cheaper per year for the same bytes
+        let glacier_yr = glacier_cost_per_month(400 * TB) * 12.0;
+        assert!(glacier_yr < 72_000.0 / 3.0, "glacier={glacier_yr}");
+    }
+
+    #[test]
+    fn zero_time_zero_cost() {
+        for env in Env::all() {
+            assert_eq!(compute_cost(env, 0.0), 0.0);
+        }
+    }
+}

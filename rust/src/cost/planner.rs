@@ -1,0 +1,175 @@
+//! Paper-scale cost projection (§4: "processing tens of thousands of MRI
+//! scans … through 16 different processing pipelines can become a huge
+//! financial sink"). Projects a full-catalog processing campaign's
+//! core-hours and dollars per environment, with and without the fault
+//! overrun — the planning tool a lab would actually consult before
+//! committing to a platform.
+
+use crate::cost::compute_cost;
+use crate::faults::{expected_overrun, FaultModel};
+use crate::netsim::Env;
+use crate::pipeline::{registry, InputReq, PipelineSpec};
+use crate::workload::{catalog, DatasetCatalogEntry};
+
+/// Projection for one pipeline over the full catalog.
+#[derive(Debug, Clone)]
+pub struct PipelineProjection {
+    pub pipeline: &'static str,
+    pub eligible_sessions: u64,
+    pub core_hours: f64,
+    pub dollars_hpc: f64,
+    pub dollars_cloud: f64,
+}
+
+/// Catalog-wide projection.
+#[derive(Debug, Clone)]
+pub struct CampaignProjection {
+    pub per_pipeline: Vec<PipelineProjection>,
+    pub overrun_factor: f64,
+}
+
+/// Fraction of sessions carrying each modality (matches the synthetic
+/// cohort generator's rates — 90% T1w, 60% DWI).
+const P_T1: f64 = 0.9;
+const P_DWI: f64 = 0.6;
+
+fn eligible_fraction(input: &InputReq) -> f64 {
+    match input {
+        InputReq::T1w => P_T1,
+        InputReq::Dwi => P_DWI,
+        InputReq::T1wAndDwi => P_T1 * P_DWI,
+        // dependents run wherever the prior ran
+        InputReq::T1wAndPrior(_) => P_T1,
+        InputReq::DwiAndPrior(_) => P_DWI,
+    }
+}
+
+fn project_pipeline(
+    spec: &PipelineSpec,
+    total_sessions: u64,
+    overrun: f64,
+) -> PipelineProjection {
+    let eligible = (total_sessions as f64 * eligible_fraction(&spec.input)).round() as u64;
+    let minutes = spec.resources.minutes_mean * overrun;
+    let core_hours = eligible as f64 * minutes / 60.0 * spec.resources.cores as f64;
+    // unit economics: HPC charges per core; cloud jobs need enough
+    // t2.xlarge instances (4 vCPU each) to cover the core request
+    let dollars_hpc =
+        eligible as f64 * compute_cost(Env::Hpc, minutes) * spec.resources.cores as f64;
+    let instances = ((spec.resources.cores + 3) / 4) as f64;
+    let dollars_cloud = eligible as f64 * compute_cost(Env::Cloud, minutes) * instances;
+    PipelineProjection {
+        pipeline: spec.name,
+        eligible_sessions: eligible,
+        core_hours,
+        dollars_hpc,
+        dollars_cloud,
+    }
+}
+
+/// Project the full 20-dataset × 16-pipeline campaign.
+pub fn project_campaign(faults: Option<FaultModel>, max_retries: u32) -> CampaignProjection {
+    let total_sessions: u64 = catalog().iter().map(|e: &DatasetCatalogEntry| e.sessions).sum();
+    let overrun = faults
+        .map(|m| expected_overrun(&m, max_retries, 50_000, 4242))
+        .unwrap_or(1.0);
+    let per_pipeline = registry()
+        .iter()
+        .map(|spec| project_pipeline(spec, total_sessions, overrun))
+        .collect();
+    CampaignProjection {
+        per_pipeline,
+        overrun_factor: overrun,
+    }
+}
+
+impl CampaignProjection {
+    pub fn total_core_hours(&self) -> f64 {
+        self.per_pipeline.iter().map(|p| p.core_hours).sum()
+    }
+
+    pub fn total_dollars(&self, env: Env) -> f64 {
+        self.per_pipeline
+            .iter()
+            .map(|p| match env {
+                Env::Cloud => p.dollars_cloud,
+                _ => p.dollars_hpc,
+            })
+            .sum()
+    }
+
+    pub fn format(&self) -> String {
+        let mut s = String::from(
+            "Paper-scale campaign projection (52,311 sessions × 16 pipelines)\n",
+        );
+        s.push_str(&format!(
+            "{:<22}{:>10}{:>14}{:>12}{:>12}\n",
+            "pipeline", "sessions", "core-hours", "$ HPC", "$ cloud"
+        ));
+        for p in &self.per_pipeline {
+            s.push_str(&format!(
+                "{:<22}{:>10}{:>14.0}{:>12.0}{:>12.0}\n",
+                p.pipeline, p.eligible_sessions, p.core_hours, p.dollars_hpc, p.dollars_cloud
+            ));
+        }
+        s.push_str(&format!(
+            "{:<22}{:>10}{:>14.0}{:>12.0}{:>12.0}\n",
+            "TOTAL",
+            "",
+            self.total_core_hours(),
+            self.total_dollars(Env::Hpc),
+            self.total_dollars(Env::Cloud)
+        ));
+        s.push_str(&format!("(fault overrun factor: {:.3}x)\n", self.overrun_factor));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_covers_all_pipelines() {
+        let p = project_campaign(None, 0);
+        assert_eq!(p.per_pipeline.len(), 16);
+        assert_eq!(p.overrun_factor, 1.0);
+        assert!(p.total_core_hours() > 0.0);
+    }
+
+    #[test]
+    fn cloud_many_times_more_expensive_at_scale() {
+        let p = project_campaign(None, 0);
+        let ratio = p.total_dollars(Env::Cloud) / p.total_dollars(Env::Hpc);
+        // per-core pricing gap is ~19x; 4-vCPU instance granularity keeps
+        // the effective gap close to that
+        assert!(ratio > 4.0, "ratio={ratio}");
+        assert!(ratio < 25.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn faults_inflate_projection() {
+        let clean = project_campaign(None, 3);
+        let faulty = project_campaign(Some(FaultModel::typical()), 3);
+        assert!(faulty.overrun_factor > 1.0);
+        assert!(faulty.total_dollars(Env::Hpc) > clean.total_dollars(Env::Hpc));
+        let ratio = faulty.total_core_hours() / clean.total_core_hours();
+        assert!((ratio - faulty.overrun_factor).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eligible_sessions_bounded_by_catalog() {
+        let total: u64 = catalog().iter().map(|e| e.sessions).sum();
+        for p in project_campaign(None, 0).per_pipeline {
+            assert!(p.eligible_sessions <= total);
+            assert!(p.eligible_sessions > 0);
+        }
+    }
+
+    #[test]
+    fn format_lists_everything() {
+        let text = project_campaign(None, 0).format();
+        assert!(text.contains("freesurfer"));
+        assert!(text.contains("TOTAL"));
+    }
+}

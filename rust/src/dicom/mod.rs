@@ -1,0 +1,262 @@
+//! Minimal DICOM substrate (paper §2.1: data arrives as DICOM when
+//! available; medflow converts to NIfTI + JSON sidecar).
+//!
+//! Implements a real-if-small subset of DICOM Part 10: 128-byte preamble,
+//! "DICM" magic, Explicit VR Little Endian data elements for the tags the
+//! converter needs (patient/study/series/instance IDs, acquisition
+//! parameters, pixel spacing, image geometry, and 16-bit pixel data). A
+//! synthetic scanner ([`synth`]) emits per-slice files like a real session.
+
+pub mod synth;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// DICOM tag (group, element).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tag(pub u16, pub u16);
+
+pub mod tags {
+    use super::Tag;
+    pub const PATIENT_ID: Tag = Tag(0x0010, 0x0020);
+    pub const PATIENT_NAME: Tag = Tag(0x0010, 0x0010);
+    pub const STUDY_DATE: Tag = Tag(0x0008, 0x0020);
+    pub const MODALITY: Tag = Tag(0x0008, 0x0060);
+    pub const SERIES_DESC: Tag = Tag(0x0008, 0x103E);
+    pub const PROTOCOL_NAME: Tag = Tag(0x0018, 0x1030);
+    pub const STUDY_UID: Tag = Tag(0x0020, 0x000D);
+    pub const SERIES_UID: Tag = Tag(0x0020, 0x000E);
+    pub const SERIES_NUMBER: Tag = Tag(0x0020, 0x0011);
+    pub const INSTANCE_NUMBER: Tag = Tag(0x0020, 0x0013);
+    pub const ROWS: Tag = Tag(0x0028, 0x0010);
+    pub const COLS: Tag = Tag(0x0028, 0x0011);
+    pub const PIXEL_SPACING: Tag = Tag(0x0028, 0x0030);
+    pub const SLICE_THICKNESS: Tag = Tag(0x0018, 0x0050);
+    pub const ECHO_TIME: Tag = Tag(0x0018, 0x0081);
+    pub const REPETITION_TIME: Tag = Tag(0x0018, 0x0080);
+    pub const MAGNETIC_FIELD: Tag = Tag(0x0018, 0x0087);
+    pub const MANUFACTURER: Tag = Tag(0x0008, 0x0070);
+    pub const B_VALUE: Tag = Tag(0x0018, 0x9087);
+    pub const PIXEL_DATA: Tag = Tag(0x7FE0, 0x0010);
+}
+
+/// Element value: strings (any text VR), u16 (US), or raw pixel payload (OW).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    U16(u16),
+    Pixels(Vec<u16>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u16(&self) -> Option<u16> {
+        match self {
+            Value::U16(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Str(s) => s.trim().parse().ok(),
+            Value::U16(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+}
+
+/// One DICOM object (a slice file).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DicomObject {
+    pub elements: BTreeMap<Tag, Value>,
+}
+
+impl DicomObject {
+    pub fn set_str(&mut self, tag: Tag, v: impl Into<String>) -> &mut Self {
+        self.elements.insert(tag, Value::Str(v.into()));
+        self
+    }
+
+    pub fn set_u16(&mut self, tag: Tag, v: u16) -> &mut Self {
+        self.elements.insert(tag, Value::U16(v));
+        self
+    }
+
+    pub fn get(&self, tag: Tag) -> Option<&Value> {
+        self.elements.get(&tag)
+    }
+
+    pub fn str_of(&self, tag: Tag) -> Option<&str> {
+        self.get(tag).and_then(Value::as_str)
+    }
+
+    /// Encode as DICOM Part 10: preamble + DICM + Explicit VR LE elements.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; 128];
+        out.extend_from_slice(b"DICM");
+        for (tag, value) in &self.elements {
+            out.extend_from_slice(&tag.0.to_le_bytes());
+            out.extend_from_slice(&tag.1.to_le_bytes());
+            match value {
+                Value::Str(s) => {
+                    // LO (long string); even-length padded with space
+                    let mut bytes = s.as_bytes().to_vec();
+                    if bytes.len() % 2 == 1 {
+                        bytes.push(b' ');
+                    }
+                    out.extend_from_slice(b"LO");
+                    out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+                    out.extend_from_slice(&bytes);
+                }
+                Value::U16(v) => {
+                    out.extend_from_slice(b"US");
+                    out.extend_from_slice(&2u16.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                Value::Pixels(px) => {
+                    // OW with 32-bit length (reserved 2 bytes zero)
+                    out.extend_from_slice(b"OW");
+                    out.extend_from_slice(&[0, 0]);
+                    out.extend_from_slice(&((px.len() * 2) as u32).to_le_bytes());
+                    for v in px {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse DICOM Part 10 bytes (the subset [`to_bytes`] emits).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 132 || &bytes[128..132] != b"DICM" {
+            bail!("not a DICOM part-10 file");
+        }
+        let mut obj = DicomObject::default();
+        let mut pos = 132;
+        while pos + 8 <= bytes.len() {
+            let group = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]);
+            let elem = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
+            let vr = &bytes[pos + 4..pos + 6];
+            pos += 6;
+            let tag = Tag(group, elem);
+            match vr {
+                b"LO" => {
+                    let len = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+                    pos += 2;
+                    if pos + len > bytes.len() {
+                        bail!("truncated LO element at {pos}");
+                    }
+                    let s = String::from_utf8_lossy(&bytes[pos..pos + len])
+                        .trim_end()
+                        .to_string();
+                    obj.elements.insert(tag, Value::Str(s));
+                    pos += len;
+                }
+                b"US" => {
+                    let len = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+                    pos += 2;
+                    if len != 2 || pos + 2 > bytes.len() {
+                        bail!("bad US element at {pos}");
+                    }
+                    obj.elements
+                        .insert(tag, Value::U16(u16::from_le_bytes([bytes[pos], bytes[pos + 1]])));
+                    pos += 2;
+                }
+                b"OW" => {
+                    pos += 2; // reserved
+                    if pos + 4 > bytes.len() {
+                        bail!("truncated OW length");
+                    }
+                    let len = u32::from_le_bytes([
+                        bytes[pos],
+                        bytes[pos + 1],
+                        bytes[pos + 2],
+                        bytes[pos + 3],
+                    ]) as usize;
+                    pos += 4;
+                    if pos + len > bytes.len() {
+                        bail!("truncated pixel data: need {len} at {pos}");
+                    }
+                    let px: Vec<u16> = bytes[pos..pos + len]
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                        .collect();
+                    obj.elements.insert(tag, Value::Pixels(px));
+                    pos += len;
+                }
+                other => bail!("unsupported VR {:?}", String::from_utf8_lossy(other)),
+            }
+        }
+        Ok(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DicomObject {
+        let mut o = DicomObject::default();
+        o.set_str(tags::PATIENT_ID, "sub01")
+            .set_str(tags::MODALITY, "MR")
+            .set_str(tags::PROTOCOL_NAME, "T1w_MPRAGE")
+            .set_str(tags::PIXEL_SPACING, "1.0\\1.0")
+            .set_u16(tags::ROWS, 32)
+            .set_u16(tags::COLS, 32)
+            .set_u16(tags::INSTANCE_NUMBER, 7);
+        o.elements
+            .insert(tags::PIXEL_DATA, Value::Pixels((0..32 * 32).map(|i| i as u16).collect()));
+        o
+    }
+
+    #[test]
+    fn roundtrip() {
+        let o = sample();
+        let back = DicomObject::from_bytes(&o.to_bytes()).unwrap();
+        assert_eq!(back.str_of(tags::PATIENT_ID), Some("sub01"));
+        assert_eq!(back.get(tags::ROWS).unwrap().as_u16(), Some(32));
+        match back.get(tags::PIXEL_DATA).unwrap() {
+            Value::Pixels(px) => assert_eq!(px.len(), 1024),
+            _ => panic!("pixels lost"),
+        }
+    }
+
+    #[test]
+    fn odd_length_string_padded() {
+        let mut o = DicomObject::default();
+        o.set_str(tags::PATIENT_ID, "abc"); // odd length
+        let back = DicomObject::from_bytes(&o.to_bytes()).unwrap();
+        assert_eq!(back.str_of(tags::PATIENT_ID), Some("abc"));
+    }
+
+    #[test]
+    fn rejects_non_dicom() {
+        assert!(DicomObject::from_bytes(b"not dicom").is_err());
+        let mut garbage = vec![0u8; 132];
+        garbage[128..132].copy_from_slice(b"XXXX");
+        assert!(DicomObject::from_bytes(&garbage).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_pixels() {
+        let o = sample();
+        let bytes = o.to_bytes();
+        assert!(DicomObject::from_bytes(&bytes[..bytes.len() - 10]).is_err());
+    }
+
+    #[test]
+    fn numeric_string_parsing() {
+        let mut o = DicomObject::default();
+        o.set_str(tags::ECHO_TIME, "2.95");
+        assert_eq!(o.get(tags::ECHO_TIME).unwrap().as_f64(), Some(2.95));
+    }
+}

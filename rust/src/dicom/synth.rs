@@ -1,0 +1,193 @@
+//! Synthetic scanner: emits DICOM series the way a site transfer would
+//! (per-slice files, shared study/series UIDs). This is the substitution
+//! for the paper's national-study data feeds (DESIGN.md §2): curation and
+//! conversion logic depend on structure, not anatomy.
+
+use super::{tags, DicomObject, Value};
+use crate::util::rng::Rng;
+
+/// Scan protocol kinds medflow curates (paper keeps T1w + DWI only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    T1w,
+    Dwi,
+    /// Protocols the curator filters out (fMRI, FLAIR…, paper §2).
+    Other,
+}
+
+impl Protocol {
+    pub fn name(self) -> &'static str {
+        match self {
+            Protocol::T1w => "T1w_MPRAGE",
+            Protocol::Dwi => "DWI_dir98",
+            Protocol::Other => "rsfMRI_bold",
+        }
+    }
+}
+
+/// Parameters for one synthetic series.
+#[derive(Debug, Clone)]
+pub struct SeriesSpec {
+    pub patient_id: String,
+    pub study_date: String,
+    pub protocol: Protocol,
+    pub series_number: u16,
+    pub rows: u16,
+    pub cols: u16,
+    pub slices: u16,
+    pub b_value: Option<f64>,
+}
+
+impl SeriesSpec {
+    pub fn t1w(patient_id: &str, study_date: &str, dim: u16) -> Self {
+        Self {
+            patient_id: patient_id.into(),
+            study_date: study_date.into(),
+            protocol: Protocol::T1w,
+            series_number: 2,
+            rows: dim,
+            cols: dim,
+            slices: dim,
+            b_value: None,
+        }
+    }
+
+    pub fn dwi(patient_id: &str, study_date: &str, dim: u16, b: f64) -> Self {
+        Self {
+            patient_id: patient_id.into(),
+            study_date: study_date.into(),
+            protocol: Protocol::Dwi,
+            series_number: 8,
+            rows: dim,
+            cols: dim,
+            slices: dim,
+            b_value: Some(b),
+        }
+    }
+}
+
+/// Deterministic pseudo-UID from the series identity (reproducible runs).
+fn uid(parts: &[&str], rng: &mut Rng) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in parts {
+        for b in p.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    format!("1.2.840.99.{}.{}", h % 1_000_000_007, rng.below(1_000_000))
+}
+
+/// Generate one series as per-slice DICOM objects with a simple phantom:
+/// concentric intensity shells + noise (enough structure for the seg
+/// pipeline to find three tissue classes).
+pub fn synth_series(spec: &SeriesSpec, seed: u64) -> Vec<DicomObject> {
+    let mut rng = Rng::new(seed);
+    let study_uid = uid(&[&spec.patient_id, &spec.study_date], &mut rng);
+    let series_uid = uid(&[&spec.patient_id, &spec.study_date, spec.protocol.name()], &mut rng);
+    let (r, c, s) = (spec.rows as usize, spec.cols as usize, spec.slices as usize);
+    let center = [r as f64 / 2.0, c as f64 / 2.0, s as f64 / 2.0];
+    let mut out = Vec::with_capacity(s);
+    for z in 0..s {
+        let mut px = Vec::with_capacity(r * c);
+        for y in 0..c {
+            for x in 0..r {
+                let d = ((x as f64 - center[0]).powi(2)
+                    + (y as f64 - center[1]).powi(2)
+                    + (z as f64 - center[2]).powi(2))
+                .sqrt();
+                let rmax = r as f64 / 2.0;
+                let base = if d < rmax * 0.4 {
+                    900.0
+                } else if d < rmax * 0.65 {
+                    600.0
+                } else if d < rmax * 0.9 {
+                    300.0
+                } else {
+                    50.0
+                };
+                let v = (base + rng.normal_ms(0.0, 15.0)).clamp(0.0, 4095.0);
+                px.push(v as u16);
+            }
+        }
+        let mut o = DicomObject::default();
+        o.set_str(tags::PATIENT_ID, &spec.patient_id)
+            .set_str(tags::PATIENT_NAME, format!("SYNTH^{}", spec.patient_id))
+            .set_str(tags::STUDY_DATE, &spec.study_date)
+            .set_str(tags::MODALITY, "MR")
+            .set_str(tags::PROTOCOL_NAME, spec.protocol.name())
+            .set_str(tags::SERIES_DESC, spec.protocol.name())
+            .set_str(tags::STUDY_UID, &study_uid)
+            .set_str(tags::SERIES_UID, &series_uid)
+            .set_str(tags::MANUFACTURER, "MedflowSynth")
+            .set_str(tags::PIXEL_SPACING, "1.0\\1.0")
+            .set_str(tags::SLICE_THICKNESS, "1.0")
+            .set_str(tags::ECHO_TIME, "2.95")
+            .set_str(tags::REPETITION_TIME, "2300")
+            .set_str(tags::MAGNETIC_FIELD, "3")
+            .set_u16(tags::SERIES_NUMBER, spec.series_number)
+            .set_u16(tags::INSTANCE_NUMBER, (z + 1) as u16)
+            .set_u16(tags::ROWS, spec.rows)
+            .set_u16(tags::COLS, spec.cols);
+        if let Some(b) = spec.b_value {
+            o.set_str(tags::B_VALUE, format!("{b}"));
+        }
+        o.elements.insert(tags::PIXEL_DATA, Value::Pixels(px));
+        out.push(o);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_has_one_file_per_slice() {
+        let spec = SeriesSpec::t1w("sub01", "20240101", 16);
+        let objs = synth_series(&spec, 1);
+        assert_eq!(objs.len(), 16);
+        for (i, o) in objs.iter().enumerate() {
+            assert_eq!(o.get(tags::INSTANCE_NUMBER).unwrap().as_u16(), Some(i as u16 + 1));
+        }
+    }
+
+    #[test]
+    fn uids_shared_within_series_distinct_across_patients() {
+        let a = synth_series(&SeriesSpec::t1w("s1", "20240101", 4), 1);
+        let b = synth_series(&SeriesSpec::t1w("s2", "20240101", 4), 1);
+        let ua: Vec<_> = a.iter().map(|o| o.str_of(tags::SERIES_UID).unwrap()).collect();
+        assert!(ua.windows(2).all(|w| w[0] == w[1]));
+        assert_ne!(ua[0], b[0].str_of(tags::SERIES_UID).unwrap());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = SeriesSpec::t1w("sub01", "20240101", 8);
+        let a = synth_series(&spec, 7);
+        let b = synth_series(&spec, 7);
+        assert_eq!(a[3].to_bytes(), b[3].to_bytes());
+    }
+
+    #[test]
+    fn phantom_has_tissue_contrast() {
+        let spec = SeriesSpec::t1w("sub01", "20240101", 32);
+        let objs = synth_series(&spec, 2);
+        let mid = &objs[16];
+        if let Value::Pixels(px) = mid.get(tags::PIXEL_DATA).unwrap() {
+            let center = px[16 * 32 + 16] as f64;
+            let edge = px[0] as f64;
+            assert!(center > 700.0, "center {center}");
+            assert!(edge < 200.0, "edge {edge}");
+        } else {
+            panic!("no pixels");
+        }
+    }
+
+    #[test]
+    fn dwi_series_has_bvalue() {
+        let spec = SeriesSpec::dwi("sub01", "20240101", 8, 1000.0);
+        let objs = synth_series(&spec, 3);
+        assert_eq!(objs[0].get(tags::B_VALUE).unwrap().as_f64(), Some(1000.0));
+    }
+}

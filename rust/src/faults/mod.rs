@@ -1,0 +1,232 @@
+//! Failure injection + retry economics (paper §4: "actual costs would
+//! likely be much greater due to processing errors, debugging, and
+//! resubmitting failed jobs").
+//!
+//! A `FaultModel` assigns each job attempt a failure mode drawn from
+//! calibrated rates; the retry policy resubmits up to `max_retries` times.
+//! Failed attempts still consume compute time (a fraction of the full
+//! duration — most pipeline failures surface mid-run), so the *effective*
+//! cost per completed job exceeds the naive estimate. The
+//! `ablation_faults` bench quantifies that overrun — the paper's warning,
+//! made measurable.
+
+use crate::util::rng::Rng;
+
+/// Why an attempt failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureMode {
+    /// Transfer checksum mismatch (§2.3 abort). Fails early, cheap.
+    ChecksumMismatch,
+    /// Pipeline crash (bad input, OOM…). Fails mid-run.
+    PipelineError,
+    /// Node failure / preemption. Fails anywhere; requeue.
+    NodeFailure,
+    /// Wall-clock limit exceeded. Consumes the whole allocation.
+    Timeout,
+}
+
+impl FailureMode {
+    /// Fraction of the job's duration consumed before the failure shows.
+    pub fn wasted_fraction(self) -> f64 {
+        match self {
+            FailureMode::ChecksumMismatch => 0.02,
+            FailureMode::PipelineError => 0.45,
+            FailureMode::NodeFailure => 0.50,
+            FailureMode::Timeout => 1.0,
+        }
+    }
+}
+
+/// Per-attempt failure probabilities.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultModel {
+    pub p_checksum: f64,
+    pub p_pipeline: f64,
+    pub p_node: f64,
+    pub p_timeout: f64,
+}
+
+impl FaultModel {
+    /// No faults (the baseline cost model).
+    pub fn none() -> Self {
+        Self {
+            p_checksum: 0.0,
+            p_pipeline: 0.0,
+            p_node: 0.0,
+            p_timeout: 0.0,
+        }
+    }
+
+    /// Rates typical of large MRI-processing campaigns (a few % of jobs
+    /// fail per attempt, dominated by pipeline errors on atypical scans).
+    pub fn typical() -> Self {
+        Self {
+            p_checksum: 0.002,
+            p_pipeline: 0.04,
+            p_node: 0.005,
+            p_timeout: 0.01,
+        }
+    }
+
+    /// A rough patch of bad input data / flaky nodes.
+    pub fn harsh() -> Self {
+        Self {
+            p_checksum: 0.01,
+            p_pipeline: 0.12,
+            p_node: 0.03,
+            p_timeout: 0.04,
+        }
+    }
+
+    pub fn total_rate(&self) -> f64 {
+        self.p_checksum + self.p_pipeline + self.p_node + self.p_timeout
+    }
+
+    /// Sample one attempt's outcome.
+    pub fn sample(&self, rng: &mut Rng) -> Option<FailureMode> {
+        let x = rng.next_f64();
+        let mut acc = self.p_checksum;
+        if x < acc {
+            return Some(FailureMode::ChecksumMismatch);
+        }
+        acc += self.p_pipeline;
+        if x < acc {
+            return Some(FailureMode::PipelineError);
+        }
+        acc += self.p_node;
+        if x < acc {
+            return Some(FailureMode::NodeFailure);
+        }
+        acc += self.p_timeout;
+        if x < acc {
+            return Some(FailureMode::Timeout);
+        }
+        None
+    }
+}
+
+/// Outcome of running one job under a fault model with retries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptTrace {
+    /// Failure modes of the failed attempts, in order.
+    pub failures: Vec<FailureMode>,
+    /// Whether the job ultimately completed.
+    pub completed: bool,
+    /// Total compute minutes consumed across all attempts, as a multiple
+    /// of the nominal single-attempt duration.
+    pub effective_duration_factor: f64,
+}
+
+/// Simulate attempts until success or `max_retries` resubmissions.
+pub fn run_with_retries(model: &FaultModel, max_retries: u32, rng: &mut Rng) -> AttemptTrace {
+    let mut failures = Vec::new();
+    let mut factor = 0.0;
+    for _attempt in 0..=max_retries {
+        match model.sample(rng) {
+            None => {
+                factor += 1.0;
+                return AttemptTrace {
+                    failures,
+                    completed: true,
+                    effective_duration_factor: factor,
+                };
+            }
+            Some(mode) => {
+                factor += mode.wasted_fraction();
+                failures.push(mode);
+            }
+        }
+    }
+    AttemptTrace {
+        failures,
+        completed: false,
+        effective_duration_factor: factor,
+    }
+}
+
+/// Expected cost-overrun factor for a campaign: mean effective duration of
+/// *completed* jobs ÷ 1.0 (the naive estimate). The paper's §4 claim is
+/// that this is noticeably above 1 in practice.
+pub fn expected_overrun(model: &FaultModel, max_retries: u32, samples: u32, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut completed = 0u32;
+    for _ in 0..samples {
+        let t = run_with_retries(model, max_retries, &mut rng);
+        if t.completed {
+            total += t.effective_duration_factor;
+            completed += 1;
+        }
+    }
+    if completed == 0 {
+        return f64::INFINITY;
+    }
+    total / completed as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_means_factor_one() {
+        let mut rng = Rng::new(1);
+        let t = run_with_retries(&FaultModel::none(), 3, &mut rng);
+        assert!(t.completed);
+        assert_eq!(t.effective_duration_factor, 1.0);
+        assert!(t.failures.is_empty());
+        assert!((expected_overrun(&FaultModel::none(), 3, 1000, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_rates_approximately_respected() {
+        let model = FaultModel::typical();
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let fails = (0..n).filter(|_| model.sample(&mut rng).is_some()).count();
+        let want = model.total_rate();
+        let got = fails as f64 / n as f64;
+        assert!((got - want).abs() < 0.005, "got {got} want {want}");
+    }
+
+    #[test]
+    fn overrun_grows_with_fault_rate() {
+        let none = expected_overrun(&FaultModel::none(), 3, 20_000, 7);
+        let typical = expected_overrun(&FaultModel::typical(), 3, 20_000, 7);
+        let harsh = expected_overrun(&FaultModel::harsh(), 3, 20_000, 7);
+        assert!(none < typical && typical < harsh, "{none} {typical} {harsh}");
+        assert!(typical > 1.01, "typical faults must cost >1% extra: {typical}");
+        assert!(harsh > 1.08, "harsh faults must cost >8% extra: {harsh}");
+    }
+
+    #[test]
+    fn zero_retries_can_fail() {
+        let model = FaultModel::harsh();
+        let mut rng = Rng::new(5);
+        let any_failed = (0..1000).any(|_| !run_with_retries(&model, 0, &mut rng).completed);
+        assert!(any_failed);
+    }
+
+    #[test]
+    fn retries_raise_completion_rate() {
+        let model = FaultModel::harsh();
+        let rate = |retries| {
+            let mut rng = Rng::new(9);
+            (0..10_000)
+                .filter(|_| run_with_retries(&model, retries, &mut rng).completed)
+                .count() as f64
+                / 10_000.0
+        };
+        let r0 = rate(0);
+        let r3 = rate(3);
+        assert!(r3 > r0, "{r3} vs {r0}");
+        // harsh rate 0.2 ⇒ P(4 consecutive failures) = 0.2⁴ = 0.16%
+        assert!(r3 > 0.995, "3 retries should nearly always complete: {r3}");
+    }
+
+    #[test]
+    fn timeout_wastes_full_allocation() {
+        assert_eq!(FailureMode::Timeout.wasted_fraction(), 1.0);
+        assert!(FailureMode::ChecksumMismatch.wasted_fraction() < 0.1);
+    }
+}

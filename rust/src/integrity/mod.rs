@@ -1,0 +1,244 @@
+//! Data-integrity layer (paper §2.3): every transfer is checksum-verified;
+//! a mismatch terminates the job with an error notification.
+//!
+//! SHA-256 manifests over file trees, plus a fast CRC32 path for the
+//! in-simulator transfer verification where cryptographic strength is not
+//! needed but per-chunk checking is.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+#[cfg(test)]
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+/// Hex SHA-256 of a byte slice.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    hex(&h.finalize())
+}
+
+/// Hex SHA-256 of a file (streamed).
+pub fn sha256_file(path: &Path) -> Result<String> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut h = Sha256::new();
+    std::io::copy(&mut f, &mut h)?;
+    Ok(hex(&h.finalize()))
+}
+
+/// CRC32 of a byte slice (fast per-chunk transfer check).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Checksum manifest over a set of files (relative path → sha256).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, String>,
+}
+
+/// A verification mismatch (the paper's abort condition).
+#[derive(Debug, thiserror::Error)]
+pub enum IntegrityError {
+    #[error("checksum mismatch for '{path}': manifest {expected}, found {actual}")]
+    Mismatch {
+        path: String,
+        expected: String,
+        actual: String,
+    },
+    #[error("file in manifest missing from tree: '{0}'")]
+    Missing(String),
+}
+
+impl Manifest {
+    /// Hash every file under `root` (recursive), keyed by relative path.
+    pub fn of_tree(root: &Path) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut stack = vec![root.to_path_buf()];
+        while let Some(dir) = stack.pop() {
+            for entry in std::fs::read_dir(&dir).with_context(|| format!("read {dir:?}"))? {
+                let entry = entry?;
+                let path = entry.path();
+                if entry.file_type()?.is_dir() {
+                    stack.push(path);
+                } else {
+                    let rel = path
+                        .strip_prefix(root)
+                        .unwrap()
+                        .to_string_lossy()
+                        .to_string();
+                    entries.insert(rel, sha256_file(&path)?);
+                }
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Verify a tree against this manifest. First failure aborts (paper:
+    /// "any non-match results in termination of the job script").
+    pub fn verify_tree(&self, root: &Path) -> Result<(), IntegrityError> {
+        for (rel, expected) in &self.entries {
+            let path = root.join(rel);
+            let actual = match sha256_file(&path) {
+                Ok(h) => h,
+                Err(_) => return Err(IntegrityError::Missing(rel.clone())),
+            };
+            if &actual != expected {
+                return Err(IntegrityError::Mismatch {
+                    path: rel.clone(),
+                    expected: expected.clone(),
+                    actual,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as `<sha256>  <path>` lines (sha256sum format).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (path, digest) in &self.entries {
+            out.push_str(digest);
+            out.push_str("  ");
+            out.push_str(path);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the sha256sum format.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Some((digest, path)) = line.split_once("  ") else {
+                bail!("bad manifest line: '{line}'");
+            };
+            if digest.len() != 64 || !digest.chars().all(|c| c.is_ascii_hexdigit()) {
+                bail!("bad digest in line: '{line}'");
+            }
+            entries.insert(path.to_string(), digest.to_string());
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Copy a file with end-to-end checksum verification; returns bytes copied.
+/// Mirrors the paper's transfer pattern: hash at source, copy, hash at
+/// destination, abort on mismatch.
+pub fn verified_copy(src: &Path, dst: &Path) -> Result<u64> {
+    let before = sha256_file(src)?;
+    if let Some(parent) = dst.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let n = std::fs::copy(src, dst).with_context(|| format!("copy {src:?} -> {dst:?}"))?;
+    let after = sha256_file(dst)?;
+    if before != after {
+        std::fs::remove_file(dst).ok();
+        bail!("verified_copy: checksum mismatch copying {src:?} (expected {before}, got {after})");
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("medflow_int_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        // NIST: sha256("abc")
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_verify() {
+        let root = tmp("manifest");
+        std::fs::create_dir_all(root.join("a/b")).unwrap();
+        std::fs::write(root.join("x.txt"), b"hello").unwrap();
+        std::fs::write(root.join("a/b/y.bin"), [0u8, 1, 2]).unwrap();
+        let m = Manifest::of_tree(&root).unwrap();
+        assert_eq!(m.len(), 2);
+        m.verify_tree(&root).unwrap();
+        let parsed = Manifest::from_text(&m.to_text()).unwrap();
+        assert_eq!(parsed, m);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let root = tmp("corrupt");
+        std::fs::write(root.join("f"), b"payload").unwrap();
+        let m = Manifest::of_tree(&root).unwrap();
+        std::fs::write(root.join("f"), b"tampered").unwrap();
+        match m.verify_tree(&root) {
+            Err(IntegrityError::Mismatch { path, .. }) => assert_eq!(path, "f"),
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn missing_file_detected() {
+        let root = tmp("missing");
+        std::fs::write(root.join("f"), b"payload").unwrap();
+        let m = Manifest::of_tree(&root).unwrap();
+        std::fs::remove_file(root.join("f")).unwrap();
+        assert!(matches!(m.verify_tree(&root), Err(IntegrityError::Missing(_))));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn verified_copy_roundtrip() {
+        let root = tmp("copy");
+        let src = root.join("src.bin");
+        std::fs::write(&src, vec![7u8; 4096]).unwrap();
+        let dst = root.join("sub/dst.bin");
+        let n = verified_copy(&src, &dst).unwrap();
+        assert_eq!(n, 4096);
+        assert_eq!(std::fs::read(&dst).unwrap(), vec![7u8; 4096]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn manifest_text_rejects_garbage() {
+        assert!(Manifest::from_text("nothash  path").is_err());
+        assert!(Manifest::from_text("deadbeef\n").is_err());
+    }
+
+    #[test]
+    fn crc32_differs_on_change() {
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+        assert_eq!(crc32(b"abc"), crc32(b"abc"));
+    }
+}

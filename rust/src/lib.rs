@@ -1,0 +1,39 @@
+//! # medflow
+//!
+//! Scalable, reproducible, cost-effective processing of large-scale medical
+//! imaging datasets — a full reproduction of Kim et al. (2024) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * **L3 (this crate)**: BIDS curation, archive query, script generation,
+//!   SLURM-style scheduling, checksum-verified staging, provenance, cost
+//!   accounting, and the semi-automated coordinator tying them together.
+//! * **L2/L1 (python/compile)**: the imaging pipelines' numeric cores (JAX
+//!   graphs calling Pallas kernels), AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime**: loads those artifacts via PJRT (`xla` crate) and executes
+//!   them from the job path — Python is never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod archive;
+pub mod backup;
+pub mod bids;
+pub mod compute;
+pub mod config;
+pub mod container;
+pub mod convert;
+pub mod coordinator;
+pub mod cost;
+pub mod dicom;
+pub mod faults;
+pub mod integrity;
+pub mod netsim;
+pub mod nifti;
+pub mod pipeline;
+pub mod provenance;
+pub mod query;
+pub mod report;
+pub mod runtime;
+pub mod scripts;
+pub mod slurm;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,322 @@
+//! medflow CLI — the leader entrypoint (paper Fig. 3's "local control
+//! node"). Hand-rolled arg parsing (no clap in the offline cache).
+//!
+//! ```text
+//! medflow ingest    --root DIR --dataset NAME --participants N --sessions M [--gdpr]
+//! medflow validate  --root DIR --dataset NAME
+//! medflow query     --root DIR --dataset NAME --pipeline P
+//! medflow campaign  --root DIR --dataset NAME --pipeline P [--local N]
+//! medflow status    --root DIR
+//! medflow pipelines
+//! medflow table1 | table2 | table3 | fig1
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use medflow::archive::{Archive, SecurityTier};
+use medflow::bids::{validate_dataset, BidsDataset, Severity};
+use medflow::compute::load_runtime;
+use medflow::container::ContainerArchive;
+use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::pipeline::{by_name, registry};
+use medflow::query::find_runnable;
+use medflow::report;
+use medflow::workload::{ingest_cohort, SynthCohort};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("medflow error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs + `--flag` booleans.
+struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { values, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing --{key}"))
+    }
+
+    fn num(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "ingest" => cmd_ingest(&args),
+        "validate" => cmd_validate(&args),
+        "query" => cmd_query(&args),
+        "campaign" => cmd_campaign(&args),
+        "status" => cmd_status(&args),
+        "pipelines" => {
+            println!("{:<22}{:<10}{:>8}{:>8}{:>12}", "pipeline", "version", "cores", "ram", "minutes");
+            for p in registry() {
+                println!(
+                    "{:<22}{:<10}{:>8}{:>8}{:>12.1}",
+                    p.name, p.version, p.resources.cores, p.resources.ram_gb, p.resources.minutes_mean
+                );
+            }
+            Ok(())
+        }
+        "table1" => {
+            let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+            let cols = report::table1(runtime.as_ref(), 42, 100, 100)?;
+            println!("{}", report::format_table1(&cols));
+            Ok(())
+        }
+        "sweep" => cmd_sweep(&args),
+        "growth" => {
+            let models = medflow::archive::growth::default_models();
+            for years in [0.0, 1.0, 3.0, 5.0] {
+                let f = medflow::archive::growth::forecast(&models, years);
+                println!(
+                    "t+{years:>3.0}y  general {:>6.1} TB ({:>4.0}% free)  gdpr {:>6.1} TB ({:>4.0}% free)  glacier ${:>7.0}/mo",
+                    f.general_bytes as f64 / 1e12,
+                    f.general_headroom() * 100.0,
+                    f.gdpr_bytes as f64 / 1e12,
+                    f.gdpr_headroom() * 100.0,
+                    f.glacier_dollars_per_month
+                );
+            }
+            match medflow::archive::growth::years_until_exhaustion(&models) {
+                Some(y) => println!("capacity exhausted in ~{y:.1} years — plan expansion"),
+                None => println!("no exhaustion within 100 years"),
+            }
+            Ok(())
+        }
+        "project" => {
+            let faults = if args.has("faults") {
+                Some(medflow::faults::FaultModel::typical())
+            } else {
+                None
+            };
+            println!("{}", medflow::cost::planner::project_campaign(faults, 3).format());
+            Ok(())
+        }
+        "table2" => {
+            println!("{}", report::format_table2());
+            Ok(())
+        }
+        "table3" => {
+            println!("{}", report::format_table3());
+            Ok(())
+        }
+        "fig1" => {
+            let pts = report::fig1(42);
+            println!("{}", report::format_fig1(&pts));
+            print!("{}", report::fig1_csv(&pts));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: medflow help)"),
+    }
+}
+
+fn root_of(args: &Args) -> Result<PathBuf> {
+    Ok(PathBuf::from(args.require("root")?))
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let name = args.require("dataset")?;
+    let cohort = SynthCohort {
+        name: name.to_string(),
+        participants: args.num("participants", 4),
+        sessions: args.num("sessions", 6),
+        tier: if args.has("gdpr") {
+            SecurityTier::Gdpr
+        } else {
+            SecurityTier::General
+        },
+    };
+    let mut archive = Archive::at(&root.join("store"))?;
+    let ds = ingest_cohort(
+        &mut archive,
+        &root.join("bids"),
+        &cohort,
+        args.num("dim", 16) as u16,
+        args.num("seed", 42),
+    )?;
+    let usage = archive.usage(name)?;
+    println!(
+        "ingested '{}': {} subjects, {} files, {} bytes (tier {:?})",
+        ds.name,
+        ds.subjects()?.len(),
+        usage.file_count,
+        usage.bytes,
+        cohort.tier
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let ds_root = root.join("bids").join(args.require("dataset")?);
+    let issues = validate_dataset(&ds_root);
+    for issue in &issues {
+        println!(
+            "{}: {} ({})",
+            if issue.severity == Severity::Error { "ERROR" } else { "warn" },
+            issue.message,
+            issue.path.display()
+        );
+    }
+    let errors = issues.iter().filter(|i| i.severity == Severity::Error).count();
+    println!("{} issues, {} errors", issues.len(), errors);
+    if errors > 0 {
+        bail!("validation failed");
+    }
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let ds = BidsDataset::open(&root.join("bids").join(args.require("dataset")?))?;
+    let pipeline = by_name(args.require("pipeline")?)
+        .with_context(|| "unknown pipeline (see `medflow pipelines`)")?;
+    let q = find_runnable(&ds, &pipeline)?;
+    println!("runnable: {}", q.runnable.len());
+    for j in &q.runnable {
+        println!("  {}", j.instance_id());
+    }
+    println!("skipped: {}", q.skipped.len());
+    print!("{}", q.skip_csv());
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let ds = BidsDataset::open(&root.join("bids").join(args.require("dataset")?))?;
+    let pipeline = args.require("pipeline")?;
+    let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    let archive = Archive::at(&root.join("store"))?;
+    let containers = ContainerArchive::open(&root.join("containers"))?;
+    let mut coord = Coordinator::new(archive, containers, runtime.as_ref());
+    let target = match args.get("local") {
+        Some(w) => SubmitTarget::LocalBurst {
+            workers: w.parse().unwrap_or(4),
+        },
+        None => SubmitTarget::Hpc,
+    };
+    let cfg = CampaignConfig {
+        user: args.get("user").unwrap_or("medflow").to_string(),
+        seed: args.num("seed", 42),
+        ..Default::default()
+    };
+    let r = coord.run_campaign(&ds, pipeline, target, &cfg)?;
+    println!(
+        "campaign {}/{}: queried {} completed {} skipped {} failed {}",
+        r.dataset, r.pipeline, r.queried, r.completed, r.skipped, r.failed
+    );
+    println!(
+        "makespan {:.2} h, compute {:.1} ± {:.1} min/job, cost ${:.2}",
+        r.makespan_s / 3600.0,
+        r.compute_minutes.0,
+        r.compute_minutes.1,
+        r.total_cost_dollars
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let ds = BidsDataset::open(&root.join("bids").join(args.require("dataset")?))?;
+    let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    let archive = Archive::at(&root.join("store"))?;
+    let containers = ContainerArchive::open(&root.join("containers"))?;
+    let mut coord = Coordinator::new(archive, containers, runtime.as_ref());
+    let cfg = CampaignConfig::default();
+    let sweep =
+        medflow::coordinator::planner::run_sweep(&mut coord, &ds, SubmitTarget::Hpc, &cfg)?;
+    for c in &sweep.campaigns {
+        println!(
+            "{:<22} completed {:>4} skipped {:>4} cost ${:>8.2}",
+            c.pipeline, c.completed, c.skipped, c.total_cost_dollars
+        );
+    }
+    println!(
+        "sweep total: {} jobs, ${:.2}, {:.1} h",
+        sweep.total_completed(),
+        sweep.total_cost_dollars(),
+        sweep.total_makespan_s() / 3600.0
+    );
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let archive = Archive::at(&root.join("store"))?;
+    println!("storage status:");
+    for (name, tier) in archive.datasets().collect::<Vec<_>>() {
+        let u = archive.usage(name)?;
+        println!(
+            "  {:<16} {:?}: {} files, {} bytes, {} raw images",
+            name, tier, u.file_count, u.bytes, u.raw_image_count
+        );
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "medflow — scalable, reproducible, cost-effective medical-imaging processing
+
+USAGE:
+  medflow ingest    --root DIR --dataset NAME [--participants N] [--sessions M] [--gdpr]
+  medflow validate  --root DIR --dataset NAME
+  medflow query     --root DIR --dataset NAME --pipeline P
+  medflow campaign  --root DIR --dataset NAME --pipeline P [--local WORKERS]
+  medflow status    --root DIR
+  medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)
+  medflow project   [--faults]                    (paper-scale cost projection)
+  medflow growth                                  (storage capacity forecast)
+  medflow pipelines
+  medflow table1 | table2 | table3 | fig1"
+    );
+}

@@ -1,0 +1,200 @@
+//! Network + storage transfer simulation (paper §2.4, Table 1).
+//!
+//! Models the three compute environments' storage→compute data paths as a
+//! latency + composite-throughput model calibrated to the paper's measured
+//! values (DESIGN.md §2 records the substitution):
+//!
+//! | env   | throughput (Gb/s) | latency (ms)  | path                          |
+//! |-------|-------------------|---------------|-------------------------------|
+//! | HPC   | 0.60 ± 0.08       | 0.16 ± 0.25   | HDD store → 100 Gb fabric → HDD node |
+//! | cloud | 0.33 ± 0.01       | 19.56 ± 0.17  | HDD store → WAN → SSD EC2     |
+//! | local | 0.81 ± 0.01       | 1.64 ± 0.25   | SSD → workstation LAN → SSD   |
+//!
+//! The composite throughput is dominated by disk read+write on the HPC path
+//! (hence < 1 Gb/s despite the 100 Gb fabric — paper §4) and by the WAN on
+//! the cloud path. Samples are drawn per transfer so repeated experiments
+//! reproduce the paper's mean ± stdev columns.
+
+pub mod components;
+
+use crate::util::rng::Rng;
+use crate::util::units::gbps_to_bytes_per_sec;
+
+/// Compute environment identity (Table 1 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Env {
+    Hpc,
+    Cloud,
+    Local,
+}
+
+impl Env {
+    pub fn name(self) -> &'static str {
+        match self {
+            Env::Hpc => "HPC (ACCRE)",
+            Env::Cloud => "Cloud (AWS t2.xlarge)",
+            Env::Local => "Local",
+        }
+    }
+
+    pub fn all() -> [Env; 3] {
+        [Env::Hpc, Env::Cloud, Env::Local]
+    }
+}
+
+/// Transfer-path model for one environment.
+#[derive(Debug, Clone, Copy)]
+pub struct NetProfile {
+    pub env: Env,
+    /// Composite storage→compute throughput, Gb/s (mean, std).
+    pub throughput_gbps: (f64, f64),
+    /// Round-trip latency for a 64-byte packet, ms (mean, std). The std in
+    /// the paper is measurement jitter; we clamp samples at 10 µs.
+    pub latency_ms: (f64, f64),
+}
+
+impl NetProfile {
+    pub fn of(env: Env) -> Self {
+        match env {
+            // HDD read (~155 MB/s) → 100 Gb fabric → HDD write (~150 MB/s)
+            // composite ≈ 75 MB/s ≈ 0.60 Gb/s.
+            Env::Hpc => Self {
+                env,
+                throughput_gbps: (0.60, 0.08),
+                latency_ms: (0.16, 0.25),
+            },
+            // HDD read → ~63 MB/s WAN → SSD write; WAN RTT dominates latency.
+            Env::Cloud => Self {
+                env,
+                throughput_gbps: (0.33, 0.01),
+                latency_ms: (19.56, 0.17),
+            },
+            // SSD → workstation LAN → SSD.
+            Env::Local => Self {
+                env,
+                throughput_gbps: (0.81, 0.01),
+                latency_ms: (1.64, 0.25),
+            },
+        }
+    }
+
+    /// Sample the time (seconds) to move `bytes` from storage to compute.
+    pub fn transfer_time(&self, rng: &mut Rng, bytes: u64) -> f64 {
+        let gbps = rng
+            .normal_ms(self.throughput_gbps.0, self.throughput_gbps.1)
+            .max(0.01);
+        let latency_s = self.ping_ms(rng) / 1e3;
+        latency_s + bytes as f64 / gbps_to_bytes_per_sec(gbps)
+    }
+
+    /// Sample one 64-byte round trip (milliseconds).
+    pub fn ping_ms(&self, rng: &mut Rng) -> f64 {
+        rng.normal_ms(self.latency_ms.0, self.latency_ms.1).max(0.01)
+    }
+
+    /// Observed throughput (Gb/s) for one sampled transfer of `bytes`.
+    pub fn observed_gbps(&self, rng: &mut Rng, bytes: u64) -> f64 {
+        let t = self.transfer_time(rng, bytes);
+        bytes as f64 * 8.0 / 1e9 / t
+    }
+}
+
+/// The paper's §2.4 bandwidth experiment: copy a 1 GB file `n` times,
+/// report per-copy observed throughput samples (Gb/s).
+pub fn bandwidth_experiment(env: Env, n: usize, seed: u64) -> Vec<f64> {
+    let profile = NetProfile::of(env);
+    let mut rng = Rng::new(seed);
+    let gb = 1_000_000_000u64;
+    (0..n).map(|_| profile.observed_gbps(&mut rng, gb)).collect()
+}
+
+/// The paper's §2.4 latency experiment: 100 pings of 64 bytes (ms samples).
+pub fn latency_experiment(env: Env, n: usize, seed: u64) -> Vec<f64> {
+    let profile = NetProfile::of(env);
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| profile.ping_ms(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::mean_std;
+
+    #[test]
+    fn bandwidth_matches_paper_calibration() {
+        // (env, expected mean Gb/s, tolerance)
+        for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
+            let samples = bandwidth_experiment(env, 100, 42);
+            let (mean, _) = mean_std(&samples);
+            assert!(
+                (mean - want).abs() < 0.05,
+                "{env:?}: mean {mean} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_matches_paper_calibration() {
+        for (env, want, tol) in [
+            (Env::Hpc, 0.16, 0.1),
+            (Env::Cloud, 19.56, 0.2),
+            (Env::Local, 1.64, 0.15),
+        ] {
+            let samples = latency_experiment(env, 100, 42);
+            let (mean, _) = mean_std(&samples);
+            assert!((mean - want).abs() < tol, "{env:?}: mean {mean} want {want}");
+        }
+    }
+
+    #[test]
+    fn cloud_latency_dominates() {
+        let (hpc, _) = mean_std(&latency_experiment(Env::Hpc, 100, 1));
+        let (cloud, _) = mean_std(&latency_experiment(Env::Cloud, 100, 1));
+        let (local, _) = mean_std(&latency_experiment(Env::Local, 100, 1));
+        assert!(cloud > 10.0 * local && local > hpc);
+    }
+
+    #[test]
+    fn ordering_local_fastest_cloud_slowest() {
+        let m = |e| mean_std(&bandwidth_experiment(e, 100, 7)).0;
+        assert!(m(Env::Local) > m(Env::Hpc));
+        assert!(m(Env::Hpc) > m(Env::Cloud));
+    }
+
+    #[test]
+    fn transfer_time_scales_with_size() {
+        let p = NetProfile::of(Env::Hpc);
+        let mut rng = Rng::new(3);
+        let t_small: f64 = (0..50).map(|_| p.transfer_time(&mut rng, 1_000_000)).sum();
+        let mut rng = Rng::new(3);
+        let t_big: f64 = (0..50).map(|_| p.transfer_time(&mut rng, 1_000_000_000)).sum();
+        assert!(t_big > 50.0 * t_small / 10.0);
+    }
+
+    #[test]
+    fn small_files_latency_bound_on_cloud() {
+        // a 1 KB file on cloud should take ≈ latency, not bandwidth time
+        let p = NetProfile::of(Env::Cloud);
+        let mut rng = Rng::new(5);
+        let t = p.transfer_time(&mut rng, 1_000);
+        assert!(t > 0.015 && t < 0.025, "t={t}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(bandwidth_experiment(Env::Hpc, 10, 9), bandwidth_experiment(Env::Hpc, 10, 9));
+        assert_ne!(bandwidth_experiment(Env::Hpc, 10, 9), bandwidth_experiment(Env::Hpc, 10, 10));
+    }
+
+    #[test]
+    fn samples_always_positive() {
+        for env in Env::all() {
+            for s in bandwidth_experiment(env, 1000, 11) {
+                assert!(s > 0.0);
+            }
+            for s in latency_experiment(env, 1000, 11) {
+                assert!(s > 0.0);
+            }
+        }
+    }
+}

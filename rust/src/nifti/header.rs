@@ -1,0 +1,225 @@
+//! The 348-byte NIfTI-1 header (https://nifti.nimh.nih.gov/nifti-1).
+//! Only the fields medflow reads/writes are modeled; the rest are zeroed on
+//! write and ignored on read (which real tools also tolerate).
+
+use anyhow::{bail, Result};
+
+/// Supported on-disk datatypes (NIfTI codes 2, 4, 16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datatype {
+    Uint8,
+    Int16,
+    Float32,
+}
+
+impl Datatype {
+    pub fn code(self) -> i16 {
+        match self {
+            Datatype::Uint8 => 2,
+            Datatype::Int16 => 4,
+            Datatype::Float32 => 16,
+        }
+    }
+
+    pub fn bitpix(self) -> i16 {
+        (self.size() * 8) as i16
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Datatype::Uint8 => 1,
+            Datatype::Int16 => 2,
+            Datatype::Float32 => 4,
+        }
+    }
+
+    pub fn from_code(code: i16) -> Result<Self> {
+        Ok(match code {
+            2 => Datatype::Uint8,
+            4 => Datatype::Int16,
+            16 => Datatype::Float32,
+            c => bail!("unsupported nifti datatype code {c}"),
+        })
+    }
+}
+
+/// Parsed NIfTI-1 header (3-D images).
+#[derive(Debug, Clone)]
+pub struct NiftiHeader {
+    pub dim: [i16; 8],
+    pub pixdim: [f32; 8],
+    pub datatype: Datatype,
+    pub vox_offset: f32,
+    pub scl_slope: f32,
+    pub scl_inter: f32,
+    pub descrip: String,
+}
+
+impl NiftiHeader {
+    pub fn for_dims(dims: [u16; 3], voxel_mm: [f32; 3], datatype: Datatype) -> Self {
+        let mut dim = [1i16; 8];
+        dim[0] = 3;
+        for i in 0..3 {
+            dim[i + 1] = dims[i] as i16;
+        }
+        let mut pixdim = [1.0f32; 8];
+        for i in 0..3 {
+            pixdim[i + 1] = voxel_mm[i];
+        }
+        Self {
+            dim,
+            pixdim,
+            datatype,
+            vox_offset: 352.0,
+            scl_slope: 1.0,
+            scl_inter: 0.0,
+            descrip: "medflow".to_string(),
+        }
+    }
+
+    pub fn for_dims_4d(dims: [u16; 4], voxel_mm: [f32; 3], datatype: Datatype) -> Self {
+        let mut h = Self::for_dims([dims[0], dims[1], dims[2]], voxel_mm, datatype);
+        h.dim[0] = 4;
+        h.dim[4] = dims[3] as i16;
+        h
+    }
+
+    pub fn dims(&self) -> [u16; 3] {
+        [self.dim[1] as u16, self.dim[2] as u16, self.dim[3] as u16]
+    }
+
+    pub fn voxel_mm(&self) -> [f32; 3] {
+        [self.pixdim[1], self.pixdim[2], self.pixdim[3]]
+    }
+
+    pub fn nvox(&self) -> usize {
+        (1..=self.dim[0] as usize)
+            .map(|i| self.dim[i].max(1) as usize)
+            .product()
+    }
+
+    /// Serialize the canonical 348 bytes.
+    pub fn to_bytes(&self) -> Result<[u8; 348]> {
+        let mut b = [0u8; 348];
+        put_i32(&mut b, 0, 348); // sizeof_hdr
+        put_i16(&mut b, 40, self.dim[0]);
+        for i in 1..8 {
+            put_i16(&mut b, 40 + 2 * i, self.dim[i]);
+        }
+        put_i16(&mut b, 70, self.datatype.code());
+        put_i16(&mut b, 72, self.datatype.bitpix());
+        for i in 0..8 {
+            put_f32(&mut b, 76 + 4 * i, self.pixdim[i]);
+        }
+        put_f32(&mut b, 108, self.vox_offset);
+        put_f32(&mut b, 112, self.scl_slope);
+        put_f32(&mut b, 116, self.scl_inter);
+        let desc = self.descrip.as_bytes();
+        let n = desc.len().min(79);
+        b[148..148 + n].copy_from_slice(&desc[..n]);
+        // sform/qform codes 0 (unoriented synthetic data)
+        b[344..348].copy_from_slice(b"n+1\0"); // magic: single-file
+        Ok(b)
+    }
+
+    /// Parse 348 header bytes (little-endian only — we never emit BE).
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() < 348 {
+            bail!("header too short");
+        }
+        if get_i32(b, 0) != 348 {
+            bail!("bad sizeof_hdr (big-endian or not nifti-1?)");
+        }
+        if &b[344..347] != b"n+1" {
+            bail!("bad magic: {:?}", &b[344..348]);
+        }
+        let mut dim = [0i16; 8];
+        for i in 0..8 {
+            dim[i] = get_i16(b, 40 + 2 * i);
+        }
+        if !(1..=7).contains(&dim[0]) {
+            bail!("bad ndim {}", dim[0]);
+        }
+        let mut pixdim = [0f32; 8];
+        for i in 0..8 {
+            pixdim[i] = get_f32(b, 76 + 4 * i);
+        }
+        let descrip = String::from_utf8_lossy(&b[148..227])
+            .trim_end_matches('\0')
+            .to_string();
+        Ok(Self {
+            dim,
+            pixdim,
+            datatype: Datatype::from_code(get_i16(b, 70))?,
+            vox_offset: get_f32(b, 108),
+            scl_slope: get_f32(b, 112),
+            scl_inter: get_f32(b, 116),
+            descrip,
+        })
+    }
+}
+
+fn put_i32(b: &mut [u8], off: usize, v: i32) {
+    b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn put_i16(b: &mut [u8], off: usize, v: i16) {
+    b[off..off + 2].copy_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut [u8], off: usize, v: f32) {
+    b[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn get_i32(b: &[u8], off: usize) -> i32 {
+    i32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn get_i16(b: &[u8], off: usize) -> i16 {
+    i16::from_le_bytes([b[off], b[off + 1]])
+}
+
+fn get_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = NiftiHeader::for_dims([64, 64, 48], [1.0, 1.0, 1.5], Datatype::Float32);
+        let back = NiftiHeader::from_bytes(&h.to_bytes().unwrap()).unwrap();
+        assert_eq!(back.dims(), [64, 64, 48]);
+        assert_eq!(back.voxel_mm(), [1.0, 1.0, 1.5]);
+        assert_eq!(back.datatype, Datatype::Float32);
+        assert_eq!(back.nvox(), 64 * 64 * 48);
+        assert_eq!(back.descrip, "medflow");
+    }
+
+    #[test]
+    fn datatype_codes_match_standard() {
+        assert_eq!(Datatype::Uint8.code(), 2);
+        assert_eq!(Datatype::Int16.code(), 4);
+        assert_eq!(Datatype::Float32.code(), 16);
+        assert_eq!(Datatype::Float32.bitpix(), 32);
+        assert!(Datatype::from_code(64).is_err()); // f64 unsupported
+    }
+
+    #[test]
+    fn rejects_wrong_sizeof_hdr() {
+        let h = NiftiHeader::for_dims([4, 4, 4], [1.0; 3], Datatype::Uint8);
+        let mut b = h.to_bytes().unwrap();
+        b[0] = 0;
+        assert!(NiftiHeader::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn long_description_truncated_safely() {
+        let mut h = NiftiHeader::for_dims([2, 2, 2], [1.0; 3], Datatype::Uint8);
+        h.descrip = "x".repeat(200);
+        let back = NiftiHeader::from_bytes(&h.to_bytes().unwrap()).unwrap();
+        assert_eq!(back.descrip.len(), 79);
+    }
+}

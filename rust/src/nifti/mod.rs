@@ -1,0 +1,251 @@
+//! NIfTI-1 reader/writer built from scratch (paper §2.1: images are stored
+//! as NIfTI after dcm2niix conversion).
+//!
+//! Implements the 348-byte NIfTI-1 header (single-file `.nii` layout, vox
+//! offset 352), f32/i16/u8 data types, and transparent gzip (`.nii.gz`) via
+//! flate2. That subset covers everything the pipelines produce or consume.
+
+mod header;
+
+pub use header::{Datatype, NiftiHeader};
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+/// An in-memory NIfTI-1 image: header + f32 voxels (whatever the on-disk
+/// datatype, voxels are widened to f32 on read; `scl_slope/inter` applied).
+#[derive(Debug, Clone)]
+pub struct NiftiImage {
+    pub header: NiftiHeader,
+    pub data: Vec<f32>,
+}
+
+impl NiftiImage {
+    /// Build an image from dims + voxel data (row-major x-fastest, the
+    /// NIfTI on-disk order).
+    pub fn new(dims: [u16; 3], voxel_mm: [f32; 3], data: Vec<f32>) -> Result<Self> {
+        let n = dims.iter().map(|&d| d as usize).product::<usize>();
+        if data.len() != n {
+            bail!("data length {} != dims product {}", data.len(), n);
+        }
+        Ok(Self {
+            header: NiftiHeader::for_dims(dims, voxel_mm, Datatype::Float32),
+            data,
+        })
+    }
+
+    /// Build a 4-D image (e.g. a DWI series: x, y, z, volumes).
+    pub fn new_4d(dims: [u16; 4], voxel_mm: [f32; 3], data: Vec<f32>) -> Result<Self> {
+        let n = dims.iter().map(|&d| d as usize).product::<usize>();
+        if data.len() != n {
+            bail!("data length {} != dims product {}", data.len(), n);
+        }
+        Ok(Self {
+            header: NiftiHeader::for_dims_4d(dims, voxel_mm, Datatype::Float32),
+            data,
+        })
+    }
+
+    /// Extract 3-D volume `t` from a 4-D image.
+    pub fn volume(&self, t: usize) -> Result<Vec<f32>> {
+        let dim = &self.header.dim;
+        if dim[0] != 4 {
+            bail!("volume() needs a 4-D image (ndim={})", dim[0]);
+        }
+        let vol_len = (dim[1] as usize) * (dim[2] as usize) * (dim[3] as usize);
+        let nt = dim[4] as usize;
+        if t >= nt {
+            bail!("volume {t} out of range (nt={nt})");
+        }
+        Ok(self.data[t * vol_len..(t + 1) * vol_len].to_vec())
+    }
+
+    pub fn nvox(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Serialize as single-file `.nii` bytes (348-byte header + pad + data).
+    pub fn to_nii_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = self.header.to_bytes()?.to_vec();
+        out.extend_from_slice(&[0u8; 4]); // extension flag: none
+        debug_assert_eq!(out.len(), 352);
+        match self.header.datatype {
+            Datatype::Float32 => {
+                for v in &self.data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Datatype::Int16 => {
+                for v in &self.data {
+                    out.extend_from_slice(&(v.round().clamp(-32768.0, 32767.0) as i16).to_le_bytes());
+                }
+            }
+            Datatype::Uint8 => {
+                for v in &self.data {
+                    out.push(v.round().clamp(0.0, 255.0) as u8);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse single-file `.nii` bytes.
+    pub fn from_nii_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 352 {
+            bail!("nii too short: {} bytes", bytes.len());
+        }
+        let header = NiftiHeader::from_bytes(&bytes[..348])?;
+        let off = header.vox_offset.max(352.0) as usize;
+        let n = header.nvox();
+        let dt = header.datatype;
+        let need = off + n * dt.size();
+        if bytes.len() < need {
+            bail!("nii truncated: have {}, need {}", bytes.len(), need);
+        }
+        let raw = &bytes[off..need];
+        let mut data = Vec::with_capacity(n);
+        match dt {
+            Datatype::Float32 => {
+                for c in raw.chunks_exact(4) {
+                    data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            Datatype::Int16 => {
+                for c in raw.chunks_exact(2) {
+                    data.push(i16::from_le_bytes([c[0], c[1]]) as f32);
+                }
+            }
+            Datatype::Uint8 => data.extend(raw.iter().map(|&b| b as f32)),
+        }
+        // apply scaling if set
+        if header.scl_slope != 0.0 && (header.scl_slope != 1.0 || header.scl_inter != 0.0) {
+            for v in &mut data {
+                *v = *v * header.scl_slope + header.scl_inter;
+            }
+        }
+        Ok(Self { header, data })
+    }
+
+    /// Write to `.nii` or `.nii.gz` (gzip decided by extension).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_nii_bytes()?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        if path.extension().map(|e| e == "gz").unwrap_or(false) {
+            let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+            let mut enc = GzEncoder::new(f, Compression::fast());
+            enc.write_all(&bytes)?;
+            enc.finish()?;
+        } else {
+            std::fs::write(path, &bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Read from `.nii` or `.nii.gz`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        let bytes = if path.extension().map(|e| e == "gz").unwrap_or(false) {
+            let mut dec = GzDecoder::new(&raw[..]);
+            let mut out = Vec::new();
+            dec.read_to_end(&mut out).context("gunzip")?;
+            out
+        } else {
+            raw
+        };
+        Self::from_nii_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(dims: [u16; 3]) -> NiftiImage {
+        let n: usize = dims.iter().map(|&d| d as usize).product();
+        let data: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.5).collect();
+        NiftiImage::new(dims, [1.0, 1.0, 1.2], data).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let img = sample([8, 7, 6]);
+        let back = NiftiImage::from_nii_bytes(&img.to_nii_bytes().unwrap()).unwrap();
+        assert_eq!(back.header.dims(), [8, 7, 6]);
+        assert_eq!(back.data, img.data);
+        assert_eq!(back.header.voxel_mm(), [1.0, 1.0, 1.2]);
+    }
+
+    #[test]
+    fn roundtrip_file_nii_and_gz(){
+        let dir = std::env::temp_dir().join(format!("medflow_nifti_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let img = sample([16, 16, 16]);
+        for name in ["a.nii", "b.nii.gz"] {
+            let p = dir.join(name);
+            img.save(&p).unwrap();
+            let back = NiftiImage::load(&p).unwrap();
+            assert_eq!(back.data, img.data, "{name}");
+        }
+        // gz must actually be smaller than raw for this compressible data
+        let raw = std::fs::metadata(dir.join("a.nii")).unwrap().len();
+        let gz = std::fs::metadata(dir.join("b.nii.gz")).unwrap().len();
+        assert!(gz < raw, "gz {gz} raw {raw}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn four_d_roundtrip_and_volume_extraction() {
+        let nt = 3;
+        let vol_len = 4 * 4 * 4;
+        let data: Vec<f32> = (0..vol_len * nt).map(|i| i as f32).collect();
+        let img = NiftiImage::new_4d([4, 4, 4, nt as u16], [1.0; 3], data.clone()).unwrap();
+        let back = NiftiImage::from_nii_bytes(&img.to_nii_bytes().unwrap()).unwrap();
+        assert_eq!(back.header.dim[0], 4);
+        assert_eq!(back.header.dim[4], nt as i16);
+        assert_eq!(back.data, data);
+        let v1 = back.volume(1).unwrap();
+        assert_eq!(v1, data[vol_len..2 * vol_len]);
+        assert!(back.volume(3).is_err());
+        // 3-D images refuse volume()
+        assert!(sample([4, 4, 4]).volume(0).is_err());
+    }
+
+    #[test]
+    fn int16_roundtrip_with_scaling() {
+        let mut img = sample([4, 4, 4]);
+        img.header.datatype = Datatype::Int16;
+        img.header.scl_slope = 2.0;
+        img.header.scl_inter = 1.0;
+        let back = NiftiImage::from_nii_bytes(&img.to_nii_bytes().unwrap()).unwrap();
+        // stored value round(v) then scaled by slope/inter on read
+        assert_eq!(back.data[3], (img.data[3].round()) * 2.0 + 1.0);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(NiftiImage::new([2, 2, 2], [1.0; 3], vec![0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let img = sample([4, 4, 4]);
+        let bytes = img.to_nii_bytes().unwrap();
+        assert!(NiftiImage::from_nii_bytes(&bytes[..400]).is_err());
+        assert!(NiftiImage::from_nii_bytes(&bytes[..100]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let img = sample([4, 4, 4]);
+        let mut bytes = img.to_nii_bytes().unwrap();
+        bytes[344] = b'X';
+        assert!(NiftiImage::from_nii_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! The processing-pipeline registry: the paper's 16 computationally
+//! intensive pipelines (§1, §2), each containerized, with input criteria,
+//! resource requirements, and a calibrated duration model.
+//!
+//! Two pipelines (`freesurfer`-like structural seg and `prequal`-like DWI
+//! preprocessing) execute *real* compute through the PJRT runtime
+//! artifacts; the rest share the same job lifecycle with duration/resource
+//! models only (their numeric cores are out of the paper's evaluation
+//! scope, but the coordinator must schedule them — the paper's experiments
+//! are about coordination, not segmentation quality).
+
+use crate::util::rng::Rng;
+
+/// What a pipeline needs from a scanning session to be runnable (§2.3's
+/// query criteria; sessions failing these land in the skip CSV).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputReq {
+    /// At least one T1w image.
+    T1w,
+    /// At least one DWI image.
+    Dwi,
+    /// Both a T1w and a DWI image in the same session.
+    T1wAndDwi,
+    /// A T1w plus the outputs of a prior pipeline.
+    T1wAndPrior(&'static str),
+    /// A DWI plus the outputs of a prior pipeline.
+    DwiAndPrior(&'static str),
+}
+
+/// Resource request for one job instance (feeds the SLURM sim).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceSpec {
+    pub cores: u32,
+    pub ram_gb: u32,
+    /// Expected wall-clock minutes at paper scale (mean, std) — calibrated
+    /// to the paper where reported (Freesurfer: 375.5 ± 15.5 on HPC).
+    pub minutes_mean: f64,
+    pub minutes_std: f64,
+}
+
+/// One registered pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub name: &'static str,
+    pub version: &'static str,
+    pub input: InputReq,
+    pub resources: ResourceSpec,
+    /// HLO artifact executed by the runtime (None = duration model only).
+    pub artifact: Option<&'static str>,
+    /// Approximate output size per session (bytes) — drives storage and
+    /// copy-back transfer modeling.
+    pub output_bytes: u64,
+}
+
+impl PipelineSpec {
+    /// Sample a wall-clock duration (minutes) for one instance.
+    pub fn sample_minutes(&self, rng: &mut Rng) -> f64 {
+        rng.normal_ms(self.resources.minutes_mean, self.resources.minutes_std)
+            .max(1.0)
+    }
+}
+
+/// The 16-pipeline registry (paper §1: "16 separate pipelines").
+/// Names follow the paper's cited tools where given (Freesurfer, SLANT,
+/// UNesT, PreQual) and the Vanderbilt lab's published pipeline suite for
+/// the remainder.
+pub fn registry() -> Vec<PipelineSpec> {
+    use InputReq::*;
+    let mb = |n: u64| n * 1_000_000;
+    vec![
+        PipelineSpec {
+            name: "freesurfer",
+            version: "7.2.0",
+            input: T1w,
+            resources: ResourceSpec { cores: 1, ram_gb: 8, minutes_mean: 375.5, minutes_std: 15.5 },
+            artifact: Some("seg_pipeline"),
+            output_bytes: mb(300),
+        },
+        PipelineSpec {
+            name: "prequal",
+            version: "1.0.0",
+            input: Dwi,
+            resources: ResourceSpec { cores: 4, ram_gb: 16, minutes_mean: 180.0, minutes_std: 30.0 },
+            artifact: Some("dwi_preproc"),
+            output_bytes: mb(800),
+        },
+        PipelineSpec {
+            name: "slant",
+            version: "1.1.0",
+            input: T1w,
+            resources: ResourceSpec { cores: 2, ram_gb: 12, minutes_mean: 90.0, minutes_std: 10.0 },
+            artifact: Some("seg_pipeline"),
+            output_bytes: mb(150),
+        },
+        PipelineSpec {
+            name: "unest",
+            version: "0.9.0",
+            input: T1w,
+            resources: ResourceSpec { cores: 2, ram_gb: 16, minutes_mean: 45.0, minutes_std: 8.0 },
+            artifact: Some("seg_pipeline"),
+            output_bytes: mb(120),
+        },
+        PipelineSpec {
+            name: "tractseg",
+            version: "2.9",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 4, ram_gb: 24, minutes_mean: 120.0, minutes_std: 20.0 },
+            artifact: None,
+            output_bytes: mb(500),
+        },
+        PipelineSpec {
+            name: "macruise",
+            version: "3.2.0",
+            input: T1wAndPrior("slant"),
+            resources: ResourceSpec { cores: 2, ram_gb: 8, minutes_mean: 150.0, minutes_std: 25.0 },
+            artifact: None,
+            output_bytes: mb(200),
+        },
+        PipelineSpec {
+            name: "biscuit",
+            version: "1.3.0",
+            input: T1w,
+            resources: ResourceSpec { cores: 1, ram_gb: 8, minutes_mean: 60.0, minutes_std: 10.0 },
+            artifact: None,
+            output_bytes: mb(80),
+        },
+        PipelineSpec {
+            name: "eve_registration",
+            version: "2.0",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 2, ram_gb: 12, minutes_mean: 75.0, minutes_std: 12.0 },
+            artifact: Some("atlas_register"),
+            output_bytes: mb(250),
+        },
+        PipelineSpec {
+            name: "wm_atlas",
+            version: "1.5",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 2, ram_gb: 16, minutes_mean: 200.0, minutes_std: 40.0 },
+            artifact: None,
+            output_bytes: mb(600),
+        },
+        PipelineSpec {
+            name: "connectome_special",
+            version: "1.0",
+            input: T1wAndDwi,
+            resources: ResourceSpec { cores: 8, ram_gb: 32, minutes_mean: 300.0, minutes_std: 50.0 },
+            artifact: None,
+            output_bytes: mb(1_200),
+        },
+        PipelineSpec {
+            name: "francois_special",
+            version: "1.2",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 8, ram_gb: 48, minutes_mean: 480.0, minutes_std: 80.0 },
+            artifact: None,
+            output_bytes: mb(2_500),
+        },
+        PipelineSpec {
+            name: "noddi",
+            version: "1.1",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 4, ram_gb: 24, minutes_mean: 240.0, minutes_std: 35.0 },
+            artifact: None,
+            output_bytes: mb(400),
+        },
+        PipelineSpec {
+            name: "bedpostx",
+            version: "6.0",
+            input: DwiAndPrior("prequal"),
+            resources: ResourceSpec { cores: 8, ram_gb: 32, minutes_mean: 600.0, minutes_std: 90.0 },
+            artifact: None,
+            output_bytes: mb(1_500),
+        },
+        PipelineSpec {
+            name: "lesion_seg",
+            version: "0.8",
+            input: T1w,
+            resources: ResourceSpec { cores: 2, ram_gb: 16, minutes_mean: 30.0, minutes_std: 5.0 },
+            artifact: None,
+            output_bytes: mb(60),
+        },
+        PipelineSpec {
+            name: "brain_age",
+            version: "1.0",
+            input: T1wAndPrior("freesurfer"),
+            resources: ResourceSpec { cores: 1, ram_gb: 4, minutes_mean: 10.0, minutes_std: 2.0 },
+            artifact: None,
+            output_bytes: mb(1),
+        },
+        PipelineSpec {
+            name: "qa_report",
+            version: "1.0",
+            input: T1w,
+            resources: ResourceSpec { cores: 1, ram_gb: 4, minutes_mean: 5.0, minutes_std: 1.0 },
+            artifact: Some("seg_pipeline"),
+            output_bytes: mb(5),
+        },
+    ]
+}
+
+/// Find a pipeline by name.
+pub fn by_name(name: &str) -> Option<PipelineSpec> {
+    registry().into_iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_pipelines() {
+        assert_eq!(registry().len(), 16);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = registry().iter().map(|p| p.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 16);
+    }
+
+    #[test]
+    fn freesurfer_matches_paper_calibration() {
+        let fs = by_name("freesurfer").unwrap();
+        assert_eq!(fs.resources.minutes_mean, 375.5);
+        assert_eq!(fs.resources.minutes_std, 15.5);
+        assert_eq!(fs.artifact, Some("seg_pipeline"));
+    }
+
+    #[test]
+    fn priors_reference_registered_pipelines() {
+        let names: Vec<&str> = registry().iter().map(|p| p.name).collect();
+        for p in registry() {
+            match p.input {
+                InputReq::T1wAndPrior(d) | InputReq::DwiAndPrior(d) => {
+                    assert!(names.contains(&d), "{} depends on unknown '{d}'", p.name);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn no_dependency_cycles() {
+        // With priors one level deep and every prior itself prior-free,
+        // acyclicity reduces to: a dependency target has no dependency.
+        for p in registry() {
+            if let InputReq::T1wAndPrior(d) | InputReq::DwiAndPrior(d) = p.input {
+                let dep = by_name(d).unwrap();
+                assert!(
+                    matches!(dep.input, InputReq::T1w | InputReq::Dwi | InputReq::T1wAndDwi),
+                    "{} -> {} forms a chain",
+                    p.name,
+                    d
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_durations_positive_and_near_mean() {
+        let mut rng = Rng::new(1);
+        let fs = by_name("freesurfer").unwrap();
+        let n = 1000;
+        let mean = (0..n).map(|_| fs.sample_minutes(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 375.5).abs() < 5.0, "mean={mean}");
+    }
+
+    #[test]
+    fn artifact_pipelines_reference_known_artifacts() {
+        for p in registry() {
+            if let Some(a) = p.artifact {
+                assert!(
+                    matches!(a, "seg_pipeline" | "dwi_preproc" | "atlas_register"),
+                    "{}",
+                    p.name
+                );
+            }
+        }
+    }
+}

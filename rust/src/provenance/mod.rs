@@ -1,0 +1,138 @@
+//! Provenance records (paper §2.3): every pipeline run emits a config file
+//! recording when it ran, who ran it, the container image, and the exact
+//! input paths — enabling file provenance for downstream users.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{Json, JsonObj};
+
+/// Provenance of one pipeline execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    pub pipeline: String,
+    pub container_image: String,
+    pub container_sha: String,
+    pub user: String,
+    /// Seconds since epoch (simulation clock or wall clock).
+    pub timestamp: f64,
+    pub inputs: Vec<PathBuf>,
+    pub compute_env: String,
+    pub job_id: Option<u64>,
+}
+
+impl Provenance {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("Pipeline", Json::str(&self.pipeline));
+        o.set("ContainerImage", Json::str(&self.container_image));
+        o.set("ContainerSha256", Json::str(&self.container_sha));
+        o.set("User", Json::str(&self.user));
+        o.set("Timestamp", Json::num(self.timestamp));
+        o.set(
+            "Inputs",
+            Json::Arr(
+                self.inputs
+                    .iter()
+                    .map(|p| Json::str(p.to_string_lossy()))
+                    .collect(),
+            ),
+        );
+        o.set("ComputeEnvironment", Json::str(&self.compute_env));
+        if let Some(id) = self.job_id {
+            o.set("JobId", Json::num(id as f64));
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let get_str = |key: &str| -> Result<String> {
+            json.get_path(key)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .with_context(|| format!("provenance missing '{key}'"))
+        };
+        Ok(Self {
+            pipeline: get_str("Pipeline")?,
+            container_image: get_str("ContainerImage")?,
+            container_sha: get_str("ContainerSha256")?,
+            user: get_str("User")?,
+            timestamp: json
+                .get_path("Timestamp")
+                .and_then(Json::as_f64)
+                .context("provenance missing 'Timestamp'")?,
+            inputs: json
+                .get_path("Inputs")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(Json::as_str)
+                        .map(PathBuf::from)
+                        .collect()
+                })
+                .unwrap_or_default(),
+            compute_env: get_str("ComputeEnvironment")?,
+            job_id: json.get_path("JobId").and_then(Json::as_i64).map(|v| v as u64),
+        })
+    }
+
+    /// Write `provenance.json` into an output directory.
+    pub fn save(&self, out_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = out_dir.join("provenance.json");
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Provenance {
+        Provenance {
+            pipeline: "freesurfer".into(),
+            container_image: "freesurfer_7.2.0.sif".into(),
+            container_sha: "ab".repeat(32),
+            user: "mkim".into(),
+            timestamp: 1_720_000_000.0,
+            inputs: vec![PathBuf::from("/store/DS/sub-01/anat/sub-01_T1w.nii.gz")],
+            compute_env: "hpc".into(),
+            job_id: Some(12345),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        assert_eq!(Provenance::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("medflow_prov_{}", std::process::id()));
+        let p = sample();
+        let path = p.save(&dir).unwrap();
+        assert_eq!(Provenance::load(&path).unwrap(), p);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let j = Json::parse(r#"{"Pipeline": "x"}"#).unwrap();
+        assert!(Provenance::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn job_id_optional() {
+        let mut p = sample();
+        p.job_id = None;
+        assert_eq!(Provenance::from_json(&p.to_json()).unwrap().job_id, None);
+    }
+}

@@ -1,0 +1,304 @@
+//! Automated archive query (paper §2.3): given a dataset and a pipeline,
+//! find every scanning session that (a) satisfies the pipeline's input
+//! criteria and (b) has not already been processed — and explain, per
+//! skipped session, why it was skipped (the accompanying CSV).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::bids::{BidsDataset, BidsName, Modality};
+use crate::pipeline::{InputReq, PipelineSpec};
+use crate::util::csv::write_csv;
+
+/// One runnable job instance discovered by the query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub dataset: String,
+    pub pipeline: String,
+    pub subject: String,
+    pub session: Option<String>,
+    /// Input image paths (symlink targets resolved by the executor).
+    pub inputs: Vec<PathBuf>,
+    pub cores: u32,
+    pub ram_gb: u32,
+}
+
+impl JobSpec {
+    /// Stable instance id `dataset/sub[/ses]/pipeline`.
+    pub fn instance_id(&self) -> String {
+        match &self.session {
+            Some(ses) => format!("{}/sub-{}/ses-{}/{}", self.dataset, self.subject, ses, self.pipeline),
+            None => format!("{}/sub-{}/{}", self.dataset, self.subject, self.pipeline),
+        }
+    }
+}
+
+/// Why a session was not queued (the paper's example: "no available T1w
+/// image in the scanning session").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SkipReason {
+    NoT1w,
+    NoDwi,
+    MissingPrior(&'static str),
+    AlreadyProcessed,
+}
+
+impl SkipReason {
+    pub fn as_str(&self) -> String {
+        match self {
+            SkipReason::NoT1w => "no available T1w image in session".into(),
+            SkipReason::NoDwi => "no available DWI image in session".into(),
+            SkipReason::MissingPrior(p) => format!("prerequisite pipeline '{p}' not yet run"),
+            SkipReason::AlreadyProcessed => "already processed".into(),
+        }
+    }
+}
+
+/// One skipped session record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkipRecord {
+    pub subject: String,
+    pub session: Option<String>,
+    pub reason: SkipReason,
+}
+
+/// Query output: runnable jobs + skip records.
+#[derive(Debug, Clone, Default)]
+pub struct QueryResult {
+    pub runnable: Vec<JobSpec>,
+    pub skipped: Vec<SkipRecord>,
+}
+
+impl QueryResult {
+    /// The paper's companion CSV: session, status, cause.
+    pub fn skip_csv(&self) -> String {
+        let rows = self
+            .skipped
+            .iter()
+            .map(|s| {
+                vec![
+                    format!("sub-{}", s.subject),
+                    s.session.clone().map(|x| format!("ses-{x}")).unwrap_or_default(),
+                    s.reason.as_str(),
+                ]
+            })
+            .collect::<Vec<_>>();
+        write_csv(&["subject", "session", "skip_reason"], &rows)
+    }
+}
+
+/// Run the query for one pipeline over one BIDS dataset.
+pub fn find_runnable(ds: &BidsDataset, pipeline: &PipelineSpec) -> Result<QueryResult> {
+    let mut result = QueryResult::default();
+    for subject in ds.subjects()? {
+        for session in ds.sessions(&subject)? {
+            let ses = session.as_deref();
+            let t1 = ds.raw_images(&BidsName::new(&subject, ses, Modality::T1w));
+            let dwi = ds.raw_images(&BidsName::new(&subject, ses, Modality::Dwi));
+            let probe = BidsName::new(&subject, ses, Modality::T1w);
+
+            // 1. already processed? (idempotency: never re-queue)
+            if ds.has_derivative(pipeline.name, &probe) {
+                result.skipped.push(SkipRecord {
+                    subject: subject.clone(),
+                    session: session.clone(),
+                    reason: SkipReason::AlreadyProcessed,
+                });
+                continue;
+            }
+
+            // 2. input criteria
+            let (inputs, missing): (Vec<PathBuf>, Option<SkipReason>) = match &pipeline.input {
+                InputReq::T1w => (t1.clone(), t1.is_empty().then_some(SkipReason::NoT1w)),
+                InputReq::Dwi => (dwi.clone(), dwi.is_empty().then_some(SkipReason::NoDwi)),
+                InputReq::T1wAndDwi => {
+                    let mut v = t1.clone();
+                    v.extend(dwi.clone());
+                    let miss = if t1.is_empty() {
+                        Some(SkipReason::NoT1w)
+                    } else if dwi.is_empty() {
+                        Some(SkipReason::NoDwi)
+                    } else {
+                        None
+                    };
+                    (v, miss)
+                }
+                InputReq::T1wAndPrior(dep) => {
+                    let miss = if t1.is_empty() {
+                        Some(SkipReason::NoT1w)
+                    } else if !ds.has_derivative(dep, &probe) {
+                        Some(SkipReason::MissingPrior(dep))
+                    } else {
+                        None
+                    };
+                    (t1.clone(), miss)
+                }
+                InputReq::DwiAndPrior(dep) => {
+                    let miss = if dwi.is_empty() {
+                        Some(SkipReason::NoDwi)
+                    } else if !ds.has_derivative(dep, &probe) {
+                        Some(SkipReason::MissingPrior(dep))
+                    } else {
+                        None
+                    };
+                    (dwi.clone(), miss)
+                }
+            };
+
+            match missing {
+                Some(reason) => result.skipped.push(SkipRecord {
+                    subject: subject.clone(),
+                    session: session.clone(),
+                    reason,
+                }),
+                None => result.runnable.push(JobSpec {
+                    dataset: ds.name.clone(),
+                    pipeline: pipeline.name.to_string(),
+                    subject: subject.clone(),
+                    session: session.clone(),
+                    inputs,
+                    cores: pipeline.resources.cores,
+                    ram_gb: pipeline.resources.ram_gb,
+                }),
+            }
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::by_name;
+    use std::path::Path;
+
+    fn tmpds(tag: &str) -> BidsDataset {
+        let parent = std::env::temp_dir().join(format!("medflow_query_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&parent).unwrap();
+        BidsDataset::create(&parent, "DS").unwrap()
+    }
+
+    fn add_image(ds: &BidsDataset, sub: &str, ses: Option<&str>, m: Modality) {
+        let name = BidsName::new(sub, ses, m);
+        let p = ds.raw_path(&name, "nii.gz");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"img").unwrap();
+    }
+
+    fn mark_done(ds: &BidsDataset, pipeline: &str, sub: &str, ses: Option<&str>) {
+        let name = BidsName::new(sub, ses, Modality::T1w);
+        let d = ds.derivative_dir(pipeline, &name);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("out.txt"), b"done").unwrap();
+    }
+
+    fn cleanup(ds: &BidsDataset) {
+        std::fs::remove_dir_all(ds.root.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn finds_unprocessed_t1_sessions() {
+        let ds = tmpds("t1");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        add_image(&ds, "02", Some("a"), Modality::Dwi); // no T1 → skip
+        let fs = by_name("freesurfer").unwrap();
+        let r = find_runnable(&ds, &fs).unwrap();
+        assert_eq!(r.runnable.len(), 1);
+        assert_eq!(r.runnable[0].subject, "01");
+        assert_eq!(r.skipped.len(), 1);
+        assert_eq!(r.skipped[0].reason, SkipReason::NoT1w);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn already_processed_not_requeued() {
+        let ds = tmpds("done");
+        add_image(&ds, "01", None, Modality::T1w);
+        mark_done(&ds, "freesurfer", "01", None);
+        let fs = by_name("freesurfer").unwrap();
+        let r = find_runnable(&ds, &fs).unwrap();
+        assert!(r.runnable.is_empty());
+        assert_eq!(r.skipped[0].reason, SkipReason::AlreadyProcessed);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn prior_pipeline_gates_dependents() {
+        let ds = tmpds("prior");
+        add_image(&ds, "01", None, Modality::Dwi);
+        let ts = by_name("tractseg").unwrap(); // needs prequal first
+        let r = find_runnable(&ds, &ts).unwrap();
+        assert!(r.runnable.is_empty());
+        assert_eq!(r.skipped[0].reason, SkipReason::MissingPrior("prequal"));
+        mark_done(&ds, "prequal", "01", None);
+        let r2 = find_runnable(&ds, &ts).unwrap();
+        assert_eq!(r2.runnable.len(), 1);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn multimodal_requires_both() {
+        let ds = tmpds("both");
+        add_image(&ds, "01", None, Modality::T1w);
+        add_image(&ds, "02", None, Modality::T1w);
+        add_image(&ds, "02", None, Modality::Dwi);
+        let cs = by_name("connectome_special").unwrap();
+        let r = find_runnable(&ds, &cs).unwrap();
+        assert_eq!(r.runnable.len(), 1);
+        assert_eq!(r.runnable[0].subject, "02");
+        assert_eq!(r.runnable[0].inputs.len(), 2);
+        assert_eq!(r.skipped[0].reason, SkipReason::NoDwi);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn skip_csv_lists_causes() {
+        let ds = tmpds("csv");
+        add_image(&ds, "01", Some("x"), Modality::Dwi);
+        let fs = by_name("freesurfer").unwrap();
+        let r = find_runnable(&ds, &fs).unwrap();
+        let csv = r.skip_csv();
+        assert!(csv.contains("subject,session,skip_reason"));
+        assert!(csv.contains("sub-01,ses-x,no available T1w image in session"));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn instance_ids_stable() {
+        let j = JobSpec {
+            dataset: "DS".into(),
+            pipeline: "freesurfer".into(),
+            subject: "01".into(),
+            session: Some("a".into()),
+            inputs: vec![],
+            cores: 1,
+            ram_gb: 8,
+        };
+        assert_eq!(j.instance_id(), "DS/sub-01/ses-a/freesurfer");
+    }
+
+    #[test]
+    fn rerun_after_completion_is_idempotent() {
+        let ds = tmpds("idem");
+        add_image(&ds, "01", None, Modality::T1w);
+        let fs = by_name("freesurfer").unwrap();
+        let r1 = find_runnable(&ds, &fs).unwrap();
+        assert_eq!(r1.runnable.len(), 1);
+        mark_done(&ds, "freesurfer", "01", None);
+        let r2 = find_runnable(&ds, &fs).unwrap();
+        assert!(r2.runnable.is_empty());
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn empty_dataset_yields_nothing() {
+        let ds = tmpds("empty");
+        let fs = by_name("freesurfer").unwrap();
+        let r = find_runnable(&ds, &fs).unwrap();
+        assert!(r.runnable.is_empty() && r.skipped.is_empty());
+        // keep Path import used
+        let _ = Path::new(".");
+        cleanup(&ds);
+    }
+}

@@ -1,0 +1,137 @@
+//! Reproduction gate: machine-checkable paper-vs-measured assertions for
+//! every headline number. `rust/tests/reproduction_gate.rs` runs this in
+//! CI fashion — if a change breaks the reproduction *shape* (who wins, by
+//! what factor), the gate fails before anything ships.
+
+use anyhow::Result;
+
+use crate::report::{paper, table1, Table1Column};
+use crate::runtime::Runtime;
+
+/// One gate check outcome.
+#[derive(Debug, Clone)]
+pub struct GateCheck {
+    pub name: String,
+    pub paper: f64,
+    pub measured: f64,
+    pub tolerance: f64,
+    pub pass: bool,
+}
+
+impl GateCheck {
+    fn rel(name: &str, paper_v: f64, measured: f64, rel_tol: f64) -> Self {
+        let pass = (measured - paper_v).abs() <= rel_tol * paper_v.abs().max(1e-12);
+        Self {
+            name: name.to_string(),
+            paper: paper_v,
+            measured,
+            tolerance: rel_tol,
+            pass,
+        }
+    }
+
+    fn ordering(name: &str, holds: bool) -> Self {
+        Self {
+            name: name.to_string(),
+            paper: 1.0,
+            measured: if holds { 1.0 } else { 0.0 },
+            tolerance: 0.0,
+            pass: holds,
+        }
+    }
+}
+
+/// Run the full gate (Table 1 experiment + shape claims).
+pub fn run_gate(runtime: Option<&Runtime>, seed: u64) -> Result<Vec<GateCheck>> {
+    let cols = table1(runtime, seed, 100, 100)?;
+    Ok(checks_for(&cols))
+}
+
+/// Gate checks over a measured Table 1.
+pub fn checks_for(cols: &[Table1Column]) -> Vec<GateCheck> {
+    let hpc = &cols[0];
+    let cloud = &cols[1];
+    let local = &cols[2];
+    let mut checks = vec![
+        // absolute calibrations (10% relative)
+        GateCheck::rel("hpc.throughput_gbps", paper::HPC.0, hpc.throughput_gbps.0, 0.10),
+        GateCheck::rel("cloud.throughput_gbps", paper::CLOUD.0, cloud.throughput_gbps.0, 0.10),
+        GateCheck::rel("local.throughput_gbps", paper::LOCAL.0, local.throughput_gbps.0, 0.10),
+        GateCheck::rel("cloud.latency_ms", paper::CLOUD.1, cloud.latency_ms.0, 0.10),
+        GateCheck::rel("hpc.rate_per_hr", paper::HPC.2, hpc.dollars_per_hour, 0.02),
+        GateCheck::rel("cloud.rate_per_hr", paper::CLOUD.2, cloud.dollars_per_hour, 0.001),
+        GateCheck::rel("local.rate_per_hr", paper::LOCAL.2, local.dollars_per_hour, 0.02),
+        GateCheck::rel("hpc.freesurfer_min", paper::HPC.3, hpc.freesurfer_minutes.0, 0.05),
+        GateCheck::rel("cloud.freesurfer_min", paper::CLOUD.3, cloud.freesurfer_minutes.0, 0.05),
+        GateCheck::rel("local.freesurfer_min", paper::LOCAL.3, local.freesurfer_minutes.0, 0.05),
+        GateCheck::rel("hpc.total_cost", paper::HPC.4, hpc.total_cost_dollars, 0.15),
+        GateCheck::rel("cloud.total_cost", paper::CLOUD.4, cloud.total_cost_dollars, 0.10),
+        GateCheck::rel("local.total_cost", paper::LOCAL.4, local.total_cost_dollars, 0.10),
+    ];
+    // shape claims (orderings + factors)
+    let cost_ratio = cloud.total_cost_dollars / hpc.total_cost_dollars;
+    checks.push(GateCheck::rel("cloud_over_hpc_cost_ratio", 18.3, cost_ratio, 0.15));
+    checks.push(GateCheck::ordering(
+        "bandwidth ordering local > hpc > cloud",
+        local.throughput_gbps.0 > hpc.throughput_gbps.0
+            && hpc.throughput_gbps.0 > cloud.throughput_gbps.0,
+    ));
+    checks.push(GateCheck::ordering(
+        "latency ordering cloud >> local > hpc",
+        cloud.latency_ms.0 > 10.0 * local.latency_ms.0 && local.latency_ms.0 > hpc.latency_ms.0,
+    ));
+    checks.push(GateCheck::ordering(
+        "cloud fastest compute, local slowest",
+        cloud.freesurfer_minutes.0 < hpc.freesurfer_minutes.0
+            && hpc.freesurfer_minutes.0 < local.freesurfer_minutes.0,
+    ));
+    checks
+}
+
+/// Render the gate result; Err text lists failures.
+pub fn summarize(checks: &[GateCheck]) -> Result<String, String> {
+    let mut out = String::new();
+    let mut failures = 0;
+    for c in checks {
+        out.push_str(&format!(
+            "{:<42} paper {:>9.4}  measured {:>9.4}  {}\n",
+            c.name,
+            c.paper,
+            c.measured,
+            if c.pass { "PASS" } else { "FAIL" }
+        ));
+        failures += usize::from(!c.pass);
+    }
+    if failures == 0 {
+        Ok(out)
+    } else {
+        Err(format!("{failures} gate checks failed:\n{out}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_passes_on_calibrated_models() {
+        let checks = run_gate(None, 42).unwrap();
+        let summary = summarize(&checks);
+        assert!(summary.is_ok(), "{}", summary.unwrap_err());
+        assert!(checks.len() >= 17);
+    }
+
+    #[test]
+    fn gate_catches_a_broken_calibration() {
+        let mut cols = table1(None, 42, 50, 50).unwrap();
+        cols[0].total_cost_dollars *= 3.0; // sabotage
+        let checks = checks_for(&cols);
+        assert!(summarize(&checks).is_err());
+    }
+
+    #[test]
+    fn rel_check_math() {
+        assert!(GateCheck::rel("x", 10.0, 10.5, 0.10).pass);
+        assert!(!GateCheck::rel("x", 10.0, 12.0, 0.10).pass);
+    }
+}

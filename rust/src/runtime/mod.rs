@@ -1,0 +1,471 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the job path. Python is
+//! never involved at runtime — this module is the whole L2/L1 bridge.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §4 and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::integrity::sha256_hex;
+use crate::util::json::Json;
+
+/// Input spec from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .get_path("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?
+        {
+            let inputs = a
+                .get_path("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| -> Result<InputSpec> {
+                    Ok(InputSpec {
+                        name: i
+                            .get_path("name")
+                            .and_then(Json::as_str)
+                            .context("input missing name")?
+                            .into(),
+                        shape: i
+                            .get_path("shape")
+                            .and_then(Json::as_arr)
+                            .context("input missing shape")?
+                            .iter()
+                            .filter_map(Json::as_i64)
+                            .collect(),
+                        dtype: i
+                            .get_path("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .into(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get_path("name")
+                    .and_then(Json::as_str)
+                    .context("artifact missing name")?
+                    .into(),
+                file: a
+                    .get_path("file")
+                    .and_then(Json::as_str)
+                    .context("artifact missing file")?
+                    .into(),
+                sha256: a
+                    .get_path("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .into(),
+                inputs,
+                outputs: a
+                    .get_path("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .map(String::from)
+                    .collect(),
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A loaded executable + its spec.
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The runtime: one PJRT CPU client, one compiled executable per artifact.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU client, verify artifact hashes, compile everything.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut loaded = HashMap::new();
+        for spec in manifest.artifacts {
+            let path = artifact_dir.join(&spec.file);
+            let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+            if !spec.sha256.is_empty() && sha256_hex(text.as_bytes()) != spec.sha256 {
+                bail!("artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)", spec.name);
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parse hlo text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile '{}': {e:?}", spec.name))?;
+            loaded.insert(spec.name.clone(), LoadedArtifact { exe, spec });
+        }
+        Ok(Self {
+            client,
+            loaded,
+            artifact_dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.loaded.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.loaded.get(name).map(|l| &l.spec)
+    }
+
+    /// Execute an artifact on f32 input buffers (shape-checked against the
+    /// manifest). Returns the output tuple as Vec<f32> per output.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let art = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        if inputs.len() != art.spec.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&art.spec.inputs) {
+            if data.len() != spec.elements() {
+                bail!(
+                    "input '{}' of '{name}' wants {} elements (shape {:?}), got {}",
+                    spec.name,
+                    spec.elements(),
+                    spec.shape,
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = lit
+                .reshape(&spec.shape)
+                .map_err(|e| anyhow!("reshape input '{}': {e:?}", spec.name))?;
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?;
+        // PJRT may untuple the root tuple into one buffer per output
+        // (result[0].len() > 1) or hand back a single tuple buffer — handle
+        // both (aot.py lowers with return_tuple=True).
+        let buffers = &result[0];
+        let parts: Vec<xla::Literal> = if buffers.len() > 1 {
+            buffers
+                .iter()
+                .map(|b| {
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result of '{name}': {e:?}"))
+                })
+                .collect::<Result<_>>()?
+        } else {
+            let out = buffers[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result of '{name}': {e:?}"))?;
+            match out.to_tuple() {
+                Ok(parts) => parts,
+                // single non-tuple output
+                Err(_) => vec![buffers[0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("refetch: {e:?}"))?],
+            }
+        };
+        if parts.len() != art.spec.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                art.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Typed view of the `seg_pipeline` artifact outputs.
+#[derive(Debug, Clone)]
+pub struct SegOutputs {
+    pub seg: Vec<f32>,
+    pub volumes: [f32; 3],
+    pub means: [f32; 3],
+    pub edge_qa: f32,
+    pub snr_qa: f32,
+}
+
+/// Typed view of the `dwi_preproc` artifact outputs.
+#[derive(Debug, Clone)]
+pub struct DwiOutputs {
+    pub md_map: Vec<f32>,
+    pub mean_adc: Vec<f32>,
+    pub b0_snr: f32,
+}
+
+/// Typed view of the `atlas_register` artifact outputs.
+#[derive(Debug, Clone)]
+pub struct RegisterOutputs {
+    /// (tx, ty, tz, log_scale).
+    pub theta: [f32; 4],
+    pub warped: Vec<f32>,
+    pub final_mse: f32,
+    pub mse_trace: Vec<f32>,
+}
+
+pub const VOL_SHAPE: [usize; 3] = [64, 64, 64];
+pub const VOL_ELEMS: usize = 64 * 64 * 64;
+pub const DWI_DIRS: usize = 6;
+
+impl Runtime {
+    /// Run the structural segmentation pipeline on one 64³ volume.
+    pub fn run_seg(&self, vol: &[f32]) -> Result<SegOutputs> {
+        let outs = self.execute_f32("seg_pipeline", &[vol])?;
+        if outs.len() != 5 {
+            bail!("seg_pipeline returned {} outputs, want 5", outs.len());
+        }
+        Ok(SegOutputs {
+            seg: outs[0].clone(),
+            volumes: [outs[1][0], outs[1][1], outs[1][2]],
+            means: [outs[2][0], outs[2][1], outs[2][2]],
+            edge_qa: outs[3][0],
+            snr_qa: outs[4][0],
+        })
+    }
+
+    /// Run DWI preprocessing on one (7, 64³) shell + b-values.
+    pub fn run_dwi(&self, dwi: &[f32], bvals: &[f32]) -> Result<DwiOutputs> {
+        let outs = self.execute_f32("dwi_preproc", &[dwi, bvals])?;
+        if outs.len() != 3 {
+            bail!("dwi_preproc returned {} outputs, want 3", outs.len());
+        }
+        Ok(DwiOutputs {
+            md_map: outs[0].clone(),
+            mean_adc: outs[1].clone(),
+            b0_snr: outs[2][0],
+        })
+    }
+
+    /// Register a moving 64³ volume onto a fixed one (4-DOF, 60 sign-descent
+    /// iterations baked into the artifact).
+    pub fn run_register(&self, moving: &[f32], fixed: &[f32]) -> Result<RegisterOutputs> {
+        let outs = self.execute_f32("atlas_register", &[moving, fixed])?;
+        if outs.len() != 4 {
+            bail!("atlas_register returned {} outputs, want 4", outs.len());
+        }
+        Ok(RegisterOutputs {
+            theta: [outs[0][0], outs[0][1], outs[0][2], outs[0][3]],
+            warped: outs[1].clone(),
+            final_mse: outs[2][0],
+            mse_trace: outs[3].clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    /// Synthetic 64³ phantom matching the python test fixture.
+    fn phantom() -> Vec<f32> {
+        let mut v = Vec::with_capacity(VOL_ELEMS);
+        for z in 0..64 {
+            for y in 0..64 {
+                for x in 0..64 {
+                    let d = (((x as f32 - 32.0).powi(2)
+                        + (y as f32 - 32.0).powi(2)
+                        + (z as f32 - 32.0).powi(2)) as f32)
+                        .sqrt();
+                    let val = if d < 12.0 {
+                        0.9
+                    } else if d < 20.0 {
+                        0.6
+                    } else if d < 28.0 {
+                        0.3
+                    } else {
+                        0.05
+                    };
+                    v.push(val);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn manifest_loads() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&artifact_dir()).unwrap();
+        assert!(m.get("seg_pipeline").is_some());
+        assert!(m.get("dwi_preproc").is_some());
+        let seg = m.get("seg_pipeline").unwrap();
+        assert_eq!(seg.inputs[0].shape, vec![64, 64, 64]);
+        assert_eq!(seg.outputs.len(), 5);
+    }
+
+    #[test]
+    fn seg_pipeline_executes_and_conserves_voxels() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&artifact_dir()).unwrap();
+        let out = rt.run_seg(&phantom()).unwrap();
+        assert_eq!(out.seg.len(), VOL_ELEMS);
+        // labels 0/1/2
+        assert!(out.seg.iter().all(|&v| v == 0.0 || v == 1.0 || v == 2.0));
+        // soft volumes conserve voxel count
+        let total: f32 = out.volumes.iter().sum();
+        assert!((total - VOL_ELEMS as f32).abs() < 2.0, "total={total}");
+        // means ascending (sorted classes)
+        assert!(out.means[0] <= out.means[1] && out.means[1] <= out.means[2]);
+        assert!(out.edge_qa > 0.0 && out.snr_qa.is_finite());
+    }
+
+    #[test]
+    fn dwi_pipeline_executes() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&artifact_dir()).unwrap();
+        let b0: Vec<f32> = phantom().iter().map(|v| v + 1.0).collect();
+        let mut dwi = b0.clone();
+        for k in 0..DWI_DIRS {
+            let att = 0.4 + 0.05 * k as f32;
+            dwi.extend(b0.iter().map(|v| v * att));
+        }
+        let bvals = [0.0f32, 1000.0, 1000.0, 1000.0, 1000.0, 1000.0, 1000.0];
+        let out = rt.run_dwi(&dwi, &bvals).unwrap();
+        assert_eq!(out.md_map.len(), VOL_ELEMS);
+        assert_eq!(out.mean_adc.len(), DWI_DIRS);
+        // stronger attenuation (earlier dirs) → larger ADC
+        for w in out.mean_adc.windows(2) {
+            assert!(w[0] > w[1], "{:?}", out.mean_adc);
+        }
+        assert!(out.md_map.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&artifact_dir()).unwrap();
+        assert!(rt.execute_f32("seg_pipeline", &[&[0.0f32; 10]]).is_err());
+        assert!(rt.execute_f32("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn atlas_register_recovers_translation() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&artifact_dir()).unwrap();
+        let fixed = phantom();
+        // moving = fixed shifted +2 voxels along x (axis 0, stride 64²)
+        let stride = 64 * 64;
+        let mut moving = vec![0.05f32; VOL_ELEMS];
+        for x in 0..62 {
+            let (a, b) = (x * stride, (x + 2) * stride);
+            moving[a..a + stride].copy_from_slice(&fixed[b..b + stride]);
+        }
+        let out = rt.run_register(&moving, &fixed).unwrap();
+        // warped(x) = moving(x + t) = fixed(x + t + 2) ⇒ t ≈ −2
+        assert!(
+            (out.theta[0] + 2.0).abs() < 0.4,
+            "theta = {:?}",
+            out.theta
+        );
+        assert!(out.theta[1].abs() < 0.4 && out.theta[2].abs() < 0.4);
+        assert_eq!(out.mse_trace.len(), 60);
+        assert!(out.final_mse < out.mse_trace[0], "mse must improve");
+        assert_eq!(out.warped.len(), VOL_ELEMS);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&artifact_dir()).unwrap();
+        let p = phantom();
+        let a = rt.run_seg(&p).unwrap();
+        let b = rt.run_seg(&p).unwrap();
+        assert_eq!(a.seg, b.seg);
+        assert_eq!(a.volumes, b.volumes);
+    }
+}

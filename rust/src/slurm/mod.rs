@@ -1,0 +1,635 @@
+//! SLURM-style cluster simulator — the ACCRE substrate (paper §2.2).
+//!
+//! Discrete-event simulation of a shared HPC cluster: nodes with cores +
+//! RAM, a pending queue ordered by fairshare priority, EASY backfill,
+//! job-array concurrency throttles, and maintenance windows (during which
+//! no job starts — the coordinator's burst-to-local trigger, §2.3).
+//!
+//! ACCRE's published scale: 750 compute nodes, 20,100 CPU cores, ~200 TB
+//! RAM (§2.2); `ClusterSpec::accre()` encodes it.
+
+pub mod trace;
+
+use std::collections::BTreeMap;
+
+/// One node's capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub cores: u32,
+    pub ram_gb: u32,
+}
+
+/// Cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    /// The ACCRE cluster at paper scale: 750 nodes ≈ 20,100 cores, ~200 TB.
+    pub fn accre() -> Self {
+        Self {
+            name: "ACCRE".into(),
+            nodes: vec![NodeSpec { cores: 27, ram_gb: 267 }; 750],
+        }
+    }
+
+    /// A small cluster for tests/examples.
+    pub fn small(nodes: usize, cores: u32, ram_gb: u32) -> Self {
+        Self {
+            name: format!("test-{nodes}x{cores}"),
+            nodes: vec![NodeSpec { cores, ram_gb }; nodes],
+        }
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cores as u64).sum()
+    }
+}
+
+/// A job submitted to the simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimJob {
+    pub id: u64,
+    pub user: String,
+    pub cores: u32,
+    pub ram_gb: u32,
+    /// Wall-clock duration once started (seconds).
+    pub duration_s: f64,
+    /// Submission time (seconds).
+    pub submit_s: f64,
+    /// Job-array handle (jobs sharing an array share a concurrency cap).
+    pub array: Option<ArrayHandle>,
+}
+
+/// Identifies a job array + its `%max_concurrent` throttle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayHandle {
+    pub array_id: u64,
+    pub max_concurrent: u32,
+}
+
+/// Completed-job record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub job: SimJob,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub node: usize,
+}
+
+impl JobRecord {
+    pub fn queue_wait_s(&self) -> f64 {
+        self.start_s - self.job.submit_s
+    }
+}
+
+/// Scheduling policy (ablation axis: the paper relies on ACCRE's
+/// fairshare+backfill; `bench ablation_scheduler` quantifies what each
+/// piece buys).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Policy {
+    /// Order pending jobs by per-user fairshare usage (else pure FIFO).
+    pub fairshare: bool,
+    /// EASY backfill around the blocked head job (else strict order).
+    pub backfill: bool,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Self {
+            fairshare: true,
+            backfill: true,
+        }
+    }
+}
+
+/// A window during which no new job may start (maintenance / outage).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Maintenance {
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct NodeState {
+    free_cores: u32,
+    free_ram_gb: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Running {
+    job: SimJob,
+    node: usize,
+    start_s: f64,
+    end_s: f64,
+}
+
+/// The discrete-event scheduler.
+#[derive(Debug)]
+pub struct Scheduler {
+    pub spec: ClusterSpec,
+    nodes: Vec<NodeState>,
+    clock: f64,
+    pending: Vec<SimJob>,
+    running: Vec<Running>,
+    records: Vec<JobRecord>,
+    /// Fairshare: accumulated core-seconds per user (decayed); lower usage
+    /// → higher priority.
+    usage: BTreeMap<String, f64>,
+    maintenance: Vec<Maintenance>,
+    /// Running count per array id (for `%max_concurrent`).
+    array_running: BTreeMap<u64, u32>,
+    core_seconds_capacity: f64,
+    core_seconds_used: f64,
+    pub policy: Policy,
+}
+
+impl Scheduler {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self::with_policy(spec, Policy::default())
+    }
+
+    pub fn with_policy(spec: ClusterSpec, policy: Policy) -> Self {
+        let nodes = spec
+            .nodes
+            .iter()
+            .map(|n| NodeState {
+                free_cores: n.cores,
+                free_ram_gb: n.ram_gb,
+            })
+            .collect();
+        Self {
+            nodes,
+            clock: 0.0,
+            pending: Vec::new(),
+            running: Vec::new(),
+            records: Vec::new(),
+            usage: BTreeMap::new(),
+            maintenance: Vec::new(),
+            array_running: BTreeMap::new(),
+            core_seconds_capacity: 0.0,
+            core_seconds_used: 0.0,
+            policy,
+            spec,
+        }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn add_maintenance(&mut self, w: Maintenance) {
+        self.maintenance.push(w);
+    }
+
+    /// True if `t` falls in a maintenance window (no job starts).
+    pub fn in_maintenance(&self, t: f64) -> bool {
+        self.maintenance.iter().any(|w| t >= w.start_s && t < w.end_s)
+    }
+
+    pub fn submit(&mut self, job: SimJob) {
+        assert!(
+            job.submit_s >= self.clock,
+            "cannot submit in the past (job {} at {}, clock {})",
+            job.id,
+            job.submit_s,
+            self.clock
+        );
+        self.pending.push(job);
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn records(&self) -> &[JobRecord] {
+        &self.records
+    }
+
+    /// Cluster-wide core utilization over simulated time so far (0..1) —
+    /// the §2.3 resource monitor's compute view.
+    pub fn utilization(&self) -> f64 {
+        if self.core_seconds_capacity <= 0.0 {
+            return 0.0;
+        }
+        self.core_seconds_used / self.core_seconds_capacity
+    }
+
+    fn priority(&self, job: &SimJob) -> (f64, f64, u64) {
+        // fairshare first (lower accumulated usage wins), then FIFO.
+        let usage = if self.policy.fairshare {
+            self.usage.get(&job.user).copied().unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        (usage, job.submit_s, job.id)
+    }
+
+    fn fits_on(&self, node: usize, job: &SimJob) -> bool {
+        self.nodes[node].free_cores >= job.cores && self.nodes[node].free_ram_gb >= job.ram_gb
+    }
+
+    fn first_fit(&self, job: &SimJob) -> Option<usize> {
+        (0..self.nodes.len()).find(|&n| self.fits_on(n, job))
+    }
+
+    fn array_ok(&self, job: &SimJob) -> bool {
+        match &job.array {
+            None => true,
+            Some(h) => self.array_running.get(&h.array_id).copied().unwrap_or(0) < h.max_concurrent,
+        }
+    }
+
+    fn start_job(&mut self, job: SimJob, node: usize) {
+        self.nodes[node].free_cores -= job.cores;
+        self.nodes[node].free_ram_gb -= job.ram_gb;
+        if let Some(h) = &job.array {
+            *self.array_running.entry(h.array_id).or_insert(0) += 1;
+        }
+        *self.usage.entry(job.user.clone()).or_insert(0.0) +=
+            job.cores as f64 * job.duration_s;
+        self.core_seconds_used += job.cores as f64 * job.duration_s;
+        let end_s = self.clock + job.duration_s;
+        self.running.push(Running {
+            job,
+            node,
+            start_s: self.clock,
+            end_s,
+        });
+    }
+
+    /// Try to start pending jobs (priority order + EASY backfill): the
+    /// highest-priority blocked job reserves its earliest start; later jobs
+    /// may start now only if they finish before that reservation (or don't
+    /// take its resources — approximated by the end-before test).
+    fn schedule(&mut self) {
+        if self.in_maintenance(self.clock) {
+            return;
+        }
+        // arrivals only — priority keys computed ONCE per job, not per
+        // comparison (the BTreeMap lookup inside priority() dominated the
+        // sort before; see EXPERIMENTS.md §Perf L3)
+        let mut arrived: Vec<(usize, (f64, f64, u64))> = (0..self.pending.len())
+            .filter(|&i| self.pending[i].submit_s <= self.clock)
+            .map(|i| (i, self.priority(&self.pending[i])))
+            .collect();
+        arrived.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let arrived: Vec<usize> = arrived.into_iter().map(|(i, _)| i).collect();
+
+        let mut started: Vec<usize> = Vec::new();
+        let mut shadow: Option<f64> = None; // head job's reserved start
+        // perf (EXPERIMENTS.md §Perf L3): memoize requirement pairs that
+        // failed to fit this pass — any job needing ≥ that much also fails,
+        // so the O(nodes) scan runs once per distinct requirement class
+        // instead of once per pending job.
+        let mut failed_reqs: Vec<(u32, u32)> = Vec::new();
+        for &idx in &arrived {
+            let job = self.pending[idx].clone();
+            if !self.array_ok(&job) {
+                continue;
+            }
+            // cheap rejections before the node scan
+            if let Some(sh) = shadow {
+                if !self.policy.backfill || self.clock + job.duration_s > sh {
+                    continue;
+                }
+            }
+            if failed_reqs
+                .iter()
+                .any(|&(c, r)| job.cores >= c && job.ram_gb >= r)
+            {
+                if shadow.is_none() {
+                    shadow = Some(self.earliest_start_estimate(&job));
+                }
+                continue;
+            }
+            match self.first_fit(&job) {
+                Some(node) => {
+                    self.start_job(job, node);
+                    started.push(idx);
+                }
+                None => {
+                    failed_reqs.push((job.cores, job.ram_gb));
+                    if shadow.is_none() {
+                        shadow = Some(self.earliest_start_estimate(&job));
+                    }
+                }
+            }
+        }
+        started.sort_unstable_by(|a, b| b.cmp(a));
+        for idx in started {
+            self.pending.remove(idx);
+        }
+    }
+
+    /// Earliest time the blocked job could start, assuming running jobs
+    /// release resources at their end times (ignores other pending jobs —
+    /// the EASY reservation).
+    fn earliest_start_estimate(&self, job: &SimJob) -> f64 {
+        let mut frees: Vec<(f64, usize, u32, u32)> = self
+            .running
+            .iter()
+            .map(|r| (r.end_s, r.node, r.job.cores, r.job.ram_gb))
+            .collect();
+        frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut nodes = self.nodes.clone();
+        for (end, node, cores, ram) in frees {
+            nodes[node].free_cores += cores;
+            nodes[node].free_ram_gb += ram;
+            if nodes
+                .iter()
+                .any(|n| n.free_cores >= job.cores && n.free_ram_gb >= job.ram_gb)
+            {
+                return end;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Advance to the next event (arrival, completion, or maintenance end);
+    /// returns false when nothing remains.
+    pub fn step(&mut self) -> bool {
+        self.schedule();
+        // next event time
+        let next_end = self
+            .running
+            .iter()
+            .map(|r| r.end_s)
+            .fold(f64::INFINITY, f64::min);
+        let next_arrival = self
+            .pending
+            .iter()
+            .map(|j| j.submit_s)
+            .filter(|&t| t > self.clock)
+            .fold(f64::INFINITY, f64::min);
+        // if blocked purely by maintenance or throttle, jump to next boundary
+        let next_maint_end = self
+            .maintenance
+            .iter()
+            .filter(|w| w.end_s > self.clock && w.start_s <= self.clock)
+            .map(|w| w.end_s)
+            .fold(f64::INFINITY, f64::min);
+        let next_t = next_end.min(next_arrival).min(next_maint_end);
+        if !next_t.is_finite() {
+            // nothing running, nothing arriving: if pending non-empty we are
+            // deadlocked (job larger than any node) — surface by returning
+            // false with pending jobs left.
+            return false;
+        }
+        let dt = next_t - self.clock;
+        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
+        self.clock = next_t;
+        // complete finished jobs
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].end_s <= self.clock {
+                let r = self.running.swap_remove(i);
+                self.nodes[r.node].free_cores += r.job.cores;
+                self.nodes[r.node].free_ram_gb += r.job.ram_gb;
+                if let Some(h) = &r.job.array {
+                    if let Some(c) = self.array_running.get_mut(&h.array_id) {
+                        *c -= 1;
+                    }
+                }
+                self.records.push(JobRecord {
+                    start_s: r.start_s,
+                    end_s: r.end_s,
+                    node: r.node,
+                    job: r.job,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        true
+    }
+
+    /// Run until all submitted jobs have completed (or deadlock).
+    pub fn run_to_completion(&mut self) -> &[JobRecord] {
+        while !self.pending.is_empty() || !self.running.is_empty() {
+            if !self.step() {
+                break;
+            }
+        }
+        &self.records
+    }
+
+    /// Makespan of everything completed so far.
+    pub fn makespan(&self) -> f64 {
+        self.records.iter().map(|r| r.end_s).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, cores: u32, dur: f64, submit: f64) -> SimJob {
+        SimJob {
+            id,
+            user: "u".into(),
+            cores,
+            ram_gb: 1,
+            duration_s: dur,
+            submit_s: submit,
+            array: None,
+        }
+    }
+
+    #[test]
+    fn single_job_runs_immediately() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 2, 100.0, 0.0));
+        let recs = s.run_to_completion();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].start_s, 0.0);
+        assert_eq!(recs[0].end_s, 100.0);
+    }
+
+    #[test]
+    fn capacity_forces_queueing() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.submit(job(2, 4, 100.0, 0.0));
+        let recs = s.run_to_completion().to_vec();
+        let r2 = recs.iter().find(|r| r.job.id == 2).unwrap();
+        assert_eq!(r2.start_s, 100.0);
+        assert_eq!(s.makespan(), 200.0);
+    }
+
+    #[test]
+    fn parallel_when_fits() {
+        let mut s = Scheduler::new(ClusterSpec::small(2, 4, 16));
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.submit(job(2, 4, 100.0, 0.0));
+        s.run_to_completion();
+        assert_eq!(s.makespan(), 100.0);
+    }
+
+    #[test]
+    fn ram_constraint_respected() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 8, 16));
+        let mut j1 = job(1, 1, 100.0, 0.0);
+        j1.ram_gb = 12;
+        let mut j2 = job(2, 1, 100.0, 0.0);
+        j2.ram_gb = 12;
+        s.submit(j1);
+        s.submit(j2);
+        s.run_to_completion();
+        assert_eq!(s.makespan(), 200.0); // RAM serializes despite free cores
+    }
+
+    #[test]
+    fn backfill_fills_hole_without_delaying_head() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 4, 100.0, 0.0)); // runs now
+        s.submit(job(2, 4, 100.0, 0.0)); // head blocked until t=100
+        s.submit(job(3, 1, 10.0, 0.0)); // can't fit (0 cores free) …
+        let recs = s.run_to_completion().to_vec();
+        let r2 = recs.iter().find(|r| r.job.id == 2).unwrap();
+        let r3 = recs.iter().find(|r| r.job.id == 3).unwrap();
+        assert_eq!(r2.start_s, 100.0, "head job must not be delayed");
+        assert!(r3.start_s >= 100.0);
+    }
+
+    #[test]
+    fn backfill_uses_free_cores_when_it_ends_before_shadow() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 2, 100.0, 0.0)); // 2 cores busy until 100
+        s.submit(job(2, 4, 50.0, 0.0)); // needs all 4 → blocked to t=100
+        s.submit(job(3, 1, 20.0, 0.0)); // fits now, ends (20) before 100 → backfill
+        let recs = s.run_to_completion().to_vec();
+        let r2 = recs.iter().find(|r| r.job.id == 2).unwrap();
+        let r3 = recs.iter().find(|r| r.job.id == 3).unwrap();
+        assert_eq!(r3.start_s, 0.0, "short job should backfill");
+        assert_eq!(r2.start_s, 100.0);
+    }
+
+    #[test]
+    fn array_throttle_caps_concurrency() {
+        let mut s = Scheduler::new(ClusterSpec::small(10, 4, 16));
+        let h = ArrayHandle {
+            array_id: 7,
+            max_concurrent: 2,
+        };
+        for i in 0..6 {
+            let mut j = job(i, 1, 100.0, 0.0);
+            j.array = Some(h);
+            s.submit(j);
+        }
+        s.run_to_completion();
+        // 6 jobs, 2 at a time → 3 waves of 100 s
+        assert_eq!(s.makespan(), 300.0);
+    }
+
+    #[test]
+    fn maintenance_delays_starts() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.add_maintenance(Maintenance {
+            start_s: 0.0,
+            end_s: 500.0,
+        });
+        s.submit(job(1, 1, 10.0, 0.0));
+        let recs = s.run_to_completion().to_vec();
+        assert_eq!(recs[0].start_s, 500.0);
+    }
+
+    #[test]
+    fn fairshare_prefers_light_user() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        // heavy user builds usage
+        let mut j1 = job(1, 4, 1000.0, 0.0);
+        j1.user = "heavy".into();
+        s.submit(j1);
+        // at t=1000 both users have one job pending; light should win
+        let mut j2 = job(2, 4, 10.0, 1.0);
+        j2.user = "heavy".into();
+        let mut j3 = job(3, 4, 10.0, 2.0);
+        j3.user = "light".into();
+        s.submit(j2);
+        s.submit(j3);
+        let recs = s.run_to_completion().to_vec();
+        let heavy2 = recs.iter().find(|r| r.job.id == 2).unwrap();
+        let light = recs.iter().find(|r| r.job.id == 3).unwrap();
+        assert!(
+            light.start_s < heavy2.start_s,
+            "light {} vs heavy {}",
+            light.start_s,
+            heavy2.start_s
+        );
+    }
+
+    #[test]
+    fn oversized_job_deadlocks_gracefully() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 8, 10.0, 0.0)); // bigger than any node
+        s.run_to_completion();
+        assert_eq!(s.records().len(), 0);
+        assert_eq!(s.pending_count(), 1);
+    }
+
+    #[test]
+    fn no_backfill_serializes_behind_blocked_head() {
+        // same scenario as backfill_uses_free_cores…, with backfill off the
+        // short job must wait behind the blocked 4-core job.
+        let mut s = Scheduler::with_policy(
+            ClusterSpec::small(1, 4, 16),
+            Policy {
+                fairshare: true,
+                backfill: false,
+            },
+        );
+        s.submit(job(1, 2, 100.0, 0.0));
+        s.submit(job(2, 4, 50.0, 0.0));
+        s.submit(job(3, 1, 20.0, 0.0));
+        let recs = s.run_to_completion().to_vec();
+        let r3 = recs.iter().find(|r| r.job.id == 3).unwrap();
+        assert!(r3.start_s >= 100.0, "short job must NOT backfill: {}", r3.start_s);
+    }
+
+    #[test]
+    fn fifo_policy_ignores_usage() {
+        let mut s = Scheduler::with_policy(
+            ClusterSpec::small(1, 4, 16),
+            Policy {
+                fairshare: false,
+                backfill: true,
+            },
+        );
+        let mut j1 = job(1, 4, 1000.0, 0.0);
+        j1.user = "heavy".into();
+        s.submit(j1);
+        let mut j2 = job(2, 4, 10.0, 1.0);
+        j2.user = "heavy".into();
+        let mut j3 = job(3, 4, 10.0, 2.0);
+        j3.user = "light".into();
+        s.submit(j2);
+        s.submit(j3);
+        let recs = s.run_to_completion().to_vec();
+        let heavy2 = recs.iter().find(|r| r.job.id == 2).unwrap();
+        let light = recs.iter().find(|r| r.job.id == 3).unwrap();
+        assert!(heavy2.start_s < light.start_s, "FIFO: earlier submit wins");
+    }
+
+    #[test]
+    fn accre_spec_scale() {
+        let c = ClusterSpec::accre();
+        assert_eq!(c.nodes.len(), 750);
+        let cores = c.total_cores();
+        assert!((20_000..21_000).contains(&cores), "{cores}");
+    }
+
+    #[test]
+    fn utilization_tracks_usage() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.run_to_completion();
+        assert!((s.utilization() - 1.0).abs() < 1e-9, "{}", s.utilization());
+    }
+}

@@ -1,0 +1,208 @@
+//! Workload traces + queueing statistics over scheduler runs: the
+//! quantitative view of "is the cluster busy" that the §2.3 resource
+//! monitor exposes, plus fairness accounting across users.
+
+use super::{ArrayHandle, ClusterSpec, JobRecord, Policy, Scheduler, SimJob};
+use crate::util::rng::Rng;
+use crate::util::units::{mean_std, percentile};
+use std::collections::BTreeMap;
+
+/// Trace generator parameters (Poisson arrivals, lognormal-ish durations).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub jobs: u64,
+    pub users: u64,
+    /// Mean inter-arrival seconds.
+    pub mean_interarrival_s: f64,
+    /// Short-job duration range (seconds).
+    pub short_s: (f64, f64),
+    /// Long-job duration range (seconds) and probability.
+    pub long_s: (f64, f64),
+    pub p_long: f64,
+    pub array_throttle: u32,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            jobs: 500,
+            users: 5,
+            mean_interarrival_s: 20.0,
+            short_s: (600.0, 5400.0),
+            long_s: (4.0 * 3600.0, 12.0 * 3600.0),
+            p_long: 0.15,
+            array_throttle: 64,
+        }
+    }
+}
+
+/// Generate a deterministic trace.
+pub fn generate_trace(spec: &TraceSpec, seed: u64) -> Vec<SimJob> {
+    let mut rng = Rng::new(seed);
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: spec.array_throttle,
+    };
+    let mut t = 0.0;
+    let mut jobs = Vec::with_capacity(spec.jobs as usize);
+    for id in 0..spec.jobs {
+        t += rng.exponential(1.0 / spec.mean_interarrival_s);
+        let long = rng.next_f64() < spec.p_long;
+        let (lo, hi) = if long { spec.long_s } else { spec.short_s };
+        jobs.push(SimJob {
+            id,
+            user: format!("u{}", rng.below(spec.users)),
+            cores: if long { 8 } else { 1 + rng.below(2) as u32 },
+            ram_gb: if long { 32 } else { 8 },
+            duration_s: rng.range_f64(lo, hi),
+            submit_s: t,
+            array: if rng.below(2) == 0 { Some(handle) } else { None },
+        });
+    }
+    jobs
+}
+
+/// Queueing + fairness statistics over completed records.
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub jobs: usize,
+    pub makespan_s: f64,
+    pub wait_mean_s: f64,
+    pub wait_p50_s: f64,
+    pub wait_p95_s: f64,
+    pub utilization: f64,
+    /// Jain's fairness index over per-user mean waits (1.0 = perfectly fair).
+    pub wait_fairness: f64,
+}
+
+/// Run a trace through a scheduler and collect statistics.
+pub fn run_trace(cluster: ClusterSpec, policy: Policy, jobs: Vec<SimJob>) -> TraceStats {
+    let mut sched = Scheduler::with_policy(cluster, policy);
+    for j in jobs {
+        sched.submit(j);
+    }
+    sched.run_to_completion();
+    stats_of(&sched)
+}
+
+fn stats_of(sched: &Scheduler) -> TraceStats {
+    let records: &[JobRecord] = sched.records();
+    let waits: Vec<f64> = records.iter().map(|r| r.queue_wait_s()).collect();
+    let (wait_mean_s, _) = mean_std(&waits);
+    let mut per_user: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for r in records {
+        per_user.entry(&r.job.user).or_default().push(r.queue_wait_s());
+    }
+    let user_means: Vec<f64> = per_user.values().map(|w| mean_std(w).0 + 1.0).collect();
+    // Jain: (Σx)² / (n·Σx²)
+    let sum: f64 = user_means.iter().sum();
+    let sq: f64 = user_means.iter().map(|x| x * x).sum();
+    let wait_fairness = if user_means.is_empty() {
+        1.0
+    } else {
+        sum * sum / (user_means.len() as f64 * sq)
+    };
+    TraceStats {
+        jobs: records.len(),
+        makespan_s: sched.makespan(),
+        wait_mean_s,
+        wait_p50_s: percentile(&waits, 50.0),
+        wait_p95_s: percentile(&waits, 95.0),
+        utilization: sched.utilization(),
+        wait_fairness,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sized() {
+        let spec = TraceSpec::default();
+        let a = generate_trace(&spec, 1);
+        let b = generate_trace(&spec, 1);
+        assert_eq!(a.len(), 500);
+        assert_eq!(a[17], b[17]);
+        assert_ne!(a[17], generate_trace(&spec, 2)[17]);
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let jobs = generate_trace(&TraceSpec::default(), 3);
+        for w in jobs.windows(2) {
+            assert!(w[0].submit_s <= w[1].submit_s);
+        }
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let spec = TraceSpec {
+            jobs: 200,
+            ..Default::default()
+        };
+        let stats = run_trace(
+            ClusterSpec::small(8, 16, 128),
+            Policy::default(),
+            generate_trace(&spec, 5),
+        );
+        assert_eq!(stats.jobs, 200);
+        assert!(stats.wait_p50_s <= stats.wait_p95_s);
+        assert!(stats.wait_mean_s >= 0.0);
+        assert!((0.0..=1.0).contains(&stats.utilization));
+        assert!((0.0..=1.0 + 1e-9).contains(&stats.wait_fairness));
+    }
+
+    #[test]
+    fn fairshare_improves_fairness_on_skewed_load() {
+        // one user floods the cluster; fairshare should keep other users'
+        // waits closer together than FIFO does
+        let mut jobs = generate_trace(
+            &TraceSpec {
+                jobs: 300,
+                users: 3,
+                mean_interarrival_s: 5.0,
+                ..Default::default()
+            },
+            7,
+        );
+        for (i, j) in jobs.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                j.user = "flooder".into();
+            }
+        }
+        let cluster = ClusterSpec::small(4, 8, 64);
+        // fairshare's promise is that LIGHT users don't pay for the
+        // flooder's queue: their mean wait must drop vs FIFO
+        let light_wait = |policy: Policy, jobs: Vec<SimJob>| {
+            let mut sched = Scheduler::with_policy(cluster.clone(), policy);
+            for j in jobs {
+                sched.submit(j);
+            }
+            sched.run_to_completion();
+            let waits: Vec<f64> = sched
+                .records()
+                .iter()
+                .filter(|r| r.job.user != "flooder")
+                .map(|r| r.queue_wait_s())
+                .collect();
+            mean_std(&waits).0
+        };
+        let fair = light_wait(Policy { fairshare: true, backfill: true }, jobs.clone());
+        let fifo = light_wait(Policy { fairshare: false, backfill: true }, jobs);
+        assert!(fair < fifo, "light users: fairshare {fair} vs fifo {fifo}");
+    }
+
+    #[test]
+    fn bigger_cluster_reduces_waits() {
+        let spec = TraceSpec {
+            jobs: 300,
+            mean_interarrival_s: 5.0,
+            ..Default::default()
+        };
+        let small = run_trace(ClusterSpec::small(2, 8, 64), Policy::default(), generate_trace(&spec, 9));
+        let big = run_trace(ClusterSpec::small(32, 8, 64), Policy::default(), generate_trace(&spec, 9));
+        assert!(big.wait_mean_s < small.wait_mean_s);
+        assert!(big.makespan_s <= small.makespan_s);
+    }
+}

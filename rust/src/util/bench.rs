@@ -1,0 +1,99 @@
+//! Tiny benchmark harness (criterion is not in the offline crate cache —
+//! DESIGN.md §2). `cargo bench` runs the `rust/benches/*.rs` binaries,
+//! each of which uses this module to time closures and print a stable,
+//! greppable report format:
+//!
+//! ```text
+//! bench <name>: mean 1.234 ms  std 0.012 ms  min 1.210 ms  iters 100
+//! ```
+
+use std::time::Instant;
+
+use crate::util::units::{fmt_duration, mean_std};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {}: mean {}  std {}  min {}  iters {}",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+            fmt_duration(self.min_s),
+            self.iters
+        )
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean_s, std_s) = mean_std(&samples);
+    let min_s = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s,
+        std_s,
+        min_s,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Print a named scalar result row (for table-style benches that report
+/// domain metrics, not wall time).
+pub fn metric(name: &str, value: f64, unit: &str) {
+    println!("metric {name}: {value:.4} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 2, 50, || 1 + 1);
+        assert_eq!(r.iters, 50);
+        assert!(r.min_s <= r.mean_s);
+        assert!(r.mean_s < 0.01);
+        assert!(r.per_sec() > 100.0);
+    }
+
+    #[test]
+    fn report_format_greppable() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_s: 0.00123,
+            std_s: 0.00001,
+            min_s: 0.00121,
+        };
+        assert!(r.report().starts_with("bench x: mean "));
+    }
+}

@@ -1,0 +1,113 @@
+//! Minimal CSV writer/reader (RFC 4180 quoting).
+//!
+//! Used for the "missing-criteria" CSV the query engine emits (paper §2.3)
+//! and for benchmark/report series output.
+
+/// Write rows to CSV text. Fields containing `,`, `"` or newlines are quoted.
+pub fn write_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    write_row(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    for row in rows {
+        write_row(&mut out, row);
+    }
+    out
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, field) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            out.push('"');
+            out.push_str(&field.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(field);
+        }
+    }
+    out.push('\n');
+}
+
+/// Parse CSV text into rows of fields (handles quoted fields + escaped quotes).
+pub fn parse_csv(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    chars.next();
+                    field.push('"');
+                }
+                '"' => in_quotes = false,
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let rows = vec![vec!["a".into(), "b".into()], vec!["1".into(), "2".into()]];
+        let text = write_csv(&["x", "y"], &rows);
+        let parsed = parse_csv(&text);
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[1], vec!["a", "b"]);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let tricky = vec![vec!["a,b".into(), "say \"hi\"".into(), "multi\nline".into()]];
+        let text = write_csv(&["f1", "f2", "f3"], &tricky);
+        let parsed = parse_csv(&text);
+        assert_eq!(parsed[1][0], "a,b");
+        assert_eq!(parsed[1][1], "say \"hi\"");
+        assert_eq!(parsed[1][2], "multi\nline");
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(parse_csv("").is_empty());
+    }
+
+    #[test]
+    fn crlf_handled() {
+        let parsed = parse_csv("a,b\r\n1,2\r\n");
+        assert_eq!(parsed, vec![vec!["a", "b"], vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn trailing_unterminated_row_kept() {
+        let parsed = parse_csv("a,b\n1,2");
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[1], vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Substrate utilities built from scratch for offline operation.
+//!
+//! The offline crate cache has no serde/clap/tokio/criterion/proptest, so
+//! medflow carries its own minimal substrates (documented in DESIGN.md §2):
+//! JSON, CSV, RNG, units, a scoped thread pool, a property-test driver and
+//! a bench harness. Each is small, tested, and tailored to what the
+//! pipeline needs — not general-purpose replacements.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod units;

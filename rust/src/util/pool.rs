@@ -1,0 +1,133 @@
+//! Scoped worker pool — the "local server" parallel runner substrate.
+//!
+//! The paper's local-burst path (§2.3) emits a Python file that parallelizes
+//! job execution on a workstation; medflow's equivalent is this pool: run N
+//! closures across W OS threads and collect results in input order. Built on
+//! `std::thread::scope` (no tokio in the offline cache; jobs here are
+//! CPU/IO-bound batch work, so a blocking pool is the right shape anyway).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` on `workers` threads; returns results in input order.
+/// Panics in jobs propagate (fail-fast, matching the paper's abort-on-error
+/// transfer policy).
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().unwrap();
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not run"))
+        .collect()
+}
+
+/// Statistics from a throttled run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolStats {
+    pub jobs: usize,
+    pub workers: usize,
+    pub max_in_flight: usize,
+}
+
+/// Like [`run_parallel`] but also reports the maximum observed concurrency —
+/// used by backpressure tests to prove the throttle engaged.
+pub fn run_parallel_stats<T, F>(workers: usize, jobs: Vec<F>) -> (Vec<T>, PoolStats)
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    let workers_clamped = workers.clamp(1, n.max(1));
+    let in_flight = AtomicUsize::new(0);
+    let max_in_flight = AtomicUsize::new(0);
+    let wrapped: Vec<_> = jobs
+        .into_iter()
+        .map(|j| {
+            let in_flight = &in_flight;
+            let max_in_flight = &max_in_flight;
+            move || {
+                let cur = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                max_in_flight.fetch_max(cur, Ordering::SeqCst);
+                let out = j();
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                out
+            }
+        })
+        .collect();
+    let results = run_parallel(workers, wrapped);
+    let stats = PoolStats {
+        jobs: n,
+        workers: workers_clamped,
+        max_in_flight: max_in_flight.load(Ordering::SeqCst),
+    };
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn results_in_input_order() {
+        let jobs: Vec<_> = (0..64).map(|i| move || i * 2).collect();
+        let out = run_parallel(8, jobs);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        static COUNT: AtomicU32 = AtomicU32::new(0);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| || COUNT.fetch_add(1, Ordering::SeqCst))
+            .collect();
+        run_parallel(7, jobs);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn concurrency_bounded_by_workers() {
+        let jobs: Vec<_> = (0..32)
+            .map(|_| || std::thread::sleep(std::time::Duration::from_millis(2)))
+            .collect();
+        let (_, stats) = run_parallel_stats(4, jobs);
+        assert!(stats.max_in_flight <= 4, "max={}", stats.max_in_flight);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let out: Vec<u32> = run_parallel(4, Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_is_sequential_order() {
+        let jobs: Vec<_> = (0..10).map(|i| move || i).collect();
+        assert_eq!(run_parallel(1, jobs), (0..10).collect::<Vec<_>>());
+    }
+}

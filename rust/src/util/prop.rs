@@ -1,0 +1,86 @@
+//! Hand-rolled property-test driver (proptest is not in the offline crate
+//! cache — DESIGN.md §2 records the substitution).
+//!
+//! Usage:
+//! ```ignore
+//! // (ignore: doctest binaries miss the xla rpath in this offline image)
+//! use medflow::util::prop::forall;
+//! forall("sum is commutative", 200, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! Each case gets a fresh deterministic [`Rng`]; on failure the panic
+//! message names the property and the failing seed so the case can be
+//! replayed with [`replay`].
+
+use super::rng::Rng;
+
+/// Base seed; change via MEDFLOW_PROP_SEED to explore a different corner.
+fn base_seed() -> u64 {
+    std::env::var("MEDFLOW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE42)
+}
+
+/// Run `cases` random cases of `property`. Panics (with seed) on the first
+/// failing case.
+pub fn forall(name: &str, cases: u32, property: impl Fn(&mut Rng)) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay(seed: u64, mut property: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("rng below bound", 100, |rng| {
+            assert!(rng.below(10) < 10);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails", 5, |_| panic!("boom"));
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("always fails"), "{msg}");
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        let mut seen = Vec::new();
+        replay(0x1234, |rng| seen.push(rng.next_u64()));
+        let mut seen2 = Vec::new();
+        replay(0x1234, |rng| seen2.push(rng.next_u64()));
+        assert_eq!(seen, seen2);
+    }
+}

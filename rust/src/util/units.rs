@@ -1,0 +1,131 @@
+//! Size/throughput/duration formatting + parsing used across reports.
+//!
+//! Convention notes (they bite): storage sizes are **bytes** (SI: 1 TB =
+//! 1e12 B, matching how the paper quotes "407 TB"), network throughput is
+//! **Gigabits**/s (paper Table 1), durations are seconds f64.
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+
+/// Format a byte count with SI units ("47 TB", "1.1 GB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= TB {
+        format!("{:.1} TB", b / TB as f64)
+    } else if bytes >= GB {
+        format!("{:.1} GB", b / GB as f64)
+    } else if bytes >= MB {
+        format!("{:.1} MB", b / MB as f64)
+    } else if bytes >= KB {
+        format!("{:.1} KB", b / KB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Bytes/second → Gigabits/second (paper Table 1's unit).
+pub fn bytes_per_sec_to_gbps(bps: f64) -> f64 {
+    bps * 8.0 / 1e9
+}
+
+/// Gigabits/second → bytes/second.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}
+
+/// Format seconds as "1h 02m", "3m 20s", "450 ms", …
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 0.001 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.1} s")
+    } else if secs < 3600.0 {
+        format!("{}m {:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+    } else {
+        format!("{}h {:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+    }
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+    (mean, var.sqrt())
+}
+
+/// Percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(47 * TB), "47.0 TB");
+        assert_eq!(fmt_bytes(1_100_000_000), "1.1 GB");
+    }
+
+    #[test]
+    fn gbps_roundtrip() {
+        let bps = gbps_to_bytes_per_sec(0.60);
+        assert!((bytes_per_sec_to_gbps(bps) - 0.60).abs() < 1e-12);
+        // 0.60 Gb/s = 75 MB/s
+        assert!((bps - 75e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.0000005), "0.5 µs");
+        assert_eq!(fmt_duration(0.020), "20.0 ms");
+        assert_eq!(fmt_duration(20.0), "20.0 s");
+        assert_eq!(fmt_duration(200.0), "3m 20s");
+        assert_eq!(fmt_duration(22_530.0), "6h 15m");
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_std_degenerate() {
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[3.0]), (3.0, 0.0));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

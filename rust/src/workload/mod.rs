@@ -1,0 +1,332 @@
+//! Workload generation: the paper's 20-dataset catalog (Table 4) and the
+//! MASiVar 6-scan Table 1 experiment, generated synthetically at reduced
+//! byte scale (DESIGN.md §2: curation/query/scheduling logic depends on
+//! structure — sessions, modalities, file counts — not voxel content).
+
+use anyhow::Result;
+
+use crate::archive::{Archive, SecurityTier};
+use crate::bids::{BidsDataset, BidsName, Modality};
+use crate::convert::convert_series;
+use crate::dicom::synth::{synth_series, SeriesSpec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One row of the paper's Table 4 catalog (ground truth at paper scale).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetCatalogEntry {
+    pub name: &'static str,
+    pub participants: u64,
+    pub sessions: u64,
+    pub size_tb: f64,
+    pub raw_images: u64,
+    pub total_files: u64,
+    pub tier: SecurityTier,
+}
+
+/// The 20 datasets of Table 4, in paper order. UKBB is the GDPR-tier
+/// dataset (paper §4 names UKBB's additional security requirements).
+pub fn catalog() -> Vec<DatasetCatalogEntry> {
+    use SecurityTier::*;
+    let e = |name, participants, sessions, size_tb, raw_images, total_files, tier| {
+        DatasetCatalogEntry {
+            name,
+            participants,
+            sessions,
+            size_tb,
+            raw_images,
+            total_files,
+            tier,
+        }
+    };
+    vec![
+        e("ABVIB", 188, 227, 0.2, 284, 69_499, General),
+        e("ADNI", 2618, 11_190, 47.0, 25_524, 14_550_555, General),
+        e("BIOCARD", 212, 504, 8.4, 3003, 1_180_884, General),
+        e("BLSA", 1151, 3962, 65.0, 19_043, 9_356_630, General),
+        e("CAMCAN", 641, 641, 0.4, 1282, 36_537, General),
+        e("HABS-HD", 4259, 6496, 1.1, 18_675, 469_071, General),
+        e("HCP-Aging", 725, 725, 15.0, 1454, 1_727_081, General),
+        e("HCP-Baby", 213, 418, 2.1, 1938, 362_416, General),
+        e("HCP-Development", 635, 635, 2.2, 1271, 625_552, General),
+        e("HCP-YoungAdult", 1206, 1206, 4.5, 2253, 1_644_656, General),
+        e("ICBM", 193, 193, 2.4, 1168, 828_946, General),
+        e("MAP", 589, 1579, 12.0, 3158, 2_157_929, General),
+        e("MARS", 184, 347, 2.7, 694, 474_225, General),
+        e("NACC", 5739, 7831, 16.0, 13_312, 3_826_519, General),
+        e("OASIS3", 992, 1687, 8.1, 8164, 1_375_463, General),
+        e("OASIS4", 661, 674, 4.1, 3942, 1_202_282, General),
+        e("ROS", 77, 127, 1.0, 254, 173_564, General),
+        e("UKBB", 10_439, 10_439, 79.0, 29_525, 18_734_690, Gdpr),
+        e("VMAP", 769, 1805, 9.6, 4708, 2_046_778, General),
+        e("WRAP", 612, 1625, 7.1, 3769, 1_831_795, General),
+    ]
+}
+
+/// Totals row of Table 4.
+pub fn catalog_totals() -> (u64, u64, f64, u64, u64) {
+    let mut t = (0, 0, 0.0, 0, 0);
+    for e in catalog() {
+        t.0 += e.participants;
+        t.1 += e.sessions;
+        t.2 += e.size_tb;
+        t.3 += e.raw_images;
+        t.4 += e.total_files;
+    }
+    t
+}
+
+/// A generated synthetic cohort (scaled down from a catalog entry).
+#[derive(Debug, Clone)]
+pub struct SynthCohort {
+    pub name: String,
+    pub participants: u64,
+    pub sessions: u64,
+    pub tier: SecurityTier,
+}
+
+/// Scale a catalog entry down for simulation: `scale` in (0, 1]; at least
+/// one participant/session survives.
+pub fn scale_entry(e: &DatasetCatalogEntry, scale: f64) -> SynthCohort {
+    let participants = ((e.participants as f64 * scale).round() as u64).max(1);
+    // preserve the sessions-per-participant ratio
+    let spp = e.sessions as f64 / e.participants as f64;
+    let sessions = ((participants as f64 * spp).round() as u64).max(participants);
+    SynthCohort {
+        name: e.name.to_string(),
+        participants,
+        sessions,
+        tier: e.tier,
+    }
+}
+
+/// Ingest a synthetic cohort: synthesize DICOM per session, convert to
+/// NIfTI + sidecar, store raw files in the archive, link into a BIDS tree.
+/// Returns the BIDS dataset. `dim` is the synthetic matrix size (keep it
+/// small; structure is what matters).
+pub fn ingest_cohort(
+    archive: &mut Archive,
+    bids_parent: &std::path::Path,
+    cohort: &SynthCohort,
+    dim: u16,
+    seed: u64,
+) -> Result<BidsDataset> {
+    let mut rng = Rng::new(seed);
+    archive.register_dataset(&cohort.name, cohort.tier)?;
+    let ds = BidsDataset::create(bids_parent, &cohort.name)?;
+
+    // distribute sessions: base per participant, remainder to the first few
+    let base = (cohort.sessions / cohort.participants).max(1);
+    let extra = cohort.sessions.saturating_sub(base * cohort.participants);
+    for p in 0..cohort.participants {
+        let subject = format!("{:04}", p + 1);
+        let for_this = base + u64::from(p < extra);
+        for s in 0..for_this {
+            let ses_label = format!("{}", s + 1);
+            let date = format!("202{}010{}", 1 + (s % 3), 1 + (p % 9));
+            // 90% of sessions have T1w, 60% have DWI (some sessions fail
+            // criteria — that's what feeds the skip CSV).
+            let has_t1 = rng.next_f64() < 0.9;
+            let has_dwi = rng.next_f64() < 0.6;
+            if has_t1 {
+                ingest_series(
+                    archive,
+                    &ds,
+                    &SeriesSpec::t1w(&subject, &date, dim),
+                    &subject,
+                    Some(&ses_label),
+                    Modality::T1w,
+                    rng.next_u64(),
+                )?;
+            }
+            if has_dwi {
+                ingest_series(
+                    archive,
+                    &ds,
+                    &SeriesSpec::dwi(&subject, &date, dim, 1000.0),
+                    &subject,
+                    Some(&ses_label),
+                    Modality::Dwi,
+                    rng.next_u64(),
+                )?;
+            }
+            if !has_t1 && !has_dwi {
+                // session exists but holds only filtered-out protocols:
+                // still create the session dir so the query sees it
+                let name = BidsName::new(&subject, Some(&ses_label), Modality::T1w);
+                std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap())?;
+            }
+        }
+    }
+    // top-level demographics table (BIDS participants.tsv)
+    crate::bids::participants::write_for_dataset(&ds, seed ^ 0xBEEF)?;
+    Ok(ds)
+}
+
+fn ingest_series(
+    archive: &mut Archive,
+    ds: &BidsDataset,
+    spec: &SeriesSpec,
+    subject: &str,
+    session: Option<&str>,
+    modality: Modality,
+    seed: u64,
+) -> Result<()> {
+    let slices = synth_series(spec, seed);
+    let converted = convert_series(&slices)?;
+    let name = BidsName::new(subject, session, modality);
+    let rel = format!("{}/{}.nii.gz", subject, name.format());
+    let nii_bytes = {
+        // write via NiftiImage::save into a temp then read — or serialize directly
+        converted.image.to_nii_bytes()?
+    };
+    // store compressed raw in the archive (gzip via save path)
+    let tmp = std::env::temp_dir().join(format!("medflow_ingest_{}_{}.nii.gz", std::process::id(), seed));
+    converted.image.save(&tmp)?;
+    let stored = archive.store_raw(&ds.name, &rel, &std::fs::read(&tmp)?)?;
+    std::fs::remove_file(&tmp).ok();
+    drop(nii_bytes);
+    // sidecar next to the raw file
+    let sidecar_rel = format!("{}/{}.json", subject, name.format());
+    let sidecar_stored = archive.store_raw(&ds.name, &sidecar_rel, converted.sidecar.to_string_pretty().as_bytes())?;
+    // link into BIDS tree
+    ds.link_raw(&name, "nii.gz", &stored)?;
+    let sidecar_link = ds.raw_dir(&name).join(format!("{}.json", name.format()));
+    std::fs::create_dir_all(sidecar_link.parent().unwrap())?;
+    if sidecar_link.symlink_metadata().is_ok() {
+        std::fs::remove_file(&sidecar_link).ok();
+    }
+    #[cfg(unix)]
+    std::os::unix::fs::symlink(&sidecar_stored, &sidecar_link)?;
+    #[cfg(not(unix))]
+    std::fs::copy(&sidecar_stored, &sidecar_link)?;
+    Ok(())
+}
+
+/// The Table 1 experiment workload: six T1w scans from a MASiVar-like
+/// mini-cohort (paper §2.4). Returns the generated 64³ volumes.
+pub fn masivar_six_scans(seed: u64) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(6);
+    for i in 0..6 {
+        let spec = SeriesSpec::t1w(&format!("{:02}", i + 1), "20240101", 64);
+        let slices = synth_series(&spec, seed.wrapping_add(i as u64));
+        let conv = convert_series(&slices).expect("synth series converts");
+        // normalize u16 intensities to [0,1] f32 for the seg artifact
+        let max = conv.image.data.iter().cloned().fold(1.0f32, f32::max);
+        out.push(conv.image.data.iter().map(|&v| v / max).collect());
+    }
+    out
+}
+
+/// Ground-truth sidecar check helper (used by tests/examples).
+pub fn sidecar_is_valid(text: &str) -> bool {
+    Json::parse(text)
+        .map(|j| j.get_path("Modality").is_some())
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bids::validate_dataset;
+    use crate::query::find_runnable;
+
+    #[test]
+    fn catalog_matches_table4_totals() {
+        let (participants, sessions, tb, raw, files) = catalog_totals();
+        assert_eq!(participants, 32_103);
+        assert_eq!(sessions, 52_311);
+        assert!((tb - 287.9).abs() < 0.01, "tb={tb}");
+        assert_eq!(raw, 143_421);
+        assert_eq!(files, 62_675_072);
+    }
+
+    #[test]
+    fn twenty_datasets_one_gdpr() {
+        let c = catalog();
+        assert_eq!(c.len(), 20);
+        let gdpr: Vec<_> = c.iter().filter(|e| e.tier == SecurityTier::Gdpr).collect();
+        assert_eq!(gdpr.len(), 1);
+        assert_eq!(gdpr[0].name, "UKBB");
+    }
+
+    #[test]
+    fn scaling_preserves_session_ratio() {
+        let adni = &catalog()[1];
+        let c = scale_entry(adni, 0.001);
+        assert!(c.participants >= 1);
+        let ratio = c.sessions as f64 / c.participants as f64;
+        let want = adni.sessions as f64 / adni.participants as f64;
+        assert!((ratio - want).abs() < 1.5, "ratio {ratio} want {want}");
+    }
+
+    #[test]
+    fn ingest_produces_valid_bids_with_symlinks() {
+        let root = std::env::temp_dir().join(format!("medflow_wl_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let mut archive = Archive::at(&root.join("store")).unwrap();
+        let cohort = SynthCohort {
+            name: "MINI".into(),
+            participants: 3,
+            sessions: 4,
+            tier: SecurityTier::General,
+        };
+        let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 42).unwrap();
+        let errors: Vec<_> = validate_dataset(&ds.root)
+            .into_iter()
+            .filter(|i| i.severity == crate::bids::Severity::Error)
+            .collect();
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(ds.subjects().unwrap().len(), 3);
+        // raw images are symlinks into the store
+        let mut found_link = false;
+        for sub in ds.subjects().unwrap() {
+            for ses in ds.sessions(&sub).unwrap() {
+                let name = BidsName::new(&sub, ses.as_deref(), Modality::T1w);
+                for img in ds.raw_images(&name) {
+                    assert!(img.symlink_metadata().unwrap().file_type().is_symlink());
+                    found_link = true;
+                }
+            }
+        }
+        assert!(found_link);
+        // query engine sees the cohort
+        let fs = crate::pipeline::by_name("freesurfer").unwrap();
+        let q = find_runnable(&ds, &fs).unwrap();
+        assert!(!q.runnable.is_empty());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn masivar_six_volumes_shape() {
+        let vols = masivar_six_scans(1);
+        assert_eq!(vols.len(), 6);
+        for v in &vols {
+            assert_eq!(v.len(), 64 * 64 * 64);
+            assert!(v.iter().all(|x| (0.0..=1.0).contains(x)));
+        }
+        // distinct scans (different noise)
+        assert_ne!(vols[0], vols[1]);
+    }
+
+    #[test]
+    fn ingest_deterministic_by_seed() {
+        let mk = |tag: &str| {
+            let root = std::env::temp_dir().join(format!("medflow_det_{tag}_{}", std::process::id()));
+            std::fs::create_dir_all(&root).unwrap();
+            let mut archive = Archive::at(&root.join("store")).unwrap();
+            let cohort = SynthCohort {
+                name: "MINI".into(),
+                participants: 2,
+                sessions: 2,
+                tier: SecurityTier::General,
+            };
+            let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 7).unwrap();
+            let subs = ds.subjects().unwrap();
+            let usage = archive.usage("MINI").unwrap();
+            std::fs::remove_dir_all(&root).unwrap();
+            (subs, usage.file_count)
+        };
+        assert_eq!(mk("a"), mk("b"));
+    }
+}

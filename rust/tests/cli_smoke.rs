@@ -1,0 +1,81 @@
+//! CLI smoke tests: drive the `medflow` binary end-to-end the way a
+//! curation-team member would (paper Fig. 3's control-node workflow).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn medflow() -> Command {
+    // cargo builds the binary next to the test executable's deps dir
+    let mut path = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    path.push("target/release/medflow");
+    assert!(path.exists(), "build the binary first: cargo build --release");
+    Command::new(path)
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = medflow().args(args).output().expect("spawn medflow");
+    assert!(
+        out.status.success(),
+        "medflow {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn full_cli_workflow() {
+    let root = std::env::temp_dir().join(format!("medflow_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    let rootstr = root.to_string_lossy().to_string();
+
+    // ingest → validate → query → campaign → status
+    let out = run_ok(&[
+        "ingest", "--root", &rootstr, "--dataset", "CLIDS", "--participants", "3",
+        "--sessions", "4", "--dim", "8",
+    ]);
+    assert!(out.contains("ingested 'CLIDS'"), "{out}");
+
+    let out = run_ok(&["validate", "--root", &rootstr, "--dataset", "CLIDS"]);
+    assert!(out.contains("0 errors"), "{out}");
+
+    let out = run_ok(&["query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer"]);
+    assert!(out.contains("runnable:"), "{out}");
+
+    let out = run_ok(&[
+        "campaign", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer",
+    ]);
+    assert!(out.contains("campaign CLIDS/freesurfer"), "{out}");
+    assert!(out.contains("cost $"), "{out}");
+
+    let out = run_ok(&["status", "--root", &rootstr]);
+    assert!(out.contains("CLIDS"), "{out}");
+
+    // re-query: idempotency visible through the CLI
+    let out = run_ok(&["query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer"]);
+    assert!(out.contains("runnable: 0"), "{out}");
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn report_commands_print_tables() {
+    let out = run_ok(&["table2"]);
+    assert!(out.contains("Singularity"));
+    let out = run_ok(&["table3"]);
+    assert!(out.contains("Datalad"));
+    let out = run_ok(&["fig1"]);
+    assert!(out.contains("Adaptive"));
+    let out = run_ok(&["pipelines"]);
+    assert!(out.contains("freesurfer") && out.contains("prequal"));
+    let out = run_ok(&["project"]);
+    assert!(out.contains("TOTAL"));
+    let out = run_ok(&["growth"]);
+    assert!(out.contains("glacier"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = medflow().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}

@@ -1,0 +1,272 @@
+//! End-to-end integration tests: DICOM → NIfTI → BIDS → archive → query →
+//! scripts → campaign (SLURM sim or local burst, PJRT artifacts when
+//! built) → provenance → reports. Plus failure injection (paper §2.3:
+//! checksum mismatch terminates the job).
+
+use std::path::PathBuf;
+
+use medflow::archive::{Archive, SecurityTier};
+use medflow::bids::{validate_dataset, BidsDataset, BidsName, Modality, Severity};
+use medflow::compute::load_runtime;
+use medflow::container::ContainerArchive;
+use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::integrity::{verified_copy, Manifest};
+use medflow::pipeline::{by_name, registry};
+use medflow::provenance::Provenance;
+use medflow::query::find_runnable;
+use medflow::report::{table4, Table4Row};
+use medflow::scripts::{slurm_array_script, SlurmOptions};
+use medflow::slurm::Maintenance;
+use medflow::workload::{ingest_cohort, SynthCohort};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("medflow_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn mini_cohort(name: &str, participants: u64, sessions: u64) -> SynthCohort {
+    SynthCohort {
+        name: name.into(),
+        participants,
+        sessions,
+        tier: SecurityTier::General,
+    }
+}
+
+#[test]
+fn full_flow_ingest_to_reports() {
+    let root = tmp("full");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("E2E", 4, 8), 8, 21).unwrap();
+
+    // BIDS validation clean
+    let errors = validate_dataset(&ds.root)
+        .into_iter()
+        .filter(|i| i.severity == Severity::Error)
+        .count();
+    assert_eq!(errors, 0);
+
+    // query → scripts
+    let fs = by_name("freesurfer").unwrap();
+    let q = find_runnable(&ds, &fs).unwrap();
+    assert!(!q.runnable.is_empty());
+    let script = slurm_array_script(&q.runnable, &SlurmOptions::default());
+    assert!(script.contains("#SBATCH --array=0-"));
+
+    // campaign on simulated HPC
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    let r = coord
+        .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &CampaignConfig::default())
+        .unwrap();
+    assert_eq!(r.completed, q.runnable.len());
+    assert_eq!(r.failed, 0);
+    assert!(r.total_cost_dollars > 0.0);
+
+    // Table 4 over the archive includes our dataset with real counts
+    let rows: Vec<Table4Row> = table4(&coord.archive, &root.join("bids")).unwrap();
+    let row = rows.iter().find(|r| r.dataset == "E2E").unwrap();
+    assert_eq!(row.participants, 4);
+    assert!(row.raw_images > 0);
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn pjrt_campaign_writes_real_qa_stats() {
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let Some(rt) = load_runtime(&repo) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let root = tmp("pjrt");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("PJ", 2, 2), 8, 5).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, Some(&rt));
+    let r = coord
+        .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &CampaignConfig::default())
+        .unwrap();
+    assert!(r.completed > 0);
+    assert!(r.artifact_exec_s > 0.0, "real PJRT compute must be measured");
+    // the derivative stats contain EM tissue volumes from the artifact
+    let mut saw_stats = false;
+    for sub in ds.subjects().unwrap() {
+        for ses in ds.sessions(&sub).unwrap() {
+            let name = BidsName::new(&sub, ses.as_deref(), Modality::T1w);
+            let stats = ds.derivative_dir("freesurfer", &name).join("stats.tsv");
+            if stats.exists() {
+                let text = std::fs::read_to_string(&stats).unwrap();
+                assert!(text.contains("gm_voxels"), "{text}");
+                let gm: f64 = text
+                    .lines()
+                    .find(|l| l.starts_with("gm_voxels"))
+                    .and_then(|l| l.split('\t').nth(1))
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                assert!(gm > 0.0);
+                saw_stats = true;
+            }
+        }
+    }
+    assert!(saw_stats);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn corrupted_transfer_aborts_job() {
+    // paper §2.3: "any non-match resulting in the termination of the job
+    // script with an error notification"
+    let root = tmp("corrupt");
+    let src = root.join("input.nii.gz");
+    std::fs::write(&src, vec![9u8; 10_000]).unwrap();
+
+    // normal verified copy succeeds
+    let dst = root.join("scratch/input.nii.gz");
+    assert!(verified_copy(&src, &dst).is_ok());
+
+    // manifest-verified tree catches tampering mid-job
+    let tree = root.join("outputs");
+    std::fs::create_dir_all(&tree).unwrap();
+    std::fs::write(tree.join("seg.nii.gz"), b"result-a").unwrap();
+    std::fs::write(tree.join("stats.tsv"), b"gm\t1\n").unwrap();
+    let manifest = Manifest::of_tree(&tree).unwrap();
+    // ... bit rot happens between compute and copy-back ...
+    std::fs::write(tree.join("seg.nii.gz"), b"result-X").unwrap();
+    let err = manifest.verify_tree(&tree).unwrap_err();
+    assert!(err.to_string().contains("checksum mismatch"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn gdpr_and_general_data_never_mix() {
+    let root = tmp("gdpr");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("OPEN", 2, 2), 8, 1).unwrap();
+    let gdpr_cohort = SynthCohort {
+        name: "UKBBMINI".into(),
+        participants: 2,
+        sessions: 2,
+        tier: SecurityTier::Gdpr,
+    };
+    ingest_cohort(&mut archive, &root.join("bids"), &gdpr_cohort, 8, 2).unwrap();
+
+    // physical separation on disk
+    let open_root = archive.dataset_root("OPEN").unwrap();
+    let ukbb_root = archive.dataset_root("UKBBMINI").unwrap();
+    assert!(open_root.starts_with(root.join("store/general")));
+    assert!(ukbb_root.starts_with(root.join("store/gdpr")));
+    // usage accounting separated per tier
+    assert!(archive.tier_usage(SecurityTier::General).unwrap() > 0);
+    assert!(archive.tier_usage(SecurityTier::Gdpr).unwrap() > 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn multi_pipeline_dependency_chain() {
+    // freesurfer → brain_age chain (T1wAndPrior) + prequal → tractseg
+    let root = tmp("chain");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("CHAIN", 3, 3), 8, 9).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    let cfg = CampaignConfig::default();
+
+    // dependents blocked initially
+    for dep in ["brain_age", "tractseg"] {
+        let r = coord.run_campaign(&ds, dep, SubmitTarget::Hpc, &cfg).unwrap();
+        assert_eq!(r.completed, 0, "{dep} must wait for its prior");
+    }
+    // run the priors
+    let fs = coord.run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg).unwrap();
+    let pq = coord.run_campaign(&ds, "prequal", SubmitTarget::Hpc, &cfg).unwrap();
+    // dependents now proceed for the sessions whose priors completed
+    let ba = coord.run_campaign(&ds, "brain_age", SubmitTarget::Hpc, &cfg).unwrap();
+    let ts = coord.run_campaign(&ds, "tractseg", SubmitTarget::Hpc, &cfg).unwrap();
+    assert_eq!(ba.completed, fs.completed);
+    assert_eq!(ts.completed, pq.completed);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn maintenance_burst_end_to_end() {
+    let root = tmp("maint");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("MB", 2, 4), 8, 3).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    coord.add_maintenance(Maintenance { start_s: 0.0, end_s: 86_400.0 });
+
+    let target = coord.choose_target(0.0, 3);
+    assert!(matches!(target, SubmitTarget::LocalBurst { workers: 3 }));
+    let r = coord
+        .run_campaign(&ds, "lesion_seg", target, &CampaignConfig::default())
+        .unwrap();
+    assert!(r.completed > 0);
+    // provenance records the local environment
+    let mut found = false;
+    for sub in ds.subjects().unwrap() {
+        for ses in ds.sessions(&sub).unwrap() {
+            let name = BidsName::new(&sub, ses.as_deref(), Modality::T1w);
+            let p = ds.derivative_dir("lesion_seg", &name).join("provenance.json");
+            if p.exists() {
+                assert_eq!(Provenance::load(&p).unwrap().compute_env, "Local");
+                found = true;
+            }
+        }
+    }
+    assert!(found);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn every_registered_pipeline_can_run_a_campaign() {
+    // smoke the whole 16-pipeline registry end-to-end (model durations;
+    // priors run first so dependents unlock)
+    let root = tmp("allpipes");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("ALL", 2, 2), 8, 17).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    let cfg = CampaignConfig::default();
+
+    // two passes: first run prior-free pipelines, then dependents
+    let mut completed_total = 0;
+    for pass in 0..2 {
+        for p in registry() {
+            let has_prior = matches!(
+                p.input,
+                medflow::pipeline::InputReq::T1wAndPrior(_) | medflow::pipeline::InputReq::DwiAndPrior(_)
+            );
+            if (pass == 0) == has_prior {
+                continue;
+            }
+            let r = coord.run_campaign(&ds, p.name, SubmitTarget::Hpc, &cfg).unwrap();
+            assert_eq!(r.failed, 0, "{}", p.name);
+            completed_total += r.completed;
+        }
+    }
+    assert!(completed_total > 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn dataset_reopen_after_campaigns_is_consistent() {
+    let root = tmp("reopen");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("RO", 2, 2), 8, 23).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    coord
+        .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &CampaignConfig::default())
+        .unwrap();
+
+    // a fresh process opening the same tree sees processed state
+    let ds2 = BidsDataset::open(&ds.root).unwrap();
+    let fs = by_name("freesurfer").unwrap();
+    let q = find_runnable(&ds2, &fs).unwrap();
+    assert!(q.runnable.is_empty(), "state must persist across opens");
+    std::fs::remove_dir_all(&root).unwrap();
+}

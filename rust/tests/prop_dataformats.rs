@@ -1,0 +1,152 @@
+//! Property tests over the data-format substrates: NIfTI, DICOM,
+//! conversion, container archive, faults, and the growth model.
+
+use medflow::container::{ContainerArchive, ImageDef};
+use medflow::convert::convert_series;
+use medflow::dicom::synth::{synth_series, SeriesSpec};
+use medflow::dicom::DicomObject;
+use medflow::faults::{run_with_retries, FaultModel};
+use medflow::nifti::NiftiImage;
+use medflow::util::prop::forall;
+use medflow::util::rng::Rng;
+
+fn rand_dims(rng: &mut Rng) -> [u16; 3] {
+    [
+        2 + rng.below(14) as u16,
+        2 + rng.below(14) as u16,
+        2 + rng.below(14) as u16,
+    ]
+}
+
+#[test]
+fn prop_nifti_roundtrip() {
+    forall("nifti roundtrip", 100, |rng| {
+        let dims = rand_dims(rng);
+        let n: usize = dims.iter().map(|&d| d as usize).product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let vox = [
+            rng.range_f64(0.5, 3.0) as f32,
+            rng.range_f64(0.5, 3.0) as f32,
+            rng.range_f64(0.5, 3.0) as f32,
+        ];
+        let img = NiftiImage::new(dims, vox, data.clone()).unwrap();
+        let back = NiftiImage::from_nii_bytes(&img.to_nii_bytes().unwrap()).unwrap();
+        assert_eq!(back.header.dims(), dims);
+        assert_eq!(back.data, data);
+        for (a, b) in back.header.voxel_mm().iter().zip(vox.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_nifti_rejects_truncation() {
+    forall("nifti truncation rejected", 50, |rng| {
+        let dims = rand_dims(rng);
+        let n: usize = dims.iter().map(|&d| d as usize).product();
+        let img = NiftiImage::new(dims, [1.0; 3], vec![0.5; n]).unwrap();
+        let bytes = img.to_nii_bytes().unwrap();
+        let cut = 352 + rng.below((bytes.len() - 352) as u64) as usize;
+        assert!(NiftiImage::from_nii_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+    });
+}
+
+#[test]
+fn prop_dicom_roundtrip_any_series() {
+    forall("dicom series roundtrip", 40, |rng| {
+        let dim = 2 + rng.below(10) as u16;
+        let sub = rng.token(6);
+        let spec = if rng.below(2) == 0 {
+            SeriesSpec::t1w(&sub, "20240101", dim)
+        } else {
+            SeriesSpec::dwi(&sub, "20240101", dim, 500.0 + rng.next_f64() * 2000.0)
+        };
+        let objs = synth_series(&spec, rng.next_u64());
+        for o in &objs {
+            let back = DicomObject::from_bytes(&o.to_bytes()).unwrap();
+            assert_eq!(&back, o);
+        }
+    });
+}
+
+#[test]
+fn prop_convert_preserves_voxel_count_and_order_independence() {
+    forall("convert invariants", 30, |rng| {
+        let dim = 2 + rng.below(10) as u16;
+        let spec = SeriesSpec::t1w(&rng.token(5), "20240102", dim);
+        let mut objs = synth_series(&spec, rng.next_u64());
+        let a = convert_series(&objs).unwrap();
+        assert_eq!(a.image.data.len(), (dim as usize).pow(3));
+        rng.shuffle(&mut objs);
+        let b = convert_series(&objs).unwrap();
+        assert_eq!(a.image.data, b.image.data, "slice order must not matter");
+    });
+}
+
+#[test]
+fn prop_container_hash_is_content_addressed() {
+    forall("container content addressing", 20, |rng| {
+        let dir = std::env::temp_dir().join(format!(
+            "medflow_prop_cont_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut archive = ContainerArchive::open(&dir).unwrap();
+        let version = format!("{}.{}", rng.below(9), rng.below(9));
+        let def = ImageDef {
+            pipeline: "freesurfer".into(),
+            version: version.clone(),
+            base_env: "ubuntu22.04+xla0.5.1".into(),
+            artifact: Some("seg_pipeline".into()),
+        };
+        let img = archive.build(def.clone()).unwrap();
+        // same def in a fresh archive → same sha
+        let dir2 = dir.join("twin");
+        std::fs::create_dir_all(&dir2).unwrap();
+        let img2 = ContainerArchive::open(&dir2).unwrap().build(def).unwrap();
+        assert_eq!(img.sha256, img2.sha256);
+        assert!(archive.fsck().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    });
+}
+
+#[test]
+fn prop_fault_traces_consistent() {
+    forall("fault trace consistency", 200, |rng| {
+        let model = match rng.below(3) {
+            0 => FaultModel::none(),
+            1 => FaultModel::typical(),
+            _ => FaultModel::harsh(),
+        };
+        let retries = rng.below(5) as u32;
+        let t = run_with_retries(&model, retries, rng);
+        // attempts ≤ retries + 1; completed ⇔ failures < attempts budget
+        assert!(t.failures.len() <= retries as usize + 1);
+        if t.completed {
+            assert!(t.failures.len() <= retries as usize);
+            assert!(t.effective_duration_factor >= 1.0);
+        } else {
+            assert_eq!(t.failures.len(), retries as usize + 1);
+        }
+        // wasted work bounded by one full duration per attempt
+        assert!(t.effective_duration_factor <= retries as f64 + 2.0);
+    });
+}
+
+#[test]
+fn prop_growth_monotone_and_tier_conserving() {
+    use medflow::archive::growth::{default_models, forecast};
+    forall("growth monotonicity", 50, |rng| {
+        let models = default_models();
+        let y1 = rng.range_f64(0.0, 20.0);
+        let y2 = y1 + rng.range_f64(0.0, 20.0);
+        let a = forecast(&models, y1);
+        let b = forecast(&models, y2);
+        assert!(b.general_bytes >= a.general_bytes);
+        assert!(b.gdpr_bytes >= a.gdpr_bytes);
+        // capacity constants never drift
+        assert_eq!(a.general_capacity, 407 * 1_000_000_000_000);
+        assert_eq!(a.gdpr_capacity, 266 * 1_000_000_000_000);
+    });
+}

@@ -1,0 +1,234 @@
+//! Property tests on coordinator/substrate invariants (DESIGN.md §5),
+//! driven by the hand-rolled `util::prop` harness (proptest is not in the
+//! offline crate cache).
+
+use medflow::bids::{BidsName, Modality};
+use medflow::integrity::{crc32, sha256_hex};
+use medflow::netsim::{Env, NetProfile};
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler, SimJob};
+use medflow::util::csv::{parse_csv, write_csv};
+use medflow::util::json::Json;
+use medflow::util::prop::forall;
+use medflow::util::rng::Rng;
+use medflow::util::units::{bytes_per_sec_to_gbps, gbps_to_bytes_per_sec, mean_std, percentile};
+
+fn rand_label(rng: &mut Rng) -> String {
+    { let n = 1 + rng.below(8) as usize; rng.token(n) }
+}
+
+#[test]
+fn prop_bids_name_roundtrip() {
+    // parse ∘ format = id for every legal entity combination
+    forall("bids name roundtrip", 300, |rng| {
+        let modality = if rng.below(2) == 0 { Modality::T1w } else { Modality::Dwi };
+        let mut name = BidsName::new(&rand_label(rng), None, modality);
+        if rng.below(2) == 0 {
+            name.session = Some(rand_label(rng));
+        }
+        if rng.below(2) == 0 {
+            name = name.with_acq(&rand_label(rng));
+        }
+        if rng.below(2) == 0 {
+            name = name.with_run(rng.below(99) as u32 + 1);
+        }
+        let parsed = BidsName::parse(&name.format()).unwrap();
+        assert_eq!(parsed, name);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // parse(to_string(v)) == v for random JSON trees
+    fn gen(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(2_000_001) as f64 - 1e6) / 4.0),
+            3 => Json::Str({ let n = rng.below(12) as usize; rng.token(n) }),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for _ in 0..rng.below(5) {
+                    { let n = 1 + rng.below(6) as usize; let key = rng.token(n); o.set(&key, gen(rng, depth - 1)); }
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+    forall("json roundtrip", 300, |rng| {
+        let v = gen(rng, 3);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_csv_roundtrip() {
+    forall("csv roundtrip", 200, |rng| {
+        let cols = 1 + rng.below(5) as usize;
+        let rows: Vec<Vec<String>> = (0..rng.below(6))
+            .map(|_| {
+                (0..cols)
+                    .map(|_| {
+                        let mut s = { let n = rng.below(8) as usize; rng.token(n) };
+                        if rng.below(4) == 0 {
+                            s.push(',');
+                        }
+                        if rng.below(4) == 0 {
+                            s.push('"');
+                        }
+                        if rng.below(6) == 0 {
+                            s.push('\n');
+                        }
+                        s
+                    })
+                    .collect()
+            })
+            .collect();
+        let header: Vec<&str> = (0..cols).map(|_| "h").collect();
+        let text = write_csv(&header, &rows);
+        let parsed = parse_csv(&text);
+        assert_eq!(parsed.len(), rows.len() + 1);
+        for (got, want) in parsed[1..].iter().zip(&rows) {
+            assert_eq!(got, want);
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_conservation() {
+    // every submitted job runs exactly once; no node over-commits; array
+    // throttles hold; no job starts before submit
+    forall("scheduler conservation", 60, |rng| {
+        let nodes = 1 + rng.below(4) as usize;
+        let cores = 2 + rng.below(7) as u32;
+        let mut sched = Scheduler::new(ClusterSpec::small(nodes, cores, 64));
+        let n_jobs = 1 + rng.below(40);
+        let throttle = 1 + rng.below(5) as u32;
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: throttle,
+        };
+        for id in 0..n_jobs {
+            sched.submit(SimJob {
+                id,
+                user: format!("u{}", rng.below(3)),
+                cores: 1 + rng.below(cores as u64) as u32,
+                ram_gb: 1,
+                duration_s: 1.0 + rng.next_f64() * 100.0,
+                submit_s: rng.next_f64() * 50.0,
+                array: if rng.below(2) == 0 { Some(handle) } else { None },
+            });
+        }
+        let records = sched.run_to_completion().to_vec();
+        // conservation: all jobs completed exactly once
+        assert_eq!(records.len() as u64, n_jobs);
+        let mut ids: Vec<u64> = records.iter().map(|r| r.job.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, n_jobs);
+        // causality + duration
+        for r in &records {
+            assert!(r.start_s >= r.job.submit_s - 1e-9, "job {} started early", r.job.id);
+            assert!((r.end_s - r.start_s - r.job.duration_s).abs() < 1e-6);
+        }
+        // node capacity: sweep events on each node
+        for node in 0..nodes {
+            let mut events: Vec<(f64, i64)> = Vec::new();
+            for r in records.iter().filter(|r| r.node == node) {
+                events.push((r.start_s, r.job.cores as i64));
+                events.push((r.end_s, -(r.job.cores as i64)));
+            }
+            events.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+            });
+            let mut used = 0i64;
+            for (_, delta) in events {
+                used += delta;
+                assert!(used <= cores as i64, "node {node} over-committed");
+            }
+        }
+        // array throttle: concurrent array jobs never exceed max_concurrent
+        let mut events: Vec<(f64, i64)> = Vec::new();
+        for r in records.iter().filter(|r| r.job.array.is_some()) {
+            events.push((r.start_s, 1));
+            events.push((r.end_s, -1));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut inflight = 0i64;
+        for (_, delta) in events {
+            inflight += delta;
+            assert!(inflight <= throttle as i64, "array throttle violated");
+        }
+    });
+}
+
+#[test]
+fn prop_checksums_detect_single_bit_flips() {
+    forall("checksum bit flip", 150, |rng| {
+        let len = 1 + rng.below(4096) as usize;
+        let mut data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let h1 = sha256_hex(&data);
+        let c1 = crc32(&data);
+        let byte = rng.below(len as u64) as usize;
+        let bit = rng.below(8) as u8;
+        data[byte] ^= 1 << bit;
+        assert_ne!(sha256_hex(&data), h1, "sha256 must catch bit flips");
+        assert_ne!(crc32(&data), c1, "crc32 must catch single-bit flips");
+    });
+}
+
+#[test]
+fn prop_transfer_time_monotone_in_size() {
+    // with the same rng stream position, bigger payload ⇒ ≥ time
+    forall("transfer monotone", 100, |rng| {
+        let env = *rng.choose(&[Env::Hpc, Env::Cloud, Env::Local]);
+        let p = NetProfile::of(env);
+        let seed = rng.next_u64();
+        let small = rng.below(1_000_000) + 1;
+        let big = small + rng.below(1_000_000_000);
+        let t_small = p.transfer_time(&mut Rng::new(seed), small);
+        let t_big = p.transfer_time(&mut Rng::new(seed), big);
+        assert!(t_big >= t_small, "{env:?}: {t_big} < {t_small}");
+    });
+}
+
+#[test]
+fn prop_units_roundtrip_and_stats() {
+    forall("units invariants", 200, |rng| {
+        let gbps = rng.next_f64() * 100.0 + 0.001;
+        let back = bytes_per_sec_to_gbps(gbps_to_bytes_per_sec(gbps));
+        assert!((back - gbps).abs() < 1e-9);
+
+        let n = 1 + rng.below(50) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal_ms(5.0, 2.0)).collect();
+        let (mean, std) = mean_std(&xs);
+        assert!(std >= 0.0);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(mean >= lo - 1e-9 && mean <= hi + 1e-9);
+        // percentiles are monotone and bounded
+        let p10 = percentile(&xs, 10.0);
+        let p90 = percentile(&xs, 90.0);
+        assert!(p10 <= p90 + 1e-12);
+        assert!(p10 >= lo - 1e-9 && p90 <= hi + 1e-9);
+    });
+}
+
+#[test]
+fn prop_gaussian_band_rows_normalized() {
+    // mirror of the python-side property, on the rust cost of constants:
+    // any banded blur operator in the manifest preserves constants — here
+    // we assert the *runtime artifacts* are hash-pinned instead.
+    forall("manifest hash pins", 20, |rng| {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let manifest = medflow::runtime::ArtifactManifest::load(&dir).unwrap();
+        let art = rng.choose(&manifest.artifacts);
+        let text = std::fs::read_to_string(dir.join(&art.file)).unwrap();
+        assert_eq!(sha256_hex(text.as_bytes()), art.sha256);
+        assert!(!text.contains("{...}"), "elided constants would zero out");
+    });
+}

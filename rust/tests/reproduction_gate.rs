@@ -1,0 +1,32 @@
+//! The reproduction gate as an integration test: every headline number of
+//! the paper must hold, with the real PJRT artifacts when built.
+
+use medflow::compute::load_runtime;
+use medflow::report::gate::{run_gate, summarize};
+
+#[test]
+fn paper_reproduction_gate() {
+    let runtime = load_runtime(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    let checks = run_gate(runtime.as_ref(), 42).unwrap();
+    match summarize(&checks) {
+        Ok(report) => println!("{report}"),
+        Err(failures) => panic!("{failures}"),
+    }
+    // with artifacts built, real compute must have run
+    if runtime.is_some() {
+        // (artifact timing is in Table1Column; assert via a fresh gate run)
+        let cols = medflow::report::table1(runtime.as_ref(), 7, 10, 10).unwrap();
+        assert!(cols.iter().all(|c| c.artifact_exec_s > 0.0));
+    }
+}
+
+#[test]
+fn gate_stable_across_seeds() {
+    for seed in [1u64, 99, 12345] {
+        let checks = run_gate(None, seed).unwrap();
+        assert!(
+            summarize(&checks).is_ok(),
+            "gate must not be seed-sensitive (seed {seed})"
+        );
+    }
+}
