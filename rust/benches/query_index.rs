@@ -1,0 +1,100 @@
+//! Bench: full-scan vs sharded-indexed vs incremental query discovery —
+//! the ISSUE 1 tentpole numbers. Generates a Table 4–scale synthetic
+//! catalog (structure only, stub bytes) and times the three query paths
+//! of `medflow::query` over its largest dataset, then the whole catalog.
+//!
+//! Run: `cargo bench --bench query_index`
+
+use medflow::archive::{EntityIndex, ProcessedIndex, SessionKey};
+use medflow::pipeline::by_name;
+use medflow::query::{find_runnable, find_runnable_sharded, IncrementalEngine};
+use medflow::util::bench::{bench, metric};
+use medflow::workload::{ingest_catalog_lite, ingest_cohort_lite, SynthCohort};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Indexed / incremental query vs full scan ===");
+    let root = std::env::temp_dir().join(format!("medflow_bench_qidx_{}", std::process::id()));
+    std::fs::create_dir_all(&root)?;
+    let fs = by_name("freesurfer").unwrap();
+
+    // --- single large dataset (ADNI-shaped at reduced scale) ---
+    let cohort = SynthCohort {
+        name: "ADNISCALE".into(),
+        participants: 400,
+        sessions: 1700,
+        tier: medflow::archive::SecurityTier::General,
+    };
+    let t0 = std::time::Instant::now();
+    let ds = ingest_cohort_lite(&root.join("bids"), &cohort, 7)?;
+    metric("ingest_lite_seconds", t0.elapsed().as_secs_f64(), "s for 1700 sessions");
+
+    let index = EntityIndex::load(&ds.index_dir().join("index"))?;
+    metric("index.sessions", index.len() as f64, "");
+    metric("index.shards", index.n_shards() as f64, "");
+    let processed = ProcessedIndex::default();
+
+    let full = bench("full_scan_find_runnable", 1, 10, || {
+        find_runnable(&ds, &fs).unwrap().runnable.len()
+    });
+    let sharded = bench("sharded_indexed_query_w4", 1, 10, || {
+        find_runnable_sharded(&ds, &fs, &index, &processed, 4)
+            .unwrap()
+            .0
+            .runnable
+            .len()
+    });
+    metric("speedup.sharded_vs_full", full.mean_s / sharded.mean_s, "x");
+
+    // --- incremental re-query over an unchanged, fully processed archive ---
+    let mut engine = IncrementalEngine::open(&ds)?;
+    let (r1, s1) = engine.query(&ds, &fs, 4)?;
+    metric("first_query.examined", s1.sessions_examined as f64, "");
+    for job in &r1.runnable {
+        engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+    }
+    engine.save(&ds)?;
+    let incremental = bench("incremental_requery_unchanged", 1, 20, || {
+        let (r, stats) = engine.query(&ds, &fs, 4).unwrap();
+        assert_eq!(stats.sessions_examined, 0, "unchanged archive must not rescan");
+        r.skipped.len()
+    });
+    metric("speedup.incremental_vs_full", full.mean_s / incremental.mean_s, "x");
+
+    // --- the whole 20-dataset catalog at reduced scale ---
+    let cat_root = root.join("catalog");
+    std::fs::create_dir_all(&cat_root)?;
+    let t1 = std::time::Instant::now();
+    let sets = ingest_catalog_lite(&cat_root, 0.02, 11)?;
+    let total_sessions: usize = sets
+        .iter()
+        .map(|d| EntityIndex::load(&d.index_dir().join("index")).map(|i| i.len()).unwrap_or(0))
+        .sum();
+    metric("catalog.datasets", sets.len() as f64, "");
+    metric("catalog.sessions", total_sessions as f64, "");
+    metric("catalog.ingest_seconds", t1.elapsed().as_secs_f64(), "s");
+
+    bench("catalog_full_scan_all20", 1, 3, || {
+        sets.iter()
+            .map(|d| find_runnable(d, &fs).unwrap().runnable.len())
+            .sum::<usize>()
+    });
+    let indexes: Vec<EntityIndex> = sets
+        .iter()
+        .map(|d| EntityIndex::load(&d.index_dir().join("index")).unwrap())
+        .collect();
+    bench("catalog_sharded_all20_w4", 1, 3, || {
+        sets.iter()
+            .zip(&indexes)
+            .map(|(d, idx)| {
+                find_runnable_sharded(d, &fs, idx, &processed, 4)
+                    .unwrap()
+                    .0
+                    .runnable
+                    .len()
+            })
+            .sum::<usize>()
+    });
+
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

@@ -1,0 +1,630 @@
+//! Sharded entity index + persistent processed-set index — the curation
+//! hot path at catalog scale (paper §2.3; DESIGN.md §6).
+//!
+//! The seed implementation of [`crate::query::find_runnable`] walks the
+//! whole BIDS tree on every campaign: one `read_dir` per subject, session
+//! and modality directory. That is fine for MASiVar's six scans and
+//! unusable for the Table 4 catalog (~52k sessions) or anything larger.
+//! This module holds the two persistent structures that turn repeated
+//! curation from O(all sessions) filesystem walks into O(changes):
+//!
+//! * [`EntityIndex`] — a sharded inverted index over BIDS entities
+//!   (subject / session / modality → image paths). Built once from a full
+//!   walk, maintained incrementally by the ingest path
+//!   ([`crate::workload::ingest_cohort`]) and refreshed cheaply by
+//!   [`EntityIndex::refresh`]. Shards are hashed by subject so
+//!   [`crate::query`] can scan them in parallel with
+//!   [`crate::util::pool::run_parallel`].
+//! * [`ProcessedIndex`] — the persistent processed-set: which sessions
+//!   each pipeline has already completed, with a per-pipeline version
+//!   counter that lets dependent pipelines detect "my prerequisite just
+//!   finished something" without re-walking `derivatives/`.
+//!
+//! Both persist as JSON under `<dataset>/.medflow/` (see
+//! [`crate::bids::BidsDataset::index_dir`]) so a fresh control-node
+//! process — or a second campaign — sees the same state without a rescan.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::bids::{BidsDataset, BidsName, Modality};
+use crate::util::json::{Json, JsonObj};
+
+/// Default shard count: enough to spread a Table 4–scale catalog across a
+/// workstation's cores without fragmenting tiny datasets.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Identity of one scanning session (the query engine's unit of work).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionKey {
+    pub subject: String,
+    /// `None` for subjects without a `ses-*` level (BIDS allows this).
+    pub session: Option<String>,
+}
+
+impl SessionKey {
+    pub fn new(subject: &str, session: Option<&str>) -> Self {
+        Self {
+            subject: subject.to_string(),
+            session: session.map(str::to_string),
+        }
+    }
+
+    /// Human-readable label `sub-X[/ses-Y]` (stable across runs).
+    pub fn label(&self) -> String {
+        match &self.session {
+            Some(ses) => format!("sub-{}/ses-{}", self.subject, ses),
+            None => format!("sub-{}", self.subject),
+        }
+    }
+
+    /// Serialize to the canonical `{subject, session?}` JSON shape shared
+    /// by every `.medflow/` file that embeds session keys.
+    pub(crate) fn to_json(&self) -> JsonObj {
+        let mut o = JsonObj::new();
+        o.set("subject", Json::str(&self.subject));
+        if let Some(ses) = &self.session {
+            o.set("session", Json::str(ses));
+        }
+        o
+    }
+
+    /// Inverse of [`Self::to_json`]; extra keys are ignored.
+    pub(crate) fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            subject: j.get_path("subject")?.as_str()?.to_string(),
+            session: j.get_path("session").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// What the index knows about one session: the image paths per modality
+/// (stored **relative to the dataset root**, so the persisted index
+/// survives the dataset moving or being opened from a different working
+/// directory) plus a generation stamp used to invalidate cached query
+/// verdicts when the session's contents change.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SessionRecord {
+    pub t1w: Vec<PathBuf>,
+    pub dwi: Vec<PathBuf>,
+    /// Index generation at which this record was last (re)written.
+    pub generation: u64,
+}
+
+impl SessionRecord {
+    /// Dataset-root-relative image paths of one modality.
+    pub fn images(&self, modality: Modality) -> &[PathBuf] {
+        match modality {
+            Modality::T1w => &self.t1w,
+            Modality::Dwi => &self.dwi,
+        }
+    }
+
+    /// Image paths of one modality resolved against the dataset root —
+    /// what query evaluation and [`crate::query::JobSpec`] inputs use.
+    pub fn resolved(&self, ds: &BidsDataset, modality: Modality) -> Vec<PathBuf> {
+        self.images(modality).iter().map(|p| ds.root.join(p)).collect()
+    }
+}
+
+/// FNV-1a — stable across processes (unlike `DefaultHasher`), so shard
+/// assignment survives save/load.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The sharded inverted index over BIDS entities.
+///
+/// All sessions of one subject land in the same shard (subject-hashed), so
+/// a parallel scan never races on a subject and per-shard output stays
+/// deterministic.
+#[derive(Debug, Clone)]
+pub struct EntityIndex {
+    shards: Vec<BTreeMap<SessionKey, SessionRecord>>,
+    /// Bumped on every mutation; recorded into each touched
+    /// [`SessionRecord::generation`].
+    pub generation: u64,
+    /// Shards mutated since the last save/load (not persisted) — saves
+    /// rewrite only these, keeping persistence O(changes) too.
+    dirty: BTreeSet<usize>,
+}
+
+impl EntityIndex {
+    /// An empty index with `n_shards` shards (at least 1).
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            shards: (0..n_shards.max(1)).map(|_| BTreeMap::new()).collect(),
+            generation: 0,
+            dirty: BTreeSet::new(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total indexed sessions.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(BTreeMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(BTreeMap::is_empty)
+    }
+
+    /// Shard index a subject's sessions live in.
+    pub fn shard_of(&self, subject: &str) -> usize {
+        (fnv1a(subject.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// One shard's sessions (sorted by key).
+    pub fn shard(&self, i: usize) -> &BTreeMap<SessionKey, SessionRecord> {
+        &self.shards[i]
+    }
+
+    /// Look up one session.
+    pub fn get(&self, key: &SessionKey) -> Option<&SessionRecord> {
+        self.shards[self.shard_of(&key.subject)].get(key)
+    }
+
+    /// Whether a session is indexed.
+    pub fn contains(&self, key: &SessionKey) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// (Re)index one session from the filesystem: two `read_dir`s, O(1) in
+    /// dataset size. This is the maintenance hook the ingest path calls per
+    /// newly acquired session. Paths are stored relative to the dataset
+    /// root so the persisted index is relocation-safe.
+    pub fn record_session(&mut self, ds: &BidsDataset, key: &SessionKey) {
+        let ses = key.session.as_deref();
+        let relativize = |paths: Vec<PathBuf>| -> Vec<PathBuf> {
+            paths
+                .into_iter()
+                .map(|p| p.strip_prefix(&ds.root).map(PathBuf::from).unwrap_or(p))
+                .collect()
+        };
+        let t1w = relativize(ds.raw_images(&BidsName::new(&key.subject, ses, Modality::T1w)));
+        let dwi = relativize(ds.raw_images(&BidsName::new(&key.subject, ses, Modality::Dwi)));
+        self.generation += 1;
+        let rec = SessionRecord {
+            t1w,
+            dwi,
+            generation: self.generation,
+        };
+        let shard = self.shard_of(&key.subject);
+        self.shards[shard].insert(key.clone(), rec);
+        self.dirty.insert(shard);
+    }
+
+    /// Build from a full walk of the dataset — the one-time cost the index
+    /// amortizes away. Every session directory is indexed, including
+    /// sessions with zero curatable images (those still feed the skip CSV).
+    /// All shards are marked dirty — a built index must fully overwrite
+    /// whatever save files precede it (a rebuild may have emptied a shard).
+    pub fn build(ds: &BidsDataset, n_shards: usize) -> Result<Self> {
+        let mut index = Self::new(n_shards);
+        for subject in ds.subjects()? {
+            for session in ds.sessions(&subject)? {
+                let key = SessionKey::new(&subject, session.as_deref());
+                index.record_session(ds, &key);
+            }
+        }
+        index.dirty = (0..index.shards.len()).collect();
+        Ok(index)
+    }
+
+    /// Incremental discovery of newly acquired sessions: enumerates the
+    /// subject/session directory level only (no per-modality or per-file
+    /// walks) and indexes keys not yet present. Returns the keys added.
+    ///
+    /// Contract: a writer that *adds images to an existing session* must
+    /// call [`Self::record_session`] itself (as the ingest path does);
+    /// `refresh` only discovers whole new sessions.
+    pub fn refresh(&mut self, ds: &BidsDataset) -> Result<Vec<SessionKey>> {
+        let mut added = Vec::new();
+        for subject in ds.subjects()? {
+            for session in ds.sessions(&subject)? {
+                let key = SessionKey::new(&subject, session.as_deref());
+                if !self.contains(&key) {
+                    self.record_session(ds, &key);
+                    added.push(key);
+                }
+            }
+        }
+        Ok(added)
+    }
+
+    /// Persist: one JSON file per shard plus `meta.json`, under `dir`.
+    /// Only shards mutated since the last save/load (plus any whose file
+    /// is missing on disk) are rewritten.
+    pub fn save(&mut self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut meta = JsonObj::new();
+        meta.set("n_shards", Json::num(self.shards.len() as f64));
+        meta.set("generation", Json::num(self.generation as f64));
+        std::fs::write(dir.join("meta.json"), Json::Obj(meta).to_string_pretty())?;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let path = dir.join(format!("shard-{i:03}.json"));
+            if !self.dirty.contains(&i) && path.exists() {
+                continue;
+            }
+            let sessions: Vec<Json> = shard
+                .iter()
+                .map(|(key, rec)| {
+                    let mut o = key.to_json();
+                    o.set("generation", Json::num(rec.generation as f64));
+                    o.set(
+                        "t1w",
+                        Json::Arr(rec.t1w.iter().map(|p| Json::str(p.to_string_lossy())).collect()),
+                    );
+                    o.set(
+                        "dwi",
+                        Json::Arr(rec.dwi.iter().map(|p| Json::str(p.to_string_lossy())).collect()),
+                    );
+                    Json::Obj(o)
+                })
+                .collect();
+            let mut o = JsonObj::new();
+            o.set("sessions", Json::Arr(sessions));
+            std::fs::write(&path, Json::Obj(o).to_string_pretty())?;
+        }
+        self.dirty.clear();
+        Ok(())
+    }
+
+    /// Load a previously saved index.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let meta = Json::parse(
+            &std::fs::read_to_string(&meta_path).with_context(|| format!("read {meta_path:?}"))?,
+        )?;
+        let n_shards = meta
+            .get_path("n_shards")
+            .and_then(Json::as_i64)
+            .context("index meta missing n_shards")? as usize;
+        let mut index = Self::new(n_shards);
+        index.generation = meta
+            .get_path("generation")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64;
+        for i in 0..n_shards {
+            let path = dir.join(format!("shard-{i:03}.json"));
+            let json = Json::parse(
+                &std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?,
+            )?;
+            for s in json.get_path("sessions").and_then(Json::as_arr).unwrap_or(&[]) {
+                let Some(key) = SessionKey::from_json(s) else {
+                    continue;
+                };
+                let paths = |field: &str| -> Vec<PathBuf> {
+                    s.get_path(field)
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_str)
+                        .map(PathBuf::from)
+                        .collect()
+                };
+                let rec = SessionRecord {
+                    t1w: paths("t1w"),
+                    dwi: paths("dwi"),
+                    generation: s.get_path("generation").and_then(Json::as_i64).unwrap_or(0) as u64,
+                };
+                index.shards[i].insert(key, rec);
+            }
+        }
+        Ok(index)
+    }
+
+    /// Load the dataset's persisted index, or build (full walk) and persist
+    /// one if none exists yet.
+    pub fn open_or_build(ds: &BidsDataset, n_shards: usize) -> Result<Self> {
+        let dir = ds.index_dir().join("index");
+        if dir.join("meta.json").exists() {
+            Self::load(&dir)
+        } else {
+            let mut index = Self::build(ds, n_shards)?;
+            index.save(&dir)?;
+            Ok(index)
+        }
+    }
+
+    /// Persist to the dataset's conventional index location.
+    pub fn save_for(&mut self, ds: &BidsDataset) -> Result<()> {
+        self.save(&ds.index_dir().join("index"))
+    }
+}
+
+/// The persistent processed-set: `pipeline → {completed sessions}` plus a
+/// per-pipeline version counter (bumped whenever the set grows) that
+/// dependent pipelines use to detect unblocking cheaply.
+#[derive(Debug, Clone, Default)]
+pub struct ProcessedIndex {
+    done: BTreeMap<String, BTreeSet<SessionKey>>,
+    versions: BTreeMap<String, u64>,
+}
+
+impl ProcessedIndex {
+    /// Record a completion. Returns `true` if the session was newly added
+    /// (the pipeline's version is bumped only then).
+    pub fn mark(&mut self, pipeline: &str, key: SessionKey) -> bool {
+        let fresh = self.done.entry(pipeline.to_string()).or_default().insert(key);
+        if fresh {
+            *self.versions.entry(pipeline.to_string()).or_insert(0) += 1;
+        }
+        fresh
+    }
+
+    /// Whether `pipeline` has completed `key`.
+    pub fn contains(&self, pipeline: &str, key: &SessionKey) -> bool {
+        self.done.get(pipeline).is_some_and(|s| s.contains(key))
+    }
+
+    /// Forget a pipeline's processed set while **bumping** its version —
+    /// the out-of-band invalidation hook: dependents' cached
+    /// `MissingPrior` verdicts are version-stamped, so the bump forces
+    /// them to re-examine; the sessions themselves fall back to a
+    /// `derivatives/` probe and re-absorb whatever still exists.
+    pub fn reset(&mut self, pipeline: &str) {
+        self.done.remove(pipeline);
+        *self.versions.entry(pipeline.to_string()).or_insert(0) += 1;
+    }
+
+    /// Monotonic version of a pipeline's processed set (0 = never ran).
+    pub fn version(&self, pipeline: &str) -> u64 {
+        self.versions.get(pipeline).copied().unwrap_or(0)
+    }
+
+    /// Completed-session count for a pipeline.
+    pub fn count(&self, pipeline: &str) -> usize {
+        self.done.get(pipeline).map_or(0, BTreeSet::len)
+    }
+
+    /// Completed sessions of a pipeline, in key order.
+    pub fn keys(&self, pipeline: &str) -> impl Iterator<Item = &SessionKey> {
+        self.done.get(pipeline).into_iter().flatten()
+    }
+
+    /// Persist as a single JSON document. Iterates the union of the
+    /// processed sets and the version map: a pipeline whose set was
+    /// emptied by [`Self::reset`] must still persist its bumped version,
+    /// or cross-process invalidation would be silently lost.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let names: BTreeSet<&String> = self.done.keys().chain(self.versions.keys()).collect();
+        let mut pipelines = Vec::new();
+        for pipeline in names {
+            let mut o = JsonObj::new();
+            o.set("pipeline", Json::str(pipeline.as_str()));
+            o.set("version", Json::num(self.version(pipeline) as f64));
+            o.set(
+                "sessions",
+                Json::Arr(
+                    self.done
+                        .get(pipeline.as_str())
+                        .into_iter()
+                        .flatten()
+                        .map(|k| Json::Obj(k.to_json()))
+                        .collect(),
+                ),
+            );
+            pipelines.push(Json::Obj(o));
+        }
+        let mut root = JsonObj::new();
+        root.set("pipelines", Json::Arr(pipelines));
+        std::fs::write(path, Json::Obj(root).to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load from disk; a missing file is an empty index (nothing processed).
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Self::default());
+        }
+        let json = Json::parse(
+            &std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?,
+        )?;
+        let mut out = Self::default();
+        for p in json.get_path("pipelines").and_then(Json::as_arr).unwrap_or(&[]) {
+            let Some(name) = p.get_path("pipeline").and_then(Json::as_str) else {
+                continue;
+            };
+            let keys: BTreeSet<SessionKey> = p
+                .get_path("sessions")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(SessionKey::from_json)
+                .collect();
+            let version = p.get_path("version").and_then(Json::as_i64).unwrap_or(0) as u64;
+            out.versions.insert(name.to_string(), version.max(keys.len() as u64));
+            out.done.insert(name.to_string(), keys);
+        }
+        Ok(out)
+    }
+
+    /// Conventional on-disk location for a dataset.
+    pub fn path_for(ds: &BidsDataset) -> PathBuf {
+        ds.index_dir().join("processed.json")
+    }
+
+    /// Load the dataset's processed index (empty if never saved).
+    pub fn open(ds: &BidsDataset) -> Result<Self> {
+        Self::load(&Self::path_for(ds))
+    }
+
+    /// Persist to the dataset's conventional location.
+    pub fn save_for(&self, ds: &BidsDataset) -> Result<()> {
+        self.save(&Self::path_for(ds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpds(tag: &str) -> BidsDataset {
+        let parent = std::env::temp_dir().join(format!("medflow_idx_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&parent).unwrap();
+        BidsDataset::create(&parent, "DS").unwrap()
+    }
+
+    fn add_image(ds: &BidsDataset, sub: &str, ses: Option<&str>, m: Modality) {
+        let name = BidsName::new(sub, ses, m);
+        let p = ds.raw_path(&name, "nii.gz");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"img").unwrap();
+    }
+
+    fn cleanup(ds: &BidsDataset) {
+        std::fs::remove_dir_all(ds.root.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn build_indexes_every_session_including_empty() {
+        let ds = tmpds("build");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        add_image(&ds, "01", Some("b"), Modality::Dwi);
+        add_image(&ds, "02", None, Modality::T1w);
+        // session with no curatable images at all
+        let name = BidsName::new("03", Some("x"), Modality::T1w);
+        std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap()).unwrap();
+        let idx = EntityIndex::build(&ds, 4).unwrap();
+        assert_eq!(idx.len(), 4);
+        let rec = idx.get(&SessionKey::new("01", Some("a"))).unwrap();
+        assert_eq!(rec.t1w.len(), 1);
+        assert!(rec.dwi.is_empty());
+        let empty = idx.get(&SessionKey::new("03", Some("x"))).unwrap();
+        assert!(empty.t1w.is_empty() && empty.dwi.is_empty());
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_shards() {
+        let ds = tmpds("roundtrip");
+        for i in 0..10 {
+            add_image(&ds, &format!("{i:02}"), Some("a"), Modality::T1w);
+        }
+        let mut idx = EntityIndex::build(&ds, 4).unwrap();
+        idx.save_for(&ds).unwrap();
+        let again = EntityIndex::load(&ds.index_dir().join("index")).unwrap();
+        assert_eq!(again.len(), idx.len());
+        assert_eq!(again.n_shards(), 4);
+        assert_eq!(again.generation, idx.generation);
+        for i in 0..4 {
+            assert_eq!(again.shard(i), idx.shard(i), "shard {i}");
+        }
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn shard_assignment_stable_and_subject_local() {
+        let idx = EntityIndex::new(8);
+        let s1 = idx.shard_of("0042");
+        assert_eq!(s1, idx.shard_of("0042"), "hash must be deterministic");
+        // all sessions of a subject land in one shard by construction
+        let idx2 = EntityIndex::new(8);
+        assert_eq!(s1, idx2.shard_of("0042"), "stable across instances");
+    }
+
+    #[test]
+    fn refresh_discovers_only_new_sessions() {
+        let ds = tmpds("refresh");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        let mut idx = EntityIndex::build(&ds, 4).unwrap();
+        assert!(idx.refresh(&ds).unwrap().is_empty());
+        add_image(&ds, "01", Some("b"), Modality::Dwi);
+        add_image(&ds, "02", None, Modality::T1w);
+        let added = idx.refresh(&ds).unwrap();
+        assert_eq!(added.len(), 2);
+        assert!(idx.contains(&SessionKey::new("01", Some("b"))));
+        assert!(idx.contains(&SessionKey::new("02", None)));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn record_session_bumps_generation() {
+        let ds = tmpds("gen");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        let mut idx = EntityIndex::build(&ds, 2).unwrap();
+        let key = SessionKey::new("01", Some("a"));
+        let g0 = idx.get(&key).unwrap().generation;
+        add_image(&ds, "01", Some("a"), Modality::Dwi);
+        idx.record_session(&ds, &key);
+        let rec = idx.get(&key).unwrap();
+        assert!(rec.generation > g0);
+        assert_eq!(rec.dwi.len(), 1);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn processed_index_marks_versions_and_persists() {
+        let ds = tmpds("proc");
+        let mut p = ProcessedIndex::default();
+        assert_eq!(p.version("freesurfer"), 0);
+        let k = SessionKey::new("01", Some("a"));
+        assert!(p.mark("freesurfer", k.clone()));
+        assert!(!p.mark("freesurfer", k.clone()), "re-mark is a no-op");
+        assert_eq!(p.version("freesurfer"), 1);
+        assert!(p.contains("freesurfer", &k));
+        assert_eq!(p.count("freesurfer"), 1);
+        p.mark("freesurfer", SessionKey::new("02", None));
+        assert_eq!(p.version("freesurfer"), 2);
+        p.save_for(&ds).unwrap();
+        let again = ProcessedIndex::open(&ds).unwrap();
+        assert!(again.contains("freesurfer", &k));
+        assert_eq!(again.version("freesurfer"), 2);
+        assert_eq!(again.keys("freesurfer").count(), 2);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn reset_version_bump_survives_save_load() {
+        let ds = tmpds("resetver");
+        let mut p = ProcessedIndex::default();
+        p.mark("prequal", SessionKey::new("01", None));
+        p.reset("prequal");
+        assert_eq!(p.version("prequal"), 2);
+        assert_eq!(p.count("prequal"), 0);
+        // an empty processed set must still persist its bumped version —
+        // cross-process invalidation depends on it
+        p.save_for(&ds).unwrap();
+        let again = ProcessedIndex::open(&ds).unwrap();
+        assert_eq!(again.version("prequal"), 2);
+        assert_eq!(again.count("prequal"), 0);
+        assert!(!again.contains("prequal", &SessionKey::new("01", None)));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn open_or_build_persists_first_build() {
+        let ds = tmpds("openbuild");
+        add_image(&ds, "01", None, Modality::T1w);
+        let first = EntityIndex::open_or_build(&ds, 4).unwrap();
+        assert_eq!(first.len(), 1);
+        // second open loads the persisted copy (no rebuild needed even if
+        // the tree grows — refresh is the explicit delta hook)
+        add_image(&ds, "02", None, Modality::T1w);
+        let second = EntityIndex::open_or_build(&ds, 4).unwrap();
+        assert_eq!(second.len(), 1, "load, not rebuild");
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn missing_processed_file_is_empty() {
+        let ds = tmpds("noproc");
+        let p = ProcessedIndex::open(&ds).unwrap();
+        assert_eq!(p.count("freesurfer"), 0);
+        cleanup(&ds);
+    }
+}

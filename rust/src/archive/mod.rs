@@ -7,7 +7,10 @@
 //! usage statistics the resource monitor queries (§2.3).
 
 pub mod growth;
+pub mod index;
 pub mod solutions;
+
+pub use index::{EntityIndex, ProcessedIndex, SessionKey, SessionRecord, DEFAULT_SHARDS};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -2,7 +2,7 @@
 //!
 //! `sub-<label>[_ses-<label>][_acq-<label>][_run-<index>]_<suffix>` with
 //! alphanumeric labels. Parsing and formatting are exact inverses
-//! (property-tested in `rust/tests/prop_bids.rs`).
+//! (property-tested in `rust/tests/prop_dataformats.rs`).
 
 use anyhow::{bail, Result};
 
@@ -96,7 +96,7 @@ impl BidsName {
         s
     }
 
-    /// Parse a name (extension already stripped). Inverse of [`format`].
+    /// Parse a name (extension already stripped). Inverse of [`Self::format`].
     pub fn parse(name: &str) -> Result<Self> {
         let parts: Vec<&str> = name.split('_').collect();
         if parts.len() < 2 {

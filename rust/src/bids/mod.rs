@@ -169,6 +169,14 @@ impl BidsDataset {
         out
     }
 
+    /// Directory for medflow's own dataset-local metadata (the sharded
+    /// entity index, processed-set index and query caches of
+    /// [`crate::archive::index`]). Lives inside the dataset so the state
+    /// travels with it; the validator treats `.medflow` like `.bidsignore`.
+    pub fn index_dir(&self) -> PathBuf {
+        self.root.join(".medflow")
+    }
+
     /// Whether a derivative directory exists and is non-empty (the query
     /// engine's "already processed" signal, paper §2.3).
     pub fn has_derivative(&self, pipeline: &str, name: &BidsName) -> bool {

@@ -88,6 +88,7 @@ pub fn validate_dataset(root: &Path) -> Vec<ValidationIssue> {
         } else if !matches!(
             fname.as_str(),
             "dataset_description.json" | "participants.tsv" | "README" | "CHANGES" | ".bidsignore"
+                | ".medflow"
         ) {
             issues.push(ValidationIssue::warning(&path, "unexpected top-level entry"));
         }

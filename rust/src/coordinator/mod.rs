@@ -11,11 +11,12 @@
 
 pub mod planner;
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::archive::Archive;
+use crate::archive::{Archive, SessionKey};
 use crate::bids::{BidsDataset, BidsName, Modality};
 use crate::compute::{env_speed_factor, Executor};
 use crate::faults::{run_with_retries, FaultModel};
@@ -23,7 +24,7 @@ use crate::container::{ContainerArchive, ImageDef};
 use crate::netsim::Env;
 use crate::pipeline::{by_name, PipelineSpec};
 use crate::provenance::Provenance;
-use crate::query::{find_runnable, JobSpec, QueryResult};
+use crate::query::{IncrementalEngine, JobSpec, QueryResult, QueryStats};
 use crate::runtime::Runtime;
 use crate::scripts::{instance_script, local_runner_script, slurm_array_script, SlurmOptions};
 use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler, SimJob};
@@ -48,6 +49,8 @@ pub struct CampaignConfig {
     pub seed: u64,
     /// Backpressure: max in-flight local jobs (bounded queue).
     pub local_max_in_flight: usize,
+    /// Threads for the parallel shard scan of the incremental query.
+    pub query_workers: usize,
     /// Average input bytes staged per job (from archive stats when real).
     pub input_bytes_per_job: u64,
     /// Failure model applied per attempt (None = fault-free baseline).
@@ -63,6 +66,7 @@ impl Default for CampaignConfig {
             slurm: SlurmOptions::default(),
             seed: 42,
             local_max_in_flight: 8,
+            query_workers: 4,
             input_bytes_per_job: 30_000_000,
             faults: None,
             max_retries: 3,
@@ -90,6 +94,9 @@ pub struct CampaignReport {
     pub array_script: String,
     /// Mean measured PJRT execution seconds per artifact-backed job.
     pub artifact_exec_s: f64,
+    /// Telemetry from the incremental archive query: how much was
+    /// evaluated vs replayed from the persistent indexes.
+    pub query_stats: QueryStats,
 }
 
 /// Resource-monitor snapshot (paper §2.3: "a simple query for both
@@ -109,6 +116,10 @@ pub struct Coordinator<'rt> {
     runtime: Option<&'rt Runtime>,
     pub cluster: ClusterSpec,
     maintenance: Vec<Maintenance>,
+    /// Incremental query engines cached per dataset root, so back-to-back
+    /// campaigns (e.g. a 16-pipeline sweep) parse the persisted index
+    /// once instead of per campaign.
+    engines: BTreeMap<PathBuf, IncrementalEngine>,
 }
 
 impl<'rt> Coordinator<'rt> {
@@ -123,6 +134,7 @@ impl<'rt> Coordinator<'rt> {
             runtime,
             cluster: ClusterSpec::accre(),
             maintenance: Vec::new(),
+            engines: BTreeMap::new(),
         }
     }
 
@@ -189,8 +201,17 @@ impl<'rt> Coordinator<'rt> {
             .with_context(|| format!("unknown pipeline '{pipeline_name}'"))?;
         let sif = self.ensure_image(&spec)?;
 
-        // 1. automated archive query
-        let QueryResult { runnable, skipped } = find_runnable(ds, &spec)?;
+        // 1. automated archive query — incremental: the persistent entity
+        // index and processed-set replace the per-campaign full rescan, so
+        // an unchanged archive costs O(changes), not O(all sessions). The
+        // engine is cached per dataset across campaigns (taken out of the
+        // map for the duration so `self` stays borrowable).
+        let mut engine = match self.engines.remove(&ds.root) {
+            Some(engine) => engine,
+            None => IncrementalEngine::open(ds)?,
+        };
+        let (QueryResult { runnable, skipped }, query_stats) =
+            engine.query(ds, &spec, cfg.query_workers)?;
         let skip_csv = QueryResult {
             runnable: vec![],
             skipped: skipped.clone(),
@@ -207,11 +228,16 @@ impl<'rt> Coordinator<'rt> {
 
         // 3-5. submit + execute + copy-back
         let outcome = match target {
-            SubmitTarget::Hpc => self.execute_hpc(ds, &spec, &runnable, cfg)?,
+            SubmitTarget::Hpc => self.execute_hpc(ds, &spec, &runnable, cfg, &mut engine)?,
             SubmitTarget::LocalBurst { workers } => {
-                self.execute_local(ds, &spec, &runnable, workers, cfg)?
+                self.execute_local(ds, &spec, &runnable, workers, cfg, &mut engine)?
             }
         };
+        // persist query state (processed-set, skip cache; index shards
+        // only when changed) so the next campaign — even in a fresh
+        // process — starts from it, then return the engine to the cache
+        engine.save(ds)?;
+        self.engines.insert(ds.root.clone(), engine);
 
         let _ = scripts; // per-instance scripts also available via scripts::*
         let (mean_min, std_min) = mean_std(&outcome.per_job_minutes);
@@ -229,6 +255,7 @@ impl<'rt> Coordinator<'rt> {
             skip_csv,
             array_script,
             artifact_exec_s: outcome.artifact_exec_mean_s,
+            query_stats,
         })
     }
 
@@ -238,6 +265,7 @@ impl<'rt> Coordinator<'rt> {
         spec: &PipelineSpec,
         jobs: &[JobSpec],
         cfg: &CampaignConfig,
+        engine: &mut IncrementalEngine,
     ) -> Result<ExecOutcome> {
         let mut rng = Rng::new(cfg.seed);
         let executor = Executor::new(Env::Hpc, self.runtime);
@@ -271,7 +299,7 @@ impl<'rt> Coordinator<'rt> {
             });
         }
         sched.run_to_completion();
-        self.finalize(ds, spec, jobs, &outcomes, Env::Hpc, cfg)?;
+        self.finalize(ds, spec, jobs, &outcomes, Env::Hpc, cfg, engine)?;
         let mut out = ExecOutcome::collect(&outcomes, sched.makespan());
         out.failed = aborted;
         Ok(out)
@@ -284,6 +312,7 @@ impl<'rt> Coordinator<'rt> {
         jobs: &[JobSpec],
         workers: usize,
         cfg: &CampaignConfig,
+        engine: &mut IncrementalEngine,
     ) -> Result<ExecOutcome> {
         // Local burst: bounded-concurrency pool (backpressure = bounded
         // in-flight set). The PJRT client holds thread-local state (Rc
@@ -330,12 +359,13 @@ impl<'rt> Coordinator<'rt> {
             *lane += out.total_seconds();
         }
         let makespan = lanes.iter().cloned().fold(0.0, f64::max);
-        self.finalize(ds, spec, jobs, &outcomes, Env::Local, cfg)?;
+        self.finalize(ds, spec, jobs, &outcomes, Env::Local, cfg, engine)?;
         Ok(ExecOutcome::collect(&outcomes, makespan))
     }
 
-    /// Copy-back phase: write derivative outputs + provenance, marking the
-    /// session processed (so the next query skips it).
+    /// Copy-back phase: write derivative outputs + provenance, and record
+    /// the completion into the persistent processed index (so the next
+    /// query replays it instead of rescanning).
     fn finalize(
         &mut self,
         ds: &BidsDataset,
@@ -344,6 +374,7 @@ impl<'rt> Coordinator<'rt> {
         outcomes: &[crate::compute::JobOutcome],
         env: Env,
         cfg: &CampaignConfig,
+        engine: &mut IncrementalEngine,
     ) -> Result<()> {
         let sif = self.ensure_image(spec)?;
         let sha = self
@@ -373,6 +404,10 @@ impl<'rt> Coordinator<'rt> {
                 job_id: Some(i as u64),
             }
             .save(&dir)?;
+            engine.record_completion(
+                spec.name,
+                &SessionKey::new(&job.subject, job.session.as_deref()),
+            );
         }
         // check speed factor consistency (documentation invariant)
         debug_assert!(env_speed_factor(env) > 0.0);
@@ -493,6 +528,26 @@ mod tests {
             .unwrap();
         assert_eq!(r2.completed, 0);
         assert_eq!(r2.skipped, r1.queried);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn second_campaign_performs_no_full_rescan() {
+        let (root, ds, mut coord) = setup("norescan");
+        let cfg = CampaignConfig::default();
+        let r1 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(r1.completed > 0);
+        // unchanged archive: every session answered from the persistent
+        // indexes — zero sessions re-evaluated, no filesystem walk
+        let r2 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(!r2.query_stats.full_scan);
+        assert_eq!(r2.query_stats.sessions_examined, 0, "{:?}", r2.query_stats);
+        assert_eq!(r2.query_stats.new_sessions, 0);
+        assert_eq!(r2.query_stats.sessions_replayed, r1.queried);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -135,7 +135,7 @@ impl DicomObject {
         out
     }
 
-    /// Parse DICOM Part 10 bytes (the subset [`to_bytes`] emits).
+    /// Parse DICOM Part 10 bytes (the subset [`Self::to_bytes`] emits).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < 132 || &bytes[128..132] != b"DICM" {
             bail!("not a DICOM part-10 file");

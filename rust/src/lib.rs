@@ -9,10 +9,17 @@
 //!   accounting, and the semi-automated coordinator tying them together.
 //! * **L2/L1 (python/compile)**: the imaging pipelines' numeric cores (JAX
 //!   graphs calling Pallas kernels), AOT-lowered to `artifacts/*.hlo.txt`.
-//! * **runtime**: loads those artifacts via PJRT (`xla` crate) and executes
+//! * **runtime**: loads those artifacts via PJRT (`xla` crate, gated
+//!   behind the `pjrt` cargo feature — see [`runtime`]) and executes
 //!   them from the job path — Python is never on the request path.
 //!
-//! See DESIGN.md for the full system inventory and experiment index.
+//! Campaign-scale curation runs on the sharded entity index and
+//! persistent processed-set of [`archive::index`], queried incrementally
+//! by [`query::incremental`] — a second campaign over an unchanged
+//! archive performs no full rescan.
+//!
+//! See README.md for the quickstart and paper→module map, and DESIGN.md
+//! for the full system inventory and experiment index.
 
 pub mod archive;
 pub mod backup;

@@ -22,7 +22,7 @@ use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
 use medflow::pipeline::{by_name, registry};
-use medflow::query::find_runnable;
+use medflow::query::{find_runnable, IncrementalEngine};
 use medflow::report;
 use medflow::workload::{ingest_cohort, SynthCohort};
 
@@ -89,6 +89,7 @@ fn run() -> Result<()> {
         "ingest" => cmd_ingest(&args),
         "validate" => cmd_validate(&args),
         "query" => cmd_query(&args),
+        "index" => cmd_index(&args),
         "campaign" => cmd_campaign(&args),
         "status" => cmd_status(&args),
         "pipelines" => {
@@ -220,13 +221,90 @@ fn cmd_query(args: &Args) -> Result<()> {
     let ds = BidsDataset::open(&root.join("bids").join(args.require("dataset")?))?;
     let pipeline = by_name(args.require("pipeline")?)
         .with_context(|| "unknown pipeline (see `medflow pipelines`)")?;
-    let q = find_runnable(&ds, &pipeline)?;
+    // incremental indexed query by default; --full forces the baseline
+    // scan, and a dataset we cannot write .medflow/ state into (e.g. a
+    // read-only mount) degrades to the full scan instead of erroring
+    let q = if args.has("full") {
+        find_runnable(&ds, &pipeline)?
+    } else {
+        match IncrementalEngine::open(&ds) {
+            Ok(mut engine) => {
+                let (q, stats) = engine.query(&ds, &pipeline, args.num("workers", 4) as usize)?;
+                if let Err(e) = engine.save(&ds) {
+                    eprintln!("note: query state not persisted ({e:#}); next query re-evaluates");
+                }
+                println!(
+                    "query: {} shards, {} evaluated, {} replayed, {} new",
+                    stats.shards_scanned,
+                    stats.sessions_examined,
+                    stats.sessions_replayed,
+                    stats.new_sessions
+                );
+                q
+            }
+            Err(e) => {
+                eprintln!("note: index unavailable ({e:#}); falling back to full scan");
+                find_runnable(&ds, &pipeline)?
+            }
+        }
+    };
     println!("runnable: {}", q.runnable.len());
     for j in &q.runnable {
         println!("  {}", j.instance_id());
     }
     println!("skipped: {}", q.skipped.len());
     print!("{}", q.skip_csv());
+    Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let root = root_of(args)?;
+    let ds = BidsDataset::open(&root.join("bids").join(args.require("dataset")?))?;
+    if args.has("rebuild") {
+        // full re-walk; also clears every cached skip verdict (stale
+        // generations from before the rebuild must not survive it). The
+        // rebuild must work even when the existing state is corrupt —
+        // that is exactly what it recovers from — so a failed open falls
+        // back to a fresh engine instead of erroring out.
+        let mut engine = match IncrementalEngine::open(&ds) {
+            Ok(engine) => engine,
+            Err(e) => {
+                eprintln!("note: existing query state unreadable ({e:#}); rebuilding from scratch");
+                IncrementalEngine::fresh()
+            }
+        };
+        engine.rebuild(&ds)?;
+        println!(
+            "rebuilt index: {} sessions in {} shards (skip caches cleared)",
+            engine.index.len(),
+            engine.index.n_shards()
+        );
+        return Ok(());
+    }
+    let mut engine = IncrementalEngine::open(&ds)?;
+    if let Some(pipeline) = args.get("invalidate") {
+        // recovery hook after out-of-band derivative writes/deletions:
+        // forgets the pipeline's processed set + cached verdicts; the next
+        // query re-probes derivatives/ and re-absorbs what exists
+        engine.invalidate_pipeline(pipeline);
+        engine.save(&ds)?;
+        println!("invalidated '{pipeline}': processed set and cached verdicts dropped");
+        return Ok(());
+    }
+    let added = engine.index.refresh(&ds)?;
+    engine.save(&ds)?;
+    println!(
+        "index: {} sessions in {} shards ({} newly discovered)",
+        engine.index.len(),
+        engine.index.n_shards(),
+        added.len()
+    );
+    for p in registry() {
+        let n = engine.processed.count(p.name);
+        if n > 0 {
+            println!("  processed {:<20} {:>6} sessions (v{})", p.name, n, engine.processed.version(p.name));
+        }
+    }
     Ok(())
 }
 
@@ -310,7 +388,8 @@ fn print_usage() {
 USAGE:
   medflow ingest    --root DIR --dataset NAME [--participants N] [--sessions M] [--gdpr]
   medflow validate  --root DIR --dataset NAME
-  medflow query     --root DIR --dataset NAME --pipeline P
+  medflow query     --root DIR --dataset NAME --pipeline P [--full] [--workers N]
+  medflow index     --root DIR --dataset NAME [--rebuild | --invalidate PIPELINE]
   medflow campaign  --root DIR --dataset NAME --pipeline P [--local WORKERS]
   medflow status    --root DIR
   medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)

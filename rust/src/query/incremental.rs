@@ -1,0 +1,628 @@
+//! Incremental query engine — O(changes) discovery of runnable sessions.
+//!
+//! The engine layers three pieces of persistent state (all under the
+//! dataset's [`index_dir`](crate::bids::BidsDataset::index_dir)):
+//!
+//! 1. the sharded [`EntityIndex`] (what sessions exist, which images each
+//!    holds),
+//! 2. the [`ProcessedIndex`] (what each pipeline already completed, with a
+//!    per-pipeline version counter), and
+//! 3. a per-pipeline *skip cache* (why a session was last skipped, stamped
+//!    with the session's index generation and — for
+//!    [`SkipReason::MissingPrior`] — the prerequisite's processed-set
+//!    version).
+//!
+//! A query then touches only the delta:
+//!
+//! * sessions in the processed set replay as
+//!   [`SkipReason::AlreadyProcessed`] without filesystem traffic;
+//! * cached structural skips (`NoT1w`/`NoDwi`) replay while the session's
+//!   record generation is unchanged;
+//! * cached `MissingPrior` skips replay while the prerequisite pipeline's
+//!   version is unchanged — when the prerequisite completes new sessions
+//!   (version bump), exactly the blocked sessions are re-evaluated and
+//!   unblock;
+//! * everything else — newly acquired sessions found by the refresh pass,
+//!   changed sessions, never-seen sessions — is evaluated in parallel
+//!   across index shards.
+//!
+//! Completions must flow back through [`IncrementalEngine::record_completion`]
+//! (the coordinator does this per finished job). Derivatives written behind
+//! the engine's back are still detected for never-cached sessions via a
+//! `derivatives/` probe, but cached verdicts are only invalidated by
+//! generation/version changes — after out-of-band writes, call
+//! [`IncrementalEngine::invalidate_pipeline`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::archive::{EntityIndex, ProcessedIndex, SessionKey, DEFAULT_SHARDS};
+use crate::bids::BidsDataset;
+use crate::pipeline::{by_name, PipelineSpec};
+use crate::util::json::{Json, JsonObj};
+use crate::util::pool::run_parallel;
+
+use super::{
+    canonicalize, evaluate_session, job_for, QueryResult, QueryStats, SessionVerdict, SkipReason,
+    SkipRecord,
+};
+
+/// A cached skip verdict for one (pipeline, session).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct CachedSkip {
+    reason: CachedReason,
+    /// [`SessionRecord`](crate::archive::SessionRecord) generation the
+    /// verdict was computed against.
+    generation: u64,
+    /// For `MissingPrior`: the prerequisite's processed-set version at
+    /// evaluation time. 0 otherwise.
+    dep_version: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum CachedReason {
+    NoT1w,
+    NoDwi,
+    MissingPrior(String),
+}
+
+impl CachedSkip {
+    fn from_reason(reason: &SkipReason, generation: u64, processed: &ProcessedIndex) -> Option<Self> {
+        let (reason, dep_version) = match reason {
+            SkipReason::NoT1w => (CachedReason::NoT1w, 0),
+            SkipReason::NoDwi => (CachedReason::NoDwi, 0),
+            SkipReason::MissingPrior(dep) => {
+                (CachedReason::MissingPrior(dep.to_string()), processed.version(dep))
+            }
+            // AlreadyProcessed lives in the ProcessedIndex, not here.
+            SkipReason::AlreadyProcessed => return None,
+        };
+        Some(Self {
+            reason,
+            generation,
+            dep_version,
+        })
+    }
+
+    /// Whether the verdict still holds for a record at `generation` given
+    /// the current processed state.
+    fn valid(&self, generation: u64, processed: &ProcessedIndex) -> bool {
+        if self.generation != generation {
+            return false;
+        }
+        match &self.reason {
+            CachedReason::MissingPrior(dep) => self.dep_version == processed.version(dep),
+            _ => true,
+        }
+    }
+
+    /// Reconstruct the public [`SkipReason`]. `MissingPrior` names are
+    /// resolved through the pipeline registry (the source of the `'static`
+    /// strings); an unknown name yields `None` and forces re-evaluation.
+    fn to_reason(&self) -> Option<SkipReason> {
+        Some(match &self.reason {
+            CachedReason::NoT1w => SkipReason::NoT1w,
+            CachedReason::NoDwi => SkipReason::NoDwi,
+            CachedReason::MissingPrior(dep) => SkipReason::MissingPrior(by_name(dep)?.name),
+        })
+    }
+
+    fn kind(&self) -> &'static str {
+        match self.reason {
+            CachedReason::NoT1w => "NoT1w",
+            CachedReason::NoDwi => "NoDwi",
+            CachedReason::MissingPrior(_) => "MissingPrior",
+        }
+    }
+}
+
+/// The incremental query engine for one dataset. Open once per dataset,
+/// query any number of pipelines, [`save`](Self::save) after mutations.
+pub struct IncrementalEngine {
+    pub index: EntityIndex,
+    pub processed: ProcessedIndex,
+    /// pipeline → session → cached verdict.
+    skip_cache: BTreeMap<String, BTreeMap<SessionKey, CachedSkip>>,
+    /// Entity-index generation last persisted — [`Self::save`] skips the
+    /// (large) shard rewrite when nothing changed.
+    saved_index_generation: u64,
+}
+
+impl IncrementalEngine {
+    /// Load the dataset's persistent query state, building (and
+    /// persisting) the entity index on first use.
+    pub fn open(ds: &BidsDataset) -> Result<Self> {
+        let index = EntityIndex::open_or_build(ds, DEFAULT_SHARDS)?;
+        let saved_index_generation = index.generation;
+        Ok(Self {
+            index,
+            processed: ProcessedIndex::open(ds)?,
+            skip_cache: load_skip_cache(&skip_cache_path(ds))?,
+            saved_index_generation,
+        })
+    }
+
+    /// Incremental query: refresh the index (cheap directory-level pass),
+    /// replay cached verdicts, evaluate only the remainder in parallel
+    /// across shards with `workers` threads.
+    pub fn query(
+        &mut self,
+        ds: &BidsDataset,
+        pipeline: &PipelineSpec,
+        workers: usize,
+    ) -> Result<(QueryResult, QueryStats)> {
+        let new_keys = self.index.refresh(ds)?;
+
+        let index = &self.index;
+        let processed = &self.processed;
+        let cache = self.skip_cache.get(pipeline.name);
+
+        // Partition each shard into replays (answered from state) and
+        // candidates (need evaluation).
+        let mut result = QueryResult::default();
+        let mut replayed = 0usize;
+        let mut candidates: Vec<Vec<(&SessionKey, &crate::archive::SessionRecord)>> =
+            vec![Vec::new(); index.n_shards()];
+        for i in 0..index.n_shards() {
+            for (key, rec) in index.shard(i) {
+                if processed.contains(pipeline.name, key) {
+                    result.skipped.push(SkipRecord {
+                        subject: key.subject.clone(),
+                        session: key.session.clone(),
+                        reason: SkipReason::AlreadyProcessed,
+                    });
+                    replayed += 1;
+                    continue;
+                }
+                if let Some(cached) = cache.and_then(|c| c.get(key)) {
+                    if cached.valid(rec.generation, processed) {
+                        if let Some(reason) = cached.to_reason() {
+                            result.skipped.push(SkipRecord {
+                                subject: key.subject.clone(),
+                                session: key.session.clone(),
+                                reason,
+                            });
+                            replayed += 1;
+                            continue;
+                        }
+                    }
+                }
+                candidates[i].push((key, rec));
+            }
+        }
+
+        // Parallel evaluation of the candidate sessions, shard by shard.
+        let shard_jobs: Vec<_> = candidates
+            .into_iter()
+            .filter(|c| !c.is_empty())
+            .map(|shard_candidates| {
+                move || {
+                    let mut runnable = Vec::new();
+                    let mut skipped: Vec<(SessionKey, SkipReason, u64)> = Vec::new();
+                    let mut absorbed: Vec<SessionKey> = Vec::new();
+                    for (key, rec) in shard_candidates {
+                        match evaluate_session(ds, pipeline, key, rec, processed) {
+                            // Derivatives can predate the processed index
+                            // (older runs, external writers): absorb after
+                            // the probe so the next query replays from
+                            // memory. (from_index can't occur here — the
+                            // partition already filtered processed keys.)
+                            SessionVerdict::AlreadyProcessed { from_index } => {
+                                skipped.push((
+                                    key.clone(),
+                                    SkipReason::AlreadyProcessed,
+                                    rec.generation,
+                                ));
+                                if !from_index {
+                                    absorbed.push(key.clone());
+                                }
+                            }
+                            SessionVerdict::Skip(reason) => {
+                                skipped.push((key.clone(), reason, rec.generation))
+                            }
+                            SessionVerdict::Runnable(inputs) => {
+                                runnable.push((key.clone(), job_for(ds, pipeline, key, inputs)))
+                            }
+                        }
+                    }
+                    (runnable, skipped, absorbed)
+                }
+            })
+            .collect();
+
+        let shards_scanned = shard_jobs.len();
+        let shard_results = run_parallel(workers.max(1), shard_jobs);
+
+        // Fold evaluation results back into the caches (sequentially).
+        let mut examined = 0usize;
+        let cache = self.skip_cache.entry(pipeline.name.to_string()).or_default();
+        for (runnable, skipped, absorbed) in shard_results {
+            for key in absorbed {
+                self.processed.mark(pipeline.name, key);
+            }
+            for (key, job) in runnable {
+                examined += 1;
+                cache.remove(&key);
+                result.runnable.push(job);
+            }
+            for (key, reason, generation) in skipped {
+                examined += 1;
+                if let Some(entry) = CachedSkip::from_reason(&reason, generation, &self.processed) {
+                    cache.insert(key.clone(), entry);
+                } else {
+                    cache.remove(&key);
+                }
+                result.skipped.push(SkipRecord {
+                    subject: key.subject.clone(),
+                    session: key.session,
+                    reason,
+                });
+            }
+        }
+
+        canonicalize(&mut result);
+        let stats = QueryStats {
+            full_scan: false,
+            shards_scanned,
+            sessions_examined: examined,
+            sessions_replayed: replayed,
+            new_sessions: new_keys.len(),
+        };
+        Ok((result, stats))
+    }
+
+    /// Record that `pipeline` completed `key` (the coordinator's copy-back
+    /// hook). Bumps the pipeline's processed-set version, which is what
+    /// re-examines sessions blocked on [`SkipReason::MissingPrior`].
+    pub fn record_completion(&mut self, pipeline: &str, key: &SessionKey) {
+        self.processed.mark(pipeline, key.clone());
+        if let Some(cache) = self.skip_cache.get_mut(pipeline) {
+            cache.remove(key);
+        }
+    }
+
+    /// An empty engine that ignores any on-disk state — the recovery
+    /// constructor when `.medflow/` is corrupt or torn (e.g. a crash
+    /// between the meta and shard writes) and [`Self::open`] fails.
+    /// Follow with [`Self::rebuild`]; the on-disk processed index is left
+    /// untouched until explicitly saved over.
+    pub fn fresh() -> Self {
+        Self {
+            index: EntityIndex::new(DEFAULT_SHARDS),
+            processed: ProcessedIndex::default(),
+            skip_cache: BTreeMap::new(),
+            saved_index_generation: u64::MAX,
+        }
+    }
+
+    /// Rebuild the entity index from a full walk and drop **every** cached
+    /// skip verdict, persisting both. Required instead of a bare
+    /// [`EntityIndex::build`] because a rebuilt index restarts its
+    /// generation counter — stale cached verdicts stamped with old
+    /// generations could otherwise collide with the new numbering and
+    /// keep replaying outdated skips.
+    pub fn rebuild(&mut self, ds: &BidsDataset) -> Result<()> {
+        let mut index = EntityIndex::build(ds, DEFAULT_SHARDS)?;
+        index.save_for(ds)?;
+        self.saved_index_generation = index.generation;
+        self.index = index;
+        self.skip_cache.clear();
+        save_skip_cache(&skip_cache_path(ds), &self.skip_cache)
+    }
+
+    /// Forget everything the engine believes about `pipeline` — required
+    /// after its derivatives were written or deleted outside the engine.
+    /// Drops its cached skip verdicts **and** its processed-set entries,
+    /// and bumps its processed-set version so sessions other pipelines
+    /// have cached as `MissingPrior(pipeline)` are re-examined too. The
+    /// next query re-probes `derivatives/` for every affected session and
+    /// re-absorbs whatever actually exists on disk.
+    pub fn invalidate_pipeline(&mut self, pipeline: &str) {
+        self.skip_cache.remove(pipeline);
+        self.processed.reset(pipeline);
+    }
+
+    /// Cached-verdict count for a pipeline (telemetry/tests).
+    pub fn cached_skips(&self, pipeline: &str) -> usize {
+        self.skip_cache.get(pipeline).map_or(0, BTreeMap::len)
+    }
+
+    /// Persist all engine state under the dataset's index directory. The
+    /// entity-index shards (the bulk of the state) are only rewritten when
+    /// the index actually changed since the last open/save.
+    pub fn save(&mut self, ds: &BidsDataset) -> Result<()> {
+        if self.index.generation != self.saved_index_generation {
+            self.index.save_for(ds)?;
+            self.saved_index_generation = self.index.generation;
+        }
+        self.processed.save_for(ds)?;
+        save_skip_cache(&skip_cache_path(ds), &self.skip_cache)
+    }
+}
+
+fn skip_cache_path(ds: &BidsDataset) -> std::path::PathBuf {
+    ds.index_dir().join("skipcache.json")
+}
+
+fn save_skip_cache(
+    path: &Path,
+    cache: &BTreeMap<String, BTreeMap<SessionKey, CachedSkip>>,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut pipelines = Vec::new();
+    for (pipeline, entries) in cache {
+        let mut sessions = Vec::new();
+        for (key, skip) in entries {
+            let mut o = key.to_json();
+            o.set("kind", Json::str(skip.kind()));
+            if let CachedReason::MissingPrior(dep) = &skip.reason {
+                o.set("dep", Json::str(dep));
+            }
+            o.set("generation", Json::num(skip.generation as f64));
+            o.set("dep_version", Json::num(skip.dep_version as f64));
+            sessions.push(Json::Obj(o));
+        }
+        let mut o = JsonObj::new();
+        o.set("pipeline", Json::str(pipeline));
+        o.set("sessions", Json::Arr(sessions));
+        pipelines.push(Json::Obj(o));
+    }
+    let mut root = JsonObj::new();
+    root.set("pipelines", Json::Arr(pipelines));
+    std::fs::write(path, Json::Obj(root).to_string_pretty())?;
+    Ok(())
+}
+
+fn load_skip_cache(path: &Path) -> Result<BTreeMap<String, BTreeMap<SessionKey, CachedSkip>>> {
+    let mut out = BTreeMap::new();
+    if !path.exists() {
+        return Ok(out);
+    }
+    let json = Json::parse(
+        &std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?,
+    )?;
+    for p in json.get_path("pipelines").and_then(Json::as_arr).unwrap_or(&[]) {
+        let Some(name) = p.get_path("pipeline").and_then(Json::as_str) else {
+            continue;
+        };
+        let mut entries = BTreeMap::new();
+        for s in p.get_path("sessions").and_then(Json::as_arr).unwrap_or(&[]) {
+            let Some(key) = SessionKey::from_json(s) else {
+                continue;
+            };
+            let reason = match s.get_path("kind").and_then(Json::as_str) {
+                Some("NoT1w") => CachedReason::NoT1w,
+                Some("NoDwi") => CachedReason::NoDwi,
+                Some("MissingPrior") => match s.get_path("dep").and_then(Json::as_str) {
+                    Some(dep) => CachedReason::MissingPrior(dep.to_string()),
+                    None => continue,
+                },
+                _ => continue,
+            };
+            entries.insert(
+                key,
+                CachedSkip {
+                    reason,
+                    generation: s.get_path("generation").and_then(Json::as_i64).unwrap_or(0) as u64,
+                    dep_version: s.get_path("dep_version").and_then(Json::as_i64).unwrap_or(0)
+                        as u64,
+                },
+            );
+        }
+        out.insert(name.to_string(), entries);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bids::{BidsName, Modality};
+    use crate::query::find_runnable;
+
+    fn tmpds(tag: &str) -> BidsDataset {
+        let parent =
+            std::env::temp_dir().join(format!("medflow_inc_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&parent).unwrap();
+        BidsDataset::create(&parent, "DS").unwrap()
+    }
+
+    fn add_image(ds: &BidsDataset, sub: &str, ses: Option<&str>, m: Modality) {
+        let name = BidsName::new(sub, ses, m);
+        let p = ds.raw_path(&name, "nii.gz");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"img").unwrap();
+    }
+
+    fn cleanup(ds: &BidsDataset) {
+        std::fs::remove_dir_all(ds.root.parent().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn engine_matches_full_scan_on_first_query() {
+        let ds = tmpds("parity");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        add_image(&ds, "02", Some("a"), Modality::Dwi);
+        add_image(&ds, "03", None, Modality::T1w);
+        let fs = by_name("freesurfer").unwrap();
+        let full = find_runnable(&ds, &fs).unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (inc, stats) = engine.query(&ds, &fs, 4).unwrap();
+        assert_eq!(inc.runnable, full.runnable);
+        assert_eq!(inc.skipped, full.skipped);
+        assert!(!stats.full_scan);
+        assert_eq!(stats.sessions_examined, 3);
+        assert_eq!(stats.sessions_replayed, 0);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn second_query_replays_everything() {
+        let ds = tmpds("replay");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        add_image(&ds, "02", Some("a"), Modality::Dwi);
+        let fs = by_name("freesurfer").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, _) = engine.query(&ds, &fs, 2).unwrap();
+        assert_eq!(r1.runnable.len(), 1);
+        for job in &r1.runnable {
+            engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+        }
+        let (r2, stats) = engine.query(&ds, &fs, 2).unwrap();
+        assert!(r2.runnable.is_empty());
+        assert_eq!(r2.skipped.len(), 2);
+        assert_eq!(stats.sessions_examined, 0, "nothing changed — no evaluation");
+        assert_eq!(stats.sessions_replayed, 2);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn persistence_survives_reopen() {
+        let ds = tmpds("reopen");
+        add_image(&ds, "01", None, Modality::T1w);
+        add_image(&ds, "02", None, Modality::Dwi);
+        let fs = by_name("freesurfer").unwrap();
+        {
+            let mut engine = IncrementalEngine::open(&ds).unwrap();
+            let (r, _) = engine.query(&ds, &fs, 2).unwrap();
+            assert_eq!(r.runnable.len(), 1);
+            engine.record_completion("freesurfer", &SessionKey::new("01", None));
+            engine.save(&ds).unwrap();
+        }
+        // a fresh process opens the same state: zero evaluations
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r, stats) = engine.query(&ds, &fs, 2).unwrap();
+        assert!(r.runnable.is_empty());
+        assert_eq!(stats.sessions_examined, 0);
+        assert_eq!(stats.sessions_replayed, 2);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn missing_prior_unblocks_on_version_bump() {
+        let ds = tmpds("unblock");
+        add_image(&ds, "01", None, Modality::Dwi);
+        let ts = by_name("tractseg").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, _) = engine.query(&ds, &ts, 2).unwrap();
+        assert!(r1.runnable.is_empty());
+        assert_eq!(r1.skipped[0].reason, SkipReason::MissingPrior("prequal"));
+        // replayed from cache while prequal hasn't progressed
+        let (_, s2) = engine.query(&ds, &ts, 2).unwrap();
+        assert_eq!(s2.sessions_examined, 0);
+        // prequal completes → version bump → exactly this session re-examined
+        engine.record_completion("prequal", &SessionKey::new("01", None));
+        let (r3, s3) = engine.query(&ds, &ts, 2).unwrap();
+        assert_eq!(s3.sessions_examined, 1);
+        assert_eq!(r3.runnable.len(), 1, "session unblocked");
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn new_session_found_incrementally() {
+        let ds = tmpds("delta");
+        add_image(&ds, "01", Some("a"), Modality::T1w);
+        let fs = by_name("freesurfer").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, _) = engine.query(&ds, &fs, 2).unwrap();
+        assert_eq!(r1.runnable.len(), 1);
+        engine.record_completion("freesurfer", &SessionKey::new("01", Some("a")));
+        add_image(&ds, "02", Some("b"), Modality::T1w);
+        let (r, stats) = engine.query(&ds, &fs, 2).unwrap();
+        assert_eq!(stats.new_sessions, 1);
+        assert_eq!(stats.sessions_examined, 1, "only the new session");
+        assert!(r.runnable.iter().any(|j| j.subject == "02"));
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn changed_session_reevaluated_via_generation() {
+        let ds = tmpds("gen");
+        add_image(&ds, "01", None, Modality::T1w);
+        let cs = by_name("connectome_special").unwrap(); // needs T1w + DWI
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, _) = engine.query(&ds, &cs, 2).unwrap();
+        assert_eq!(r1.skipped[0].reason, SkipReason::NoDwi);
+        // DWI arrives later; the ingest path re-records the session
+        add_image(&ds, "01", None, Modality::Dwi);
+        let key = SessionKey::new("01", None);
+        engine.index.record_session(&ds, &key);
+        let (r2, stats) = engine.query(&ds, &cs, 2).unwrap();
+        assert_eq!(stats.sessions_examined, 1);
+        assert_eq!(r2.runnable.len(), 1);
+        assert_eq!(r2.runnable[0].inputs.len(), 2);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn rebuild_clears_stale_verdicts() {
+        let ds = tmpds("rebuild");
+        add_image(&ds, "01", None, Modality::T1w);
+        let cs = by_name("connectome_special").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, _) = engine.query(&ds, &cs, 2).unwrap();
+        assert_eq!(r1.skipped[0].reason, SkipReason::NoDwi);
+        assert_eq!(engine.cached_skips("connectome_special"), 1);
+        // DWI appears out-of-band; the operator rebuilds. A rebuilt index
+        // restarts generations, so stale verdicts MUST not survive it.
+        add_image(&ds, "01", None, Modality::Dwi);
+        engine.rebuild(&ds).unwrap();
+        assert_eq!(engine.cached_skips("connectome_special"), 0);
+        let (r2, _) = engine.query(&ds, &cs, 2).unwrap();
+        assert_eq!(r2.runnable.len(), 1);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn invalidate_pipeline_recovers_from_out_of_band_changes() {
+        let ds = tmpds("invalidate");
+        add_image(&ds, "01", None, Modality::Dwi);
+        let ts = by_name("tractseg").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        // blocked on prequal, verdict cached
+        let (r1, _) = engine.query(&ds, &ts, 2).unwrap();
+        assert_eq!(r1.skipped[0].reason, SkipReason::MissingPrior("prequal"));
+        // prequal outputs appear OUTSIDE the engine (older tooling)
+        let name = BidsName::new("01", None, Modality::T1w);
+        let d = ds.derivative_dir("prequal", &name);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("out.txt"), b"done").unwrap();
+        // without invalidation the stale MissingPrior verdict replays...
+        let (r2, s2) = engine.query(&ds, &ts, 2).unwrap();
+        assert!(r2.runnable.is_empty());
+        assert_eq!(s2.sessions_examined, 0);
+        // ...invalidate_pipeline bumps prequal's version, so the blocked
+        // session re-examines, probes derivatives/, and unblocks
+        engine.invalidate_pipeline("prequal");
+        let (r3, s3) = engine.query(&ds, &ts, 2).unwrap();
+        assert_eq!(s3.sessions_examined, 1);
+        assert_eq!(r3.runnable.len(), 1);
+        cleanup(&ds);
+    }
+
+    #[test]
+    fn external_derivatives_absorbed_into_processed_index() {
+        let ds = tmpds("absorb");
+        add_image(&ds, "01", None, Modality::T1w);
+        // a pre-engine campaign left outputs on disk but no processed index
+        let name = BidsName::new("01", None, Modality::T1w);
+        let d = ds.derivative_dir("freesurfer", &name);
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("out.txt"), b"done").unwrap();
+        let fs = by_name("freesurfer").unwrap();
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r1, s1) = engine.query(&ds, &fs, 2).unwrap();
+        assert!(r1.runnable.is_empty());
+        assert_eq!(r1.skipped[0].reason, SkipReason::AlreadyProcessed);
+        assert_eq!(s1.sessions_examined, 1, "probed once");
+        // absorbed: second query replays from the processed index
+        let (_, s2) = engine.query(&ds, &fs, 2).unwrap();
+        assert_eq!(s2.sessions_examined, 0);
+        assert!(engine.processed.contains("freesurfer", &SessionKey::new("01", None)));
+        cleanup(&ds);
+    }
+}

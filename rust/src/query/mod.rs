@@ -2,14 +2,31 @@
 //! find every scanning session that (a) satisfies the pipeline's input
 //! criteria and (b) has not already been processed — and explain, per
 //! skipped session, why it was skipped (the accompanying CSV).
+//!
+//! Three query paths, one semantics:
+//!
+//! * [`find_runnable`] — the baseline full filesystem scan (O(all
+//!   sessions) `read_dir` calls; fine for MASiVar-sized datasets).
+//! * [`find_runnable_sharded`] — parallel scan over the persistent
+//!   [`EntityIndex`](crate::archive::EntityIndex) shards; no per-session
+//!   filesystem traffic for input criteria.
+//! * [`incremental::IncrementalEngine`] — the campaign path: replays
+//!   cached verdicts and evaluates only new, changed, or newly unblocked
+//!   sessions (O(changes); see DESIGN.md §6).
+
+pub mod incremental;
+
+pub use incremental::IncrementalEngine;
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::archive::{EntityIndex, ProcessedIndex, SessionKey};
 use crate::bids::{BidsDataset, BidsName, Modality};
 use crate::pipeline::{InputReq, PipelineSpec};
 use crate::util::csv::write_csv;
+use crate::util::pool::run_parallel;
 
 /// One runnable job instance discovered by the query.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,7 +105,126 @@ impl QueryResult {
     }
 }
 
-/// Run the query for one pipeline over one BIDS dataset.
+/// Outcome of applying a pipeline's input criteria to one session.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Evaluation {
+    /// Runnable with these staged input paths.
+    Runnable(Vec<PathBuf>),
+    Skip(SkipReason),
+}
+
+/// Apply `pipeline`'s input criteria to one session's image inventory.
+/// `has_prior(dep)` answers whether the prerequisite pipeline has already
+/// completed this session. Shared by every query path so the three scans
+/// cannot drift semantically.
+pub(crate) fn evaluate_inputs(
+    pipeline: &PipelineSpec,
+    t1: &[PathBuf],
+    dwi: &[PathBuf],
+    has_prior: impl Fn(&'static str) -> bool,
+) -> Evaluation {
+    let (inputs, missing): (Vec<PathBuf>, Option<SkipReason>) = match pipeline.input.clone() {
+        InputReq::T1w => (t1.to_vec(), t1.is_empty().then_some(SkipReason::NoT1w)),
+        InputReq::Dwi => (dwi.to_vec(), dwi.is_empty().then_some(SkipReason::NoDwi)),
+        InputReq::T1wAndDwi => {
+            let mut v = t1.to_vec();
+            v.extend(dwi.iter().cloned());
+            let miss = if t1.is_empty() {
+                Some(SkipReason::NoT1w)
+            } else if dwi.is_empty() {
+                Some(SkipReason::NoDwi)
+            } else {
+                None
+            };
+            (v, miss)
+        }
+        InputReq::T1wAndPrior(dep) => {
+            let miss = if t1.is_empty() {
+                Some(SkipReason::NoT1w)
+            } else if !has_prior(dep) {
+                Some(SkipReason::MissingPrior(dep))
+            } else {
+                None
+            };
+            (t1.to_vec(), miss)
+        }
+        InputReq::DwiAndPrior(dep) => {
+            let miss = if dwi.is_empty() {
+                Some(SkipReason::NoDwi)
+            } else if !has_prior(dep) {
+                Some(SkipReason::MissingPrior(dep))
+            } else {
+                None
+            };
+            (dwi.to_vec(), miss)
+        }
+    };
+    match missing {
+        Some(reason) => Evaluation::Skip(reason),
+        None => Evaluation::Runnable(inputs),
+    }
+}
+
+/// Verdict for one indexed session — the shared core of the sharded and
+/// incremental scan paths, so their semantics and accounting cannot drift.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum SessionVerdict {
+    /// Already done; `from_index` tells whether the processed-set answered
+    /// (no filesystem traffic) or a `derivatives/` probe did (the caller
+    /// should absorb the session into the processed set).
+    AlreadyProcessed { from_index: bool },
+    Skip(SkipReason),
+    Runnable(Vec<PathBuf>),
+}
+
+/// Judge one session from its index record: processed-set lookup →
+/// `derivatives/` probe → input criteria (with prior-pipeline checks
+/// against the processed set, falling back to a probe).
+pub(crate) fn evaluate_session(
+    ds: &BidsDataset,
+    pipeline: &PipelineSpec,
+    key: &SessionKey,
+    rec: &crate::archive::SessionRecord,
+    processed: &ProcessedIndex,
+) -> SessionVerdict {
+    let probe = BidsName::new(&key.subject, key.session.as_deref(), Modality::T1w);
+    if processed.contains(pipeline.name, key) {
+        return SessionVerdict::AlreadyProcessed { from_index: true };
+    }
+    if ds.has_derivative(pipeline.name, &probe) {
+        return SessionVerdict::AlreadyProcessed { from_index: false };
+    }
+    let t1 = rec.resolved(ds, Modality::T1w);
+    let dwi = rec.resolved(ds, Modality::Dwi);
+    match evaluate_inputs(pipeline, &t1, &dwi, |dep| {
+        processed.contains(dep, key) || ds.has_derivative(dep, &probe)
+    }) {
+        Evaluation::Skip(reason) => SessionVerdict::Skip(reason),
+        Evaluation::Runnable(inputs) => SessionVerdict::Runnable(inputs),
+    }
+}
+
+/// Build the [`JobSpec`] for a session judged runnable.
+pub(crate) fn job_for(
+    ds: &BidsDataset,
+    pipeline: &PipelineSpec,
+    key: &SessionKey,
+    inputs: Vec<PathBuf>,
+) -> JobSpec {
+    JobSpec {
+        dataset: ds.name.clone(),
+        pipeline: pipeline.name.to_string(),
+        subject: key.subject.clone(),
+        session: key.session.clone(),
+        inputs,
+        cores: pipeline.resources.cores,
+        ram_gb: pipeline.resources.ram_gb,
+    }
+}
+
+/// Run the query for one pipeline over one BIDS dataset — the baseline
+/// full filesystem scan (every subject, session and modality directory is
+/// walked on every call).
 pub fn find_runnable(ds: &BidsDataset, pipeline: &PipelineSpec) -> Result<QueryResult> {
     let mut result = QueryResult::default();
     for subject in ds.subjects()? {
@@ -109,62 +245,119 @@ pub fn find_runnable(ds: &BidsDataset, pipeline: &PipelineSpec) -> Result<QueryR
             }
 
             // 2. input criteria
-            let (inputs, missing): (Vec<PathBuf>, Option<SkipReason>) = match &pipeline.input {
-                InputReq::T1w => (t1.clone(), t1.is_empty().then_some(SkipReason::NoT1w)),
-                InputReq::Dwi => (dwi.clone(), dwi.is_empty().then_some(SkipReason::NoDwi)),
-                InputReq::T1wAndDwi => {
-                    let mut v = t1.clone();
-                    v.extend(dwi.clone());
-                    let miss = if t1.is_empty() {
-                        Some(SkipReason::NoT1w)
-                    } else if dwi.is_empty() {
-                        Some(SkipReason::NoDwi)
-                    } else {
-                        None
-                    };
-                    (v, miss)
-                }
-                InputReq::T1wAndPrior(dep) => {
-                    let miss = if t1.is_empty() {
-                        Some(SkipReason::NoT1w)
-                    } else if !ds.has_derivative(dep, &probe) {
-                        Some(SkipReason::MissingPrior(dep))
-                    } else {
-                        None
-                    };
-                    (t1.clone(), miss)
-                }
-                InputReq::DwiAndPrior(dep) => {
-                    let miss = if dwi.is_empty() {
-                        Some(SkipReason::NoDwi)
-                    } else if !ds.has_derivative(dep, &probe) {
-                        Some(SkipReason::MissingPrior(dep))
-                    } else {
-                        None
-                    };
-                    (dwi.clone(), miss)
-                }
-            };
-
-            match missing {
-                Some(reason) => result.skipped.push(SkipRecord {
+            let key = SessionKey::new(&subject, ses);
+            match evaluate_inputs(pipeline, &t1, &dwi, |dep| ds.has_derivative(dep, &probe)) {
+                Evaluation::Skip(reason) => result.skipped.push(SkipRecord {
                     subject: subject.clone(),
                     session: session.clone(),
                     reason,
                 }),
-                None => result.runnable.push(JobSpec {
-                    dataset: ds.name.clone(),
-                    pipeline: pipeline.name.to_string(),
-                    subject: subject.clone(),
-                    session: session.clone(),
-                    inputs,
-                    cores: pipeline.resources.cores,
-                    ram_gb: pipeline.resources.ram_gb,
-                }),
+                Evaluation::Runnable(inputs) => {
+                    result.runnable.push(job_for(ds, pipeline, &key, inputs))
+                }
             }
         }
     }
     Ok(result)
+}
+
+/// Telemetry from an indexed or incremental query — how much work the
+/// engine actually did, and how much it answered from persistent state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// `true` when the whole dataset tree was walked (the baseline path).
+    pub full_scan: bool,
+    /// Index shards visited.
+    pub shards_scanned: usize,
+    /// Sessions whose criteria were (re)evaluated this run.
+    pub sessions_examined: usize,
+    /// Sessions answered from the processed-set or skip cache (no
+    /// evaluation, no filesystem traffic).
+    pub sessions_replayed: usize,
+    /// Newly acquired sessions discovered by the refresh pass.
+    pub new_sessions: usize,
+}
+
+/// Sort a query result into the canonical (subject, session) order so
+/// every query path reports identically regardless of shard layout.
+pub(crate) fn canonicalize(result: &mut QueryResult) {
+    result
+        .runnable
+        .sort_by(|a, b| (&a.subject, &a.session).cmp(&(&b.subject, &b.session)));
+    result
+        .skipped
+        .sort_by(|a, b| (&a.subject, &a.session).cmp(&(&b.subject, &b.session)));
+}
+
+/// Parallel shard-scan query over the persistent entity index: input
+/// criteria come from [`SessionRecord`](crate::archive::SessionRecord)s
+/// (no per-session filesystem walks); the already-processed check consults
+/// the [`ProcessedIndex`] first and falls back to a `derivatives/` probe
+/// only for sessions the index does not yet know about. Shards are scanned
+/// across `workers` threads via [`run_parallel`].
+pub fn find_runnable_sharded(
+    ds: &BidsDataset,
+    pipeline: &PipelineSpec,
+    index: &EntityIndex,
+    processed: &ProcessedIndex,
+    workers: usize,
+) -> Result<(QueryResult, QueryStats)> {
+    let shard_jobs: Vec<_> = (0..index.n_shards())
+        .filter(|&i| !index.shard(i).is_empty())
+        .map(|i| {
+            move || {
+                let mut runnable = Vec::new();
+                let mut skipped = Vec::new();
+                let mut examined = 0usize;
+                let mut replayed = 0usize;
+                for (key, rec) in index.shard(i) {
+                    let record = |reason: SkipReason| SkipRecord {
+                        subject: key.subject.clone(),
+                        session: key.session.clone(),
+                        reason,
+                    };
+                    match evaluate_session(ds, pipeline, key, rec, processed) {
+                        // processed-set hit: answered from the index
+                        // (replayed); a derivatives/ probe hit still cost
+                        // filesystem work (examined) — same accounting as
+                        // the incremental path
+                        SessionVerdict::AlreadyProcessed { from_index } => {
+                            if from_index {
+                                replayed += 1;
+                            } else {
+                                examined += 1;
+                            }
+                            skipped.push(record(SkipReason::AlreadyProcessed));
+                        }
+                        SessionVerdict::Skip(reason) => {
+                            examined += 1;
+                            skipped.push(record(reason));
+                        }
+                        SessionVerdict::Runnable(inputs) => {
+                            examined += 1;
+                            runnable.push(job_for(ds, pipeline, key, inputs));
+                        }
+                    }
+                }
+                (runnable, skipped, examined, replayed)
+            }
+        })
+        .collect();
+
+    let shards_scanned = shard_jobs.len();
+    let mut result = QueryResult::default();
+    let mut stats = QueryStats {
+        shards_scanned,
+        ..QueryStats::default()
+    };
+    for (runnable, skipped, examined, replayed) in run_parallel(workers.max(1), shard_jobs) {
+        result.runnable.extend(runnable);
+        result.skipped.extend(skipped);
+        stats.sessions_examined += examined;
+        stats.sessions_replayed += replayed;
+    }
+    canonicalize(&mut result);
+    Ok((result, stats))
 }
 
 #[cfg(test)]

@@ -4,12 +4,21 @@
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see DESIGN.md §4 and /opt/xla-example/README.md).
+//! parser reassigns ids (see DESIGN.md §4).
+//!
+//! PJRT execution depends on the vendored `xla` crate, which only exists
+//! on the offline build image — it is gated behind the `pjrt` cargo
+//! feature. Without it, [`Runtime::load`] returns an error, so
+//! [`crate::compute::load_runtime`] yields `None` and every consumer falls
+//! back to the calibrated duration model (identical to running without
+//! `artifacts/`). Manifest parsing and integrity checking work either way.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Context, Result};
 
 use crate::integrity::sha256_hex;
 use crate::util::json::Json;
@@ -118,26 +127,35 @@ impl ArtifactManifest {
     }
 }
 
-/// A loaded executable + its spec.
+/// A compiled executable; its manifest metadata lives in `Runtime::specs`
+/// (single source of truth for both cfg variants).
+#[cfg(feature = "pjrt")]
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
 }
 
 /// The runtime: one PJRT CPU client, one compiled executable per artifact.
+/// Constructible only with the `pjrt` feature (see module docs).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     #[allow(dead_code)]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     loaded: HashMap<String, LoadedArtifact>,
+    /// Manifest metadata of the loaded artifacts (name-sorted views come
+    /// from [`Self::artifact_names`]).
+    specs: HashMap<String, ArtifactSpec>,
     pub artifact_dir: PathBuf,
 }
 
 impl Runtime {
     /// Create the CPU client, verify artifact hashes, compile everything.
+    #[cfg(feature = "pjrt")]
     pub fn load(artifact_dir: &Path) -> Result<Self> {
         let manifest = ArtifactManifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         let mut loaded = HashMap::new();
+        let mut specs = HashMap::new();
         for spec in manifest.artifacts {
             let path = artifact_dir.join(&spec.file);
             let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
@@ -152,41 +170,76 @@ impl Runtime {
             let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compile '{}': {e:?}", spec.name))?;
-            loaded.insert(spec.name.clone(), LoadedArtifact { exe, spec });
+            loaded.insert(spec.name.clone(), LoadedArtifact { exe });
+            specs.insert(spec.name.clone(), spec);
         }
         Ok(Self {
             client,
             loaded,
+            specs,
             artifact_dir: artifact_dir.to_path_buf(),
         })
     }
 
+    /// Without the `pjrt` feature there is no PJRT client to create:
+    /// still verifies the manifest parses and artifact hashes match, then
+    /// reports the build limitation (callers degrade to the duration
+    /// model, exactly as when `artifacts/` is absent).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        for spec in &manifest.artifacts {
+            let path = artifact_dir.join(&spec.file);
+            let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+            if !spec.sha256.is_empty() && sha256_hex(text.as_bytes()) != spec.sha256 {
+                bail!("artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)", spec.name);
+            }
+        }
+        bail!(
+            "medflow was built without the 'pjrt' feature — PJRT artifact \
+             execution is unavailable (enable it on the offline image that \
+             vendors the xla crate; see DESIGN.md §4)"
+        )
+    }
+
     pub fn artifact_names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.loaded.keys().map(|s| s.as_str()).collect();
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
         v.sort();
         v
     }
 
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.loaded.get(name).map(|l| &l.spec)
+        self.specs.get(name)
     }
 
     /// Execute an artifact on f32 input buffers (shape-checked against the
     /// manifest). Returns the output tuple as Vec<f32> per output.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_f32(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("cannot execute artifact '{name}': built without the 'pjrt' feature")
+    }
+
+    /// Execute an artifact on f32 input buffers (shape-checked against the
+    /// manifest). Returns the output tuple as Vec<f32> per output.
+    #[cfg(feature = "pjrt")]
     pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let art_spec = self
+            .specs
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
         let art = self
             .loaded
             .get(name)
-            .with_context(|| format!("unknown artifact '{name}'"))?;
-        if inputs.len() != art.spec.inputs.len() {
+            .with_context(|| format!("artifact '{name}' not compiled"))?;
+        if inputs.len() != art_spec.inputs.len() {
             bail!(
                 "artifact '{name}' wants {} inputs, got {}",
-                art.spec.inputs.len(),
+                art_spec.inputs.len(),
                 inputs.len()
             );
         }
         let mut literals = Vec::with_capacity(inputs.len());
-        for (data, spec) in inputs.iter().zip(&art.spec.inputs) {
+        for (data, spec) in inputs.iter().zip(&art_spec.inputs) {
             if data.len() != spec.elements() {
                 bail!(
                     "input '{}' of '{name}' wants {} elements (shape {:?}), got {}",
@@ -230,11 +283,11 @@ impl Runtime {
                     .map_err(|e| anyhow!("refetch: {e:?}"))?],
             }
         };
-        if parts.len() != art.spec.outputs.len() {
+        if parts.len() != art_spec.outputs.len() {
             bail!(
                 "artifact '{name}' returned {} outputs, manifest says {}",
                 parts.len(),
-                art.spec.outputs.len()
+                art_spec.outputs.len()
             );
         }
         parts

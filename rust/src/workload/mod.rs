@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::archive::{Archive, SecurityTier};
+use crate::archive::{Archive, EntityIndex, SecurityTier, SessionKey, DEFAULT_SHARDS};
 use crate::bids::{BidsDataset, BidsName, Modality};
 use crate::convert::convert_series;
 use crate::dicom::synth::{synth_series, SeriesSpec};
@@ -111,11 +111,101 @@ pub fn ingest_cohort(
     dim: u16,
     seed: u64,
 ) -> Result<BidsDataset> {
-    let mut rng = Rng::new(seed);
     archive.register_dataset(&cohort.name, cohort.tier)?;
     let ds = BidsDataset::create(bids_parent, &cohort.name)?;
+    let mut index = EntityIndex::new(DEFAULT_SHARDS);
+    for_each_session(cohort, seed, |p, s, subject, ses_label, has_t1, has_dwi, rng| {
+        let date = format!("202{}010{}", 1 + (s % 3), 1 + (p % 9));
+        if has_t1 {
+            ingest_series(
+                archive,
+                &ds,
+                &SeriesSpec::t1w(subject, &date, dim),
+                subject,
+                Some(ses_label),
+                Modality::T1w,
+                rng.next_u64(),
+            )?;
+        }
+        if has_dwi {
+            ingest_series(
+                archive,
+                &ds,
+                &SeriesSpec::dwi(subject, &date, dim, 1000.0),
+                subject,
+                Some(ses_label),
+                Modality::Dwi,
+                rng.next_u64(),
+            )?;
+        }
+        if !has_t1 && !has_dwi {
+            // session exists but holds only filtered-out protocols:
+            // still create the session dir so the query sees it
+            let name = BidsName::new(subject, Some(ses_label), Modality::T1w);
+            std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap())?;
+        }
+        // maintain the entity index as data lands: O(1) per session,
+        // so campaigns never pay for a full tree walk (DESIGN.md §6)
+        index.record_session(&ds, &SessionKey::new(subject, Some(ses_label)));
+        Ok(())
+    })?;
+    index.save_for(&ds)?;
+    // top-level demographics table (BIDS participants.tsv)
+    crate::bids::participants::write_for_dataset(&ds, seed ^ 0xBEEF)?;
+    Ok(ds)
+}
 
-    // distribute sessions: base per participant, remainder to the first few
+/// Structure-only ingest for query/scheduling experiments at catalog
+/// scale: creates the BIDS tree with stub image bytes (no DICOM synthesis,
+/// no archive store, no symlinks) plus minimal sidecars, and persists the
+/// sharded entity index. Orders of magnitude faster than [`ingest_cohort`]
+/// — what the Table 4–scale query benchmarks use (DESIGN.md §2: curation
+/// logic depends on structure, not voxel content).
+pub fn ingest_cohort_lite(
+    bids_parent: &std::path::Path,
+    cohort: &SynthCohort,
+    seed: u64,
+) -> Result<BidsDataset> {
+    let ds = BidsDataset::create(bids_parent, &cohort.name)?;
+    let mut index = EntityIndex::new(DEFAULT_SHARDS);
+    for_each_session(cohort, seed, |_p, _s, subject, ses_label, has_t1, has_dwi, _rng| {
+        for (present, modality) in [(has_t1, Modality::T1w), (has_dwi, Modality::Dwi)] {
+            if !present {
+                continue;
+            }
+            let name = BidsName::new(subject, Some(ses_label), modality);
+            let img = ds.raw_path(&name, "nii.gz");
+            std::fs::create_dir_all(img.parent().unwrap())?;
+            std::fs::write(&img, b"stub")?;
+            let mut sidecar = Json::obj();
+            sidecar.set("Modality", Json::str(modality.suffix()));
+            std::fs::write(
+                ds.raw_dir(&name).join(format!("{}.json", name.format())),
+                Json::Obj(sidecar).to_string_pretty(),
+            )?;
+        }
+        if !has_t1 && !has_dwi {
+            let name = BidsName::new(subject, Some(ses_label), Modality::T1w);
+            std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap())?;
+        }
+        index.record_session(&ds, &SessionKey::new(subject, Some(ses_label)));
+        Ok(())
+    })?;
+    index.save_for(&ds)?;
+    Ok(ds)
+}
+
+/// Shared cohort-shape skeleton of [`ingest_cohort`] and
+/// [`ingest_cohort_lite`]: distribute sessions across participants (base
+/// per participant, remainder to the first few), draw the per-session
+/// modality mix (90% of sessions have T1w, 60% have DWI — the misses are
+/// what feed the skip CSV), and hand every session to `per_session`.
+fn for_each_session(
+    cohort: &SynthCohort,
+    seed: u64,
+    mut per_session: impl FnMut(u64, u64, &str, &str, bool, bool, &mut Rng) -> Result<()>,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
     let base = (cohort.sessions / cohort.participants).max(1);
     let extra = cohort.sessions.saturating_sub(base * cohort.participants);
     for p in 0..cohort.participants {
@@ -123,44 +213,29 @@ pub fn ingest_cohort(
         let for_this = base + u64::from(p < extra);
         for s in 0..for_this {
             let ses_label = format!("{}", s + 1);
-            let date = format!("202{}010{}", 1 + (s % 3), 1 + (p % 9));
-            // 90% of sessions have T1w, 60% have DWI (some sessions fail
-            // criteria — that's what feeds the skip CSV).
             let has_t1 = rng.next_f64() < 0.9;
             let has_dwi = rng.next_f64() < 0.6;
-            if has_t1 {
-                ingest_series(
-                    archive,
-                    &ds,
-                    &SeriesSpec::t1w(&subject, &date, dim),
-                    &subject,
-                    Some(&ses_label),
-                    Modality::T1w,
-                    rng.next_u64(),
-                )?;
-            }
-            if has_dwi {
-                ingest_series(
-                    archive,
-                    &ds,
-                    &SeriesSpec::dwi(&subject, &date, dim, 1000.0),
-                    &subject,
-                    Some(&ses_label),
-                    Modality::Dwi,
-                    rng.next_u64(),
-                )?;
-            }
-            if !has_t1 && !has_dwi {
-                // session exists but holds only filtered-out protocols:
-                // still create the session dir so the query sees it
-                let name = BidsName::new(&subject, Some(&ses_label), Modality::T1w);
-                std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap())?;
-            }
+            per_session(p, s, &subject, &ses_label, has_t1, has_dwi, &mut rng)?;
         }
     }
-    // top-level demographics table (BIDS participants.tsv)
-    crate::bids::participants::write_for_dataset(&ds, seed ^ 0xBEEF)?;
-    Ok(ds)
+    Ok(())
+}
+
+/// Generate the whole Table 4 catalog as lite cohorts at `scale` (each
+/// entry scaled by [`scale_entry`]) under one parent directory — the
+/// multi-dataset, multi-shard workload the sharded query engine is
+/// benchmarked against.
+pub fn ingest_catalog_lite(
+    bids_parent: &std::path::Path,
+    scale: f64,
+    seed: u64,
+) -> Result<Vec<BidsDataset>> {
+    let mut out = Vec::new();
+    for (i, entry) in catalog().iter().enumerate() {
+        let cohort = scale_entry(entry, scale);
+        out.push(ingest_cohort_lite(bids_parent, &cohort, seed.wrapping_add(i as u64))?);
+    }
+    Ok(out)
 }
 
 fn ingest_series(
@@ -294,6 +369,43 @@ mod tests {
         let fs = crate::pipeline::by_name("freesurfer").unwrap();
         let q = find_runnable(&ds, &fs).unwrap();
         assert!(!q.runnable.is_empty());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn lite_ingest_builds_persistent_index_matching_full_scan() {
+        let root = std::env::temp_dir().join(format!("medflow_lite_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let cohort = SynthCohort {
+            name: "LITE".into(),
+            participants: 5,
+            sessions: 10,
+            tier: SecurityTier::General,
+        };
+        let ds = ingest_cohort_lite(&root, &cohort, 9).unwrap();
+        let index = EntityIndex::load(&ds.index_dir().join("index")).unwrap();
+        assert_eq!(index.len(), 10);
+        // sharded query over the persisted index agrees with the full scan
+        let fs = crate::pipeline::by_name("freesurfer").unwrap();
+        let full = find_runnable(&ds, &fs).unwrap();
+        let processed = crate::archive::ProcessedIndex::default();
+        let (sharded, stats) =
+            crate::query::find_runnable_sharded(&ds, &fs, &index, &processed, 4).unwrap();
+        assert_eq!(sharded.runnable, full.runnable);
+        assert_eq!(sharded.skipped, full.skipped);
+        assert!(stats.shards_scanned >= 1);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn catalog_lite_generates_all_twenty() {
+        let root = std::env::temp_dir().join(format!("medflow_cat_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let sets = ingest_catalog_lite(&root, 0.001, 3).unwrap();
+        assert_eq!(sets.len(), 20);
+        for ds in &sets {
+            assert!(ds.index_dir().join("index").join("meta.json").exists(), "{}", ds.name);
+        }
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -1,0 +1,161 @@
+//! Integration tests for the sharded/incremental query subsystem (ISSUE 1
+//! satellite): skip-reason CSV output, `AlreadyProcessed` served from the
+//! persistent processed index, and `MissingPrior` unblocking when a
+//! prerequisite pipeline completes — all through the public API and the
+//! coordinator campaign path.
+
+use std::path::PathBuf;
+
+use medflow::archive::{Archive, EntityIndex, ProcessedIndex, SecurityTier, SessionKey};
+use medflow::bids::{BidsDataset, BidsName, Modality};
+use medflow::container::ContainerArchive;
+use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::pipeline::by_name;
+use medflow::query::{find_runnable, find_runnable_sharded, IncrementalEngine, SkipReason};
+use medflow::workload::{ingest_cohort, ingest_cohort_lite, SynthCohort};
+
+fn tmproot(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("medflow_itq_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn stub_image(ds: &BidsDataset, sub: &str, ses: Option<&str>, m: Modality) {
+    let name = BidsName::new(sub, ses, m);
+    let p = ds.raw_path(&name, "nii.gz");
+    std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+    std::fs::write(&p, b"img").unwrap();
+}
+
+#[test]
+fn skip_csv_identical_across_all_three_query_paths() {
+    let root = tmproot("csv");
+    let ds = BidsDataset::create(&root, "CSVDS").unwrap();
+    stub_image(&ds, "01", Some("a"), Modality::T1w);
+    stub_image(&ds, "02", Some("a"), Modality::Dwi); // NoT1w for freesurfer
+    let name = BidsName::new("03", Some("a"), Modality::T1w);
+    std::fs::create_dir_all(ds.raw_dir(&name).parent().unwrap()).unwrap(); // empty session
+    let fs = by_name("freesurfer").unwrap();
+
+    let full = find_runnable(&ds, &fs).unwrap();
+    let index = EntityIndex::build(&ds, 4).unwrap();
+    let (sharded, _) = find_runnable_sharded(&ds, &fs, &index, &ProcessedIndex::default(), 2).unwrap();
+    let mut engine = IncrementalEngine::open(&ds).unwrap();
+    let (incremental, _) = engine.query(&ds, &fs, 2).unwrap();
+
+    let csv = full.skip_csv();
+    assert_eq!(csv, sharded.skip_csv());
+    assert_eq!(csv, incremental.skip_csv());
+    assert!(csv.starts_with("subject,session,skip_reason"));
+    assert!(csv.contains("sub-02,ses-a,no available T1w image in session"));
+    assert!(csv.contains("sub-03,ses-a,no available T1w image in session"));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn already_processed_served_from_persistent_index_across_processes() {
+    let root = tmproot("procidx");
+    let ds = BidsDataset::create(&root, "PROCDS").unwrap();
+    for i in 1..=4 {
+        stub_image(&ds, &format!("{i:02}"), None, Modality::T1w);
+    }
+    let fs = by_name("freesurfer").unwrap();
+    {
+        // "process" every runnable session, then persist the engine state
+        let mut engine = IncrementalEngine::open(&ds).unwrap();
+        let (r, _) = engine.query(&ds, &fs, 2).unwrap();
+        assert_eq!(r.runnable.len(), 4);
+        for job in &r.runnable {
+            engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+        }
+        engine.save(&ds).unwrap();
+    }
+    // a fresh engine (≈ a fresh control-node process) replays everything
+    // from the processed index: no derivatives exist on disk at all, so a
+    // filesystem probe could not answer this — only the index can
+    let mut engine = IncrementalEngine::open(&ds).unwrap();
+    let (r, stats) = engine.query(&ds, &fs, 2).unwrap();
+    assert!(r.runnable.is_empty());
+    assert_eq!(r.skipped.len(), 4);
+    assert!(r.skipped.iter().all(|s| s.reason == SkipReason::AlreadyProcessed));
+    assert_eq!(stats.sessions_examined, 0);
+    assert_eq!(stats.sessions_replayed, 4);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn missing_prior_unblocks_through_coordinator_campaigns() {
+    let root = tmproot("unblock");
+    // deterministic dataset: 3 DWI sessions (blocked on prequal), 1
+    // T1w-only session (skipped for NoDwi either way)
+    let ds = BidsDataset::create(&root.join("bids"), "UNBLOCK").unwrap();
+    for sub in ["01", "02", "03"] {
+        stub_image(&ds, sub, Some("a"), Modality::Dwi);
+    }
+    stub_image(&ds, "04", Some("a"), Modality::T1w);
+    let archive = Archive::at(&root.join("store")).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    let cfg = CampaignConfig::default();
+
+    // tractseg needs prequal first: everything with DWI is blocked
+    let r0 = coord.run_campaign(&ds, "tractseg", SubmitTarget::Hpc, &cfg).unwrap();
+    assert_eq!(r0.completed, 0);
+    assert!(r0.skip_csv.contains("prerequisite pipeline 'prequal' not yet run"), "{}", r0.skip_csv);
+
+    // prequal completes → its processed-set version bumps → exactly the
+    // blocked sessions are re-examined on the next tractseg campaign
+    let rp = coord.run_campaign(&ds, "prequal", SubmitTarget::Hpc, &cfg).unwrap();
+    assert_eq!(rp.completed, 3);
+    let r1 = coord.run_campaign(&ds, "tractseg", SubmitTarget::Hpc, &cfg).unwrap();
+    assert_eq!(r1.completed, rp.completed, "every prequal'd session unblocks");
+    assert_eq!(
+        r1.query_stats.sessions_examined, rp.completed,
+        "only the unblocked sessions were re-evaluated: {:?}",
+        r1.query_stats
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn sharded_query_scales_across_workers_consistently() {
+    let root = tmproot("workers");
+    let cohort = SynthCohort {
+        name: "WORKERS".into(),
+        participants: 24,
+        sessions: 48,
+        tier: SecurityTier::General,
+    };
+    let ds = ingest_cohort_lite(&root, &cohort, 5).unwrap();
+    let fs = by_name("freesurfer").unwrap();
+    let index = EntityIndex::load(&ds.index_dir().join("index")).unwrap();
+    let processed = ProcessedIndex::default();
+    let (r1, _) = find_runnable_sharded(&ds, &fs, &index, &processed, 1).unwrap();
+    for workers in [2, 4, 8] {
+        let (r, _) = find_runnable_sharded(&ds, &fs, &index, &processed, workers).unwrap();
+        assert_eq!(r.runnable, r1.runnable, "workers={workers}");
+        assert_eq!(r.skipped, r1.skipped, "workers={workers}");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn campaign_query_stats_reported_in_report() {
+    let root = tmproot("stats");
+    let mut archive = Archive::at(&root.join("store")).unwrap();
+    let cohort = SynthCohort {
+        name: "STATS".into(),
+        participants: 2,
+        sessions: 3,
+        tier: SecurityTier::General,
+    };
+    let ds = ingest_cohort(&mut archive, &root.join("bids"), &cohort, 8, 13).unwrap();
+    let containers = ContainerArchive::open(&root.join("containers")).unwrap();
+    let mut coord = Coordinator::new(archive, containers, None);
+    let cfg = CampaignConfig::default();
+    let r = coord.run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg).unwrap();
+    assert!(!r.query_stats.full_scan);
+    assert_eq!(r.query_stats.sessions_examined, r.queried, "first campaign evaluates everything");
+    assert_eq!(r.query_stats.sessions_replayed, 0);
+    std::fs::remove_dir_all(&root).unwrap();
+}
