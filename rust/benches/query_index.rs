@@ -50,7 +50,8 @@ fn main() -> anyhow::Result<()> {
     let (r1, s1) = engine.query(&ds, &fs, 4)?;
     metric("first_query.examined", s1.sessions_examined as f64, "");
     for job in &r1.runnable {
-        engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+        let key = SessionKey::new(&job.subject, job.session.as_deref());
+        engine.record_completion("freesurfer", &key);
     }
     engine.save(&ds)?;
     let incremental = bench("incremental_requery_unchanged", 1, 20, || {

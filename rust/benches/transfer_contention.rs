@@ -1,0 +1,88 @@
+//! Bench: shared-link transfer contention — the ISSUE 2 tentpole
+//! numbers. Sweeps concurrent stream counts 1→64 per environment through
+//! `netsim::scheduler` and checks, with assertions that run in both
+//! modes, that
+//!
+//! * a single stream reproduces the Table 1 calibration (HPC 0.60,
+//!   cloud 0.33, local 0.81 Gb/s within the netsim test tolerance),
+//! * aggregate observed throughput never exceeds the bottleneck link
+//!   capacity, and
+//! * every stream's throughput is monotonically non-increasing in the
+//!   stream count — max-min fair share is population-monotone, and
+//!   per-transfer sampling is keyed by transfer id, so stream i sees
+//!   identical draws at every sweep point and the comparison is
+//!   pointwise.
+//!
+//! Run: `cargo bench --bench transfer_contention` — or with `-- --test`
+//! for the reduced sweep CI runs so the assertions cannot bit-rot.
+
+use medflow::netsim::scheduler::{scheduler_bandwidth_experiment, Topology, TransferScheduler};
+use medflow::netsim::Env;
+use medflow::util::bench::metric;
+use medflow::util::units::mean_std;
+
+const GB: u64 = 1_000_000_000;
+
+/// Simulate `n` concurrent 1 GB streams; returns (per-stream observed
+/// Gb/s ordered by id, aggregate Gb/s, link utilization).
+fn contended(env: Env, n: usize, seed: u64) -> (Vec<f64>, f64, f64) {
+    let mut sim = TransferScheduler::for_env(env, n.max(1), seed);
+    for i in 0..n {
+        sim.submit_at(i as u64, 0, GB, 0.0);
+    }
+    sim.run_to_completion();
+    let mut recs = sim.records().to_vec();
+    recs.sort_by_key(|r| r.id);
+    let per_stream: Vec<f64> = recs.iter().map(|r| r.observed_gbps()).collect();
+    let stats = sim.stats();
+    (per_stream, stats.aggregate_gbps, stats.link_utilization)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let counts: &[usize] = if test_mode {
+        &[1, 2, 4, 8, 16]
+    } else {
+        &[1, 2, 4, 8, 16, 32, 64]
+    };
+    let k = if test_mode { 40 } else { 100 };
+
+    println!("=== Shared-link transfer contention (netsim::scheduler) ===");
+    for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
+        let cap = Topology::of(env).bottleneck_gbps();
+        println!("--- {} (bottleneck {cap:.3} Gb/s) ---", env.name());
+
+        // 1-stream calibration must match the paper's Table 1 column
+        let mean = mean_std(&scheduler_bandwidth_experiment(env, k, 42)).0;
+        metric(&format!("{env:?}.single_stream_gbps"), mean, "Gb/s");
+        assert!(
+            (mean - want).abs() < 0.05,
+            "{env:?}: single-stream mean {mean} drifted from Table 1 {want}"
+        );
+
+        let mut prev: Vec<f64> = Vec::new();
+        for &n in counts {
+            let (per_stream, aggregate, util) = contended(env, n, 42);
+            metric(
+                &format!("{env:?}.n{n}.per_stream_gbps"),
+                mean_std(&per_stream).0,
+                "Gb/s mean",
+            );
+            metric(&format!("{env:?}.n{n}.aggregate_gbps"), aggregate, "Gb/s");
+            metric(&format!("{env:?}.n{n}.link_utilization"), util, "");
+            assert!(
+                aggregate <= cap * (1.0 + 1e-9),
+                "{env:?} n={n}: aggregate {aggregate} exceeds link capacity {cap}"
+            );
+            // pointwise per-id comparison against the previous sweep point
+            for (id, (&now, &before)) in per_stream.iter().zip(&prev).enumerate() {
+                assert!(
+                    now <= before + 1e-6,
+                    "{env:?} n={n} stream {id}: throughput rose ({now} > {before})"
+                );
+            }
+            prev = per_stream;
+        }
+    }
+    println!("transfer_contention OK");
+}

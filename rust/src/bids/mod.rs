@@ -83,7 +83,11 @@ impl BidsDataset {
     /// paper intentionally drops modality subdirs here (Fig. 2): pipelines
     /// are often multimodal.
     pub fn derivative_dir(&self, pipeline: &str, name: &BidsName) -> PathBuf {
-        let mut p = self.root.join("derivatives").join(pipeline).join(format!("sub-{}", name.subject));
+        let mut p = self
+            .root
+            .join("derivatives")
+            .join(pipeline)
+            .join(format!("sub-{}", name.subject));
         if let Some(ses) = &name.session {
             p = p.join(format!("ses-{ses}"));
         }

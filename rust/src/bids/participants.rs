@@ -80,7 +80,8 @@ pub fn write_for_dataset(ds: &BidsDataset, seed: u64) -> Result<Vec<Participant>
 /// missing from the TSV and TSV rows without a directory.
 pub fn check_consistency(ds: &BidsDataset) -> Result<(Vec<String>, Vec<String>)> {
     let path = ds.root.join("participants.tsv");
-    let rows = from_tsv(&std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?)?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+    let rows = from_tsv(&text)?;
     let tsv_ids: BTreeMap<String, ()> = rows.iter().map(|r| (r.id.clone(), ())).collect();
     let subjects = ds.subjects()?;
     let missing_from_tsv: Vec<String> = subjects
@@ -123,7 +124,8 @@ mod tests {
     use std::path::PathBuf;
 
     fn tmpds(tag: &str) -> BidsDataset {
-        let parent = std::env::temp_dir().join(format!("medflow_ptsv_{tag}_{}", std::process::id()));
+        let parent =
+            std::env::temp_dir().join(format!("medflow_ptsv_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&parent).unwrap();
         let ds = BidsDataset::create(&parent, "DS").unwrap();
         for sub in ["01", "02", "03"] {

@@ -53,7 +53,9 @@ pub fn validate_dataset(root: &Path) -> Vec<ValidationIssue> {
     // 1. dataset_description.json
     let desc_path = root.join("dataset_description.json");
     match std::fs::read_to_string(&desc_path) {
-        Err(_) => issues.push(ValidationIssue::error(&desc_path, "missing dataset_description.json")),
+        Err(_) => {
+            issues.push(ValidationIssue::error(&desc_path, "missing dataset_description.json"))
+        }
         Ok(text) => match Json::parse(&text) {
             Err(e) => issues.push(ValidationIssue::error(&desc_path, format!("invalid JSON: {e}"))),
             Ok(json) => {
@@ -110,7 +112,12 @@ fn walk_subject(subdir: &Path, subject: &str, issues: &mut Vec<ValidationIssue>)
     }
 }
 
-fn walk_modalities(sesdir: &Path, subject: &str, session: Option<&str>, issues: &mut Vec<ValidationIssue>) {
+fn walk_modalities(
+    sesdir: &Path,
+    subject: &str,
+    session: Option<&str>,
+    issues: &mut Vec<ValidationIssue>,
+) {
     for entry in std::fs::read_dir(sesdir).into_iter().flatten().flatten() {
         let fname = entry.file_name().to_string_lossy().to_string();
         let path = entry.path();
@@ -144,19 +151,29 @@ fn check_modality_dir(
                 if name.subject != subject {
                     issues.push(ValidationIssue::error(
                         &path,
-                        format!("subject mismatch: file says '{}', dir says '{subject}'", name.subject),
+                        format!(
+                            "subject mismatch: file says '{}', dir says '{subject}'",
+                            name.subject
+                        ),
                     ));
                 }
                 if name.session.as_deref() != session {
                     issues.push(ValidationIssue::error(
                         &path,
-                        format!("session mismatch: file says {:?}, dir says {session:?}", name.session),
+                        format!(
+                            "session mismatch: file says {:?}, dir says {session:?}",
+                            name.session
+                        ),
                     ));
                 }
                 if name.modality.raw_dir() != dirname {
                     issues.push(ValidationIssue::error(
                         &path,
-                        format!("modality {} belongs in {}/", name.modality.suffix(), name.modality.raw_dir()),
+                        format!(
+                            "modality {} belongs in {}/",
+                            name.modality.suffix(),
+                            name.modality.raw_dir()
+                        ),
                     ));
                 }
                 if is_image {

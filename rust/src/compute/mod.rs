@@ -34,13 +34,6 @@ pub struct JobOutcome {
     pub qa: Vec<(String, f64)>,
 }
 
-impl JobOutcome {
-    /// Total modeled wall-clock (transfer + compute), seconds.
-    pub fn total_seconds(&self) -> f64 {
-        self.stage_in_s + self.stage_out_s + self.compute_minutes * 60.0
-    }
-}
-
 /// Executes jobs in a given environment profile.
 pub struct Executor<'rt> {
     pub env: Env,
@@ -73,6 +66,12 @@ impl<'rt> Executor<'rt> {
 
     /// Execute one job instance: returns the outcome, or an error if input
     /// staging fails integrity checks (the paper's abort condition).
+    ///
+    /// Transfers are sampled **independently** per job — the
+    /// single-stream special case of the transfer model. Campaigns run
+    /// through [`Self::run_compute`] instead and take their transfer
+    /// times from the contention-aware scheduler
+    /// ([`crate::netsim::scheduler`]).
     pub fn run(
         &self,
         job: &JobSpec,
@@ -86,6 +85,58 @@ impl<'rt> Executor<'rt> {
         // --- compute: sample the paper-scale duration, scaled by env ---
         let compute_minutes = spec.sample_minutes(rng) / self.speed_factor;
         // --- real artifact execution (when the pipeline has one) ---
+        let (artifact_exec_s, qa) = self.run_artifact(spec, rng, volume)?;
+        // --- stage out ---
+        let stage_out_s = self.profile.transfer_time(rng, spec.output_bytes);
+        // --- cost: slot held for transfer + compute ---
+        let total_minutes = compute_minutes + (stage_in_s + stage_out_s) / 60.0;
+        let cost_dollars = compute_cost(self.env, total_minutes);
+        Ok(JobOutcome {
+            instance_id: job.instance_id(),
+            env: self.env,
+            stage_in_s,
+            stage_out_s,
+            compute_minutes,
+            artifact_exec_s,
+            cost_dollars,
+            qa,
+        })
+    }
+
+    /// Execute one job's **compute phase only**: sample the paper-scale
+    /// duration and run the real artifact. Staging fields start at zero
+    /// and `cost_dollars` covers compute only — the staged campaign path
+    /// ([`crate::coordinator::staged`]) fills both in from the transfer
+    /// scheduler's contended timings via [`crate::cost::staged_job_cost`].
+    pub fn run_compute(
+        &self,
+        job: &JobSpec,
+        spec: &PipelineSpec,
+        rng: &mut Rng,
+        volume: Option<&[f32]>,
+    ) -> Result<JobOutcome> {
+        let compute_minutes = spec.sample_minutes(rng) / self.speed_factor;
+        let (artifact_exec_s, qa) = self.run_artifact(spec, rng, volume)?;
+        Ok(JobOutcome {
+            instance_id: job.instance_id(),
+            env: self.env,
+            stage_in_s: 0.0,
+            stage_out_s: 0.0,
+            compute_minutes,
+            artifact_exec_s,
+            cost_dollars: compute_cost(self.env, compute_minutes),
+            qa,
+        })
+    }
+
+    /// Run the pipeline's PJRT artifact (when it has one and a runtime is
+    /// loaded), returning measured execution seconds and QA scalars.
+    fn run_artifact(
+        &self,
+        spec: &PipelineSpec,
+        rng: &mut Rng,
+        volume: Option<&[f32]>,
+    ) -> Result<(f64, Vec<(String, f64)>)> {
         let mut artifact_exec_s = 0.0;
         let mut qa = Vec::new();
         if let (Some(artifact), Some(rt)) = (spec.artifact, self.runtime) {
@@ -128,21 +179,7 @@ impl<'rt> Executor<'rt> {
             }
             artifact_exec_s = t0.elapsed().as_secs_f64();
         }
-        // --- stage out ---
-        let stage_out_s = self.profile.transfer_time(rng, spec.output_bytes);
-        // --- cost: slot held for transfer + compute ---
-        let total_minutes = compute_minutes + (stage_in_s + stage_out_s) / 60.0;
-        let cost_dollars = compute_cost(self.env, total_minutes);
-        Ok(JobOutcome {
-            instance_id: job.instance_id(),
-            env: self.env,
-            stage_in_s,
-            stage_out_s,
-            compute_minutes,
-            artifact_exec_s,
-            cost_dollars,
-            qa,
-        })
+        Ok((artifact_exec_s, qa))
     }
 }
 
@@ -223,6 +260,19 @@ mod tests {
         assert!(out.cost_dollars > 0.0);
         assert!(out.qa.is_empty());
         assert_eq!(out.artifact_exec_s, 0.0);
+    }
+
+    #[test]
+    fn run_compute_samples_no_transfers() {
+        let ex = Executor::new(Env::Hpc, None);
+        let spec = by_name("biscuit").unwrap();
+        let mut rng = Rng::new(4);
+        let out = ex.run_compute(&job(), &spec, &mut rng, None).unwrap();
+        assert_eq!(out.stage_in_s, 0.0);
+        assert_eq!(out.stage_out_s, 0.0);
+        assert!(out.compute_minutes > 0.0);
+        let compute_only = crate::cost::compute_cost(Env::Hpc, out.compute_minutes);
+        assert!((out.cost_dollars - compute_only).abs() < 1e-12);
     }
 
     #[test]

@@ -8,8 +8,15 @@
 //! plus the §2.3 resource monitor (cluster utilization + storage headroom)
 //! that informs whether to submit to the HPC or burst to a local server,
 //! with bounded in-flight backpressure on the local path.
+//!
+//! Campaign data movement is **staged** (DESIGN.md §9): stage-in,
+//! compute, and copy-back overlap per job, and all transfers share the
+//! environment's storage path through the contention-aware
+//! [`crate::netsim::scheduler`] instead of independent samples — see
+//! [`staged`].
 
 pub mod planner;
+pub mod staged;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -18,16 +25,20 @@ use anyhow::{Context, Result};
 
 use crate::archive::{Archive, SessionKey};
 use crate::bids::{BidsDataset, BidsName, Modality};
-use crate::compute::{env_speed_factor, Executor};
+use crate::compute::{env_speed_factor, Executor, JobOutcome};
+use crate::cost::staged_job_cost;
 use crate::faults::{run_with_retries, FaultModel};
 use crate::container::{ContainerArchive, ImageDef};
+use crate::netsim::scheduler::{Topology, TransferScheduler, TransferStats};
 use crate::netsim::Env;
 use crate::pipeline::{by_name, PipelineSpec};
 use crate::provenance::Provenance;
 use crate::query::{IncrementalEngine, JobSpec, QueryResult, QueryStats};
 use crate::runtime::Runtime;
 use crate::scripts::{instance_script, local_runner_script, slurm_array_script, SlurmOptions};
-use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler, SimJob};
+use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler};
+
+use self::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome};
 use crate::util::pool::run_parallel;
 use crate::util::rng::Rng;
 use crate::util::units::mean_std;
@@ -53,6 +64,10 @@ pub struct CampaignConfig {
     pub query_workers: usize,
     /// Average input bytes staged per job (from archive stats when real).
     pub input_bytes_per_job: u64,
+    /// Concurrent transfer streams allowed on the campaign's staging
+    /// path (the per-host cap of the contention-aware transfer
+    /// scheduler, DESIGN.md §9); further transfers queue FIFO.
+    pub transfer_streams: usize,
     /// Failure model applied per attempt (None = fault-free baseline).
     pub faults: Option<FaultModel>,
     /// Resubmissions allowed per job when faults are enabled.
@@ -68,6 +83,7 @@ impl Default for CampaignConfig {
             local_max_in_flight: 8,
             query_workers: 4,
             input_bytes_per_job: 30_000_000,
+            transfer_streams: 8,
             faults: None,
             max_retries: 3,
         }
@@ -97,6 +113,9 @@ pub struct CampaignReport {
     /// Telemetry from the incremental archive query: how much was
     /// evaluated vs replayed from the persistent indexes.
     pub query_stats: QueryStats,
+    /// Telemetry from the contention-aware transfer scheduler: link
+    /// utilization, peak concurrent streams, queue waits (DESIGN.md §9).
+    pub transfer: TransferStats,
 }
 
 /// Resource-monitor snapshot (paper §2.3: "a simple query for both
@@ -256,6 +275,7 @@ impl<'rt> Coordinator<'rt> {
             array_script,
             artifact_exec_s: outcome.artifact_exec_mean_s,
             query_stats,
+            transfer: outcome.transfer,
         })
     }
 
@@ -269,16 +289,18 @@ impl<'rt> Coordinator<'rt> {
     ) -> Result<ExecOutcome> {
         let mut rng = Rng::new(cfg.seed);
         let executor = Executor::new(Env::Hpc, self.runtime);
-        // sample outcomes (transfer + duration + real artifact execution)
+        // sample compute outcomes (duration model + real artifact
+        // execution); transfer times come from the staged co-simulation
         let mut outcomes = Vec::with_capacity(jobs.len());
         for job in jobs {
-            outcomes.push(executor.run(job, spec, cfg.input_bytes_per_job, &mut rng, None)?);
+            outcomes.push(executor.run_compute(job, spec, &mut rng, None)?);
         }
         // failure injection: failed attempts inflate effective duration;
         // jobs that exhaust retries drop out (paper §4's cost overrun)
-        let (jobs, outcomes, aborted) = apply_faults(jobs, outcomes, cfg, &mut rng);
+        let (jobs, mut outcomes, aborted) = apply_faults(jobs, outcomes, cfg, &mut rng);
         let jobs = &jobs[..];
-        // feed modeled durations into the cluster simulator as a job array
+        // staged execution: stage-in through the shared HPC path, SLURM
+        // array compute, copy-back — overlapped per job (DESIGN.md §9)
         let mut sched = Scheduler::new(self.cluster.clone());
         for w in &self.maintenance {
             sched.add_maintenance(*w);
@@ -287,21 +309,21 @@ impl<'rt> Coordinator<'rt> {
             array_id: 1,
             max_concurrent: cfg.slurm.max_concurrent,
         };
-        for (i, (job, out)) in jobs.iter().zip(&outcomes).enumerate() {
-            sched.submit(SimJob {
-                id: i as u64,
-                user: cfg.user.clone(),
-                cores: job.cores,
-                ram_gb: job.ram_gb,
-                duration_s: out.total_seconds(),
-                submit_s: 0.0,
-                array: Some(handle),
-            });
-        }
-        sched.run_to_completion();
-        self.finalize(ds, spec, jobs, &outcomes, Env::Hpc, cfg, engine)?;
-        let mut out = ExecOutcome::collect(&outcomes, sched.makespan());
-        out.failed = aborted;
+        let mut compute_sim = SlurmSim::new(sched, &cfg.user, Some(handle));
+        let staged = run_staged(
+            &staged_plan(jobs, &outcomes, spec, cfg),
+            &mut compute_sim,
+            &mut campaign_transfers(Env::Hpc, cfg),
+        );
+        fold_staged_timings(Env::Hpc, &mut outcomes, &staged);
+        // jobs the cluster could never place (oversized for every node)
+        // never computed or copied back: they must not be finalized or
+        // recorded as processed — they count as failed and stay runnable
+        let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
+        self.finalize(ds, spec, &jobs, &outcomes, Env::Hpc, cfg, engine)?;
+        let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
+        out.failed = aborted + dropped;
+        out.transfer = staged.transfer;
         Ok(out)
     }
 
@@ -318,17 +340,18 @@ impl<'rt> Coordinator<'rt> {
         // in-flight set). The PJRT client holds thread-local state (Rc
         // internals in the xla crate), so artifact-backed pipelines execute
         // serially; model-only pipelines fan out across the pool like the
-        // generated Python runner would.
+        // generated Python runner would. Staging and makespan come from
+        // the staged co-simulation: a LanePool of `workers` lanes for
+        // compute, the local shared path for transfers.
         let seed = cfg.seed;
-        let input_bytes = cfg.input_bytes_per_job;
         let workers = workers.min(cfg.local_max_in_flight).max(1);
-        let outcomes: Vec<crate::compute::JobOutcome> = if self.runtime.is_some() {
+        let mut outcomes: Vec<JobOutcome> = if self.runtime.is_some() {
             let ex = Executor::new(Env::Local, self.runtime);
             jobs.iter()
                 .enumerate()
                 .map(|(i, job)| {
                     let mut rng = Rng::new(seed.wrapping_add(i as u64));
-                    ex.run(job, spec, input_bytes, &mut rng, None)
+                    ex.run_compute(job, spec, &mut rng, None)
                 })
                 .collect::<Result<Vec<_>>>()?
         } else {
@@ -341,7 +364,7 @@ impl<'rt> Coordinator<'rt> {
                     move || {
                         let mut rng = Rng::new(seed.wrapping_add(i as u64));
                         let ex = Executor::new(Env::Local, None);
-                        ex.run(&job, &spec, input_bytes, &mut rng, None)
+                        ex.run_compute(&job, &spec, &mut rng, None)
                     }
                 })
                 .collect();
@@ -349,18 +372,21 @@ impl<'rt> Coordinator<'rt> {
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
         };
-        // makespan: greedy wave model over `workers` lanes
-        let mut lanes = vec![0.0f64; workers];
-        for out in &outcomes {
-            let lane = lanes
-                .iter_mut()
-                .min_by(|a, b| a.partial_cmp(b).unwrap())
-                .unwrap();
-            *lane += out.total_seconds();
-        }
-        let makespan = lanes.iter().cloned().fold(0.0, f64::max);
-        self.finalize(ds, spec, jobs, &outcomes, Env::Local, cfg, engine)?;
-        Ok(ExecOutcome::collect(&outcomes, makespan))
+        let mut lanes = LanePool::new(workers);
+        let staged = run_staged(
+            &staged_plan(jobs, &outcomes, spec, cfg),
+            &mut lanes,
+            &mut campaign_transfers(Env::Local, cfg),
+        );
+        fold_staged_timings(Env::Local, &mut outcomes, &staged);
+        // a LanePool never drops jobs, but keep the same completion
+        // contract as the HPC path
+        let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
+        self.finalize(ds, spec, &jobs, &outcomes, Env::Local, cfg, engine)?;
+        let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
+        out.failed = dropped;
+        out.transfer = staged.transfer;
+        Ok(out)
     }
 
     /// Copy-back phase: write derivative outputs + provenance, and record
@@ -415,6 +441,70 @@ impl<'rt> Coordinator<'rt> {
     }
 }
 
+/// The campaign's transfer scheduler: the environment's shared component
+/// path with the configured concurrent-stream cap. The seed is salted so
+/// transfer sampling is independent of the compute-duration stream.
+fn campaign_transfers(env: Env, cfg: &CampaignConfig) -> TransferScheduler {
+    let topo = Topology::of(env).with_stream_cap(cfg.transfer_streams.max(1));
+    TransferScheduler::new(topo, cfg.seed ^ 0x7472_616e_7366_6572) // "transfer"
+}
+
+/// Build the staged-execution plan from the queried jobs and their
+/// sampled compute outcomes.
+fn staged_plan(
+    jobs: &[JobSpec],
+    outcomes: &[JobOutcome],
+    spec: &PipelineSpec,
+    cfg: &CampaignConfig,
+) -> Vec<StagedJob> {
+    jobs.iter()
+        .zip(outcomes)
+        .map(|(job, out)| StagedJob {
+            cores: job.cores,
+            ram_gb: job.ram_gb,
+            compute_s: out.compute_minutes * 60.0,
+            bytes_in: cfg.input_bytes_per_job,
+            bytes_out: spec.output_bytes,
+        })
+        .collect()
+}
+
+/// Fold the staged timings back into the job outcomes: the
+/// scheduler-observed (contended) transfer times replace the zeroed
+/// staging fields, and the slot cost picks up those transfer seconds
+/// ([`staged_job_cost`]) instead of independent single-stream samples.
+fn fold_staged_timings(env: Env, outcomes: &mut [JobOutcome], staged: &StagedOutcome) {
+    for (out, t) in outcomes.iter_mut().zip(&staged.timings) {
+        out.stage_in_s = t.stage_in_s;
+        out.stage_out_s = t.stage_out_s;
+        out.cost_dollars = staged_job_cost(env, out.compute_minutes, t.stage_in_s + t.stage_out_s);
+    }
+}
+
+/// Keep only jobs whose staged execution ran to verified copy-back
+/// ([`staged::StagedTiming::completed`]); jobs the compute backend
+/// dropped are returned as a failure count and are neither finalized
+/// nor recorded into the processed index — the next query re-offers
+/// them.
+fn retain_completed(
+    jobs: &[JobSpec],
+    outcomes: Vec<JobOutcome>,
+    staged: &StagedOutcome,
+) -> (Vec<JobSpec>, Vec<JobOutcome>, usize) {
+    let mut kept_jobs = Vec::with_capacity(jobs.len());
+    let mut kept = Vec::with_capacity(jobs.len());
+    let mut dropped = 0;
+    for ((job, out), t) in jobs.iter().zip(outcomes).zip(&staged.timings) {
+        if t.completed {
+            kept_jobs.push(job.clone());
+            kept.push(out);
+        } else {
+            dropped += 1;
+        }
+    }
+    (kept_jobs, kept, dropped)
+}
+
 /// Apply the campaign's fault model: per job, sample the retry trace; the
 /// effective duration factor inflates both compute time and cost; jobs
 /// whose retries are exhausted are dropped (counted as aborted).
@@ -451,6 +541,7 @@ struct ExecOutcome {
     per_job_minutes: Vec<f64>,
     total_cost: f64,
     artifact_exec_mean_s: f64,
+    transfer: TransferStats,
 }
 
 impl ExecOutcome {
@@ -473,6 +564,7 @@ impl ExecOutcome {
             } else {
                 execs.iter().sum::<f64>() / execs.len() as f64
             },
+            transfer: TransferStats::default(),
         }
     }
 }
@@ -480,7 +572,7 @@ impl ExecOutcome {
 /// Convenience: build a full simulated deployment (archive + containers +
 /// coordinator) under one root directory.
 pub fn deployment_at<'rt>(
-    root: &PathBuf,
+    root: &std::path::Path,
     runtime: Option<&'rt Runtime>,
 ) -> Result<Coordinator<'rt>> {
     let archive = Archive::at(&root.join("store"))?;
@@ -631,6 +723,92 @@ mod tests {
         );
         std::fs::remove_dir_all(&root).unwrap();
         std::fs::remove_dir_all(&root2).unwrap();
+    }
+
+    #[test]
+    fn oversized_jobs_fail_and_stay_unprocessed() {
+        let (root, ds, mut coord) = setup("oversz");
+        // freesurfer wants 8 GB; no node has more than 4 → every job is
+        // unplaceable and must surface as failed, not completed
+        coord.cluster = ClusterSpec::small(2, 2, 4);
+        let cfg = CampaignConfig::default();
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert_eq!(r.completed, 0, "nothing computed on an unplaceable cluster");
+        assert!(r.failed > 0);
+        assert_eq!(r.failed, r.queried - r.skipped);
+        // nothing was recorded as processed: a capable cluster re-runs it
+        coord.cluster = ClusterSpec::small(4, 8, 64);
+        let r2 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert_eq!(r2.completed, r.failed, "dropped jobs must be re-offered");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn campaign_reports_transfer_contention() {
+        let (root, ds, mut coord) = setup("xfer");
+        let cfg = CampaignConfig {
+            transfer_streams: 2,
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert!(r.completed > 0);
+        // one stage-in and one verified copy-back per completed job
+        assert_eq!(r.transfer.transfers, 2 * r.completed);
+        assert!(r.transfer.peak_streams >= 1 && r.transfer.peak_streams <= 2);
+        assert!(r.transfer.link_utilization > 0.0);
+        assert!(r.transfer.link_utilization <= 1.0 + 1e-9);
+        let cap = crate::netsim::scheduler::Topology::of(Env::Hpc).bottleneck_gbps();
+        assert!(r.transfer.aggregate_gbps <= cap + 1e-9);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stream_cap_one_queues_transfers_wide_cap_does_not() {
+        // MINI has 12 sessions: a cap of 1 must serialize the stage-in
+        // storm (queue waits), while a cap wider than the whole campaign
+        // never queues anything
+        let (root1, ds1, mut coord1) = setup("cap1");
+        let narrow = CampaignConfig {
+            transfer_streams: 1,
+            ..Default::default()
+        };
+        let r1 = coord1
+            .run_campaign(&ds1, "freesurfer", SubmitTarget::Hpc, &narrow)
+            .unwrap();
+        assert!(r1.transfer.mean_queue_wait_s > 0.0, "{:?}", r1.transfer);
+        assert_eq!(r1.transfer.peak_streams, 1);
+
+        let (root2, ds2, mut coord2) = setup("capwide");
+        let wide = CampaignConfig {
+            transfer_streams: 64,
+            ..Default::default()
+        };
+        let r2 = coord2
+            .run_campaign(&ds2, "freesurfer", SubmitTarget::Hpc, &wide)
+            .unwrap();
+        assert_eq!(r2.transfer.mean_queue_wait_s, 0.0, "{:?}", r2.transfer);
+        assert!(r2.transfer.peak_streams > 1);
+        std::fs::remove_dir_all(&root1).unwrap();
+        std::fs::remove_dir_all(&root2).unwrap();
+    }
+
+    #[test]
+    fn staged_outcomes_carry_scheduler_transfer_times() {
+        let (root, ds, mut coord) = setup("stagedt");
+        let cfg = CampaignConfig::default();
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::LocalBurst { workers: 2 }, &cfg)
+            .unwrap();
+        assert!(r.completed > 0);
+        assert!(r.makespan_s > 0.0);
+        assert!(r.transfer.busy_s > 0.0);
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

@@ -118,7 +118,8 @@ mod tests {
         let containers = ContainerArchive::open(&root.join("containers")).unwrap();
         let mut coord = Coordinator::new(archive, containers, None);
         coord.cluster = ClusterSpec::small(8, 16, 128);
-        let sweep = run_sweep(&mut coord, &ds, SubmitTarget::Hpc, &CampaignConfig::default()).unwrap();
+        let sweep =
+            run_sweep(&mut coord, &ds, SubmitTarget::Hpc, &CampaignConfig::default()).unwrap();
         assert_eq!(sweep.campaigns.len(), 16);
         // dependents completed in the SAME sweep as their priors
         let by_name: std::collections::HashMap<&str, &CampaignReport> = sweep

@@ -43,6 +43,17 @@ pub fn compute_cost(env: Env, minutes: f64) -> f64 {
     instance_hourly_rate(env) * minutes / 60.0
 }
 
+/// Slot cost of one staged-campaign job: the slot is held for the
+/// modeled compute plus the **scheduler-observed** transfer seconds —
+/// the contended wire times reported by
+/// [`crate::netsim::scheduler::TransferScheduler`], not the independent
+/// single-stream samples of `NetProfile::transfer_time`. Queue wait in
+/// the transfer scheduler does not hold the slot (the job has not been
+/// allocated yet while its inputs wait to stream).
+pub fn staged_job_cost(env: Env, compute_minutes: f64, transfer_s: f64) -> f64 {
+    compute_cost(env, compute_minutes + transfer_s / 60.0)
+}
+
 /// Yearly cost of `bytes` on ACCRE backed-up storage.
 pub fn accre_storage_cost_per_year(bytes: u64) -> f64 {
     bytes as f64 / TB as f64 * ACCRE_STORAGE_PER_TB_YEAR
@@ -89,6 +100,17 @@ mod tests {
         // Glacier is far cheaper per year for the same bytes
         let glacier_yr = glacier_cost_per_month(400 * TB) * 12.0;
         assert!(glacier_yr < 72_000.0 / 3.0, "glacier={glacier_yr}");
+    }
+
+    #[test]
+    fn staged_cost_adds_contended_transfer_seconds() {
+        for env in Env::all() {
+            assert_eq!(staged_job_cost(env, 100.0, 0.0), compute_cost(env, 100.0));
+            // 10 minutes of contended transfer cost exactly 10 slot-minutes
+            let with_transfer = staged_job_cost(env, 100.0, 600.0);
+            assert!((with_transfer - compute_cost(env, 110.0)).abs() < 1e-12);
+            assert!(with_transfer > staged_job_cost(env, 100.0, 60.0));
+        }
     }
 
     #[test]

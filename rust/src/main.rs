@@ -7,6 +7,7 @@
 //! medflow query     --root DIR --dataset NAME --pipeline P
 //! medflow campaign  --root DIR --dataset NAME --pipeline P [--local N]
 //! medflow status    --root DIR
+//! medflow transfer-sim [--env E] [--streams N] [--gb X] [--cap N]
 //! medflow pipelines
 //! medflow table1 | table2 | table3 | fig1
 //! ```
@@ -21,6 +22,8 @@ use medflow::bids::{validate_dataset, BidsDataset, Severity};
 use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::netsim::scheduler::{Topology, TransferScheduler};
+use medflow::netsim::Env;
 use medflow::pipeline::{by_name, registry};
 use medflow::query::{find_runnable, IncrementalEngine};
 use medflow::report;
@@ -93,11 +96,18 @@ fn run() -> Result<()> {
         "campaign" => cmd_campaign(&args),
         "status" => cmd_status(&args),
         "pipelines" => {
-            println!("{:<22}{:<10}{:>8}{:>8}{:>12}", "pipeline", "version", "cores", "ram", "minutes");
+            println!(
+                "{:<22}{:<10}{:>8}{:>8}{:>12}",
+                "pipeline", "version", "cores", "ram", "minutes"
+            );
             for p in registry() {
                 println!(
                     "{:<22}{:<10}{:>8}{:>8}{:>12.1}",
-                    p.name, p.version, p.resources.cores, p.resources.ram_gb, p.resources.minutes_mean
+                    p.name,
+                    p.version,
+                    p.resources.cores,
+                    p.resources.ram_gb,
+                    p.resources.minutes_mean
                 );
             }
             Ok(())
@@ -109,6 +119,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "sweep" => cmd_sweep(&args),
+        "transfer-sim" => cmd_transfer_sim(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
             for years in [0.0, 1.0, 3.0, 5.0] {
@@ -302,7 +313,12 @@ fn cmd_index(args: &Args) -> Result<()> {
     for p in registry() {
         let n = engine.processed.count(p.name);
         if n > 0 {
-            println!("  processed {:<20} {:>6} sessions (v{})", p.name, n, engine.processed.version(p.name));
+            println!(
+                "  processed {:<20} {:>6} sessions (v{})",
+                p.name,
+                n,
+                engine.processed.version(p.name)
+            );
         }
     }
     Ok(())
@@ -339,6 +355,51 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         r.compute_minutes.1,
         r.total_cost_dollars
     );
+    if r.transfer.transfers > 0 {
+        print!("{}", report::format_transfer_stats(&r.transfer));
+    }
+    Ok(())
+}
+
+/// `medflow transfer-sim`: simulate N concurrent streams over one
+/// environment's shared storage→compute path (DESIGN.md §9) and print
+/// per-stream timings plus link utilization.
+fn cmd_transfer_sim(args: &Args) -> Result<()> {
+    let env = match args.get("env").unwrap_or("hpc") {
+        "hpc" => Env::Hpc,
+        "cloud" => Env::Cloud,
+        "local" => Env::Local,
+        other => bail!("unknown env '{other}' (hpc | cloud | local)"),
+    };
+    let streams = args.num("streams", 8).max(1) as usize;
+    let gb: f64 = args
+        .get("gb")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let cap = args.num("cap", streams as u64).max(1) as usize;
+    let seed = args.num("seed", 42);
+    let bytes = (gb * 1e9) as u64;
+
+    let topo = Topology::of(env).with_stream_cap(cap);
+    println!(
+        "transfer-sim: {} × {:.2} GB on {} (stream cap {cap}, seed {seed})",
+        streams,
+        gb,
+        env.name()
+    );
+    for link in &topo.links {
+        println!("  link {:<22} {:>7.3} Gb/s", link.name, link.capacity_gbps);
+    }
+    println!("  bottleneck {:>7.3} Gb/s\n", topo.bottleneck_gbps());
+
+    let mut sim = TransferScheduler::new(topo, seed);
+    for i in 0..streams {
+        sim.submit_at(i as u64, 0, bytes, 0.0);
+    }
+    sim.run_to_completion();
+    print!("{}", report::format_transfer_records(sim.records()));
+    println!();
+    print!("{}", report::format_transfer_stats(&sim.stats()));
     Ok(())
 }
 
@@ -395,6 +456,8 @@ USAGE:
   medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)
   medflow project   [--faults]                    (paper-scale cost projection)
   medflow growth                                  (storage capacity forecast)
+  medflow transfer-sim [--env hpc|cloud|local] [--streams N] [--gb X] [--cap N] [--seed S]
+                                                  (shared-link contention simulation)
   medflow pipelines
   medflow table1 | table2 | table3 | fig1"
     );

@@ -14,8 +14,16 @@
 //! (hence < 1 Gb/s despite the 100 Gb fabric — paper §4) and by the WAN on
 //! the cloud path. Samples are drawn per transfer so repeated experiments
 //! reproduce the paper's mean ± stdev columns.
+//!
+//! [`NetProfile::transfer_time`] samples each transfer **independently**
+//! — it is the single-stream special case. Concurrent data movement
+//! (campaign stage-in storms, overlapping copy-back) goes through the
+//! contention-aware [`scheduler`], which divides the shared component
+//! capacities of [`components`] fairly among active streams
+//! (DESIGN.md §9).
 
 pub mod components;
+pub mod scheduler;
 
 use crate::util::rng::Rng;
 use crate::util::units::gbps_to_bytes_per_sec;

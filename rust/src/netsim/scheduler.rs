@@ -1,0 +1,683 @@
+//! Contention-aware transfer scheduler (DESIGN.md §9): a discrete-event
+//! model of *concurrent* storage→compute data movement.
+//!
+//! [`super::NetProfile::transfer_time`] samples every transfer
+//! independently, which silently overstates throughput the moment more
+//! than one job moves data (the paper's §2.4 numbers are measured on a
+//! shared path — HDD store, fabric/WAN, node disk). This module models
+//! the sharing explicitly:
+//!
+//! * a [`Topology`] is the environment's ordered component capacities
+//!   (disk read, fabric/WAN, disk write) reused verbatim from
+//!   [`super::components::TransferPath`] — every stream traverses every
+//!   component, so the binding constraint is the **bottleneck** link;
+//! * active streams divide the bottleneck capacity by **progressive
+//!   filling** (max-min fair share, [`fair_share`]): adding a stream
+//!   re-splits capacity and re-times every in-flight completion, and a
+//!   stream whose own sampled ceiling is below its fair share donates
+//!   the surplus to the others;
+//! * each host admits at most [`Topology::max_streams_per_host`]
+//!   concurrent streams; excess transfers queue FIFO and their queue
+//!   wait is reported separately from transfer time;
+//! * per-stream ceilings and latencies are sampled from the calibrated
+//!   [`super::NetProfile`] with a deterministic per-transfer RNG, so a
+//!   **single stream reproduces the sampling API exactly** (the Table 1
+//!   calibration is the 1-stream special case — see
+//!   `rust/tests/transfer_parity.rs`).
+//!
+//! The scheduler advances with [`TransferScheduler::advance_to`] /
+//! [`TransferScheduler::next_event_time`] so it can be co-simulated with
+//! a compute backend ([`crate::coordinator::staged`]), overlapping
+//! stage-in, compute, and stage-out across a campaign.
+
+use super::components::TransferPath;
+use super::{Env, NetProfile};
+use crate::util::rng::Rng;
+use crate::util::units::gbps_to_bytes_per_sec;
+
+/// Comparison slack for event times (seconds) — transfers are O(ms..h).
+const EPS: f64 = 1e-9;
+
+/// Remaining-byte threshold below which a stream counts as drained.
+const DONE_BYTES: f64 = 0.5;
+
+/// One shared capacity component on the storage→compute path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub name: &'static str,
+    pub capacity_gbps: f64,
+}
+
+/// An environment's shared-transfer topology: the component capacities
+/// every stream traverses, plus the per-host concurrent-stream cap.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub env: Env,
+    pub links: Vec<LinkSpec>,
+    /// Max concurrent streams a single host may hold open; further
+    /// submissions queue FIFO (DESIGN.md §9: admission).
+    pub max_streams_per_host: usize,
+}
+
+impl Topology {
+    /// Build the topology from the environment's compositional transfer
+    /// path ([`TransferPath::of`]) — disk/fabric/WAN capacities converted
+    /// from MB/s to Gb/s.
+    pub fn of(env: Env) -> Self {
+        let path = TransferPath::of(env);
+        Self {
+            env,
+            links: path
+                .stages
+                .iter()
+                .map(|s| LinkSpec {
+                    name: s.name,
+                    capacity_gbps: s.mbps * 8.0 / 1000.0,
+                })
+                .collect(),
+            max_streams_per_host: 8,
+        }
+    }
+
+    /// Override the per-host concurrent-stream cap (must be ≥ 1).
+    pub fn with_stream_cap(mut self, cap: usize) -> Self {
+        assert!(cap >= 1, "stream cap must be at least 1");
+        self.max_streams_per_host = cap;
+        self
+    }
+
+    /// The binding shared capacity: every stream crosses every link, so
+    /// aggregate throughput can never exceed the slowest component.
+    pub fn bottleneck_gbps(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.capacity_gbps)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Max-min fair allocation of `capacity_gbps` across streams with
+/// individual ceilings `caps` (progressive filling): repeatedly split the
+/// remaining capacity equally; streams whose ceiling is below the equal
+/// share keep their ceiling and donate the surplus to the rest.
+pub fn fair_share(caps: &[f64], capacity_gbps: f64) -> Vec<f64> {
+    let mut rates = vec![0.0; caps.len()];
+    let mut todo: Vec<usize> = (0..caps.len()).collect();
+    let mut left = capacity_gbps;
+    while !todo.is_empty() && left > 1e-12 {
+        let share = left / todo.len() as f64;
+        let (capped, uncapped): (Vec<usize>, Vec<usize>) =
+            todo.into_iter().partition(|&i| caps[i] <= share);
+        if capped.is_empty() {
+            for &i in &uncapped {
+                rates[i] = share;
+            }
+            return rates;
+        }
+        for &i in &capped {
+            rates[i] = caps[i];
+            left -= caps[i];
+        }
+        todo = uncapped;
+    }
+    rates
+}
+
+/// A completed transfer, as recorded by the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferRecord {
+    pub id: u64,
+    pub host: u64,
+    pub bytes: u64,
+    pub submit_s: f64,
+    /// Admission time (stream opened); `start_s - submit_s` is queue wait.
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Sampled first-byte latency (dead time before bytes flow), seconds.
+    pub latency_s: f64,
+    /// Sampled per-stream throughput ceiling (Gb/s) — what this stream
+    /// would sustain alone, before fair-share contention.
+    pub stream_gbps: f64,
+}
+
+impl TransferRecord {
+    /// Time spent queued behind the host's stream cap.
+    pub fn queue_wait_s(&self) -> f64 {
+        self.start_s - self.submit_s
+    }
+
+    /// Wire time (latency + contended byte movement), excluding queue wait.
+    pub fn transfer_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+
+    /// Observed throughput over the wire time (Gb/s).
+    pub fn observed_gbps(&self) -> f64 {
+        let t = self.transfer_s();
+        if t > 0.0 {
+            self.bytes as f64 * 8.0 / 1e9 / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate scheduler telemetry (campaign reports, `medflow transfer-sim`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferStats {
+    pub transfers: usize,
+    pub bytes: u64,
+    /// Latest completion time.
+    pub makespan_s: f64,
+    /// Time with at least one stream open (flowing or in latency).
+    pub busy_s: f64,
+    pub peak_streams: usize,
+    pub mean_queue_wait_s: f64,
+    /// Fraction of the bottleneck link's capacity used while busy (0..1).
+    pub link_utilization: f64,
+    /// Total bytes over the whole makespan (Gb/s) — the Table 1 unit.
+    pub aggregate_gbps: f64,
+}
+
+#[derive(Debug, Clone)]
+struct QueuedTransfer {
+    id: u64,
+    host: u64,
+    bytes: u64,
+    submit_s: f64,
+}
+
+#[derive(Debug, Clone)]
+struct ActiveStream {
+    id: u64,
+    host: u64,
+    bytes: u64,
+    submit_s: f64,
+    start_s: f64,
+    latency_s: f64,
+    stream_gbps: f64,
+    bytes_left: f64,
+}
+
+impl ActiveStream {
+    fn flow_start_s(&self) -> f64 {
+        self.start_s + self.latency_s
+    }
+}
+
+/// The discrete-event transfer scheduler.
+///
+/// Scale note: `admit`/`next_event_time` scan the due-but-blocked queue
+/// prefix per event, so a single-host storm of n transfers costs O(n²)
+/// queue visits overall — fine for campaign simulations up to ~10⁴
+/// transfers; per-host FIFOs are the next step beyond that.
+#[derive(Debug)]
+pub struct TransferScheduler {
+    topo: Topology,
+    profile: NetProfile,
+    bottleneck_gbps: f64,
+    seed: u64,
+    clock: f64,
+    queue: Vec<QueuedTransfer>,
+    active: Vec<ActiveStream>,
+    records: Vec<TransferRecord>,
+    busy_s: f64,
+    bytes_done: u64,
+    peak_streams: usize,
+}
+
+impl TransferScheduler {
+    pub fn new(topo: Topology, seed: u64) -> Self {
+        let profile = NetProfile::of(topo.env);
+        let bottleneck_gbps = topo.bottleneck_gbps();
+        Self {
+            topo,
+            profile,
+            bottleneck_gbps,
+            seed,
+            clock: 0.0,
+            queue: Vec::new(),
+            active: Vec::new(),
+            records: Vec::new(),
+            busy_s: 0.0,
+            bytes_done: 0,
+            peak_streams: 0,
+        }
+    }
+
+    /// Convenience: environment topology with an explicit stream cap.
+    pub fn for_env(env: Env, max_streams_per_host: usize, seed: u64) -> Self {
+        Self::new(Topology::of(env).with_stream_cap(max_streams_per_host), seed)
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn records(&self) -> &[TransferRecord] {
+        &self.records
+    }
+
+    /// Submit a transfer of `bytes` from `host` at absolute time
+    /// `submit_s` (must not be in the scheduler's past). Ids must be
+    /// unique per scheduler — they key the deterministic per-transfer
+    /// sampling and the staged-campaign bookkeeping.
+    pub fn submit_at(&mut self, id: u64, host: u64, bytes: u64, submit_s: f64) {
+        assert!(
+            submit_s + EPS >= self.clock,
+            "transfer {id}: cannot submit in the past (submit {submit_s}, clock {})",
+            self.clock
+        );
+        debug_assert!(
+            !self.queue.iter().any(|q| q.id == id)
+                && !self.active.iter().any(|a| a.id == id)
+                && !self.records.iter().any(|r| r.id == id),
+            "transfer id {id} reused"
+        );
+        let submit_s = submit_s.max(self.clock);
+        // keep the queue sorted by (submit_s, id): binary-search insertion
+        // here keeps admit() a plain scan instead of a per-event sort
+        let pos = self
+            .queue
+            .partition_point(|q| (q.submit_s, q.id) <= (submit_s, id));
+        self.queue.insert(
+            pos,
+            QueuedTransfer {
+                id,
+                host,
+                bytes,
+                submit_s,
+            },
+        );
+        if submit_s <= self.clock + EPS {
+            self.admit();
+        }
+    }
+
+    /// Deterministic per-transfer sampling stream: the ceilings and
+    /// latencies of transfer `id` do not depend on how many competitors
+    /// it has (which makes per-stream throughput provably monotone in
+    /// stream count — asserted by `benches/transfer_contention.rs`).
+    fn transfer_rng(&self, id: u64) -> Rng {
+        Rng::new(self.seed.wrapping_add(id.wrapping_mul(0x9E3779B97F4A7C15)))
+    }
+
+    /// Admit queued transfers due at the current clock, FIFO per host,
+    /// while the host is under its stream cap (the queue is kept sorted
+    /// by (submit_s, id) at insertion). Sampling order matches
+    /// [`NetProfile::transfer_time`]: throughput first, then latency.
+    fn admit(&mut self) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].submit_s > self.clock + EPS {
+                break; // sorted queue: everything after is future too
+            }
+            let host = self.queue[i].host;
+            let host_active = self.active.iter().filter(|a| a.host == host).count();
+            if host_active >= self.topo.max_streams_per_host {
+                i += 1;
+                continue;
+            }
+            let q = self.queue.remove(i);
+            let mut rng = self.transfer_rng(q.id);
+            let stream_gbps = rng
+                .normal_ms(self.profile.throughput_gbps.0, self.profile.throughput_gbps.1)
+                .max(0.01);
+            let latency_s = rng
+                .normal_ms(self.profile.latency_ms.0, self.profile.latency_ms.1)
+                .max(0.01)
+                / 1e3;
+            self.active.push(ActiveStream {
+                id: q.id,
+                host: q.host,
+                bytes: q.bytes,
+                submit_s: q.submit_s,
+                start_s: self.clock,
+                latency_s,
+                stream_gbps,
+                bytes_left: q.bytes as f64,
+            });
+            self.peak_streams = self.peak_streams.max(self.active.len());
+        }
+    }
+
+    /// Per-active-stream rate (Gb/s) under the current composition;
+    /// streams still in their latency window move no bytes.
+    fn current_rates(&self) -> Vec<f64> {
+        let flowing: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| self.clock + EPS >= a.flow_start_s())
+            .map(|(i, _)| i)
+            .collect();
+        let caps: Vec<f64> = flowing.iter().map(|&i| self.active[i].stream_gbps).collect();
+        let shares = fair_share(&caps, self.bottleneck_gbps);
+        let mut rates = vec![0.0; self.active.len()];
+        for (k, &i) in flowing.iter().enumerate() {
+            rates[i] = shares[k];
+        }
+        rates
+    }
+
+    /// Time of the next state change: a future arrival, a latency window
+    /// ending, or an in-flight stream draining at its current rate.
+    pub fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        // the queue is sorted by (submit_s, id): the first future entry
+        // is the earliest arrival (entries before it are due-but-blocked
+        // and wake on a completion, not a timer)
+        if let Some(q) = self.queue.iter().find(|q| q.submit_s > self.clock + EPS) {
+            t = t.min(q.submit_s);
+        }
+        let rates = self.current_rates();
+        for (a, &r) in self.active.iter().zip(&rates) {
+            if self.clock + EPS < a.flow_start_s() {
+                t = t.min(a.flow_start_s());
+            } else if r > 0.0 {
+                t = t.min(self.clock + a.bytes_left.max(0.0) / gbps_to_bytes_per_sec(r));
+            }
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Move bytes at the current allocation from `clock` to `target`
+    /// (no event may occur strictly inside the interval).
+    fn integrate(&mut self, target: f64) {
+        let dt = target - self.clock;
+        if dt <= 0.0 {
+            return;
+        }
+        if !self.active.is_empty() {
+            self.busy_s += dt;
+        }
+        let rates = self.current_rates();
+        for (a, r) in self.active.iter_mut().zip(rates) {
+            if r > 0.0 {
+                a.bytes_left -= gbps_to_bytes_per_sec(r) * dt;
+            }
+        }
+    }
+
+    fn complete_finished(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            if self.clock + EPS >= a.flow_start_s() && a.bytes_left <= DONE_BYTES {
+                let a = self.active.swap_remove(i);
+                self.bytes_done += a.bytes;
+                self.records.push(TransferRecord {
+                    id: a.id,
+                    host: a.host,
+                    bytes: a.bytes,
+                    submit_s: a.submit_s,
+                    start_s: a.start_s,
+                    end_s: self.clock,
+                    latency_s: a.latency_s,
+                    stream_gbps: a.stream_gbps,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Advance to absolute time `t`, processing every event (arrival,
+    /// latency expiry, completion, admission) up to and including `t`.
+    /// The clock ends at exactly `t`. Completions land in [`Self::records`].
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t + EPS >= self.clock,
+            "cannot advance backwards (to {t}, clock {})",
+            self.clock
+        );
+        loop {
+            self.admit();
+            let target = match self.next_event_time() {
+                Some(x) if x <= t => x,
+                _ => t,
+            };
+            self.integrate(target);
+            self.clock = self.clock.max(target);
+            self.complete_finished();
+            if target + EPS >= t {
+                self.admit();
+                return;
+            }
+        }
+    }
+
+    /// Run until every submitted transfer has completed.
+    pub fn run_to_completion(&mut self) -> &[TransferRecord] {
+        while let Some(t) = self.next_event_time() {
+            self.advance_to(t);
+        }
+        &self.records
+    }
+
+    /// Aggregate telemetry over everything completed so far.
+    pub fn stats(&self) -> TransferStats {
+        let makespan_s = self.records.iter().map(|r| r.end_s).fold(0.0, f64::max);
+        let gbits = self.bytes_done as f64 * 8.0 / 1e9;
+        let waits: f64 = self.records.iter().map(|r| r.queue_wait_s()).sum();
+        TransferStats {
+            transfers: self.records.len(),
+            bytes: self.bytes_done,
+            makespan_s,
+            busy_s: self.busy_s,
+            peak_streams: self.peak_streams,
+            mean_queue_wait_s: if self.records.is_empty() {
+                0.0
+            } else {
+                waits / self.records.len() as f64
+            },
+            link_utilization: if self.busy_s > 0.0 {
+                gbits / (self.bottleneck_gbps * self.busy_s)
+            } else {
+                0.0
+            },
+            aggregate_gbps: if makespan_s > 0.0 {
+                gbits / makespan_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// The paper's §2.4 bandwidth experiment through the scheduler: `n`
+/// serialized 1 GB copies (stream cap 1), per-copy observed Gb/s — the
+/// scheduler-side analogue of [`super::bandwidth_experiment`], shared by
+/// the calibration gates in `rust/tests/transfer_parity.rs`,
+/// `benches/transfer_contention.rs`, and this module's tests so the
+/// Table 1 parity check has exactly one implementation.
+pub fn scheduler_bandwidth_experiment(env: Env, n: usize, seed: u64) -> Vec<f64> {
+    let mut sim = TransferScheduler::for_env(env, 1, seed);
+    let gb = 1_000_000_000u64;
+    for i in 0..n {
+        sim.submit_at(i as u64, 0, gb, 0.0);
+    }
+    sim.run_to_completion();
+    sim.records().iter().map(|r| r.observed_gbps()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::mean_std;
+
+    const GB: u64 = 1_000_000_000;
+
+    fn run_n(env: Env, n: usize, bytes: u64, seed: u64) -> (Vec<TransferRecord>, TransferStats) {
+        let mut sim = TransferScheduler::for_env(env, n.max(1), seed);
+        for i in 0..n {
+            sim.submit_at(i as u64, 0, bytes, 0.0);
+        }
+        sim.run_to_completion();
+        let mut recs = sim.records().to_vec();
+        recs.sort_by_key(|r| r.id);
+        (recs, sim.stats())
+    }
+
+    #[test]
+    fn single_stream_is_the_sampling_special_case() {
+        for env in Env::all() {
+            let (recs, _) = run_n(env, 1, GB, 7);
+            let r = &recs[0];
+            let expect = r.latency_s + GB as f64 / gbps_to_bytes_per_sec(r.stream_gbps);
+            assert!(
+                (r.transfer_s() - expect).abs() < 1e-6 * expect,
+                "{env:?}: got {} expect {expect}",
+                r.transfer_s()
+            );
+            assert_eq!(r.queue_wait_s(), 0.0);
+        }
+    }
+
+    #[test]
+    fn single_stream_mean_matches_table1() {
+        for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
+            let (mean, _) = mean_std(&scheduler_bandwidth_experiment(env, 100, 42));
+            assert!((mean - want).abs() < 0.05, "{env:?}: mean {mean} want {want}");
+        }
+    }
+
+    #[test]
+    fn contention_slows_every_stream() {
+        // the same transfer id takes at least as long with a competitor
+        let (solo, _) = run_n(Env::Hpc, 1, GB, 3);
+        let (pair, _) = run_n(Env::Hpc, 2, GB, 3);
+        assert!(pair[0].transfer_s() >= solo[0].transfer_s() - 1e-9);
+        assert!(pair[0].observed_gbps() <= solo[0].observed_gbps() + 1e-9);
+    }
+
+    #[test]
+    fn aggregate_never_exceeds_bottleneck() {
+        for env in Env::all() {
+            for n in [1usize, 2, 4, 8, 16] {
+                let cap = Topology::of(env).bottleneck_gbps();
+                let (_, stats) = run_n(env, n, 200_000_000, 11);
+                assert!(
+                    stats.aggregate_gbps <= cap * (1.0 + 1e-9),
+                    "{env:?} n={n}: {} > {cap}",
+                    stats.aggregate_gbps
+                );
+                assert!(stats.link_utilization <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn per_stream_throughput_monotone_in_stream_count() {
+        // max-min fair share is population-monotone: adding a competitor
+        // can never speed an existing stream up. Sampling is keyed by
+        // transfer id, so stream i sees identical draws at every sweep
+        // point and the comparison is pointwise, not on the (noisy) mean.
+        for env in Env::all() {
+            let mut prev: Vec<f64> = Vec::new();
+            for n in [1usize, 2, 4, 8] {
+                let (recs, _) = run_n(env, n, GB, 5);
+                let obs: Vec<f64> = recs.iter().map(|r| r.observed_gbps()).collect();
+                for (id, (&now, &before)) in obs.iter().zip(&prev).enumerate() {
+                    assert!(
+                        now <= before + 1e-6,
+                        "{env:?} n={n} stream {id}: {now} > {before}"
+                    );
+                }
+                prev = obs;
+            }
+        }
+    }
+
+    #[test]
+    fn progressive_filling_resplits_on_arrival() {
+        // a competitor arriving mid-flight delays the first stream, but
+        // less than full serialization would. Cloud: two ~0.33 Gb/s
+        // streams always exceed the 0.504 Gb/s WAN, so the re-split is
+        // guaranteed (on HPC two streams can fit under the bottleneck).
+        let mut solo = TransferScheduler::for_env(Env::Cloud, 4, 9);
+        solo.submit_at(0, 0, GB, 0.0);
+        solo.run_to_completion();
+        let solo_end = solo.records()[0].end_s;
+
+        let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 9);
+        sim.submit_at(0, 0, GB, 0.0);
+        sim.submit_at(1, 0, GB, solo_end / 2.0);
+        sim.run_to_completion();
+        let r0 = sim.records().iter().find(|r| r.id == 0).unwrap().clone();
+        let r1 = sim.records().iter().find(|r| r.id == 1).unwrap().clone();
+        assert!(r0.end_s > solo_end, "arrival must re-split capacity");
+        assert!(r1.start_s > 0.0 && r1.end_s > r0.end_s);
+        assert!(r0.end_s < solo_end * 2.0, "sharing beats serialization");
+    }
+
+    #[test]
+    fn host_cap_queues_fifo() {
+        let mut sim = TransferScheduler::for_env(Env::Local, 1, 13);
+        sim.submit_at(0, 0, 100_000_000, 0.0);
+        sim.submit_at(1, 0, 100_000_000, 0.0);
+        sim.run_to_completion();
+        let mut recs = sim.records().to_vec();
+        recs.sort_by_key(|r| r.id);
+        assert!(recs[1].start_s + 1e-9 >= recs[0].end_s, "cap 1 must serialize");
+        assert!(recs[1].queue_wait_s() > 0.0);
+        assert_eq!(sim.stats().peak_streams, 1);
+    }
+
+    #[test]
+    fn independent_hosts_do_not_share_stream_caps() {
+        let mut sim = TransferScheduler::for_env(Env::Local, 1, 17);
+        sim.submit_at(0, 0, 100_000_000, 0.0);
+        sim.submit_at(1, 1, 100_000_000, 0.0);
+        sim.run_to_completion();
+        assert_eq!(sim.stats().peak_streams, 2, "caps are per host");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (a, _) = run_n(Env::Cloud, 4, 300_000_000, 21);
+        let (b, _) = run_n(Env::Cloud, 4, 300_000_000, 21);
+        let (c, _) = run_n(Env::Cloud, 4, 300_000_000, 22);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fair_share_splits_and_caps() {
+        let even = fair_share(&[10.0, 10.0], 1.0);
+        assert!((even[0] - 0.5).abs() < 1e-12 && (even[1] - 0.5).abs() < 1e-12);
+        let capped = fair_share(&[0.2, 10.0], 1.0);
+        assert!((capped[0] - 0.2).abs() < 1e-12, "slow stream keeps its ceiling");
+        assert!((capped[1] - 0.8).abs() < 1e-12, "surplus goes to the fast stream");
+        let under = fair_share(&[0.1, 0.1], 1.0);
+        assert!((under[0] - 0.1).abs() < 1e-12 && (under[1] - 0.1).abs() < 1e-12);
+        assert!(fair_share(&[], 1.0).is_empty());
+        for n in 1..6 {
+            let caps = vec![5.0; n];
+            let total: f64 = fair_share(&caps, 2.0).iter().sum();
+            assert!((total - 2.0).abs() < 1e-9, "allocation exhausts capacity");
+        }
+    }
+
+    #[test]
+    fn stats_account_all_completed_bytes() {
+        let (recs, stats) = run_n(Env::Hpc, 3, 50_000_000, 31);
+        assert_eq!(stats.transfers, 3);
+        assert_eq!(stats.bytes, 150_000_000);
+        assert!(stats.makespan_s >= recs.iter().map(|r| r.end_s).fold(0.0, f64::max) - 1e-9);
+        assert!(stats.busy_s > 0.0 && stats.busy_s <= stats.makespan_s + 1e-9);
+        assert!(stats.aggregate_gbps > 0.0);
+    }
+
+    #[test]
+    fn topology_bottlenecks_match_components() {
+        // HPC: node HDD write (150 MB/s → 1.2 Gb/s); cloud: WAN
+        assert!((Topology::of(Env::Hpc).bottleneck_gbps() - 1.2).abs() < 1e-9);
+        assert!((Topology::of(Env::Cloud).bottleneck_gbps() - 0.504).abs() < 1e-9);
+        assert!((Topology::of(Env::Local).bottleneck_gbps() - 1.36).abs() < 1e-9);
+    }
+}

@@ -82,7 +82,8 @@ impl NiftiImage {
             }
             Datatype::Int16 => {
                 for v in &self.data {
-                    out.extend_from_slice(&(v.round().clamp(-32768.0, 32767.0) as i16).to_le_bytes());
+                    let q = v.round().clamp(-32768.0, 32767.0) as i16;
+                    out.extend_from_slice(&q.to_le_bytes());
                 }
             }
             Datatype::Uint8 => {

@@ -80,7 +80,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "prequal",
             version: "1.0.0",
             input: Dwi,
-            resources: ResourceSpec { cores: 4, ram_gb: 16, minutes_mean: 180.0, minutes_std: 30.0 },
+            resources: ResourceSpec {
+                cores: 4,
+                ram_gb: 16,
+                minutes_mean: 180.0,
+                minutes_std: 30.0,
+            },
             artifact: Some("dwi_preproc"),
             output_bytes: mb(800),
         },
@@ -104,7 +109,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "tractseg",
             version: "2.9",
             input: DwiAndPrior("prequal"),
-            resources: ResourceSpec { cores: 4, ram_gb: 24, minutes_mean: 120.0, minutes_std: 20.0 },
+            resources: ResourceSpec {
+                cores: 4,
+                ram_gb: 24,
+                minutes_mean: 120.0,
+                minutes_std: 20.0,
+            },
             artifact: None,
             output_bytes: mb(500),
         },
@@ -136,7 +146,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "wm_atlas",
             version: "1.5",
             input: DwiAndPrior("prequal"),
-            resources: ResourceSpec { cores: 2, ram_gb: 16, minutes_mean: 200.0, minutes_std: 40.0 },
+            resources: ResourceSpec {
+                cores: 2,
+                ram_gb: 16,
+                minutes_mean: 200.0,
+                minutes_std: 40.0,
+            },
             artifact: None,
             output_bytes: mb(600),
         },
@@ -144,7 +159,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "connectome_special",
             version: "1.0",
             input: T1wAndDwi,
-            resources: ResourceSpec { cores: 8, ram_gb: 32, minutes_mean: 300.0, minutes_std: 50.0 },
+            resources: ResourceSpec {
+                cores: 8,
+                ram_gb: 32,
+                minutes_mean: 300.0,
+                minutes_std: 50.0,
+            },
             artifact: None,
             output_bytes: mb(1_200),
         },
@@ -152,7 +172,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "francois_special",
             version: "1.2",
             input: DwiAndPrior("prequal"),
-            resources: ResourceSpec { cores: 8, ram_gb: 48, minutes_mean: 480.0, minutes_std: 80.0 },
+            resources: ResourceSpec {
+                cores: 8,
+                ram_gb: 48,
+                minutes_mean: 480.0,
+                minutes_std: 80.0,
+            },
             artifact: None,
             output_bytes: mb(2_500),
         },
@@ -160,7 +185,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "noddi",
             version: "1.1",
             input: DwiAndPrior("prequal"),
-            resources: ResourceSpec { cores: 4, ram_gb: 24, minutes_mean: 240.0, minutes_std: 35.0 },
+            resources: ResourceSpec {
+                cores: 4,
+                ram_gb: 24,
+                minutes_mean: 240.0,
+                minutes_std: 35.0,
+            },
             artifact: None,
             output_bytes: mb(400),
         },
@@ -168,7 +198,12 @@ pub fn registry() -> Vec<PipelineSpec> {
             name: "bedpostx",
             version: "6.0",
             input: DwiAndPrior("prequal"),
-            resources: ResourceSpec { cores: 8, ram_gb: 32, minutes_mean: 600.0, minutes_std: 90.0 },
+            resources: ResourceSpec {
+                cores: 8,
+                ram_gb: 32,
+                minutes_mean: 600.0,
+                minutes_std: 90.0,
+            },
             artifact: None,
             output_bytes: mb(1_500),
         },

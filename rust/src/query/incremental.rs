@@ -69,7 +69,11 @@ enum CachedReason {
 }
 
 impl CachedSkip {
-    fn from_reason(reason: &SkipReason, generation: u64, processed: &ProcessedIndex) -> Option<Self> {
+    fn from_reason(
+        reason: &SkipReason,
+        generation: u64,
+        processed: &ProcessedIndex,
+    ) -> Option<Self> {
         let (reason, dep_version) = match reason {
             SkipReason::NoT1w => (CachedReason::NoT1w, 0),
             SkipReason::NoDwi => (CachedReason::NoDwi, 0),
@@ -470,7 +474,8 @@ mod tests {
         let (r1, _) = engine.query(&ds, &fs, 2).unwrap();
         assert_eq!(r1.runnable.len(), 1);
         for job in &r1.runnable {
-            engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+            let key = SessionKey::new(&job.subject, job.session.as_deref());
+            engine.record_completion("freesurfer", &key);
         }
         let (r2, stats) = engine.query(&ds, &fs, 2).unwrap();
         assert!(r2.runnable.is_empty());

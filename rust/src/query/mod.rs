@@ -45,7 +45,9 @@ impl JobSpec {
     /// Stable instance id `dataset/sub[/ses]/pipeline`.
     pub fn instance_id(&self) -> String {
         match &self.session {
-            Some(ses) => format!("{}/sub-{}/ses-{}/{}", self.dataset, self.subject, ses, self.pipeline),
+            Some(ses) => {
+                format!("{}/sub-{}/ses-{}/{}", self.dataset, self.subject, ses, self.pipeline)
+            }
             None => format!("{}/sub-{}/{}", self.dataset, self.subject, self.pipeline),
         }
     }
@@ -367,7 +369,8 @@ mod tests {
     use std::path::Path;
 
     fn tmpds(tag: &str) -> BidsDataset {
-        let parent = std::env::temp_dir().join(format!("medflow_query_{tag}_{}", std::process::id()));
+        let parent =
+            std::env::temp_dir().join(format!("medflow_query_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&parent).unwrap();
         BidsDataset::create(&parent, "DS").unwrap()
     }

@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::archive::{solutions, Archive};
 use crate::container::platforms;
 use crate::cost::{compute_cost, instance_hourly_rate};
+use crate::netsim::scheduler::{TransferRecord, TransferStats};
 use crate::netsim::{bandwidth_experiment, latency_experiment, Env};
 use crate::pipeline::by_name;
 use crate::runtime::Runtime;
@@ -39,7 +40,12 @@ pub struct Table1Column {
 /// Run the §2.4 experiment: 6 MASiVar T1w scans through the
 /// Freesurfer-like pipeline in each environment; 1 GB × `n_copies`
 /// bandwidth probe; 64 B × `n_pings` latency probe.
-pub fn table1(runtime: Option<&Runtime>, seed: u64, n_copies: usize, n_pings: usize) -> Result<Vec<Table1Column>> {
+pub fn table1(
+    runtime: Option<&Runtime>,
+    seed: u64,
+    n_copies: usize,
+    n_pings: usize,
+) -> Result<Vec<Table1Column>> {
     let spec = by_name("freesurfer").expect("registry has freesurfer");
     let scans = masivar_six_scans(seed);
     let mut cols = Vec::new();
@@ -308,7 +314,8 @@ pub fn fig1_csv(points: &[Fig1Point]) -> String {
 
 /// ASCII rendering of Fig. 1 (cost vs efficiency quadrant).
 pub fn format_fig1(points: &[Fig1Point]) -> String {
-    let mut s = String::from("Fig 1. Tradeoffs (cost→ vs compute efficiency↑; B=bandwidth, X=complexity)\n");
+    let mut s =
+        String::from("Fig 1. Tradeoffs (cost→ vs compute efficiency↑; B=bandwidth, X=complexity)\n");
     for p in points {
         s.push_str(&format!(
             "{:<20} eff={:>4.1} bw={:>4.1} cost={:>4.1} cx={:>4.1}  ",
@@ -318,6 +325,51 @@ pub fn format_fig1(points: &[Fig1Point]) -> String {
         s.push_str(&format!("|{stars}\n"));
     }
     s
+}
+
+/// Render the transfer scheduler's per-stream records as a table
+/// (`medflow transfer-sim`; DESIGN.md §9).
+pub fn format_transfer_records(records: &[TransferRecord]) -> String {
+    let mut rows = records.to_vec();
+    rows.sort_by(|a, b| {
+        (a.start_s, a.id)
+            .partial_cmp(&(b.start_s, b.id))
+            .expect("finite times")
+    });
+    let mut s = format!(
+        "{:>4}{:>12}{:>12}{:>12}{:>12}{:>14}{:>14}\n",
+        "id", "bytes", "wait", "start (s)", "end (s)", "wire time", "observed Gb/s"
+    );
+    for r in &rows {
+        s.push_str(&format!(
+            "{:>4}{:>12}{:>12}{:>12.3}{:>12.3}{:>14}{:>14.3}\n",
+            r.id,
+            crate::util::units::fmt_bytes(r.bytes),
+            crate::util::units::fmt_duration(r.queue_wait_s()),
+            r.start_s,
+            r.end_s,
+            crate::util::units::fmt_duration(r.transfer_s()),
+            r.observed_gbps()
+        ));
+    }
+    s
+}
+
+/// Render aggregate transfer-scheduler telemetry (campaign reports and
+/// `medflow transfer-sim`): link utilization, aggregate throughput,
+/// concurrency, queueing.
+pub fn format_transfer_stats(stats: &TransferStats) -> String {
+    format!(
+        "transfers {:>5}   bytes {:>10}   makespan {:>10}\n\
+         peak streams {:>2}   link utilization {:>5.1}%   aggregate {:.3} Gb/s   mean queue wait {}\n",
+        stats.transfers,
+        crate::util::units::fmt_bytes(stats.bytes),
+        crate::util::units::fmt_duration(stats.makespan_s),
+        stats.peak_streams,
+        stats.link_utilization * 100.0,
+        stats.aggregate_gbps,
+        crate::util::units::fmt_duration(stats.mean_queue_wait_s),
+    )
 }
 
 /// Table 1 ground truth from the paper, used by tests/benches to check the
@@ -380,6 +432,22 @@ mod tests {
         for s in ["XNAT", "COINS", "LORIS", "NITRC-IR", "OpenNeuro", "LONI IDA", "Datalad", "CLI"] {
             assert!(t.contains(s), "{s}");
         }
+    }
+
+    #[test]
+    fn transfer_report_renders_stats_and_records() {
+        use crate::netsim::scheduler::TransferScheduler;
+        let mut sim = TransferScheduler::for_env(Env::Hpc, 2, 1);
+        for i in 0..3u64 {
+            sim.submit_at(i, 0, 100_000_000, 0.0);
+        }
+        sim.run_to_completion();
+        let recs = format_transfer_records(sim.records());
+        assert!(recs.contains("observed Gb/s"), "{recs}");
+        assert_eq!(recs.lines().count(), 4, "header + 3 streams:\n{recs}");
+        let stats = format_transfer_stats(&sim.stats());
+        assert!(stats.contains("link utilization"), "{stats}");
+        assert!(stats.contains("peak streams  2"), "{stats}");
     }
 
     #[test]

@@ -160,7 +160,10 @@ impl Runtime {
             let path = artifact_dir.join(&spec.file);
             let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
             if !spec.sha256.is_empty() && sha256_hex(text.as_bytes()) != spec.sha256 {
-                bail!("artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)", spec.name);
+                bail!(
+                    "artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)",
+                    spec.name
+                );
             }
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().context("non-utf8 path")?,
@@ -192,7 +195,10 @@ impl Runtime {
             let path = artifact_dir.join(&spec.file);
             let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
             if !spec.sha256.is_empty() && sha256_hex(text.as_bytes()) != spec.sha256 {
-                bail!("artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)", spec.name);
+                bail!(
+                    "artifact '{}' fails integrity check (stale artifacts/? re-run make artifacts)",
+                    spec.name
+                );
             }
         }
         bail!(

@@ -51,7 +51,9 @@ pub fn instance_script(job: &JobSpec, container_sif: &str, user: &str) -> String
         s.push_str(&format!(
             "sha_dst=$(sha256sum \"$SCRATCH/$(basename {p})\" | cut -d' ' -f1)\n"
         ));
-        s.push_str("[ \"$sha_src\" = \"$sha_dst\" ] || { echo 'CHECKSUM MISMATCH' >&2; exit 64; }\n");
+        s.push_str(
+            "[ \"$sha_src\" = \"$sha_dst\" ] || { echo 'CHECKSUM MISMATCH' >&2; exit 64; }\n",
+        );
     }
     s.push_str("\n# --- run containerized pipeline ---\n");
     s.push_str(&format!(
@@ -69,7 +71,9 @@ pub fn instance_script(job: &JobSpec, container_sif: &str, user: &str) -> String
     s.push_str("for f in \"$SCRATCH\"/out/*; do\n");
     s.push_str("  sha_a=$(sha256sum \"$f\" | cut -d' ' -f1)\n  cp \"$f\" \"$OUT/\"\n");
     s.push_str("  sha_b=$(sha256sum \"$OUT/$(basename \"$f\")\" | cut -d' ' -f1)\n");
-    s.push_str("  [ \"$sha_a\" = \"$sha_b\" ] || { echo 'CHECKSUM MISMATCH' >&2; exit 64; }\ndone\n");
+    s.push_str(
+        "  [ \"$sha_a\" = \"$sha_b\" ] || { echo 'CHECKSUM MISMATCH' >&2; exit 64; }\ndone\n",
+    );
     s.push_str(&format!(
         "medflow provenance --pipeline {} --user {user} --out \"$OUT\"\n",
         job.pipeline
@@ -82,7 +86,10 @@ pub fn slurm_array_script(jobs: &[JobSpec], opts: &SlurmOptions) -> String {
     let n = jobs.len();
     let mut s = String::new();
     s.push_str("#!/bin/bash\n");
-    s.push_str(&format!("#SBATCH --job-name=medflow_{}\n", jobs.first().map(|j| j.pipeline.as_str()).unwrap_or("empty")));
+    s.push_str(&format!(
+        "#SBATCH --job-name=medflow_{}\n",
+        jobs.first().map(|j| j.pipeline.as_str()).unwrap_or("empty")
+    ));
     s.push_str(&format!("#SBATCH --partition={}\n", opts.partition));
     s.push_str(&format!("#SBATCH --account={}\n", opts.account));
     s.push_str(&format!("#SBATCH --time={}:00:00\n", opts.time_limit_hours));

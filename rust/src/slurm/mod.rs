@@ -143,6 +143,10 @@ pub struct Scheduler {
     array_running: BTreeMap<u64, u32>,
     core_seconds_capacity: f64,
     core_seconds_used: f64,
+    /// Submissions arrived since the last scheduling pass — lets
+    /// [`Self::next_event_time`] report "a scheduling attempt is due
+    /// now" exactly once instead of livelocking on blocked jobs.
+    needs_schedule: bool,
     pub policy: Policy,
 }
 
@@ -171,6 +175,7 @@ impl Scheduler {
             array_running: BTreeMap::new(),
             core_seconds_capacity: 0.0,
             core_seconds_used: 0.0,
+            needs_schedule: false,
             policy,
             spec,
         }
@@ -198,6 +203,7 @@ impl Scheduler {
             self.clock
         );
         self.pending.push(job);
+        self.needs_schedule = true;
     }
 
     pub fn pending_count(&self) -> usize {
@@ -272,6 +278,7 @@ impl Scheduler {
         if self.in_maintenance(self.clock) {
             return;
         }
+        self.needs_schedule = false;
         // arrivals only — priority keys computed ONCE per job, not per
         // comparison (the BTreeMap lookup inside priority() dominated the
         // sort before; see EXPERIMENTS.md §Perf L3)
@@ -352,11 +359,20 @@ impl Scheduler {
         f64::INFINITY
     }
 
-    /// Advance to the next event (arrival, completion, or maintenance end);
-    /// returns false when nothing remains.
-    pub fn step(&mut self) -> bool {
-        self.schedule();
-        // next event time
+    /// Time of the next event (arrival, completion, or maintenance end),
+    /// or `Some(clock)` when submissions arrived since the last
+    /// scheduling pass and could be due immediately. `None` means the
+    /// simulation cannot progress (drained, or deadlocked on an
+    /// oversized job). Used by the staged-campaign co-simulation
+    /// ([`crate::coordinator::staged`]) to interleave this scheduler
+    /// with the transfer scheduler without overshooting either.
+    pub fn next_event_time(&self) -> Option<f64> {
+        if self.needs_schedule
+            && !self.in_maintenance(self.clock)
+            && self.pending.iter().any(|j| j.submit_s <= self.clock)
+        {
+            return Some(self.clock);
+        }
         let next_end = self
             .running
             .iter()
@@ -376,16 +392,12 @@ impl Scheduler {
             .map(|w| w.end_s)
             .fold(f64::INFINITY, f64::min);
         let next_t = next_end.min(next_arrival).min(next_maint_end);
-        if !next_t.is_finite() {
-            // nothing running, nothing arriving: if pending non-empty we are
-            // deadlocked (job larger than any node) — surface by returning
-            // false with pending jobs left.
-            return false;
-        }
-        let dt = next_t - self.clock;
-        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
-        self.clock = next_t;
-        // complete finished jobs
+        next_t.is_finite().then_some(next_t)
+    }
+
+    /// Release resources of every running job whose end time has passed
+    /// and append its [`JobRecord`].
+    fn complete_finished(&mut self) {
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].end_s <= self.clock {
@@ -407,7 +419,51 @@ impl Scheduler {
                 i += 1;
             }
         }
+    }
+
+    /// Advance to the next event (arrival, completion, or maintenance end);
+    /// returns false when nothing remains.
+    pub fn step(&mut self) -> bool {
+        self.schedule();
+        let Some(next_t) = self.next_event_time() else {
+            // nothing running, nothing arriving: if pending non-empty we are
+            // deadlocked (job larger than any node) — surface by returning
+            // false with pending jobs left.
+            return false;
+        };
+        let dt = next_t - self.clock;
+        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
+        self.clock = next_t;
+        self.complete_finished();
         true
+    }
+
+    /// Advance the simulation to absolute time `t`, processing every
+    /// event up to and including `t`; the clock ends at exactly `t`.
+    /// Unlike [`Self::step`] this never overshoots, so the staged
+    /// campaign co-simulation can submit jobs discovered by the transfer
+    /// scheduler at times between slurm events.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t + 1e-9 >= self.clock,
+            "cannot advance backwards (to {t}, clock {})",
+            self.clock
+        );
+        loop {
+            self.schedule();
+            let target = match self.next_event_time() {
+                Some(x) if x <= t => x,
+                _ => t,
+            };
+            let dt = (target - self.clock).max(0.0);
+            self.core_seconds_capacity += self.spec.total_cores() as f64 * dt;
+            self.clock = self.clock.max(target);
+            self.complete_finished();
+            if target + 1e-9 >= t {
+                self.schedule();
+                return;
+            }
+        }
     }
 
     /// Run until all submitted jobs have completed (or deadlock).
@@ -623,6 +679,29 @@ mod tests {
         assert_eq!(c.nodes.len(), 750);
         let cores = c.total_cores();
         assert!((20_000..21_000).contains(&cores), "{cores}");
+    }
+
+    #[test]
+    fn advance_to_processes_events_without_overshoot() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.submit(job(2, 4, 100.0, 0.0));
+        assert_eq!(s.next_event_time(), Some(0.0), "scheduling due now");
+        s.advance_to(50.0);
+        assert_eq!(s.clock(), 50.0);
+        assert_eq!(s.records().len(), 0);
+        assert_eq!(s.running_count(), 1);
+        s.advance_to(100.0);
+        assert_eq!(s.records().len(), 1, "first job completes at 100");
+        assert_eq!(s.running_count(), 1, "second starts at 100");
+        s.advance_to(250.0);
+        assert_eq!(s.records().len(), 2);
+        assert_eq!(s.makespan(), 200.0);
+        // mid-simulation submission at the current clock is legal
+        s.submit(job(3, 1, 10.0, 250.0));
+        assert_eq!(s.next_event_time(), Some(250.0));
+        s.advance_to(260.0);
+        assert_eq!(s.records().len(), 3);
     }
 
     #[test]

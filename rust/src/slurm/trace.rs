@@ -200,8 +200,10 @@ mod tests {
             mean_interarrival_s: 5.0,
             ..Default::default()
         };
-        let small = run_trace(ClusterSpec::small(2, 8, 64), Policy::default(), generate_trace(&spec, 9));
-        let big = run_trace(ClusterSpec::small(32, 8, 64), Policy::default(), generate_trace(&spec, 9));
+        let small =
+            run_trace(ClusterSpec::small(2, 8, 64), Policy::default(), generate_trace(&spec, 9));
+        let big =
+            run_trace(ClusterSpec::small(32, 8, 64), Policy::default(), generate_trace(&spec, 9));
         assert!(big.wait_mean_s < small.wait_mean_s);
         assert!(big.makespan_s <= small.makespan_s);
     }

@@ -28,8 +28,13 @@ impl Rng {
     }
 
     /// Uniform in [0, n). n must be > 0.
+    ///
+    /// A real `assert!`, not `debug_assert!`: release builds used to
+    /// return 0 for `below(0)` — an out-of-range value for an empty
+    /// range — which surfaced far from the call site (e.g. as an opaque
+    /// index panic in [`Self::choose`]).
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::below(0): the range [0, 0) is empty");
         // multiply-shift; bias negligible for our n << 2^64
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
@@ -56,8 +61,10 @@ impl Rng {
         -self.next_f64().max(1e-12).ln() / rate
     }
 
-    /// Pick a random element.
+    /// Pick a random element. Panics (with a clear message) on an empty
+    /// slice — there is nothing to choose.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty(), "Rng::choose on an empty slice");
         &items[self.below(items.len() as u64) as usize]
     }
 
@@ -114,6 +121,30 @@ mod tests {
         let mut r = Rng::new(7);
         for _ in 0..10_000 {
             assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::below(0)")]
+    fn below_zero_panics_with_clear_message() {
+        let mut r = Rng::new(1);
+        r.below(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::choose on an empty slice")]
+    fn choose_empty_panics_with_clear_message() {
+        let mut r = Rng::new(1);
+        let empty: [u32; 0] = [];
+        r.choose(&empty);
+    }
+
+    #[test]
+    fn choose_returns_elements_from_the_slice() {
+        let mut r = Rng::new(2);
+        let items = [10, 20, 30];
+        for _ in 0..100 {
+            assert!(items.contains(r.choose(&items)));
         }
     }
 

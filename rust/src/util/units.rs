@@ -36,17 +36,54 @@ pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
 }
 
 /// Format seconds as "1h 02m", "3m 20s", "450 ms", …
+///
+/// Sub-unit remainders are rounded and the carry propagated *before*
+/// formatting: naively rounding `secs % 60.0` in the format string turns
+/// 119.7 into "1m 60s" (and 3599.5 into "59m 60s"). The same rounding
+/// can overflow a whole unit just under a branch boundary (59.97 →
+/// "60.0 s"), so those render as the next unit up instead.
 pub fn fmt_duration(secs: f64) -> String {
     if secs < 0.001 {
-        format!("{:.1} µs", secs * 1e6)
+        let s = format!("{:.1} µs", secs * 1e6);
+        if s == "1000.0 µs" {
+            "1.0 ms".to_string()
+        } else {
+            s
+        }
     } else if secs < 1.0 {
-        format!("{:.1} ms", secs * 1e3)
+        let s = format!("{:.1} ms", secs * 1e3);
+        if s == "1000.0 ms" {
+            "1.0 s".to_string()
+        } else {
+            s
+        }
     } else if secs < 60.0 {
-        format!("{secs:.1} s")
+        let s = format!("{secs:.1} s");
+        if s == "60.0 s" {
+            "1m 00s".to_string()
+        } else {
+            s
+        }
     } else if secs < 3600.0 {
-        format!("{}m {:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+        let mut mins = (secs / 60.0) as u64;
+        let mut s = (secs % 60.0).round() as u64;
+        if s == 60 {
+            s = 0;
+            mins += 1;
+        }
+        if mins == 60 {
+            "1h 00m".to_string()
+        } else {
+            format!("{mins}m {s:02}s")
+        }
     } else {
-        format!("{}h {:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+        let mut hours = (secs / 3600.0) as u64;
+        let mut mins = ((secs % 3600.0) / 60.0).round() as u64;
+        if mins == 60 {
+            mins = 0;
+            hours += 1;
+        }
+        format!("{hours}h {mins:02}m")
     }
 }
 
@@ -64,12 +101,16 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 }
 
 /// Percentile (linear interpolation), p in [0, 100].
+///
+/// NaN samples (reachable from any f64 telemetry) sort after every
+/// number via `total_cmp` instead of panicking the comparator; they
+/// surface in the top percentiles rather than poisoning the call.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -105,7 +146,24 @@ mod tests {
         assert_eq!(fmt_duration(0.020), "20.0 ms");
         assert_eq!(fmt_duration(20.0), "20.0 s");
         assert_eq!(fmt_duration(200.0), "3m 20s");
-        assert_eq!(fmt_duration(22_530.0), "6h 15m");
+        // 22 530 s = 6 h 15.5 min — minutes round, not truncate
+        assert_eq!(fmt_duration(22_530.0), "6h 16m");
+    }
+
+    #[test]
+    fn duration_rollover_carries_rounded_units() {
+        // regression: these used to render "1m 60s" / "59m 60s"
+        assert_eq!(fmt_duration(119.7), "2m 00s");
+        assert_eq!(fmt_duration(3599.5), "1h 00m");
+        assert_eq!(fmt_duration(119.2), "1m 59s");
+        // hours branch: 6 h 59.99 m must carry to 7 h, not "6h 60m"
+        assert_eq!(fmt_duration(7.0 * 3600.0 - 1.0), "7h 00m");
+        assert_eq!(fmt_duration(60.0), "1m 00s");
+        assert_eq!(fmt_duration(3600.0), "1h 00m");
+        // branch-boundary rounding must roll into the next unit too
+        assert_eq!(fmt_duration(59.97), "1m 00s");
+        assert_eq!(fmt_duration(0.99996), "1.0 s");
+        assert_eq!(fmt_duration(0.00099996), "1.0 ms");
     }
 
     #[test]
@@ -127,5 +185,16 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: partial_cmp(..).unwrap() panicked on any NaN
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // NaN sorts last (total order), so only the top percentile sees it
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 }

@@ -256,14 +256,16 @@ fn ingest_series(
         converted.image.to_nii_bytes()?
     };
     // store compressed raw in the archive (gzip via save path)
-    let tmp = std::env::temp_dir().join(format!("medflow_ingest_{}_{}.nii.gz", std::process::id(), seed));
+    let tmp =
+        std::env::temp_dir().join(format!("medflow_ingest_{}_{}.nii.gz", std::process::id(), seed));
     converted.image.save(&tmp)?;
     let stored = archive.store_raw(&ds.name, &rel, &std::fs::read(&tmp)?)?;
     std::fs::remove_file(&tmp).ok();
     drop(nii_bytes);
     // sidecar next to the raw file
     let sidecar_rel = format!("{}/{}.json", subject, name.format());
-    let sidecar_stored = archive.store_raw(&ds.name, &sidecar_rel, converted.sidecar.to_string_pretty().as_bytes())?;
+    let sidecar_stored =
+        archive.store_raw(&ds.name, &sidecar_rel, converted.sidecar.to_string_pretty().as_bytes())?;
     // link into BIDS tree
     ds.link_raw(&name, "nii.gz", &stored)?;
     let sidecar_link = ds.raw_dir(&name).join(format!("{}.json", name.format()));
@@ -424,7 +426,8 @@ mod tests {
     #[test]
     fn ingest_deterministic_by_seed() {
         let mk = |tag: &str| {
-            let root = std::env::temp_dir().join(format!("medflow_det_{tag}_{}", std::process::id()));
+            let root =
+                std::env::temp_dir().join(format!("medflow_det_{tag}_{}", std::process::id()));
             std::fs::create_dir_all(&root).unwrap();
             let mut archive = Archive::at(&root.join("store")).unwrap();
             let cohort = SynthCohort {

@@ -38,7 +38,9 @@ fn full_cli_workflow() {
     let out = run_ok(&["validate", "--root", &rootstr, "--dataset", "CLIDS"]);
     assert!(out.contains("0 errors"), "{out}");
 
-    let out = run_ok(&["query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer"]);
+    let out = run_ok(&[
+        "query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer",
+    ]);
     assert!(out.contains("runnable:"), "{out}");
 
     let out = run_ok(&[
@@ -51,7 +53,9 @@ fn full_cli_workflow() {
     assert!(out.contains("CLIDS"), "{out}");
 
     // re-query: idempotency visible through the CLI
-    let out = run_ok(&["query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer"]);
+    let out = run_ok(&[
+        "query", "--root", &rootstr, "--dataset", "CLIDS", "--pipeline", "freesurfer",
+    ]);
     assert!(out.contains("runnable: 0"), "{out}");
 
     std::fs::remove_dir_all(&root).unwrap();
@@ -71,6 +75,26 @@ fn report_commands_print_tables() {
     assert!(out.contains("TOTAL"));
     let out = run_ok(&["growth"]);
     assert!(out.contains("glacier"));
+}
+
+#[test]
+fn transfer_sim_reports_contention() {
+    let out = run_ok(&[
+        "transfer-sim", "--env", "hpc", "--streams", "4", "--gb", "0.1", "--seed", "7",
+    ]);
+    assert!(out.contains("bottleneck"), "{out}");
+    assert!(out.contains("observed Gb/s"), "{out}");
+    assert!(out.contains("link utilization"), "{out}");
+    // 4 streams → 4 record rows (the only lines starting with a digit)
+    let record_rows = out
+        .lines()
+        .filter(|l| l.trim_start().starts_with(|c: char| c.is_ascii_digit()))
+        .count();
+    assert_eq!(record_rows, 4, "{out}");
+
+    let out = medflow().args(["transfer-sim", "--env", "mars"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown env"));
 }
 
 #[test]

@@ -38,7 +38,8 @@ fn mini_cohort(name: &str, participants: u64, sessions: u64) -> SynthCohort {
 fn full_flow_ingest_to_reports() {
     let root = tmp("full");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("E2E", 4, 8), 8, 21).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("E2E", 4, 8), 8, 21).unwrap();
 
     // BIDS validation clean
     let errors = validate_dataset(&ds.root)
@@ -82,7 +83,8 @@ fn pjrt_campaign_writes_real_qa_stats() {
     };
     let root = tmp("pjrt");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("PJ", 2, 2), 8, 5).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("PJ", 2, 2), 8, 5).unwrap();
     let containers = ContainerArchive::open(&root.join("containers")).unwrap();
     let mut coord = Coordinator::new(archive, containers, Some(&rt));
     let r = coord
@@ -169,7 +171,8 @@ fn multi_pipeline_dependency_chain() {
     // freesurfer → brain_age chain (T1wAndPrior) + prequal → tractseg
     let root = tmp("chain");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("CHAIN", 3, 3), 8, 9).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("CHAIN", 3, 3), 8, 9).unwrap();
     let containers = ContainerArchive::open(&root.join("containers")).unwrap();
     let mut coord = Coordinator::new(archive, containers, None);
     let cfg = CampaignConfig::default();
@@ -194,7 +197,8 @@ fn multi_pipeline_dependency_chain() {
 fn maintenance_burst_end_to_end() {
     let root = tmp("maint");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("MB", 2, 4), 8, 3).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("MB", 2, 4), 8, 3).unwrap();
     let containers = ContainerArchive::open(&root.join("containers")).unwrap();
     let mut coord = Coordinator::new(archive, containers, None);
     coord.add_maintenance(Maintenance { start_s: 0.0, end_s: 86_400.0 });
@@ -227,7 +231,8 @@ fn every_registered_pipeline_can_run_a_campaign() {
     // priors run first so dependents unlock)
     let root = tmp("allpipes");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("ALL", 2, 2), 8, 17).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("ALL", 2, 2), 8, 17).unwrap();
     let containers = ContainerArchive::open(&root.join("containers")).unwrap();
     let mut coord = Coordinator::new(archive, containers, None);
     let cfg = CampaignConfig::default();
@@ -238,7 +243,8 @@ fn every_registered_pipeline_can_run_a_campaign() {
         for p in registry() {
             let has_prior = matches!(
                 p.input,
-                medflow::pipeline::InputReq::T1wAndPrior(_) | medflow::pipeline::InputReq::DwiAndPrior(_)
+                medflow::pipeline::InputReq::T1wAndPrior(_)
+                    | medflow::pipeline::InputReq::DwiAndPrior(_)
             );
             if (pass == 0) == has_prior {
                 continue;
@@ -256,7 +262,8 @@ fn every_registered_pipeline_can_run_a_campaign() {
 fn dataset_reopen_after_campaigns_is_consistent() {
     let root = tmp("reopen");
     let mut archive = Archive::at(&root.join("store")).unwrap();
-    let ds = ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("RO", 2, 2), 8, 23).unwrap();
+    let ds =
+        ingest_cohort(&mut archive, &root.join("bids"), &mini_cohort("RO", 2, 2), 8, 23).unwrap();
     let containers = ContainerArchive::open(&root.join("containers")).unwrap();
     let mut coord = Coordinator::new(archive, containers, None);
     coord

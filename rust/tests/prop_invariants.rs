@@ -49,7 +49,9 @@ fn prop_json_roundtrip() {
             _ => {
                 let mut o = Json::obj();
                 for _ in 0..rng.below(5) {
-                    { let n = 1 + rng.below(6) as usize; let key = rng.token(n); o.set(&key, gen(rng, depth - 1)); }
+                    let n = 1 + rng.below(6) as usize;
+                    let key = rng.token(n);
+                    o.set(&key, gen(rng, depth - 1));
                 }
                 Json::Obj(o)
             }

@@ -39,7 +39,8 @@ fn skip_csv_identical_across_all_three_query_paths() {
 
     let full = find_runnable(&ds, &fs).unwrap();
     let index = EntityIndex::build(&ds, 4).unwrap();
-    let (sharded, _) = find_runnable_sharded(&ds, &fs, &index, &ProcessedIndex::default(), 2).unwrap();
+    let (sharded, _) =
+        find_runnable_sharded(&ds, &fs, &index, &ProcessedIndex::default(), 2).unwrap();
     let mut engine = IncrementalEngine::open(&ds).unwrap();
     let (incremental, _) = engine.query(&ds, &fs, 2).unwrap();
 
@@ -66,7 +67,8 @@ fn already_processed_served_from_persistent_index_across_processes() {
         let (r, _) = engine.query(&ds, &fs, 2).unwrap();
         assert_eq!(r.runnable.len(), 4);
         for job in &r.runnable {
-            engine.record_completion("freesurfer", &SessionKey::new(&job.subject, job.session.as_deref()));
+            let key = SessionKey::new(&job.subject, job.session.as_deref());
+            engine.record_completion("freesurfer", &key);
         }
         engine.save(&ds).unwrap();
     }

@@ -1,0 +1,89 @@
+//! Single-stream parity and contention invariants for the
+//! contention-aware transfer scheduler (ISSUE 2 satellite): with one
+//! stream, `netsim::scheduler` must reproduce the
+//! `NetProfile::transfer_time` calibration — the sampling API is the
+//! single-stream special case of the shared-link model (DESIGN.md §9).
+
+use medflow::netsim::scheduler::{scheduler_bandwidth_experiment, Topology, TransferScheduler};
+use medflow::netsim::{bandwidth_experiment, Env};
+use medflow::util::prop::forall;
+use medflow::util::units::{gbps_to_bytes_per_sec, mean_std};
+
+/// Mean observed Gb/s over `k` serialized 1 GB copies through the
+/// scheduler (stream cap 1) — the paper's §2.4 bandwidth experiment.
+fn scheduler_bandwidth_mean(env: Env, k: usize, seed: u64) -> f64 {
+    mean_std(&scheduler_bandwidth_experiment(env, k, seed)).0
+}
+
+#[test]
+fn single_stream_reproduces_table1_calibration() {
+    // same tolerance as netsim's bandwidth_matches_paper_calibration
+    for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
+        let mean = scheduler_bandwidth_mean(env, 100, 42);
+        assert!(
+            (mean - want).abs() < 0.05,
+            "{env:?}: scheduler mean {mean} want {want}"
+        );
+    }
+}
+
+#[test]
+fn single_stream_tracks_the_sampling_api_mean() {
+    // the two models are calibrated to the same distribution, so their
+    // experiment means must agree (independent RNG streams → compare
+    // means, not samples)
+    for env in Env::all() {
+        let sampled = mean_std(&bandwidth_experiment(env, 200, 7)).0;
+        let scheduled = scheduler_bandwidth_mean(env, 200, 8);
+        assert!(
+            (sampled - scheduled).abs() < 0.05,
+            "{env:?}: sampling {sampled} vs scheduler {scheduled}"
+        );
+    }
+}
+
+#[test]
+fn prop_single_stream_is_latency_plus_bytes_over_rate() {
+    forall("scheduler single stream = sampling special case", 100, |rng| {
+        let env = *rng.choose(&Env::all());
+        let bytes = 1_000 + rng.below(2_000_000_000);
+        let mut sim = TransferScheduler::for_env(env, 1, rng.next_u64());
+        sim.submit_at(0, 0, bytes, 0.0);
+        sim.run_to_completion();
+        let r = &sim.records()[0];
+        // exactly the sampling API's shape: sampled first-byte latency,
+        // then bytes at the sampled per-stream rate — no contention terms
+        let expect = r.latency_s + bytes as f64 / gbps_to_bytes_per_sec(r.stream_gbps);
+        let got = r.transfer_s();
+        assert!(
+            (got - expect).abs() < 1e-6 * expect.max(1.0),
+            "{env:?}: got {got} expect {expect}"
+        );
+        assert!(r.stream_gbps >= 0.01, "same floor as the sampling API");
+        assert_eq!(r.queue_wait_s(), 0.0);
+    });
+}
+
+#[test]
+fn prop_aggregate_bounded_and_utilization_sane() {
+    forall("aggregate ≤ bottleneck capacity", 40, |rng| {
+        let env = *rng.choose(&Env::all());
+        let n = 1 + rng.below(12) as usize;
+        let bytes = 50_000_000 + rng.below(200_000_000);
+        let cap = Topology::of(env).bottleneck_gbps();
+        let mut sim = TransferScheduler::for_env(env, n, rng.next_u64());
+        for i in 0..n {
+            sim.submit_at(i as u64, 0, bytes, 0.0);
+        }
+        sim.run_to_completion();
+        let stats = sim.stats();
+        assert_eq!(stats.transfers, n);
+        assert!(
+            stats.aggregate_gbps <= cap * (1.0 + 1e-9),
+            "{env:?} n={n}: {} > {cap}",
+            stats.aggregate_gbps
+        );
+        assert!(stats.link_utilization > 0.0 && stats.link_utilization <= 1.0 + 1e-9);
+        assert!(stats.peak_streams <= n);
+    });
+}
