@@ -1,0 +1,211 @@
+//! Bench: event-engine scaling — the ISSUE 3 tentpole numbers. Sweeps
+//! staged-campaign sizes 10³→10⁶ through the rewritten engines
+//! (`coordinator::staged` + `netsim::scheduler` + `slurm`) and, on the
+//! retained `--legacy` path (`medflow::sim_legacy`, the frozen pre-PR
+//! engines), measures the before/after wall-clock head to head:
+//!
+//! * **parity** — at every A/B point the two generations must produce
+//!   *identical* `StagedTiming`/`TransferStats` (deterministic seeds
+//!   make exact equality the right bar; the full battery lives in
+//!   `rust/tests/engine_parity.rs`);
+//! * **perf smoke** — 10⁵ staged jobs must simulate under a generous
+//!   wall-clock bound so an accidental O(n²) regression fails CI
+//!   loudly, not silently;
+//! * **speedup** — full mode runs the legacy path at 10⁵ too and
+//!   asserts the rewrite is ≥10× faster, then records the whole
+//!   trajectory in `BENCH_campaign_scale.json` at the repo root.
+//!
+//! Run: `cargo bench --bench campaign_scale` — or with `-- --test` for
+//! the reduced sweep CI runs (parity at 10³/10⁴ + the 10⁵ smoke).
+
+use std::time::Instant;
+
+use medflow::coordinator::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome};
+use medflow::netsim::scheduler::TransferScheduler;
+use medflow::netsim::Env;
+use medflow::sim_legacy;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
+use medflow::util::bench::metric;
+use medflow::util::json::Json;
+use medflow::util::rng::Rng;
+
+/// Stream cap on the campaign staging host: wide enough to be a real
+/// fair-share problem, narrow enough that per-event work stays O(k).
+const STREAM_CAP: usize = 16;
+const WORKERS: usize = 512;
+const SEED: u64 = 42;
+
+/// Generous CI bound for the 10⁵-job smoke (expected: ~2 s release).
+const SMOKE_BOUND_S: f64 = 120.0;
+
+fn campaign(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1,
+            ram_gb: 4,
+            compute_s: 60.0 + rng.next_f64() * 540.0,
+            bytes_in: 10_000_000 + rng.below(40_000_000),
+            bytes_out: 2_000_000 + rng.below(8_000_000),
+        })
+        .collect()
+}
+
+struct Timed {
+    wall_s: f64,
+    out: StagedOutcome,
+}
+
+fn run_live_lanes(jobs: &[StagedJob]) -> Timed {
+    let mut lanes = LanePool::new(WORKERS);
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+    let t0 = Instant::now();
+    let out = run_staged(jobs, &mut lanes, &mut transfers);
+    Timed {
+        wall_s: t0.elapsed().as_secs_f64(),
+        out,
+    }
+}
+
+fn run_legacy_lanes(jobs: &[StagedJob]) -> Timed {
+    let mut lanes = sim_legacy::LanePool::new(WORKERS);
+    let mut transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+    let t0 = Instant::now();
+    let out = sim_legacy::run_staged(jobs, &mut lanes, &mut transfers);
+    Timed {
+        wall_s: t0.elapsed().as_secs_f64(),
+        out,
+    }
+}
+
+fn run_live_slurm(jobs: &[StagedJob]) -> Timed {
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: 2_000,
+    };
+    let mut sim = SlurmSim::new(Scheduler::new(ClusterSpec::accre()), "medflow", Some(handle));
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+    let t0 = Instant::now();
+    let out = run_staged(jobs, &mut sim, &mut transfers);
+    Timed {
+        wall_s: t0.elapsed().as_secs_f64(),
+        out,
+    }
+}
+
+fn assert_complete(tag: &str, n: usize, out: &StagedOutcome) {
+    assert_eq!(out.timings.len(), n, "{tag}: timing per job");
+    assert!(
+        out.timings.iter().all(|t| t.completed),
+        "{tag}: every job must finish its verified copy-back"
+    );
+    assert_eq!(out.transfer.transfers, 2 * n, "{tag}: stage-in + copy-back per job");
+}
+
+fn json_run(jobs: usize, engine: &str, path: &str, t: &Timed) -> Json {
+    let mut o = Json::obj();
+    o.set("jobs", Json::num(jobs as f64))
+        .set("engine", Json::str(engine))
+        .set("path", Json::str(path))
+        .set("wall_s", Json::num(t.wall_s))
+        .set("sim_makespan_s", Json::num(t.out.makespan_s))
+        .set("transfers", Json::num(t.out.transfer.transfers as f64));
+    Json::Obj(o)
+}
+
+/// One A/B point: run the same campaign through both generations,
+/// demand record-for-record parity, report the wall-clock ratio.
+fn ab_point(n: usize, runs: &mut Vec<Json>) -> f64 {
+    let jobs = campaign(n, SEED);
+    let live = run_live_lanes(&jobs);
+    let legacy = run_legacy_lanes(&jobs);
+    assert_complete("live", n, &live.out);
+    assert_eq!(
+        live.out.timings, legacy.out.timings,
+        "n={n}: rewritten engines must be record-for-record identical to sim_legacy"
+    );
+    assert_eq!(live.out.transfer, legacy.out.transfer, "n={n}: transfer stats");
+    let speedup = legacy.wall_s / live.wall_s.max(1e-9);
+    metric(&format!("lanes.n{n}.live_wall_s"), live.wall_s, "s");
+    metric(&format!("lanes.n{n}.legacy_wall_s"), legacy.wall_s, "s");
+    metric(&format!("lanes.n{n}.speedup"), speedup, "x");
+    runs.push(json_run(n, "lanepool", "event-heap", &live));
+    runs.push(json_run(n, "lanepool", "legacy", &legacy));
+    speedup
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Campaign-scale event-engine sweep (DESIGN.md §10) ===");
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- A/B parity + speedup on the lane-pool campaign ---
+    let ab_points: &[usize] = if test_mode {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    let mut last_speedup = 0.0;
+    for &n in ab_points {
+        last_speedup = ab_point(n, &mut runs);
+    }
+    if !test_mode {
+        assert!(
+            last_speedup >= 10.0,
+            "acceptance: ≥10× speedup at 10⁵ staged jobs (got {last_speedup:.1}×)"
+        );
+    }
+
+    // --- perf smoke: 10⁵ jobs through the live path under a hard bound ---
+    {
+        let n = 100_000;
+        let jobs = campaign(n, SEED + 1);
+        let live = run_live_lanes(&jobs);
+        assert_complete("smoke", n, &live.out);
+        metric("smoke.n100000.live_wall_s", live.wall_s, "s");
+        assert!(
+            live.wall_s < SMOKE_BOUND_S,
+            "perf smoke: 10⁵ staged jobs took {:.1} s (bound {SMOKE_BOUND_S} s) — \
+             an event-engine regression reintroduced superlinear cost",
+            live.wall_s
+        );
+        runs.push(json_run(n, "lanepool", "event-heap-smoke", &live));
+    }
+
+    // --- SLURM co-simulation at ACCRE scale ---
+    let slurm_points: &[usize] = if test_mode { &[10_000] } else { &[10_000, 100_000] };
+    for &n in slurm_points {
+        let jobs = campaign(n, SEED + 2);
+        let live = run_live_slurm(&jobs);
+        assert_complete("slurm", n, &live.out);
+        metric(&format!("slurm.n{n}.live_wall_s"), live.wall_s, "s");
+        runs.push(json_run(n, "slurm-accre", "event-heap", &live));
+    }
+
+    // --- full mode: the 10⁶ frontier + recorded trajectory ---
+    if !test_mode {
+        let n = 1_000_000;
+        let jobs = campaign(n, SEED + 3);
+        let live = run_live_lanes(&jobs);
+        assert_complete("frontier", n, &live.out);
+        metric("lanes.n1000000.live_wall_s", live.wall_s, "s");
+        runs.push(json_run(n, "lanepool", "event-heap", &live));
+
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("campaign_scale"))
+            .set(
+                "scenario",
+                Json::str(
+                    "staged campaign on Env::Hpc, stream cap 16, 512 lanes / ACCRE, seed 42 \
+                     (see benches/campaign_scale.rs)",
+                ),
+            )
+            .set("speedup_1e5_legacy_over_live", Json::num(last_speedup))
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_campaign_scale.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("campaign_scale OK");
+}

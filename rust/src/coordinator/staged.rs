@@ -20,9 +20,22 @@
 //! Compute backends implement [`ComputeSim`]: the SLURM cluster
 //! simulator ([`SlurmSim`]) for the HPC path and a bounded worker pool
 //! ([`LanePool`]) for local bursts.
+//!
+//! **Event-engine scale (DESIGN.md §10):** the co-simulation loop pulls
+//! the next hand-off instant from a merged event heap over its sources,
+//! and each source now answers `next_event_time` from its own event
+//! index (heap peeks + O(open streams) / O(workers)), so a 10⁶-job
+//! campaign runs the loop in near-linear total time. The pre-PR loop —
+//! retained in [`crate::sim_legacy`] and proven record-for-record
+//! identical by `rust/tests/engine_parity.rs` — polled two O(n)
+//! `next_event_time` scans per event.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
 use crate::slurm::{ArrayHandle, Scheduler, SimJob};
+use crate::util::ord::F64Ord;
 
 const EPS: f64 = 1e-9;
 
@@ -133,11 +146,19 @@ impl ComputeSim for SlurmSim {
 /// A bounded pool of identical worker lanes (the local-burst backend):
 /// jobs start FIFO by readiness as lanes free up — the discrete-event
 /// equivalent of `util::pool`'s bounded in-flight backpressure.
+///
+/// Scale note (DESIGN.md §10): ready jobs wait in an ordered map keyed
+/// by (ready, id) and future readies in a binary heap, so starting a
+/// job is O(log n) instead of the pre-PR full-queue scan; completions
+/// still replay the original lane/collection order exactly
+/// (`rust/tests/engine_parity.rs`).
 pub struct LanePool {
     /// Each lane's busy-until time.
     lanes: Vec<f64>,
-    /// (id, ready_s, duration_s), not yet started.
-    queue: Vec<(u64, f64, f64)>,
+    /// Ready-to-run jobs, FIFO by (ready_s, id) → duration.
+    due: BTreeMap<(F64Ord, u64), f64>,
+    /// Not-yet-ready jobs, min-heap by (ready_s, id), carrying duration.
+    future: BinaryHeap<Reverse<(F64Ord, u64, F64Ord)>>,
     /// (id, end_s) currently running.
     running: Vec<(u64, f64)>,
     clock: f64,
@@ -148,7 +169,8 @@ impl LanePool {
         assert!(workers >= 1, "lane pool needs at least one worker");
         Self {
             lanes: vec![0.0; workers],
-            queue: Vec::new(),
+            due: BTreeMap::new(),
+            future: BinaryHeap::new(),
             running: Vec::new(),
             clock: 0.0,
         }
@@ -156,21 +178,21 @@ impl LanePool {
 
     /// Start queued-and-ready jobs on free lanes, FIFO by (ready, id).
     fn start_ready(&mut self) {
+        while let Some(&Reverse((ready, id, dur))) = self.future.peek() {
+            if ready.0 > self.clock + EPS {
+                break; // min-heap: everything after is future too
+            }
+            self.future.pop();
+            self.due.insert((ready, id), dur.0);
+        }
         loop {
+            if self.due.is_empty() {
+                return;
+            }
             let Some(lane) = self.lanes.iter().position(|&f| f <= self.clock + EPS) else {
                 return;
             };
-            let next = self
-                .queue
-                .iter()
-                .enumerate()
-                .filter(|(_, &(_, ready, _))| ready <= self.clock + EPS)
-                .min_by(|(_, a), (_, b)| {
-                    (a.1, a.0).partial_cmp(&(b.1, b.0)).expect("finite times")
-                })
-                .map(|(k, _)| k);
-            let Some(k) = next else { return };
-            let (id, _ready, dur) = self.queue.remove(k);
+            let ((_, id), dur) = self.due.pop_first().expect("non-empty due map");
             self.lanes[lane] = self.clock + dur;
             self.running.push((id, self.clock + dur));
         }
@@ -180,9 +202,11 @@ impl LanePool {
 impl ComputeSim for LanePool {
     fn submit(&mut self, id: u64, ready_s: f64, job: &StagedJob) {
         let ready = ready_s.max(self.clock);
-        self.queue.push((id, ready, job.compute_s));
         if ready <= self.clock + EPS {
+            self.due.insert((F64Ord(ready), id), job.compute_s);
             self.start_ready();
+        } else {
+            self.future.push(Reverse((F64Ord(ready), id, F64Ord(job.compute_s))));
         }
     }
 
@@ -191,10 +215,8 @@ impl ComputeSim for LanePool {
         for &(_, end) in &self.running {
             t = t.min(end);
         }
-        for &(_, ready, _) in &self.queue {
-            if ready > self.clock + EPS {
-                t = t.min(ready);
-            }
+        if let Some(&Reverse((ready, ..))) = self.future.peek() {
+            t = t.min(ready.0);
         }
         t.is_finite().then_some(t)
     }
@@ -233,6 +255,45 @@ const fn stage_out_id(i: usize) -> u64 {
     (i as u64) * 2 + 1
 }
 
+/// Merged event heap over the co-simulation's sources: each iteration
+/// re-arms every source with its current `next_event_time` and pops the
+/// globally earliest one.
+///
+/// Why re-arm instead of caching entries across iterations: the
+/// transfer side is a fluid model — every hand-off re-splits fair-share
+/// rates, and even an event-free `advance_to` moves `bytes_left`, so a
+/// drain time computed at an older clock differs in the last f64 bits
+/// from one computed now. Cached heap entries would drift from the
+/// pre-PR polling loop and break record-for-record parity
+/// (`rust/tests/engine_parity.rs`). Re-arming is O(sources · log
+/// sources) per event against sources whose `next_event_time` is now a
+/// heap peek — the O(n) per-event scans this heap used to sit on top
+/// of are gone (DESIGN.md §10).
+struct MergedEvents {
+    heap: BinaryHeap<Reverse<F64Ord>>,
+}
+
+impl MergedEvents {
+    fn new() -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(4),
+        }
+    }
+
+    fn arm(&mut self, next: Option<f64>) {
+        if let Some(t) = next {
+            self.heap.push(Reverse(F64Ord(t)));
+        }
+    }
+
+    /// Earliest armed event time; clears the heap for the next re-arm.
+    fn pop_earliest(&mut self) -> Option<f64> {
+        let Reverse(t) = self.heap.pop()?;
+        self.heap.clear();
+        Some(t.0)
+    }
+}
+
 /// Run a campaign's jobs through the staged pipeline: all stage-ins are
 /// submitted to the (shared, contended) transfer scheduler at t=0, each
 /// job enters the compute backend the moment its inputs land, and each
@@ -248,18 +309,21 @@ pub fn run_staged(
     for (i, j) in jobs.iter().enumerate() {
         transfers.submit_at(stage_in_id(i), STAGE_HOST, j.bytes_in, 0.0);
     }
+    let mut events = MergedEvents::new();
     let mut seen = 0usize;
     loop {
-        let t = match (transfers.next_event_time(), compute.next_event_time()) {
-            (None, None) => break,
-            (Some(a), Some(b)) => a.min(b),
-            (Some(a), None) => a,
-            (None, Some(b)) => b,
-        };
+        events.arm(transfers.next_event_time());
+        events.arm(compute.next_event_time());
+        let Some(t) = events.pop_earliest() else { break };
+        // both engines advance to the merged-earliest instant — the
+        // hand-offs below assume a shared clock
         transfers.advance_to(t);
-        let new_records = transfers.records()[seen..].to_vec();
-        seen = transfers.records().len();
-        for r in &new_records {
+        // borrow, don't clone: this loop only reads the new completions
+        // (it mutates `compute` and `timings`, never `transfers`)
+        let records = transfers.records();
+        let new_from = seen;
+        seen = records.len();
+        for r in &records[new_from..] {
             let i = (r.id / 2) as usize;
             if r.id % 2 == 0 {
                 timings[i].stage_in_wait_s = r.queue_wait_s();
@@ -400,5 +464,26 @@ mod tests {
         assert!(out.timings.is_empty());
         assert_eq!(out.makespan_s, 0.0);
         assert_eq!(out.transfer.transfers, 0);
+    }
+
+    #[test]
+    fn wide_campaign_stays_near_linear() {
+        // 5k jobs through the co-simulation in a debug-build test: the
+        // pre-PR polling loop (O(n) next_event_time per event) made this
+        // minutes; the merged heap + indexed engines keep it seconds.
+        let js: Vec<StagedJob> = (0..5_000)
+            .map(|i| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s: 30.0 + (i % 7) as f64 * 10.0,
+                bytes_in: 5_000_000,
+                bytes_out: 1_000_000,
+            })
+            .collect();
+        let mut lanes = LanePool::new(64);
+        let mut transfers = TransferScheduler::for_env(Env::Local, 32, 17);
+        let out = run_staged(&js, &mut lanes, &mut transfers);
+        assert!(out.timings.iter().all(|t| t.completed));
+        assert_eq!(out.transfer.transfers, 10_000);
     }
 }

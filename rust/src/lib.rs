@@ -41,6 +41,7 @@ pub mod query;
 pub mod report;
 pub mod runtime;
 pub mod scripts;
+pub mod sim_legacy;
 pub mod slurm;
 pub mod util;
 pub mod workload;

@@ -400,6 +400,7 @@ fn cmd_transfer_sim(args: &Args) -> Result<()> {
     print!("{}", report::format_transfer_records(sim.records()));
     println!();
     print!("{}", report::format_transfer_stats(&sim.stats()));
+    print!("{}", report::format_transfer_waits(sim.records()));
     Ok(())
 }
 

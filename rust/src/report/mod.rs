@@ -21,7 +21,7 @@ use crate::pipeline::by_name;
 use crate::runtime::Runtime;
 use crate::util::csv::write_csv;
 use crate::util::rng::Rng;
-use crate::util::units::mean_std;
+use crate::util::units::{fmt_duration, mean_std, percentiles};
 use crate::workload::masivar_six_scans;
 
 /// One Table 1 column (an environment's measured row values).
@@ -355,6 +355,21 @@ pub fn format_transfer_records(records: &[TransferRecord]) -> String {
     s
 }
 
+/// Queue-wait percentile row for transfer reports (`medflow
+/// transfer-sim`): one sort serves every percentile
+/// ([`percentiles`]) — campaign-sized record sets make per-percentile
+/// re-sorting visible.
+pub fn format_transfer_waits(records: &[TransferRecord]) -> String {
+    let waits: Vec<f64> = records.iter().map(|r| r.queue_wait_s()).collect();
+    let ps = percentiles(&waits, &[50.0, 90.0, 99.0]);
+    format!(
+        "queue wait p50 {}   p90 {}   p99 {}\n",
+        fmt_duration(ps[0]),
+        fmt_duration(ps[1]),
+        fmt_duration(ps[2]),
+    )
+}
+
 /// Render aggregate transfer-scheduler telemetry (campaign reports and
 /// `medflow transfer-sim`): link utilization, aggregate throughput,
 /// concurrency, queueing.
@@ -404,6 +419,25 @@ mod tests {
         assert!((hpc.total_cost_dollars - paper::HPC.4).abs() < 0.08);
         assert!((cloud.total_cost_dollars - paper::CLOUD.4).abs() < 0.6);
         assert!((local.total_cost_dollars - paper::LOCAL.4).abs() < 0.4);
+    }
+
+    #[test]
+    fn format_transfer_waits_reports_percentiles() {
+        let rec = |id: u64, submit_s: f64, start_s: f64| TransferRecord {
+            id,
+            host: 0,
+            bytes: 1_000,
+            submit_s,
+            start_s,
+            end_s: start_s + 1.0,
+            latency_s: 0.001,
+            stream_gbps: 0.5,
+        };
+        let recs = [rec(0, 0.0, 0.0), rec(1, 0.0, 10.0), rec(2, 0.0, 20.0)];
+        let s = format_transfer_waits(&recs);
+        assert!(s.contains("p50 10.0 s"), "{s}");
+        assert!(s.contains("p90") && s.contains("p99"), "{s}");
+        assert!(format_transfer_waits(&[]).contains("p50"), "empty set renders");
     }
 
     #[test]

@@ -1,0 +1,965 @@
+//! Frozen pre-PR reference engines (the "before" of the event-engine
+//! overhaul, DESIGN.md §10).
+//!
+//! This module preserves, verbatim, the discrete-event implementations
+//! that shipped before the 10⁶-job event-engine rewrite:
+//!
+//! * [`TransferScheduler`] — the contention-aware transfer scheduler
+//!   with a single globally sorted queue that `admit`/`next_event_time`
+//!   re-scan per event (O(n) per event, O(n²) per campaign);
+//! * [`Scheduler`] — the SLURM simulator that re-sorts every pending
+//!   job on every scheduling pass, finds the next completion with a
+//!   linear scan over running jobs, and re-clones the node array inside
+//!   `earliest_start_estimate`;
+//! * [`LanePool`] / [`SlurmSim`] / [`run_staged`] — the staged
+//!   co-simulation loop that polls both engines' O(n)
+//!   `next_event_time` on every iteration.
+//!
+//! They exist for two reasons, both load-bearing:
+//!
+//! 1. **Golden parity.** Both engine generations are deterministic given
+//!    a seed, so `rust/tests/engine_parity.rs` demands *exact* equality
+//!    — every [`TransferRecord`]/[`crate::slurm::JobRecord`] field,
+//!    every f64 bit — between the rewritten engines and these
+//!    references across seeded scenario batteries (including the
+//!    Table 1 calibration cases). Any semantic drift in the rewrite
+//!    fails loudly.
+//! 2. **The `--legacy` benchmark path.** `benches/campaign_scale.rs`
+//!    runs the same staged campaigns through both generations and
+//!    records the before/after trajectory in
+//!    `BENCH_campaign_scale.json`; the ≥10× speedup claim at 10⁵ jobs
+//!    is measured, not asserted from memory.
+//!
+//! Do not "fix" or optimize this module: its value is that it does not
+//! change. It shares the public data types (records, stats, topologies,
+//! job specs) with the live engines so comparisons are type-identical.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::staged::{ComputeSim, StagedJob, StagedOutcome, StagedTiming};
+use crate::netsim::scheduler::{fair_share, Topology, TransferRecord, TransferStats};
+use crate::netsim::{Env, NetProfile};
+use crate::slurm::{
+    ArrayHandle, ClusterSpec, JobRecord, Maintenance, Policy, SimJob,
+};
+use crate::util::rng::Rng;
+use crate::util::units::gbps_to_bytes_per_sec;
+
+/// Comparison slack for event times (seconds) — transfers are O(ms..h).
+const EPS: f64 = 1e-9;
+
+/// Remaining-byte threshold below which a stream counts as drained.
+const DONE_BYTES: f64 = 0.5;
+
+#[derive(Debug, Clone)]
+struct QueuedTransfer {
+    id: u64,
+    host: u64,
+    bytes: u64,
+    submit_s: f64,
+}
+
+#[derive(Debug, Clone)]
+struct ActiveStream {
+    id: u64,
+    host: u64,
+    bytes: u64,
+    submit_s: f64,
+    start_s: f64,
+    latency_s: f64,
+    stream_gbps: f64,
+    bytes_left: f64,
+}
+
+impl ActiveStream {
+    fn flow_start_s(&self) -> f64 {
+        self.start_s + self.latency_s
+    }
+}
+
+/// The pre-PR discrete-event transfer scheduler: one globally sorted
+/// `Vec<QueuedTransfer>` whose due-but-blocked prefix is re-scanned by
+/// `admit`/`next_event_time` on every event, and a fair-share
+/// allocation recomputed from scratch inside both `next_event_time`
+/// and `integrate` — O(n) per event, fine up to ~10⁴ transfers.
+#[derive(Debug)]
+pub struct TransferScheduler {
+    topo: Topology,
+    profile: NetProfile,
+    bottleneck_gbps: f64,
+    seed: u64,
+    clock: f64,
+    queue: Vec<QueuedTransfer>,
+    active: Vec<ActiveStream>,
+    records: Vec<TransferRecord>,
+    busy_s: f64,
+    bytes_done: u64,
+    peak_streams: usize,
+}
+
+impl TransferScheduler {
+    pub fn new(topo: Topology, seed: u64) -> Self {
+        let profile = NetProfile::of(topo.env);
+        let bottleneck_gbps = topo.bottleneck_gbps();
+        Self {
+            topo,
+            profile,
+            bottleneck_gbps,
+            seed,
+            clock: 0.0,
+            queue: Vec::new(),
+            active: Vec::new(),
+            records: Vec::new(),
+            busy_s: 0.0,
+            bytes_done: 0,
+            peak_streams: 0,
+        }
+    }
+
+    /// Convenience: environment topology with an explicit stream cap.
+    pub fn for_env(env: Env, max_streams_per_host: usize, seed: u64) -> Self {
+        Self::new(Topology::of(env).with_stream_cap(max_streams_per_host), seed)
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn records(&self) -> &[TransferRecord] {
+        &self.records
+    }
+
+    /// Submit a transfer of `bytes` from `host` at absolute time
+    /// `submit_s` (must not be in the scheduler's past).
+    pub fn submit_at(&mut self, id: u64, host: u64, bytes: u64, submit_s: f64) {
+        assert!(
+            submit_s + EPS >= self.clock,
+            "transfer {id}: cannot submit in the past (submit {submit_s}, clock {})",
+            self.clock
+        );
+        debug_assert!(
+            !self.queue.iter().any(|q| q.id == id)
+                && !self.active.iter().any(|a| a.id == id)
+                && !self.records.iter().any(|r| r.id == id),
+            "transfer id {id} reused"
+        );
+        let submit_s = submit_s.max(self.clock);
+        // keep the queue sorted by (submit_s, id): binary-search insertion
+        // here keeps admit() a plain scan instead of a per-event sort
+        let pos = self
+            .queue
+            .partition_point(|q| (q.submit_s, q.id) <= (submit_s, id));
+        self.queue.insert(
+            pos,
+            QueuedTransfer {
+                id,
+                host,
+                bytes,
+                submit_s,
+            },
+        );
+        if submit_s <= self.clock + EPS {
+            self.admit();
+        }
+    }
+
+    /// Deterministic per-transfer sampling stream (identical to the live
+    /// engine's keyed sampling).
+    fn transfer_rng(&self, id: u64) -> Rng {
+        Rng::new(self.seed.wrapping_add(id.wrapping_mul(0x9E3779B97F4A7C15)))
+    }
+
+    /// Admit queued transfers due at the current clock, FIFO per host,
+    /// while the host is under its stream cap.
+    fn admit(&mut self) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].submit_s > self.clock + EPS {
+                break; // sorted queue: everything after is future too
+            }
+            let host = self.queue[i].host;
+            let host_active = self.active.iter().filter(|a| a.host == host).count();
+            if host_active >= self.topo.max_streams_per_host {
+                i += 1;
+                continue;
+            }
+            let q = self.queue.remove(i);
+            let mut rng = self.transfer_rng(q.id);
+            let stream_gbps = rng
+                .normal_ms(self.profile.throughput_gbps.0, self.profile.throughput_gbps.1)
+                .max(0.01);
+            let latency_s = rng
+                .normal_ms(self.profile.latency_ms.0, self.profile.latency_ms.1)
+                .max(0.01)
+                / 1e3;
+            self.active.push(ActiveStream {
+                id: q.id,
+                host: q.host,
+                bytes: q.bytes,
+                submit_s: q.submit_s,
+                start_s: self.clock,
+                latency_s,
+                stream_gbps,
+                bytes_left: q.bytes as f64,
+            });
+            self.peak_streams = self.peak_streams.max(self.active.len());
+        }
+    }
+
+    /// Per-active-stream rate (Gb/s) under the current composition;
+    /// recomputed from scratch on every call.
+    fn current_rates(&self) -> Vec<f64> {
+        let flowing: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| self.clock + EPS >= a.flow_start_s())
+            .map(|(i, _)| i)
+            .collect();
+        let caps: Vec<f64> = flowing.iter().map(|&i| self.active[i].stream_gbps).collect();
+        let shares = fair_share(&caps, self.bottleneck_gbps);
+        let mut rates = vec![0.0; self.active.len()];
+        for (k, &i) in flowing.iter().enumerate() {
+            rates[i] = shares[k];
+        }
+        rates
+    }
+
+    /// Time of the next state change (scans the whole blocked prefix).
+    pub fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        if let Some(q) = self.queue.iter().find(|q| q.submit_s > self.clock + EPS) {
+            t = t.min(q.submit_s);
+        }
+        let rates = self.current_rates();
+        for (a, &r) in self.active.iter().zip(&rates) {
+            if self.clock + EPS < a.flow_start_s() {
+                t = t.min(a.flow_start_s());
+            } else if r > 0.0 {
+                t = t.min(self.clock + a.bytes_left.max(0.0) / gbps_to_bytes_per_sec(r));
+            }
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Move bytes at the current allocation from `clock` to `target`.
+    fn integrate(&mut self, target: f64) {
+        let dt = target - self.clock;
+        if dt <= 0.0 {
+            return;
+        }
+        if !self.active.is_empty() {
+            self.busy_s += dt;
+        }
+        let rates = self.current_rates();
+        for (a, r) in self.active.iter_mut().zip(rates) {
+            if r > 0.0 {
+                a.bytes_left -= gbps_to_bytes_per_sec(r) * dt;
+            }
+        }
+    }
+
+    fn complete_finished(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            if self.clock + EPS >= a.flow_start_s() && a.bytes_left <= DONE_BYTES {
+                let a = self.active.swap_remove(i);
+                self.bytes_done += a.bytes;
+                self.records.push(TransferRecord {
+                    id: a.id,
+                    host: a.host,
+                    bytes: a.bytes,
+                    submit_s: a.submit_s,
+                    start_s: a.start_s,
+                    end_s: self.clock,
+                    latency_s: a.latency_s,
+                    stream_gbps: a.stream_gbps,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Advance to absolute time `t`, processing every event up to and
+    /// including `t`.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t + EPS >= self.clock,
+            "cannot advance backwards (to {t}, clock {})",
+            self.clock
+        );
+        loop {
+            self.admit();
+            let target = match self.next_event_time() {
+                Some(x) if x <= t => x,
+                _ => t,
+            };
+            self.integrate(target);
+            self.clock = self.clock.max(target);
+            self.complete_finished();
+            if target + EPS >= t {
+                self.admit();
+                return;
+            }
+        }
+    }
+
+    /// Run until every submitted transfer has completed.
+    pub fn run_to_completion(&mut self) -> &[TransferRecord] {
+        while let Some(t) = self.next_event_time() {
+            self.advance_to(t);
+        }
+        &self.records
+    }
+
+    /// Aggregate telemetry over everything completed so far.
+    pub fn stats(&self) -> TransferStats {
+        let makespan_s = self.records.iter().map(|r| r.end_s).fold(0.0, f64::max);
+        let gbits = self.bytes_done as f64 * 8.0 / 1e9;
+        let waits: f64 = self.records.iter().map(|r| r.queue_wait_s()).sum();
+        TransferStats {
+            transfers: self.records.len(),
+            bytes: self.bytes_done,
+            makespan_s,
+            busy_s: self.busy_s,
+            peak_streams: self.peak_streams,
+            mean_queue_wait_s: if self.records.is_empty() {
+                0.0
+            } else {
+                waits / self.records.len() as f64
+            },
+            link_utilization: if self.busy_s > 0.0 {
+                gbits / (self.bottleneck_gbps * self.busy_s)
+            } else {
+                0.0
+            },
+            aggregate_gbps: if makespan_s > 0.0 {
+                gbits / makespan_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// The §2.4 bandwidth experiment through the pre-PR scheduler — the
+/// Table 1 calibration case for the golden parity tests.
+pub fn scheduler_bandwidth_experiment(env: Env, n: usize, seed: u64) -> Vec<f64> {
+    let mut sim = TransferScheduler::for_env(env, 1, seed);
+    let gb = 1_000_000_000u64;
+    for i in 0..n {
+        sim.submit_at(i as u64, 0, gb, 0.0);
+    }
+    sim.run_to_completion();
+    sim.records().iter().map(|r| r.observed_gbps()).collect()
+}
+
+// ---------------------------------------------------------------------
+// SLURM cluster simulator (pre-PR)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct NodeState {
+    free_cores: u32,
+    free_ram_gb: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Running {
+    job: SimJob,
+    node: usize,
+    start_s: f64,
+    end_s: f64,
+}
+
+/// The pre-PR SLURM discrete-event scheduler: every scheduling pass
+/// rescans and re-sorts the whole pending vector, `next_event_time`
+/// linearly scans running jobs, and `earliest_start_estimate` clones
+/// the node array and rescans all nodes per release.
+#[derive(Debug)]
+pub struct Scheduler {
+    pub spec: ClusterSpec,
+    nodes: Vec<NodeState>,
+    clock: f64,
+    pending: Vec<SimJob>,
+    running: Vec<Running>,
+    records: Vec<JobRecord>,
+    usage: BTreeMap<String, f64>,
+    maintenance: Vec<Maintenance>,
+    array_running: BTreeMap<u64, u32>,
+    core_seconds_capacity: f64,
+    core_seconds_used: f64,
+    needs_schedule: bool,
+    pub policy: Policy,
+}
+
+impl Scheduler {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self::with_policy(spec, Policy::default())
+    }
+
+    pub fn with_policy(spec: ClusterSpec, policy: Policy) -> Self {
+        let nodes = spec
+            .nodes
+            .iter()
+            .map(|n| NodeState {
+                free_cores: n.cores,
+                free_ram_gb: n.ram_gb,
+            })
+            .collect();
+        Self {
+            nodes,
+            clock: 0.0,
+            pending: Vec::new(),
+            running: Vec::new(),
+            records: Vec::new(),
+            usage: BTreeMap::new(),
+            maintenance: Vec::new(),
+            array_running: BTreeMap::new(),
+            core_seconds_capacity: 0.0,
+            core_seconds_used: 0.0,
+            needs_schedule: false,
+            policy,
+            spec,
+        }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn add_maintenance(&mut self, w: Maintenance) {
+        self.maintenance.push(w);
+    }
+
+    /// True if `t` falls in a maintenance window (no job starts).
+    pub fn in_maintenance(&self, t: f64) -> bool {
+        self.maintenance.iter().any(|w| t >= w.start_s && t < w.end_s)
+    }
+
+    pub fn submit(&mut self, job: SimJob) {
+        assert!(
+            job.submit_s >= self.clock,
+            "cannot submit in the past (job {} at {}, clock {})",
+            job.id,
+            job.submit_s,
+            self.clock
+        );
+        self.pending.push(job);
+        self.needs_schedule = true;
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn records(&self) -> &[JobRecord] {
+        &self.records
+    }
+
+    /// Cluster-wide core utilization over simulated time so far (0..1).
+    pub fn utilization(&self) -> f64 {
+        if self.core_seconds_capacity <= 0.0 {
+            return 0.0;
+        }
+        self.core_seconds_used / self.core_seconds_capacity
+    }
+
+    fn priority(&self, job: &SimJob) -> (f64, f64, u64) {
+        let usage = if self.policy.fairshare {
+            self.usage.get(&job.user).copied().unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        (usage, job.submit_s, job.id)
+    }
+
+    fn fits_on(&self, node: usize, job: &SimJob) -> bool {
+        self.nodes[node].free_cores >= job.cores && self.nodes[node].free_ram_gb >= job.ram_gb
+    }
+
+    fn first_fit(&self, job: &SimJob) -> Option<usize> {
+        (0..self.nodes.len()).find(|&n| self.fits_on(n, job))
+    }
+
+    fn array_ok(&self, job: &SimJob) -> bool {
+        match &job.array {
+            None => true,
+            Some(h) => self.array_running.get(&h.array_id).copied().unwrap_or(0) < h.max_concurrent,
+        }
+    }
+
+    fn start_job(&mut self, job: SimJob, node: usize) {
+        self.nodes[node].free_cores -= job.cores;
+        self.nodes[node].free_ram_gb -= job.ram_gb;
+        if let Some(h) = &job.array {
+            *self.array_running.entry(h.array_id).or_insert(0) += 1;
+        }
+        *self.usage.entry(job.user.clone()).or_insert(0.0) +=
+            job.cores as f64 * job.duration_s;
+        self.core_seconds_used += job.cores as f64 * job.duration_s;
+        let end_s = self.clock + job.duration_s;
+        self.running.push(Running {
+            job,
+            node,
+            start_s: self.clock,
+            end_s,
+        });
+    }
+
+    /// Priority order + EASY backfill over the full pending vector.
+    fn schedule(&mut self) {
+        if self.in_maintenance(self.clock) {
+            return;
+        }
+        self.needs_schedule = false;
+        let mut arrived: Vec<(usize, (f64, f64, u64))> = (0..self.pending.len())
+            .filter(|&i| self.pending[i].submit_s <= self.clock)
+            .map(|i| (i, self.priority(&self.pending[i])))
+            .collect();
+        arrived.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let arrived: Vec<usize> = arrived.into_iter().map(|(i, _)| i).collect();
+
+        let mut started: Vec<usize> = Vec::new();
+        let mut shadow: Option<f64> = None; // head job's reserved start
+        let mut failed_reqs: Vec<(u32, u32)> = Vec::new();
+        for &idx in &arrived {
+            let job = self.pending[idx].clone();
+            if !self.array_ok(&job) {
+                continue;
+            }
+            if let Some(sh) = shadow {
+                if !self.policy.backfill || self.clock + job.duration_s > sh {
+                    continue;
+                }
+            }
+            if failed_reqs
+                .iter()
+                .any(|&(c, r)| job.cores >= c && job.ram_gb >= r)
+            {
+                if shadow.is_none() {
+                    shadow = Some(self.earliest_start_estimate(&job));
+                }
+                continue;
+            }
+            match self.first_fit(&job) {
+                Some(node) => {
+                    self.start_job(job, node);
+                    started.push(idx);
+                }
+                None => {
+                    failed_reqs.push((job.cores, job.ram_gb));
+                    if shadow.is_none() {
+                        shadow = Some(self.earliest_start_estimate(&job));
+                    }
+                }
+            }
+        }
+        started.sort_unstable_by(|a, b| b.cmp(a));
+        for idx in started {
+            self.pending.remove(idx);
+        }
+    }
+
+    /// Earliest time the blocked job could start (clones the node array,
+    /// rescans every node per release — the pre-PR cost).
+    fn earliest_start_estimate(&self, job: &SimJob) -> f64 {
+        let mut frees: Vec<(f64, usize, u32, u32)> = self
+            .running
+            .iter()
+            .map(|r| (r.end_s, r.node, r.job.cores, r.job.ram_gb))
+            .collect();
+        frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut nodes = self.nodes.clone();
+        for (end, node, cores, ram) in frees {
+            nodes[node].free_cores += cores;
+            nodes[node].free_ram_gb += ram;
+            if nodes
+                .iter()
+                .any(|n| n.free_cores >= job.cores && n.free_ram_gb >= job.ram_gb)
+            {
+                return end;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Time of the next event (linear scans over running + pending).
+    pub fn next_event_time(&self) -> Option<f64> {
+        if self.needs_schedule
+            && !self.in_maintenance(self.clock)
+            && self.pending.iter().any(|j| j.submit_s <= self.clock)
+        {
+            return Some(self.clock);
+        }
+        let next_end = self
+            .running
+            .iter()
+            .map(|r| r.end_s)
+            .fold(f64::INFINITY, f64::min);
+        let next_arrival = self
+            .pending
+            .iter()
+            .map(|j| j.submit_s)
+            .filter(|&t| t > self.clock)
+            .fold(f64::INFINITY, f64::min);
+        let next_maint_end = self
+            .maintenance
+            .iter()
+            .filter(|w| w.end_s > self.clock && w.start_s <= self.clock)
+            .map(|w| w.end_s)
+            .fold(f64::INFINITY, f64::min);
+        let next_t = next_end.min(next_arrival).min(next_maint_end);
+        next_t.is_finite().then_some(next_t)
+    }
+
+    /// Release resources of every running job whose end time has passed.
+    fn complete_finished(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].end_s <= self.clock {
+                let r = self.running.swap_remove(i);
+                self.nodes[r.node].free_cores += r.job.cores;
+                self.nodes[r.node].free_ram_gb += r.job.ram_gb;
+                if let Some(h) = &r.job.array {
+                    if let Some(c) = self.array_running.get_mut(&h.array_id) {
+                        *c -= 1;
+                    }
+                }
+                self.records.push(JobRecord {
+                    start_s: r.start_s,
+                    end_s: r.end_s,
+                    node: r.node,
+                    job: r.job,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Advance to the next event; returns false when nothing remains.
+    pub fn step(&mut self) -> bool {
+        self.schedule();
+        let Some(next_t) = self.next_event_time() else {
+            return false;
+        };
+        let dt = next_t - self.clock;
+        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
+        self.clock = next_t;
+        self.complete_finished();
+        true
+    }
+
+    /// Advance the simulation to absolute time `t` without overshooting.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t + 1e-9 >= self.clock,
+            "cannot advance backwards (to {t}, clock {})",
+            self.clock
+        );
+        loop {
+            self.schedule();
+            let target = match self.next_event_time() {
+                Some(x) if x <= t => x,
+                _ => t,
+            };
+            let dt = (target - self.clock).max(0.0);
+            self.core_seconds_capacity += self.spec.total_cores() as f64 * dt;
+            self.clock = self.clock.max(target);
+            self.complete_finished();
+            if target + 1e-9 >= t {
+                self.schedule();
+                return;
+            }
+        }
+    }
+
+    /// Run until all submitted jobs have completed (or deadlock).
+    pub fn run_to_completion(&mut self) -> &[JobRecord] {
+        while !self.pending.is_empty() || !self.running.is_empty() {
+            if !self.step() {
+                break;
+            }
+        }
+        &self.records
+    }
+
+    /// Makespan of everything completed so far.
+    pub fn makespan(&self) -> f64 {
+        self.records.iter().map(|r| r.end_s).fold(0.0, f64::max)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Staged co-simulation (pre-PR)
+// ---------------------------------------------------------------------
+
+/// Host id used for a campaign's staging path (one shared gateway).
+const STAGE_HOST: u64 = 0;
+
+/// The pre-PR SLURM compute backend wrapper.
+pub struct SlurmSim {
+    sched: Scheduler,
+    user: String,
+    array: Option<ArrayHandle>,
+    cursor: usize,
+}
+
+impl SlurmSim {
+    pub fn new(sched: Scheduler, user: &str, array: Option<ArrayHandle>) -> Self {
+        Self {
+            sched,
+            user: user.to_string(),
+            array,
+            cursor: 0,
+        }
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+}
+
+impl ComputeSim for SlurmSim {
+    fn submit(&mut self, id: u64, ready_s: f64, job: &StagedJob) {
+        self.sched.submit(SimJob {
+            id,
+            user: self.user.clone(),
+            cores: job.cores,
+            ram_gb: job.ram_gb,
+            duration_s: job.compute_s,
+            submit_s: ready_s.max(self.sched.clock()),
+            array: self.array,
+        });
+    }
+
+    fn next_event_time(&self) -> Option<f64> {
+        self.sched.next_event_time()
+    }
+
+    fn advance_to(&mut self, t: f64) -> Vec<(u64, f64)> {
+        self.sched.advance_to(t);
+        let recs = self.sched.records();
+        let done = recs[self.cursor..]
+            .iter()
+            .map(|r| (r.job.id, r.end_s))
+            .collect();
+        self.cursor = recs.len();
+        done
+    }
+}
+
+/// The pre-PR bounded worker-lane pool: job selection linearly scans
+/// the whole queue per start, `next_event_time` per event.
+pub struct LanePool {
+    lanes: Vec<f64>,
+    queue: Vec<(u64, f64, f64)>,
+    running: Vec<(u64, f64)>,
+    clock: f64,
+}
+
+impl LanePool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "lane pool needs at least one worker");
+        Self {
+            lanes: vec![0.0; workers],
+            queue: Vec::new(),
+            running: Vec::new(),
+            clock: 0.0,
+        }
+    }
+
+    /// Start queued-and-ready jobs on free lanes, FIFO by (ready, id).
+    fn start_ready(&mut self) {
+        loop {
+            let Some(lane) = self.lanes.iter().position(|&f| f <= self.clock + EPS) else {
+                return;
+            };
+            let next = self
+                .queue
+                .iter()
+                .enumerate()
+                .filter(|(_, &(_, ready, _))| ready <= self.clock + EPS)
+                .min_by(|(_, a), (_, b)| {
+                    (a.1, a.0).partial_cmp(&(b.1, b.0)).expect("finite times")
+                })
+                .map(|(k, _)| k);
+            let Some(k) = next else { return };
+            let (id, _ready, dur) = self.queue.remove(k);
+            self.lanes[lane] = self.clock + dur;
+            self.running.push((id, self.clock + dur));
+        }
+    }
+}
+
+impl ComputeSim for LanePool {
+    fn submit(&mut self, id: u64, ready_s: f64, job: &StagedJob) {
+        let ready = ready_s.max(self.clock);
+        self.queue.push((id, ready, job.compute_s));
+        if ready <= self.clock + EPS {
+            self.start_ready();
+        }
+    }
+
+    fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        for &(_, end) in &self.running {
+            t = t.min(end);
+        }
+        for &(_, ready, _) in &self.queue {
+            if ready > self.clock + EPS {
+                t = t.min(ready);
+            }
+        }
+        t.is_finite().then_some(t)
+    }
+
+    fn advance_to(&mut self, t: f64) -> Vec<(u64, f64)> {
+        assert!(t + EPS >= self.clock, "cannot advance backwards");
+        let mut done = Vec::new();
+        loop {
+            self.start_ready();
+            let target = match self.next_event_time() {
+                Some(x) if x <= t => x,
+                _ => t,
+            };
+            self.clock = self.clock.max(target);
+            let mut i = 0;
+            while i < self.running.len() {
+                if self.running[i].1 <= self.clock + EPS {
+                    done.push(self.running.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            if target + EPS >= t {
+                self.start_ready();
+                return done;
+            }
+        }
+    }
+}
+
+const fn stage_in_id(i: usize) -> u64 {
+    (i as u64) * 2
+}
+
+const fn stage_out_id(i: usize) -> u64 {
+    (i as u64) * 2 + 1
+}
+
+/// The pre-PR staged campaign loop: polls both engines'
+/// `next_event_time` on every iteration and advances both to the
+/// globally earliest event. Byte-identical hand-off semantics to
+/// [`crate::coordinator::staged::run_staged`], at pre-PR cost.
+pub fn run_staged(
+    jobs: &[StagedJob],
+    compute: &mut dyn ComputeSim,
+    transfers: &mut TransferScheduler,
+) -> StagedOutcome {
+    let mut timings = vec![StagedTiming::default(); jobs.len()];
+    for (i, j) in jobs.iter().enumerate() {
+        transfers.submit_at(stage_in_id(i), STAGE_HOST, j.bytes_in, 0.0);
+    }
+    let mut seen = 0usize;
+    loop {
+        let t = match (transfers.next_event_time(), compute.next_event_time()) {
+            (None, None) => break,
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+        };
+        transfers.advance_to(t);
+        let new_records = transfers.records()[seen..].to_vec();
+        seen = transfers.records().len();
+        for r in &new_records {
+            let i = (r.id / 2) as usize;
+            if r.id % 2 == 0 {
+                timings[i].stage_in_wait_s = r.queue_wait_s();
+                timings[i].stage_in_s = r.transfer_s();
+                compute.submit(i as u64, r.end_s, &jobs[i]);
+            } else {
+                timings[i].stage_out_wait_s = r.queue_wait_s();
+                timings[i].stage_out_s = r.transfer_s();
+                timings[i].done_s = r.end_s;
+                timings[i].completed = true;
+            }
+        }
+        for (id, end_s) in compute.advance_to(t) {
+            let i = id as usize;
+            timings[i].compute_end_s = end_s;
+            timings[i].compute_start_s = end_s - jobs[i].compute_s;
+            transfers.submit_at(stage_out_id(i), STAGE_HOST, jobs[i].bytes_out, end_s);
+        }
+    }
+    let makespan_s = timings
+        .iter()
+        .map(|x| x.compute_end_s)
+        .fold(transfers.stats().makespan_s, f64::max);
+    StagedOutcome {
+        makespan_s,
+        transfer: transfers.stats(),
+        timings,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The real coverage for this module is rust/tests/engine_parity.rs,
+    // which pins the live engines to these references record-for-record.
+    // Here: just prove the frozen copies still run end to end.
+
+    #[test]
+    fn frozen_transfer_engine_runs() {
+        let mut sim = TransferScheduler::for_env(Env::Local, 2, 7);
+        for i in 0..4 {
+            sim.submit_at(i, 0, 100_000_000, 0.0);
+        }
+        assert_eq!(sim.run_to_completion().len(), 4);
+    }
+
+    #[test]
+    fn frozen_slurm_engine_runs() {
+        let mut s = Scheduler::new(ClusterSpec::small(2, 4, 16));
+        for id in 0..4 {
+            s.submit(SimJob {
+                id,
+                user: "u".into(),
+                cores: 2,
+                ram_gb: 1,
+                duration_s: 50.0,
+                submit_s: 0.0,
+                array: None,
+            });
+        }
+        assert_eq!(s.run_to_completion().len(), 4);
+        assert_eq!(s.makespan(), 100.0);
+    }
+
+    #[test]
+    fn frozen_staged_loop_runs() {
+        let jobs: Vec<StagedJob> = (0..3)
+            .map(|_| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s: 60.0,
+                bytes_in: 50_000_000,
+                bytes_out: 10_000_000,
+            })
+            .collect();
+        let mut lanes = LanePool::new(2);
+        let mut transfers = TransferScheduler::for_env(Env::Hpc, 4, 3);
+        let out = run_staged(&jobs, &mut lanes, &mut transfers);
+        assert!(out.timings.iter().all(|t| t.completed));
+        assert_eq!(out.transfer.transfers, 6);
+    }
+}

@@ -7,10 +7,23 @@
 //!
 //! ACCRE's published scale: 750 compute nodes, 20,100 CPU cores, ~200 TB
 //! RAM (§2.2); `ClusterSpec::accre()` encodes it.
+//!
+//! **Event-engine scale (DESIGN.md §10):** arrivals are heap-ordered,
+//! running-job end times are indexed in a binary heap, scheduling passes
+//! only run when cluster state actually changed (arrival, completion,
+//! maintenance boundary — a pass without one is a provable no-op), and
+//! the EASY-backfill start estimate is a resource-release skyline that
+//! touches only the node each release lands on. The retained pre-PR
+//! engine ([`crate::sim_legacy`]) re-sorted the whole pending vector and
+//! re-scanned every running job on every event; the rewrite is
+//! record-for-record identical to it (`rust/tests/engine_parity.rs`).
 
 pub mod trace;
 
-use std::collections::BTreeMap;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+
+use crate::util::ord::F64Ord;
 
 /// One node's capacity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,14 +139,64 @@ struct Running {
     end_s: f64,
 }
 
+/// A not-yet-due submission, heap-ordered by (submit_s, id, seq). The
+/// submission sequence number disambiguates pathological duplicate ids
+/// so the heap order stays total.
+#[derive(Debug, Clone)]
+struct FutureJob {
+    key: (F64Ord, u64, u64),
+    job: SimJob,
+}
+
+impl PartialEq for FutureJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Eq for FutureJob {}
+
+impl PartialOrd for FutureJob {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FutureJob {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
 /// The discrete-event scheduler.
+///
+/// Scale note (DESIGN.md §10): future arrivals live in a binary heap,
+/// due jobs in an unordered bag that scheduling passes order by a
+/// priority key computed once per job, started jobs leave the bag via
+/// swap-removal, and completions pop from an end-time heap (replayed in
+/// the exact pre-PR emission order). Passes are skipped entirely when
+/// no arrival/completion/maintenance boundary occurred since the last
+/// one — the pre-PR engine re-sorted all pending jobs on every event.
+/// Job ids must be unique while a job is tracked (every in-tree caller
+/// allocates unique ids).
 #[derive(Debug)]
 pub struct Scheduler {
     pub spec: ClusterSpec,
     nodes: Vec<NodeState>,
     clock: f64,
-    pending: Vec<SimJob>,
+    /// Not-yet-due submissions, min-heap by (submit_s, id).
+    future: BinaryHeap<Reverse<FutureJob>>,
+    submit_seq: u64,
+    /// Arrived-and-waiting jobs (submit_s ≤ clock), unordered; each pass
+    /// sorts priority keys over it, started jobs leave via swap-remove.
+    due: Vec<SimJob>,
     running: Vec<Running>,
+    /// Job id → position in `running`, maintained across swap-removals
+    /// so end-heap pops translate to positions in O(1).
+    running_pos: HashMap<u64, usize>,
+    /// Min-heap of (end_s, id) over running jobs: `next_event_time` is a
+    /// peek, `complete_finished` pops instead of scanning every runner.
+    ends: BinaryHeap<Reverse<(F64Ord, u64)>>,
     records: Vec<JobRecord>,
     /// Fairshare: accumulated core-seconds per user (decayed); lower usage
     /// → higher priority.
@@ -147,6 +210,16 @@ pub struct Scheduler {
     /// [`Self::next_event_time`] report "a scheduling attempt is due
     /// now" exactly once instead of livelocking on blocked jobs.
     needs_schedule: bool,
+    /// Cluster state changed since the last completed pass (arrival,
+    /// completion, maintenance boundary). A pass without a change can
+    /// start nothing — the backfill window only narrows as the clock
+    /// advances and resources only free at completions — so it is
+    /// skipped wholesale.
+    sched_dirty: bool,
+    /// Scratch node states for the release skyline (no per-call clone).
+    skyline: Vec<NodeState>,
+    /// Scheduling policy. Set it before submitting work: the dirty-gated
+    /// pass skipping assumes the policy is fixed for a simulation run.
     pub policy: Policy,
 }
 
@@ -156,7 +229,7 @@ impl Scheduler {
     }
 
     pub fn with_policy(spec: ClusterSpec, policy: Policy) -> Self {
-        let nodes = spec
+        let nodes: Vec<NodeState> = spec
             .nodes
             .iter()
             .map(|n| NodeState {
@@ -167,8 +240,12 @@ impl Scheduler {
         Self {
             nodes,
             clock: 0.0,
-            pending: Vec::new(),
+            future: BinaryHeap::new(),
+            submit_seq: 0,
+            due: Vec::new(),
             running: Vec::new(),
+            running_pos: HashMap::new(),
+            ends: BinaryHeap::new(),
             records: Vec::new(),
             usage: BTreeMap::new(),
             maintenance: Vec::new(),
@@ -176,6 +253,8 @@ impl Scheduler {
             core_seconds_capacity: 0.0,
             core_seconds_used: 0.0,
             needs_schedule: false,
+            sched_dirty: false,
+            skyline: Vec::new(),
             policy,
             spec,
         }
@@ -187,6 +266,9 @@ impl Scheduler {
 
     pub fn add_maintenance(&mut self, w: Maintenance) {
         self.maintenance.push(w);
+        // conservative: a new window can only block starts, but re-run
+        // the next pass rather than reason about which one
+        self.sched_dirty = true;
     }
 
     /// True if `t` falls in a maintenance window (no job starts).
@@ -202,12 +284,21 @@ impl Scheduler {
             job.submit_s,
             self.clock
         );
-        self.pending.push(job);
         self.needs_schedule = true;
+        self.sched_dirty = true;
+        if job.submit_s <= self.clock {
+            self.due.push(job);
+        } else {
+            self.submit_seq += 1;
+            self.future.push(Reverse(FutureJob {
+                key: (F64Ord(job.submit_s), job.id, self.submit_seq),
+                job,
+            }));
+        }
     }
 
     pub fn pending_count(&self) -> usize {
-        self.pending.len()
+        self.due.len() + self.future.len()
     }
 
     pub fn running_count(&self) -> usize {
@@ -262,6 +353,8 @@ impl Scheduler {
             job.cores as f64 * job.duration_s;
         self.core_seconds_used += job.cores as f64 * job.duration_s;
         let end_s = self.clock + job.duration_s;
+        self.ends.push(Reverse((F64Ord(end_s), job.id)));
+        self.running_pos.insert(job.id, self.running.len());
         self.running.push(Running {
             job,
             node,
@@ -270,24 +363,49 @@ impl Scheduler {
         });
     }
 
+    /// Migrate heap-ordered arrivals whose submit time has passed into
+    /// the due bag (independent of maintenance — bookkeeping only).
+    fn drain_due(&mut self) {
+        while let Some(Reverse(f)) = self.future.peek() {
+            if f.key.0 .0 > self.clock {
+                break;
+            }
+            let Reverse(f) = self.future.pop().expect("peeked entry");
+            self.due.push(f.job);
+            self.sched_dirty = true;
+        }
+    }
+
     /// Try to start pending jobs (priority order + EASY backfill): the
     /// highest-priority blocked job reserves its earliest start; later jobs
     /// may start now only if they finish before that reservation (or don't
     /// take its resources — approximated by the end-before test).
+    ///
+    /// The pass is skipped when nothing changed since the last one
+    /// (`sched_dirty`): with resources and arrivals unchanged and the
+    /// backfill window only narrowing over time, a re-run provably
+    /// starts nothing.
     fn schedule(&mut self) {
+        self.drain_due();
         if self.in_maintenance(self.clock) {
             return;
         }
+        debug_assert!(
+            !self.needs_schedule || self.sched_dirty,
+            "needs_schedule implies a dirty pass"
+        );
+        if !self.sched_dirty {
+            return;
+        }
+        self.sched_dirty = false;
         self.needs_schedule = false;
-        // arrivals only — priority keys computed ONCE per job, not per
-        // comparison (the BTreeMap lookup inside priority() dominated the
-        // sort before; see EXPERIMENTS.md §Perf L3)
-        let mut arrived: Vec<(usize, (f64, f64, u64))> = (0..self.pending.len())
-            .filter(|&i| self.pending[i].submit_s <= self.clock)
-            .map(|i| (i, self.priority(&self.pending[i])))
+        // priority keys computed ONCE per job, not per comparison (the
+        // BTreeMap lookup inside priority() dominated the sort before;
+        // see EXPERIMENTS.md §Perf L3)
+        let mut order: Vec<(usize, (f64, f64, u64))> = (0..self.due.len())
+            .map(|i| (i, self.priority(&self.due[i])))
             .collect();
-        arrived.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        let arrived: Vec<usize> = arrived.into_iter().map(|(i, _)| i).collect();
+        order.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
 
         let mut started: Vec<usize> = Vec::new();
         let mut shadow: Option<f64> = None; // head job's reserved start
@@ -296,8 +414,8 @@ impl Scheduler {
         // so the O(nodes) scan runs once per distinct requirement class
         // instead of once per pending job.
         let mut failed_reqs: Vec<(u32, u32)> = Vec::new();
-        for &idx in &arrived {
-            let job = self.pending[idx].clone();
+        for &(idx, _) in &order {
+            let job = self.due[idx].clone();
             if !self.array_ok(&job) {
                 continue;
             }
@@ -329,29 +447,43 @@ impl Scheduler {
                 }
             }
         }
+        // swap-list removal: positions descending, so each swap_remove
+        // pulls a not-yet-removed tail element into the hole (the due
+        // bag is unordered — the pre-PR O(n) ordered Vec::remove per
+        // started job is gone)
         started.sort_unstable_by(|a, b| b.cmp(a));
         for idx in started {
-            self.pending.remove(idx);
+            self.due.swap_remove(idx);
         }
     }
 
     /// Earliest time the blocked job could start, assuming running jobs
     /// release resources at their end times (ignores other pending jobs —
     /// the EASY reservation).
-    fn earliest_start_estimate(&self, job: &SimJob) -> f64 {
+    ///
+    /// Release skyline: callers only ask when *no* node currently fits
+    /// the job, and a release only improves the node it lands on, so
+    /// after each release just that node needs re-checking —
+    /// O(R log R + R + N) over a reused scratch buffer, versus the
+    /// pre-PR full-node rescan per release (O(R·N)) on a fresh clone.
+    fn earliest_start_estimate(&mut self, job: &SimJob) -> f64 {
+        debug_assert!(
+            self.first_fit(job).is_none(),
+            "estimate asked while the job already fits"
+        );
         let mut frees: Vec<(f64, usize, u32, u32)> = self
             .running
             .iter()
             .map(|r| (r.end_s, r.node, r.job.cores, r.job.ram_gb))
             .collect();
         frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut nodes = self.nodes.clone();
+        self.skyline.clear();
+        self.skyline.extend_from_slice(&self.nodes);
         for (end, node, cores, ram) in frees {
-            nodes[node].free_cores += cores;
-            nodes[node].free_ram_gb += ram;
-            if nodes
-                .iter()
-                .any(|n| n.free_cores >= job.cores && n.free_ram_gb >= job.ram_gb)
+            self.skyline[node].free_cores += cores;
+            self.skyline[node].free_ram_gb += ram;
+            if self.skyline[node].free_cores >= job.cores
+                && self.skyline[node].free_ram_gb >= job.ram_gb
             {
                 return end;
             }
@@ -366,24 +498,19 @@ impl Scheduler {
     /// oversized job). Used by the staged-campaign co-simulation
     /// ([`crate::coordinator::staged`]) to interleave this scheduler
     /// with the transfer scheduler without overshooting either.
+    /// Heap peeks — O(maintenance windows), no job scans.
     pub fn next_event_time(&self) -> Option<f64> {
-        if self.needs_schedule
-            && !self.in_maintenance(self.clock)
-            && self.pending.iter().any(|j| j.submit_s <= self.clock)
-        {
+        if self.needs_schedule && !self.in_maintenance(self.clock) && !self.due.is_empty() {
             return Some(self.clock);
         }
-        let next_end = self
-            .running
-            .iter()
-            .map(|r| r.end_s)
-            .fold(f64::INFINITY, f64::min);
-        let next_arrival = self
-            .pending
-            .iter()
-            .map(|j| j.submit_s)
-            .filter(|&t| t > self.clock)
-            .fold(f64::INFINITY, f64::min);
+        let next_end = match self.ends.peek() {
+            Some(&Reverse((end, _))) => end.0,
+            None => f64::INFINITY,
+        };
+        let next_arrival = match self.future.peek() {
+            Some(Reverse(f)) => f.key.0 .0,
+            None => f64::INFINITY,
+        };
         // if blocked purely by maintenance or throttle, jump to next boundary
         let next_maint_end = self
             .maintenance
@@ -397,27 +524,59 @@ impl Scheduler {
 
     /// Release resources of every running job whose end time has passed
     /// and append its [`JobRecord`].
+    ///
+    /// Completions pop off the end-time heap; the emission replays the
+    /// pre-PR swap-remove scan (smallest position first, a tail element
+    /// swapped into the hole is re-examined at that index) so the record
+    /// order — and therefore every downstream consumer — is
+    /// byte-identical to [`crate::sim_legacy`].
     fn complete_finished(&mut self) {
-        let mut i = 0;
-        while i < self.running.len() {
-            if self.running[i].end_s <= self.clock {
-                let r = self.running.swap_remove(i);
-                self.nodes[r.node].free_cores += r.job.cores;
-                self.nodes[r.node].free_ram_gb += r.job.ram_gb;
-                if let Some(h) = &r.job.array {
-                    if let Some(c) = self.array_running.get_mut(&h.array_id) {
-                        *c -= 1;
-                    }
-                }
-                self.records.push(JobRecord {
-                    start_s: r.start_s,
-                    end_s: r.end_s,
-                    node: r.node,
-                    job: r.job,
-                });
-            } else {
-                i += 1;
+        let mut due_pos: BTreeSet<usize> = BTreeSet::new();
+        while let Some(&Reverse((end, id))) = self.ends.peek() {
+            if end.0 > self.clock {
+                break;
             }
+            self.ends.pop();
+            let pos = *self.running_pos.get(&id).expect("running job indexed");
+            due_pos.insert(pos);
+        }
+        while let Some(pos) = due_pos.pop_first() {
+            let last = self.running.len() - 1;
+            let r = self.running.swap_remove(pos);
+            self.running_pos.remove(&r.job.id);
+            if pos != last {
+                let moved = self.running[pos].job.id;
+                self.running_pos.insert(moved, pos);
+                if due_pos.remove(&last) {
+                    due_pos.insert(pos);
+                }
+            }
+            self.nodes[r.node].free_cores += r.job.cores;
+            self.nodes[r.node].free_ram_gb += r.job.ram_gb;
+            if let Some(h) = &r.job.array {
+                if let Some(c) = self.array_running.get_mut(&h.array_id) {
+                    *c -= 1;
+                }
+            }
+            self.sched_dirty = true;
+            self.records.push(JobRecord {
+                start_s: r.start_s,
+                end_s: r.end_s,
+                node: r.node,
+                job: r.job,
+            });
+        }
+    }
+
+    /// Advance the clock, accounting capacity and flagging a pass when a
+    /// maintenance window ended inside the step.
+    fn tick_to(&mut self, next_t: f64) {
+        let dt = next_t - self.clock;
+        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
+        let was_maint = self.in_maintenance(self.clock);
+        self.clock = self.clock.max(next_t);
+        if was_maint && !self.in_maintenance(self.clock) {
+            self.sched_dirty = true;
         }
     }
 
@@ -431,9 +590,7 @@ impl Scheduler {
             // false with pending jobs left.
             return false;
         };
-        let dt = next_t - self.clock;
-        self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
-        self.clock = next_t;
+        self.tick_to(next_t);
         self.complete_finished();
         true
     }
@@ -455,9 +612,7 @@ impl Scheduler {
                 Some(x) if x <= t => x,
                 _ => t,
             };
-            let dt = (target - self.clock).max(0.0);
-            self.core_seconds_capacity += self.spec.total_cores() as f64 * dt;
-            self.clock = self.clock.max(target);
+            self.tick_to(target);
             self.complete_finished();
             if target + 1e-9 >= t {
                 self.schedule();
@@ -468,7 +623,7 @@ impl Scheduler {
 
     /// Run until all submitted jobs have completed (or deadlock).
     pub fn run_to_completion(&mut self) -> &[JobRecord] {
-        while !self.pending.is_empty() || !self.running.is_empty() {
+        while !self.due.is_empty() || !self.future.is_empty() || !self.running.is_empty() {
             if !self.step() {
                 break;
             }
@@ -710,5 +865,21 @@ mod tests {
         s.submit(job(1, 4, 100.0, 0.0));
         s.run_to_completion();
         assert!((s.utilization() - 1.0).abs() < 1e-9, "{}", s.utilization());
+    }
+
+    #[test]
+    fn long_arrival_storm_stays_fast() {
+        // 20k one-core jobs trickling into a 64-core cluster at roughly
+        // its drain rate: the pre-PR engine re-scanned all 20k pending
+        // submissions inside every next_event_time call; the arrival
+        // heap + end-time heap + dirty-gated passes keep this
+        // test-speed in debug builds.
+        let mut s = Scheduler::new(ClusterSpec::small(8, 8, 64));
+        for id in 0..20_000u64 {
+            s.submit(job(id, 1, 30.0, (id / 2) as f64));
+        }
+        s.run_to_completion();
+        assert_eq!(s.records().len(), 20_000);
+        assert!(s.utilization() > 0.0);
     }
 }

@@ -4,7 +4,7 @@
 
 use super::{ArrayHandle, ClusterSpec, JobRecord, Policy, Scheduler, SimJob};
 use crate::util::rng::Rng;
-use crate::util::units::{mean_std, percentile};
+use crate::util::units::{mean_std, percentiles};
 use std::collections::BTreeMap;
 
 /// Trace generator parameters (Poisson arrivals, lognormal-ish durations).
@@ -102,12 +102,14 @@ fn stats_of(sched: &Scheduler) -> TraceStats {
     } else {
         sum * sum / (user_means.len() as f64 * sq)
     };
+    // one sort serves both percentiles (units::percentiles)
+    let wait_ps = percentiles(&waits, &[50.0, 95.0]);
     TraceStats {
         jobs: records.len(),
         makespan_s: sched.makespan(),
         wait_mean_s,
-        wait_p50_s: percentile(&waits, 50.0),
-        wait_p95_s: percentile(&waits, 95.0),
+        wait_p50_s: wait_ps[0],
+        wait_p95_s: wait_ps[1],
         utilization: sched.utilization(),
         wait_fairness,
     }

@@ -7,9 +7,14 @@
 
 use std::collections::BTreeMap;
 
+/// Objects at or above this many keys carry a key→position index;
+/// smaller ones (typical sidecars) stay a plain Vec scan — the index
+/// would cost more to maintain than it saves.
+const INDEX_THRESHOLD: usize = 16;
 
-/// A JSON value. Objects keep insertion order via a Vec of pairs plus a
-/// lookup map (sidecar files care about readable ordering).
+/// A JSON value. Objects keep insertion order via a Vec of pairs; once
+/// an object grows to `INDEX_THRESHOLD` keys a lookup index makes
+/// `get`/`set` O(log n) (manifest/provenance reads sit on this path).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -20,10 +25,21 @@ pub enum Json {
     Obj(JsonObj),
 }
 
-/// Insertion-ordered JSON object.
-#[derive(Debug, Clone, Default, PartialEq)]
+/// Insertion-ordered JSON object: a Vec of (key, value) pairs, plus a
+/// key→position index built lazily once the object holds
+/// `INDEX_THRESHOLD` keys. Equality and serialization read only the
+/// pairs, so an indexed object and a small unindexed one with the same
+/// content compare equal.
+#[derive(Debug, Clone, Default)]
 pub struct JsonObj {
     pairs: Vec<(String, Json)>,
+    index: Option<BTreeMap<String, usize>>,
+}
+
+impl PartialEq for JsonObj {
+    fn eq(&self, other: &Self) -> bool {
+        self.pairs == other.pairs
+    }
 }
 
 impl JsonObj {
@@ -31,22 +47,55 @@ impl JsonObj {
         Self::default()
     }
 
+    fn position(&self, key: &str) -> Option<usize> {
+        match &self.index {
+            Some(ix) => ix.get(key).copied(),
+            None => self.pairs.iter().position(|(k, _)| k == key),
+        }
+    }
+
+    fn maybe_build_index(&mut self) {
+        if self.index.is_none() && self.pairs.len() >= INDEX_THRESHOLD {
+            self.index = Some(
+                self.pairs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (k, _))| (k.clone(), i))
+                    .collect(),
+            );
+        }
+    }
+
     pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
-        if let Some(slot) = self.pairs.iter_mut().find(|(k, _)| k == key) {
-            slot.1 = value;
-        } else {
-            self.pairs.push((key.to_string(), value));
+        match self.position(key) {
+            Some(i) => self.pairs[i].1 = value,
+            None => {
+                if let Some(ix) = &mut self.index {
+                    ix.insert(key.to_string(), self.pairs.len());
+                }
+                self.pairs.push((key.to_string(), value));
+                self.maybe_build_index();
+            }
         }
         self
     }
 
     pub fn get(&self, key: &str) -> Option<&Json> {
-        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+        self.position(key).map(|i| &self.pairs[i].1)
     }
 
     pub fn remove(&mut self, key: &str) -> Option<Json> {
-        let idx = self.pairs.iter().position(|(k, _)| k == key)?;
-        Some(self.pairs.remove(idx).1)
+        let idx = self.position(key)?;
+        let (_, value) = self.pairs.remove(idx);
+        if let Some(ix) = &mut self.index {
+            ix.remove(key);
+            for pos in ix.values_mut() {
+                if *pos > idx {
+                    *pos -= 1;
+                }
+            }
+        }
+        Some(value)
     }
 
     pub fn len(&self) -> usize {
@@ -525,5 +574,53 @@ mod tests {
     fn integers_serialized_without_fraction() {
         assert_eq!(Json::num(5).to_string(), "5");
         assert_eq!(Json::num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn large_objects_index_transparently() {
+        // cross the INDEX_THRESHOLD and verify get/set/remove semantics
+        // and insertion order are unchanged by the lazy index
+        let mut o = Json::obj();
+        for i in 0..40 {
+            o.set(&format!("k{i:02}"), Json::num(i));
+        }
+        assert_eq!(o.len(), 40);
+        for i in 0..40 {
+            assert_eq!(o.get(&format!("k{i:02}")).unwrap().as_f64(), Some(i as f64));
+        }
+        assert_eq!(o.get("missing"), None);
+        // overwrite keeps position and count
+        o.set("k05", Json::str("replaced"));
+        assert_eq!(o.len(), 40);
+        assert_eq!(o.iter().nth(5).unwrap().0, "k05");
+        assert_eq!(o.get("k05").unwrap().as_str(), Some("replaced"));
+        // removal shifts later positions; lookups stay correct
+        assert!(o.remove("k00").is_some());
+        assert_eq!(o.remove("k00"), None);
+        assert_eq!(o.len(), 39);
+        assert_eq!(o.iter().next().unwrap().0, "k01");
+        assert_eq!(o.get("k39").unwrap().as_f64(), Some(39.0));
+        // roundtrip preserves order through parse (parser uses set too)
+        let v = Json::Obj(o.clone());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn indexed_and_unindexed_objects_compare_equal() {
+        // an object that grew past the threshold and shrank back must
+        // equal a small object built directly with the same content
+        let mut big = Json::obj();
+        for i in 0..20 {
+            big.set(&format!("k{i:02}"), Json::num(i));
+        }
+        for i in 3..20 {
+            big.remove(&format!("k{i:02}"));
+        }
+        let mut small = Json::obj();
+        for i in 0..3 {
+            small.set(&format!("k{i:02}"), Json::num(i));
+        }
+        assert_eq!(big, small);
+        assert_eq!(Json::Obj(big), Json::Obj(small));
     }
 }

@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod ord;
 pub mod pool;
 pub mod prop;
 pub mod rng;

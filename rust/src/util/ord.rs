@@ -1,0 +1,71 @@
+//! Total-order wrapper for finite `f64` keys in heaps and ordered maps.
+//!
+//! The event engines (DESIGN.md §10) index simulated times in
+//! `BinaryHeap`/`BTreeMap`, which require `Ord`; `f64` only implements
+//! `PartialOrd`. [`F64Ord`] closes the gap with IEEE-754
+//! [`f64::total_cmp`] — identical to `<`/`==` for the finite,
+//! non-degenerate times the simulators produce (NaN and `-0.0` never
+//! enter an event queue: submit times are clamped to the clock and all
+//! arithmetic stays finite).
+
+use std::cmp::Ordering;
+
+/// An `f64` with the IEEE-754 total order, usable as a heap/map key.
+#[derive(Debug, Clone, Copy)]
+pub struct F64Ord(pub f64);
+
+impl PartialEq for F64Ord {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for F64Ord {}
+
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl From<f64> for F64Ord {
+    fn from(v: f64) -> Self {
+        F64Ord(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_like_f64_for_finite_values() {
+        let mut xs = [F64Ord(3.0), F64Ord(1.5), F64Ord(2.0)];
+        xs.sort();
+        assert_eq!(xs.map(|x| x.0), [1.5, 2.0, 3.0]);
+        assert!(F64Ord(1.0) < F64Ord(2.0));
+        assert_eq!(F64Ord(1.0), F64Ord(1.0));
+    }
+
+    #[test]
+    fn usable_as_ordered_keys() {
+        use std::cmp::Reverse;
+        use std::collections::{BTreeMap, BinaryHeap};
+        let mut heap = BinaryHeap::new();
+        for t in [5.0, 1.0, 3.0] {
+            heap.push(Reverse((F64Ord(t), 0u64)));
+        }
+        assert_eq!(heap.pop().unwrap().0 .0 .0, 1.0);
+        let mut map: BTreeMap<(F64Ord, u64), &str> = BTreeMap::new();
+        map.insert((F64Ord(2.0), 7), "b");
+        map.insert((F64Ord(2.0), 3), "a");
+        let first = *map.first_key_value().unwrap().1;
+        assert_eq!(first, "a", "ties break by the second key component");
+    }
+}

@@ -102,23 +102,58 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 
 /// Percentile (linear interpolation), p in [0, 100].
 ///
-/// NaN samples (reachable from any f64 telemetry) sort after every
+/// O(n) selection (`select_nth_unstable_by`) instead of a full sort:
+/// the lower order statistic partitions the buffer, and the upper
+/// interpolation neighbour is the minimum of the right partition. For
+/// several percentiles of one sample use [`percentiles`], which sorts
+/// once instead of re-selecting per call.
+///
+/// NaN samples (reachable from any f64 telemetry) order after every
 /// number via `total_cmp` instead of panicking the comparator; they
 /// surface in the top percentiles rather than poisoning the call.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.total_cmp(b));
-    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let mut buf = xs.to_vec();
+    let rank = (p / 100.0) * (buf.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
+    let (_, &mut lo_v, rest) = buf.select_nth_unstable_by(lo, f64::total_cmp);
     if lo == hi {
-        sorted[lo]
-    } else {
-        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+        return lo_v;
     }
+    // sorted[lo + 1] = the smallest element right of the pivot
+    let hi_v = rest
+        .iter()
+        .copied()
+        .min_by(|a, b| a.total_cmp(b))
+        .expect("hi > lo implies a non-empty right partition");
+    lo_v + (rank - lo as f64) * (hi_v - lo_v)
+}
+
+/// Several percentiles of one sample: sorts once (O(n log n)) and reads
+/// every requested percentile off the same order statistics — the
+/// multi-percentile report tables (queue-wait p50/p95, transfer-wait
+/// rows) sit on this instead of re-sorting per percentile.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+    ps.iter()
+        .map(|&p| {
+            let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -196,5 +231,26 @@ mod tests {
         // NaN sorts last (total order), so only the top percentile sees it
         assert!(percentile(&xs, 100.0).is_nan());
         assert!(percentile(&[f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentiles_match_single_percentile() {
+        // the sort-once batch helper and the O(n) selection path must
+        // agree exactly — same ranks, same interpolation arithmetic
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0];
+        let ps = [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0];
+        let batch = percentiles(&xs, &ps);
+        for (&p, &b) in ps.iter().zip(&batch) {
+            let single = percentile(&xs, p);
+            assert!(
+                (single - b).abs() < 1e-12 || (single.is_nan() && b.is_nan()),
+                "p={p}: selection {single} vs batch {b}"
+            );
+        }
+        // NaN and degenerate inputs behave identically too
+        let with_nan = [2.0, f64::NAN, 1.0];
+        assert!(percentiles(&with_nan, &[100.0])[0].is_nan());
+        assert_eq!(percentiles(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
+        assert_eq!(percentiles(&[4.0], &[0.0, 50.0, 100.0]), vec![4.0; 3]);
     }
 }

@@ -1,0 +1,374 @@
+//! Golden parity gates for the event-engine overhaul (DESIGN.md §10).
+//!
+//! The rewritten engines (`netsim::scheduler::TransferScheduler`,
+//! `slurm::Scheduler`, `coordinator::staged::{LanePool, run_staged}`)
+//! must be **record-for-record identical** to the frozen pre-PR
+//! implementations in `medflow::sim_legacy`: both generations are
+//! deterministic given a seed, so the right bar is *exact* equality of
+//! every `TransferRecord`/`JobRecord`/`StagedTiming` — every f64 bit —
+//! not approximate agreement. The legacy engines are the recorded seed
+//! traces: they are frozen in-tree, so any semantic drift in the live
+//! engines (ordering, sampling, fair-share arithmetic, backfill
+//! decisions) fails these tests loudly.
+//!
+//! Batteries cover storm submissions, staggered/out-of-order arrivals,
+//! multi-host queues, interleaved `advance_to` checkpoints, all three
+//! scheduler policies, maintenance windows, array throttles, the staged
+//! co-simulation through both compute backends, randomized
+//! property-style scenarios — and the Table 1 calibration cases.
+
+use medflow::coordinator::staged::{run_staged, LanePool, SlurmSim, StagedJob};
+use medflow::netsim::scheduler::{scheduler_bandwidth_experiment, TransferScheduler};
+use medflow::netsim::Env;
+use medflow::sim_legacy;
+use medflow::slurm::trace::{generate_trace, TraceSpec};
+use medflow::slurm::{ArrayHandle, ClusterSpec, Maintenance, Policy, Scheduler, SimJob};
+use medflow::util::prop::forall;
+use medflow::util::rng::Rng;
+use medflow::util::units::mean_std;
+
+/// A transfer submission plan both engines replay identically.
+#[derive(Clone)]
+struct Submission {
+    id: u64,
+    host: u64,
+    bytes: u64,
+    submit_s: f64,
+}
+
+fn run_both_transfers(
+    env: Env,
+    cap: usize,
+    seed: u64,
+    subs: &[Submission],
+) -> (
+    Vec<medflow::netsim::scheduler::TransferRecord>,
+    Vec<medflow::netsim::scheduler::TransferRecord>,
+) {
+    let mut live = TransferScheduler::for_env(env, cap, seed);
+    let mut frozen = sim_legacy::TransferScheduler::for_env(env, cap, seed);
+    for s in subs {
+        live.submit_at(s.id, s.host, s.bytes, s.submit_s);
+        frozen.submit_at(s.id, s.host, s.bytes, s.submit_s);
+    }
+    live.run_to_completion();
+    frozen.run_to_completion();
+    (live.records().to_vec(), frozen.records().to_vec())
+}
+
+#[test]
+fn transfer_storm_records_identical() {
+    for env in Env::all() {
+        for (n, cap, seed) in [(1usize, 1usize, 7u64), (8, 2, 11), (64, 8, 13), (200, 8, 17)] {
+            let subs: Vec<Submission> = (0..n)
+                .map(|i| Submission {
+                    id: i as u64,
+                    host: 0,
+                    bytes: 40_000_000 + (i as u64 % 5) * 7_000_000,
+                    submit_s: 0.0,
+                })
+                .collect();
+            let (live, frozen) = run_both_transfers(env, cap, seed, &subs);
+            assert_eq!(live.len(), n);
+            assert_eq!(live, frozen, "{env:?} n={n} cap={cap} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn transfer_staggered_multi_host_records_identical() {
+    // out-of-order ids, mixed hosts, due and future submissions — the
+    // admission-order edge cases the per-host queues must replay exactly
+    for env in Env::all() {
+        let subs = vec![
+            Submission { id: 5, host: 0, bytes: 80_000_000, submit_s: 0.0 },
+            Submission { id: 3, host: 1, bytes: 120_000_000, submit_s: 0.0 },
+            Submission { id: 9, host: 0, bytes: 40_000_000, submit_s: 0.0 },
+            Submission { id: 1, host: 2, bytes: 60_000_000, submit_s: 0.5 },
+            Submission { id: 2, host: 0, bytes: 90_000_000, submit_s: 1.5 },
+            Submission { id: 8, host: 1, bytes: 30_000_000, submit_s: 2.25 },
+            Submission { id: 7, host: 0, bytes: 50_000_000, submit_s: 30.0 },
+            Submission { id: 6, host: 2, bytes: 10_000_000, submit_s: 30.0 },
+        ];
+        let (live, frozen) = run_both_transfers(env, 2, 23, &subs);
+        assert_eq!(live.len(), subs.len());
+        assert_eq!(live, frozen, "{env:?}");
+    }
+}
+
+#[test]
+fn transfer_advance_checkpoints_identical() {
+    // step both engines through the same irregular time grid, comparing
+    // clock + records at every checkpoint (not just at completion)
+    let mut live = TransferScheduler::for_env(Env::Cloud, 2, 31);
+    let mut frozen = sim_legacy::TransferScheduler::for_env(Env::Cloud, 2, 31);
+    for i in 0..12u64 {
+        let submit = (i % 4) as f64 * 7.5;
+        live.submit_at(i, i % 2, 200_000_000, submit);
+        frozen.submit_at(i, i % 2, 200_000_000, submit);
+    }
+    for t in [0.1, 3.0, 7.5, 11.2, 30.0, 60.0, 600.0, 3_600.0, 36_000.0] {
+        live.advance_to(t);
+        frozen.advance_to(t);
+        assert_eq!(live.clock(), frozen.clock(), "clock at t={t}");
+        assert_eq!(live.records(), frozen.records(), "records at t={t}");
+    }
+    live.run_to_completion();
+    frozen.run_to_completion();
+    assert_eq!(live.records(), frozen.records());
+    assert_eq!(live.stats(), frozen.stats());
+}
+
+#[test]
+fn transfer_table1_calibration_identical() {
+    // the Table 1 calibration cases: the §2.4 bandwidth experiment must
+    // be sample-for-sample identical across generations AND still match
+    // the paper's means
+    for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
+        let live = scheduler_bandwidth_experiment(env, 100, 42);
+        let frozen = sim_legacy::scheduler_bandwidth_experiment(env, 100, 42);
+        assert_eq!(live, frozen, "{env:?}: calibration samples must match bit-for-bit");
+        let (mean, _) = mean_std(&live);
+        assert!((mean - want).abs() < 0.05, "{env:?}: mean {mean} want {want}");
+    }
+}
+
+#[test]
+fn prop_transfer_engines_identical() {
+    forall("transfer engines agree on random scenarios", 40, |rng| {
+        let env = *rng.choose(&Env::all());
+        let cap = 1 + rng.below(6) as usize;
+        let seed = rng.next_u64();
+        let n = 1 + rng.below(30);
+        let subs: Vec<Submission> = (0..n)
+            .map(|i| Submission {
+                id: i,
+                host: rng.below(3),
+                bytes: 1_000 + rng.below(300_000_000),
+                submit_s: if rng.below(2) == 0 { 0.0 } else { rng.next_f64() * 50.0 },
+            })
+            .collect();
+        let (live, frozen) = run_both_transfers(env, cap, seed, &subs);
+        assert_eq!(live.len(), n as usize);
+        assert_eq!(live, frozen, "{env:?} cap={cap} seed={seed}");
+    });
+}
+
+fn run_both_slurm(
+    cluster: ClusterSpec,
+    policy: Policy,
+    maintenance: &[Maintenance],
+    jobs: &[SimJob],
+) -> (Vec<medflow::slurm::JobRecord>, Vec<medflow::slurm::JobRecord>) {
+    let mut live = Scheduler::with_policy(cluster.clone(), policy);
+    let mut frozen = sim_legacy::Scheduler::with_policy(cluster, policy);
+    for w in maintenance {
+        live.add_maintenance(*w);
+        frozen.add_maintenance(*w);
+    }
+    for j in jobs {
+        live.submit(j.clone());
+        frozen.submit(j.clone());
+    }
+    live.run_to_completion();
+    frozen.run_to_completion();
+    assert_eq!(live.makespan(), frozen.makespan());
+    assert_eq!(live.utilization(), frozen.utilization());
+    assert_eq!(live.pending_count(), frozen.pending_count());
+    (live.records().to_vec(), frozen.records().to_vec())
+}
+
+#[test]
+fn slurm_trace_records_identical_across_policies() {
+    let spec = TraceSpec {
+        jobs: 400,
+        users: 5,
+        mean_interarrival_s: 10.0,
+        ..Default::default()
+    };
+    let policies = [
+        Policy { fairshare: true, backfill: true },
+        Policy { fairshare: true, backfill: false },
+        Policy { fairshare: false, backfill: true },
+        Policy { fairshare: false, backfill: false },
+    ];
+    for (i, policy) in policies.into_iter().enumerate() {
+        let jobs = generate_trace(&spec, 7 + i as u64);
+        let (live, frozen) = run_both_slurm(ClusterSpec::small(6, 8, 64), policy, &[], &jobs);
+        assert_eq!(live.len(), 400, "{policy:?}");
+        assert_eq!(live, frozen, "{policy:?}");
+    }
+}
+
+#[test]
+fn slurm_maintenance_and_throttle_records_identical() {
+    let spec = TraceSpec {
+        jobs: 250,
+        users: 3,
+        mean_interarrival_s: 15.0,
+        array_throttle: 8,
+        ..Default::default()
+    };
+    let jobs = generate_trace(&spec, 99);
+    let windows = [
+        Maintenance { start_s: 0.0, end_s: 600.0 },
+        Maintenance { start_s: 5_000.0, end_s: 9_000.0 },
+    ];
+    let (live, frozen) =
+        run_both_slurm(ClusterSpec::small(4, 8, 64), Policy::default(), &windows, &jobs);
+    assert_eq!(live.len(), 250);
+    assert_eq!(live, frozen);
+}
+
+#[test]
+fn slurm_advance_checkpoints_identical() {
+    let jobs = generate_trace(
+        &TraceSpec {
+            jobs: 120,
+            mean_interarrival_s: 30.0,
+            ..Default::default()
+        },
+        3,
+    );
+    let mut live = Scheduler::new(ClusterSpec::small(3, 8, 64));
+    let mut frozen = sim_legacy::Scheduler::new(ClusterSpec::small(3, 8, 64));
+    for j in &jobs {
+        live.submit(j.clone());
+        frozen.submit(j.clone());
+    }
+    let mut t = 0.0;
+    for step in [13.0, 100.0, 1.0, 450.0, 3_600.0, 7_200.0, 86_400.0] {
+        t += step;
+        live.advance_to(t);
+        frozen.advance_to(t);
+        assert_eq!(live.clock(), frozen.clock(), "clock at t={t}");
+        assert_eq!(live.records(), frozen.records(), "records at t={t}");
+        assert_eq!(live.running_count(), frozen.running_count(), "running at t={t}");
+        assert_eq!(live.next_event_time(), frozen.next_event_time(), "next at t={t}");
+    }
+    live.run_to_completion();
+    frozen.run_to_completion();
+    assert_eq!(live.records(), frozen.records());
+}
+
+#[test]
+fn prop_slurm_engines_identical() {
+    forall("slurm engines agree on random scenarios", 30, |rng| {
+        let nodes = 1 + rng.below(4) as usize;
+        let cores = 2 + rng.below(7) as u32;
+        let cluster = ClusterSpec::small(nodes, cores, 64);
+        let policy = Policy {
+            fairshare: rng.below(2) == 0,
+            backfill: rng.below(2) == 0,
+        };
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: 1 + rng.below(5) as u32,
+        };
+        let n_jobs = 1 + rng.below(50);
+        let jobs: Vec<SimJob> = (0..n_jobs)
+            .map(|id| SimJob {
+                id,
+                user: format!("u{}", rng.below(3)),
+                cores: 1 + rng.below(cores as u64) as u32,
+                ram_gb: 1 + rng.below(16) as u32,
+                duration_s: 1.0 + rng.next_f64() * 500.0,
+                submit_s: rng.next_f64() * 100.0,
+                array: if rng.below(2) == 0 { Some(handle) } else { None },
+            })
+            .collect();
+        let windows = if rng.below(3) == 0 {
+            vec![Maintenance { start_s: 0.0, end_s: 50.0 + rng.next_f64() * 200.0 }]
+        } else {
+            vec![]
+        };
+        let (live, frozen) = run_both_slurm(cluster, policy, &windows, &jobs);
+        assert_eq!(live, frozen);
+    });
+}
+
+fn staged_jobs(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1 + rng.below(3) as u32,
+            ram_gb: 1 + rng.below(8) as u32,
+            compute_s: 20.0 + rng.next_f64() * 400.0,
+            bytes_in: 10_000_000 + rng.below(150_000_000),
+            bytes_out: 1_000_000 + rng.below(50_000_000),
+        })
+        .collect()
+}
+
+#[test]
+fn staged_cosim_identical_through_lane_pool() {
+    for (n, workers, cap, env, seed) in [
+        (12usize, 3usize, 2usize, Env::Local, 41u64),
+        (60, 8, 4, Env::Hpc, 43),
+        (150, 16, 8, Env::Cloud, 47),
+    ] {
+        let js = staged_jobs(n, seed);
+        let mut lanes = LanePool::new(workers);
+        let mut transfers = TransferScheduler::for_env(env, cap, seed);
+        let live = run_staged(&js, &mut lanes, &mut transfers);
+
+        let mut frozen_lanes = sim_legacy::LanePool::new(workers);
+        let mut frozen_transfers = sim_legacy::TransferScheduler::for_env(env, cap, seed);
+        let frozen = sim_legacy::run_staged(&js, &mut frozen_lanes, &mut frozen_transfers);
+
+        assert_eq!(live.timings, frozen.timings, "n={n} {env:?}");
+        assert_eq!(live.makespan_s, frozen.makespan_s);
+        assert_eq!(live.transfer, frozen.transfer);
+        assert!(live.timings.iter().all(|t| t.completed));
+    }
+}
+
+#[test]
+fn staged_cosim_identical_through_slurm() {
+    let js = staged_jobs(80, 53);
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: 24,
+    };
+    let mut live_sim = SlurmSim::new(Scheduler::new(ClusterSpec::small(6, 8, 64)), "medflow", Some(handle));
+    let mut live_transfers = TransferScheduler::for_env(Env::Hpc, 6, 59);
+    let live = run_staged(&js, &mut live_sim, &mut live_transfers);
+
+    let mut frozen_sim = sim_legacy::SlurmSim::new(
+        sim_legacy::Scheduler::new(ClusterSpec::small(6, 8, 64)),
+        "medflow",
+        Some(handle),
+    );
+    let mut frozen_transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, 6, 59);
+    let frozen = sim_legacy::run_staged(&js, &mut frozen_sim, &mut frozen_transfers);
+
+    assert_eq!(live.timings, frozen.timings);
+    assert_eq!(live.makespan_s, frozen.makespan_s);
+    assert_eq!(live.transfer, frozen.transfer);
+    assert!(live.timings.iter().all(|t| t.completed));
+    assert_eq!(
+        live_sim.scheduler().records(),
+        frozen_sim.scheduler().records(),
+        "the compute backends must agree job-record-for-job-record too"
+    );
+}
+
+#[test]
+fn staged_cosim_identical_with_dropped_jobs() {
+    // oversized jobs the cluster can never place: the drop/completion
+    // bookkeeping must match across generations as well
+    let mut js = staged_jobs(10, 61);
+    js[3].cores = 99; // larger than any node
+    js[7].cores = 99;
+    let mut live_sim = SlurmSim::new(Scheduler::new(ClusterSpec::small(2, 4, 32)), "medflow", None);
+    let mut live_transfers = TransferScheduler::for_env(Env::Hpc, 4, 67);
+    let live = run_staged(&js, &mut live_sim, &mut live_transfers);
+
+    let mut frozen_sim =
+        sim_legacy::SlurmSim::new(sim_legacy::Scheduler::new(ClusterSpec::small(2, 4, 32)), "medflow", None);
+    let mut frozen_transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, 4, 67);
+    let frozen = sim_legacy::run_staged(&js, &mut frozen_sim, &mut frozen_transfers);
+
+    assert_eq!(live.timings, frozen.timings);
+    assert_eq!(live.timings.iter().filter(|t| !t.completed).count(), 2);
+}
