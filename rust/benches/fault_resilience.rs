@@ -1,0 +1,293 @@
+//! Bench: fault-resilience co-simulation — the ISSUE 4 tentpole numbers.
+//!
+//! Sweeps fault models {none, typical, harsh} × staged-campaign sizes
+//! 10³–10⁵ through the in-engine failure injection (DESIGN.md §11:
+//! `slurm::Scheduler` / `LanePool` per-attempt failures with requeue
+//! backoff and timeout re-staging, `netsim::scheduler` checksum aborts
+//! that re-enqueue and re-contend), asserting:
+//!
+//! * **fault-free parity** — zero-rate injectors wired into every live
+//!   engine reproduce the frozen `sim_legacy` staged run record-for-
+//!   record (the full battery lives in `rust/tests/engine_parity.rs`);
+//! * **determinism** — the same seed replays the identical retry trace
+//!   (every `FaultEvent`, every timing, bit-for-bit);
+//! * **re-contention** — at 10⁵ jobs, harsh faults push the transfer
+//!   queue-wait p95 *strictly* above the fault-free run: retried and
+//!   re-staged transfers share the same bottleneck link, which the old
+//!   post-hoc `apply_faults` scaling could never show;
+//! * **perf smoke** — the 10⁵ faulty run stays under a generous
+//!   wall-clock bound, so the injection machinery cannot silently
+//!   reintroduce superlinear cost.
+//!
+//! Run: `cargo bench --bench fault_resilience` — or with `-- --test`
+//! for the reduced CI sweep (parity + determinism + the 10⁵
+//! harsh-vs-free re-contention gate).
+
+use std::time::Instant;
+
+use medflow::coordinator::staged::{
+    run_staged, synthetic_fault_campaign as campaign, LanePool, SlurmSim, StagedJob, StagedOutcome,
+};
+use medflow::faults::{FaultAction, FaultModel, Injection};
+use medflow::netsim::scheduler::TransferScheduler;
+use medflow::netsim::Env;
+use medflow::sim_legacy;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
+use medflow::util::bench::metric;
+use medflow::util::json::Json;
+use medflow::util::units::percentiles;
+
+const STREAM_CAP: usize = 16;
+const WORKERS: usize = 512;
+const SEED: u64 = 42;
+
+/// Generous CI bound for the 10⁵-job faulty run (expected: seconds).
+const SMOKE_BOUND_S: f64 = 180.0;
+
+struct FaultRun {
+    wall_s: f64,
+    out: StagedOutcome,
+    transfer_wait_p95_s: f64,
+    compute_events: Vec<medflow::faults::FaultEvent>,
+    transfer_events: Vec<medflow::faults::FaultEvent>,
+    restages: usize,
+    aborted: usize,
+    wasted_compute_s: f64,
+    wasted_transfer_s: f64,
+}
+
+/// One staged co-simulation through the lane-pool backend, optionally
+/// under a fault model (compute bands with timeout parking + transfer
+/// checksum band — the campaign split `coordinator` uses).
+fn run_lanes(jobs: &[StagedJob], model: Option<FaultModel>, retries: u32) -> FaultRun {
+    let mut lanes = LanePool::new(WORKERS);
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+    if let Some(m) = model {
+        lanes.set_faults(
+            Injection::new(m.compute_only(), retries, SEED ^ 0xc0fe)
+                .with_backoff(60.0)
+                .with_parked_timeouts(),
+        );
+        transfers.set_faults(Injection::new(m.transfer_only(), retries, SEED ^ 0xfade));
+    }
+    let t0 = Instant::now();
+    let out = run_staged(jobs, &mut lanes, &mut transfers);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let waits: Vec<f64> = transfers.records().iter().map(|r| r.queue_wait_s()).collect();
+    FaultRun {
+        wall_s,
+        transfer_wait_p95_s: percentiles(&waits, &[95.0])[0],
+        compute_events: lanes.fault_events().to_vec(),
+        transfer_events: transfers.fault_events().to_vec(),
+        restages: lanes
+            .fault_events()
+            .iter()
+            .filter(|e| e.action == FaultAction::Parked)
+            .count(),
+        aborted: lanes.aborted_ids().len() + transfers.aborted_ids().len(),
+        wasted_compute_s: lanes.wasted_alloc_s(),
+        wasted_transfer_s: transfers.wasted_wire_s(),
+        out,
+    }
+}
+
+fn json_run(jobs: usize, model: &str, r: &FaultRun) -> Json {
+    let failed = (r.compute_events.len() + r.transfer_events.len()) as f64;
+    let mut o = Json::obj();
+    o.set("jobs", Json::num(jobs as f64))
+        .set("model", Json::str(model))
+        .set("wall_s", Json::num(r.wall_s))
+        .set("sim_makespan_s", Json::num(r.out.makespan_s))
+        .set("transfer_wait_p95_s", Json::num(r.transfer_wait_p95_s))
+        .set("failed_attempts", Json::num(failed))
+        .set("restages", Json::num(r.restages as f64))
+        .set("aborted", Json::num(r.aborted as f64))
+        .set("wasted_compute_s", Json::num(r.wasted_compute_s))
+        .set("wasted_transfer_s", Json::num(r.wasted_transfer_s));
+    Json::Obj(o)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Fault-resilience co-simulation sweep (DESIGN.md §11) ===");
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- fault-free parity: zero-rate injection vs the frozen engines ---
+    {
+        let n = 1_000;
+        let jobs = campaign(n, SEED);
+        let live = run_lanes(&jobs, Some(FaultModel::none()), 3);
+        let mut frozen_lanes = sim_legacy::LanePool::new(WORKERS);
+        let mut frozen_transfers =
+            sim_legacy::TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+        let frozen = sim_legacy::run_staged(&jobs, &mut frozen_lanes, &mut frozen_transfers);
+        assert_eq!(
+            live.out.timings, frozen.timings,
+            "zero-rate injection must reproduce the pre-injection engines f64-exactly"
+        );
+        assert_eq!(live.out.transfer, frozen.transfer);
+        assert!(live.compute_events.is_empty() && live.transfer_events.is_empty());
+        println!("parity OK: FaultModel::none() co-sim == sim_legacy at n={n}");
+    }
+
+    // --- determinism: same seed ⇒ identical retry traces ---
+    {
+        let n = 10_000;
+        let jobs = campaign(n, SEED + 1);
+        let a = run_lanes(&jobs, Some(FaultModel::harsh()), 3);
+        let b = run_lanes(&jobs, Some(FaultModel::harsh()), 3);
+        assert_eq!(a.out.timings, b.out.timings, "same seed must replay identically");
+        assert_eq!(a.compute_events, b.compute_events);
+        assert_eq!(a.transfer_events, b.transfer_events);
+        assert!(
+            !a.compute_events.is_empty(),
+            "harsh rates over 10⁴ jobs must fail attempts"
+        );
+        println!(
+            "determinism OK at n={n}: {} compute + {} transfer failures replay bit-identically",
+            a.compute_events.len(),
+            a.transfer_events.len()
+        );
+    }
+
+    // --- the sweep: model × scale, re-contention gate at 10⁵ ---
+    let points: &[usize] = if test_mode {
+        &[1_000, 100_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    let models: &[(&str, Option<FaultModel>)] = if test_mode {
+        &[("none", None), ("harsh", Some(FaultModel::harsh()))]
+    } else {
+        &[
+            ("none", None),
+            ("typical", Some(FaultModel::typical())),
+            ("harsh", Some(FaultModel::harsh())),
+        ]
+    };
+    for &n in points {
+        let jobs = campaign(n, SEED + 2);
+        let mut free_p95 = None;
+        let mut free_makespan = None;
+        for (name, model) in models {
+            let r = run_lanes(&jobs, *model, 3);
+            let completed = r.out.timings.iter().filter(|t| t.completed).count();
+            assert_eq!(completed + r.aborted, n, "{name} n={n}: jobs conserved");
+            metric(&format!("{name}.n{n}.wall_s"), r.wall_s, "s");
+            metric(&format!("{name}.n{n}.sim_makespan_s"), r.out.makespan_s, "s");
+            metric(&format!("{name}.n{n}.wait_p95_s"), r.transfer_wait_p95_s, "s");
+            metric(
+                &format!("{name}.n{n}.failed_attempts"),
+                (r.compute_events.len() + r.transfer_events.len()) as f64,
+                "",
+            );
+            runs.push(json_run(n, name, &r));
+            match *model {
+                None => {
+                    free_p95 = Some(r.transfer_wait_p95_s);
+                    free_makespan = Some(r.out.makespan_s);
+                }
+                Some(_) => {
+                    let free_p95 = free_p95.expect("fault-free point runs first");
+                    let free_makespan = free_makespan.expect("fault-free point runs first");
+                    // comparative gates only where the law of large
+                    // numbers holds (hundreds of failures expected); a
+                    // 10³ campaign can see single-digit failures
+                    if n >= 10_000 {
+                        assert!(
+                            r.out.makespan_s > free_makespan,
+                            "{name} n={n}: retries must extend the makespan \
+                             ({} vs fault-free {free_makespan})",
+                            r.out.makespan_s
+                        );
+                    }
+                    // the acceptance gate: retried jobs visibly re-contend
+                    // — at 10⁵ the extra retry/re-stage transfers push
+                    // queue-wait p95 strictly above the fault-free run
+                    if n >= 100_000 && *name == "harsh" {
+                        assert!(
+                            r.transfer_wait_p95_s > free_p95,
+                            "n={n}: harsh queue-wait p95 ({} s) must exceed \
+                             fault-free ({free_p95} s) — retries are not re-contending",
+                            r.transfer_wait_p95_s
+                        );
+                        assert!(
+                            r.wall_s < SMOKE_BOUND_S,
+                            "perf smoke: 10⁵ faulty jobs took {:.1} s (bound {SMOKE_BOUND_S} s)",
+                            r.wall_s
+                        );
+                        assert!(r.restages > 0, "harsh timeouts must force re-staging");
+                        println!(
+                            "re-contention OK at n={n}: wait p95 {:.0} s (fault-free {:.0} s), \
+                             {} restages, {} aborted",
+                            r.transfer_wait_p95_s, free_p95, r.restages, r.aborted
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // --- SLURM backend point: cluster-slot re-contention + parking ---
+    {
+        let n = if test_mode { 10_000 } else { 50_000 };
+        let jobs = campaign(n, SEED + 3);
+        let mut sched = Scheduler::new(ClusterSpec::accre());
+        sched.set_faults(
+            Injection::new(FaultModel::harsh().compute_only(), 3, SEED ^ 0xacc)
+                .with_backoff(60.0)
+                .with_parked_timeouts(),
+        );
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: 20_000,
+        };
+        let mut sim = SlurmSim::new(sched, "medflow", Some(handle));
+        let mut transfers = TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+        transfers.set_faults(Injection::new(
+            FaultModel::harsh().transfer_only(),
+            3,
+            SEED ^ 0xccc,
+        ));
+        let t0 = Instant::now();
+        let out = run_staged(&jobs, &mut sim, &mut transfers);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let completed = out.timings.iter().filter(|t| t.completed).count();
+        let aborted = sim.scheduler().aborted_ids().len() + transfers.aborted_ids().len();
+        assert_eq!(completed + aborted, n, "slurm co-sim conserves jobs");
+        assert!(
+            !sim.scheduler().fault_events().is_empty(),
+            "harsh faults must fire on the cluster"
+        );
+        metric(&format!("slurm.n{n}.wall_s"), wall_s, "s");
+        metric(
+            &format!("slurm.n{n}.failed_attempts"),
+            sim.scheduler().fault_events().len() as f64,
+            "",
+        );
+        println!(
+            "slurm co-sim OK at n={n}: {} failed attempts, {} aborted, wall {:.1} s",
+            sim.scheduler().fault_events().len(),
+            aborted,
+            wall_s
+        );
+    }
+
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("fault_resilience"))
+            .set(
+                "scenario",
+                Json::str(
+                    "staged campaign on Env::Hpc, stream cap 16, 512 lanes, retries 3, \
+                     seed 42 (see benches/fault_resilience.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fault_resilience.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("fault_resilience OK");
+}

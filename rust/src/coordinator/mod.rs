@@ -21,13 +21,13 @@ pub mod staged;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::archive::{Archive, SessionKey};
 use crate::bids::{BidsDataset, BidsName, Modality};
 use crate::compute::{env_speed_factor, Executor, JobOutcome};
-use crate::cost::staged_job_cost;
-use crate::faults::{run_with_retries, FaultModel};
+use crate::cost::{compute_cost, staged_job_cost};
+use crate::faults::{FaultEvent, FaultModel, FaultTelemetry, Injection};
 use crate::container::{ContainerArchive, ImageDef};
 use crate::netsim::scheduler::{Topology, TransferScheduler, TransferStats};
 use crate::netsim::Env;
@@ -38,7 +38,7 @@ use crate::runtime::Runtime;
 use crate::scripts::{instance_script, local_runner_script, slurm_array_script, SlurmOptions};
 use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler};
 
-use self::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome};
+use self::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome, StagedTiming};
 use crate::util::pool::run_parallel;
 use crate::util::rng::Rng;
 use crate::util::units::mean_std;
@@ -69,9 +69,16 @@ pub struct CampaignConfig {
     /// scheduler, DESIGN.md §9); further transfers queue FIFO.
     pub transfer_streams: usize,
     /// Failure model applied per attempt (None = fault-free baseline).
+    /// Injected **inside** the discrete-event engines (DESIGN.md §11):
+    /// compute-side bands into the SLURM simulator / lane pool, the
+    /// checksum band into the transfer scheduler — retried work
+    /// re-contends for slots and links instead of being scaled post hoc.
     pub faults: Option<FaultModel>,
     /// Resubmissions allowed per job when faults are enabled.
     pub max_retries: u32,
+    /// Base requeue delay after a failed compute attempt (doubles per
+    /// retry — the submit loop's resubmit backoff).
+    pub retry_backoff_s: f64,
 }
 
 impl Default for CampaignConfig {
@@ -86,6 +93,7 @@ impl Default for CampaignConfig {
             transfer_streams: 8,
             faults: None,
             max_retries: 3,
+            retry_backoff_s: 60.0,
         }
     }
 }
@@ -116,6 +124,11 @@ pub struct CampaignReport {
     /// Telemetry from the contention-aware transfer scheduler: link
     /// utilization, peak concurrent streams, queue waits (DESIGN.md §9).
     pub transfer: TransferStats,
+    /// Telemetry from the in-engine failure injection (DESIGN.md §11):
+    /// per-mode retry/abort counts, re-stages, wasted compute minutes,
+    /// and the closed-form §4 overrun as a cross-check. All-default when
+    /// the campaign ran fault-free.
+    pub faults: FaultTelemetry,
 }
 
 /// Resource-monitor snapshot (paper §2.3: "a simple query for both
@@ -276,6 +289,7 @@ impl<'rt> Coordinator<'rt> {
             artifact_exec_s: outcome.artifact_exec_mean_s,
             query_stats,
             transfer: outcome.transfer,
+            faults: outcome.faults,
         })
     }
 
@@ -295,35 +309,54 @@ impl<'rt> Coordinator<'rt> {
         for job in jobs {
             outcomes.push(executor.run_compute(job, spec, &mut rng, None)?);
         }
-        // failure injection: failed attempts inflate effective duration;
-        // jobs that exhaust retries drop out (paper §4's cost overrun)
-        let (jobs, mut outcomes, aborted) = apply_faults(jobs, outcomes, cfg, &mut rng);
-        let jobs = &jobs[..];
-        // staged execution: stage-in through the shared HPC path, SLURM
-        // array compute, copy-back — overlapped per job (DESIGN.md §9)
+        // staged execution with in-engine failure injection (DESIGN.md
+        // §11): stage-in through the shared HPC path, SLURM array
+        // compute, copy-back — overlapped per job, with failed attempts
+        // re-contending for nodes and links. The pre-co-simulation
+        // closed-form scaling survives only as the telemetry cross-check.
         let mut sched = Scheduler::new(self.cluster.clone());
         for w in &self.maintenance {
             sched.add_maintenance(*w);
+        }
+        if let Some(inj) = compute_injection(cfg)? {
+            sched.set_faults(inj);
         }
         let handle = ArrayHandle {
             array_id: 1,
             max_concurrent: cfg.slurm.max_concurrent,
         };
         let mut compute_sim = SlurmSim::new(sched, &cfg.user, Some(handle));
-        let staged = run_staged(
-            &staged_plan(jobs, &outcomes, spec, cfg),
-            &mut compute_sim,
-            &mut campaign_transfers(Env::Hpc, cfg),
+        let mut transfers = campaign_transfers(Env::Hpc, cfg);
+        if let Some(inj) = transfer_injection(cfg)? {
+            transfers.set_faults(inj);
+        }
+        let plan = staged_plan(jobs, &outcomes, spec, cfg);
+        let staged = run_staged(&plan, &mut compute_sim, &mut transfers);
+        let faults = collect_faults(
+            cfg,
+            compute_sim.scheduler().fault_events(),
+            compute_sim.scheduler().aborted_ids().len(),
+            transfers.fault_events(),
+            transfers.aborted_ids().len(),
+            &mut outcomes,
         );
         fold_staged_timings(Env::Hpc, &mut outcomes, &staged);
         // jobs the cluster could never place (oversized for every node)
-        // never computed or copied back: they must not be finalized or
-        // recorded as processed — they count as failed and stay runnable
+        // or that exhausted their fault retries never reached a verified
+        // copy-back: they must not be finalized or recorded as processed
+        // — they count as failed and stay runnable
         let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
         self.finalize(ds, spec, &jobs, &outcomes, Env::Hpc, cfg, engine)?;
         let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
-        out.failed = aborted + dropped;
+        out.total_cost += dropped_attempt_cost(
+            Env::Hpc,
+            compute_sim.scheduler().fault_events(),
+            &staged.timings,
+            &plan,
+        );
+        out.failed = dropped;
         out.transfer = staged.transfer;
+        out.faults = faults;
         Ok(out)
     }
 
@@ -373,19 +406,34 @@ impl<'rt> Coordinator<'rt> {
                 .collect::<Result<Vec<_>>>()?
         };
         let mut lanes = LanePool::new(workers);
-        let staged = run_staged(
-            &staged_plan(jobs, &outcomes, spec, cfg),
-            &mut lanes,
-            &mut campaign_transfers(Env::Local, cfg),
+        if let Some(inj) = compute_injection(cfg)? {
+            lanes.set_faults(inj);
+        }
+        let mut transfers = campaign_transfers(Env::Local, cfg);
+        if let Some(inj) = transfer_injection(cfg)? {
+            transfers.set_faults(inj);
+        }
+        let plan = staged_plan(jobs, &outcomes, spec, cfg);
+        let staged = run_staged(&plan, &mut lanes, &mut transfers);
+        let faults = collect_faults(
+            cfg,
+            lanes.fault_events(),
+            lanes.aborted_ids().len(),
+            transfers.fault_events(),
+            transfers.aborted_ids().len(),
+            &mut outcomes,
         );
         fold_staged_timings(Env::Local, &mut outcomes, &staged);
-        // a LanePool never drops jobs, but keep the same completion
-        // contract as the HPC path
+        // a fault-free LanePool never drops jobs, but keep the same
+        // completion contract as the HPC path (aborts drop out here too)
         let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
         self.finalize(ds, spec, &jobs, &outcomes, Env::Local, cfg, engine)?;
         let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
+        out.total_cost +=
+            dropped_attempt_cost(Env::Local, lanes.fault_events(), &staged.timings, &plan);
         out.failed = dropped;
         out.transfer = staged.transfer;
+        out.faults = faults;
         Ok(out)
     }
 
@@ -505,33 +553,92 @@ fn retain_completed(
     (kept_jobs, kept, dropped)
 }
 
-/// Apply the campaign's fault model: per job, sample the retry trace; the
-/// effective duration factor inflates both compute time and cost; jobs
-/// whose retries are exhausted are dropped (counted as aborted).
-fn apply_faults(
-    jobs: &[JobSpec],
-    outcomes: Vec<crate::compute::JobOutcome>,
+/// Compute-side in-engine injection from the campaign config: the
+/// pipeline / node / timeout bands go to the compute backend (timeouts
+/// parked so the staged loop re-stages inputs); the checksum band
+/// belongs to the transfer engine ([`transfer_injection`]). Validated
+/// here so an over-unity rate set surfaces as a campaign error instead
+/// of a silently truncated Timeout band.
+fn compute_injection(cfg: &CampaignConfig) -> Result<Option<Injection>> {
+    let Some(model) = cfg.faults else { return Ok(None) };
+    model.validate().map_err(|e| anyhow!("campaign fault model: {e}"))?;
+    Ok(Some(Injection::campaign_compute(
+        &model,
+        cfg.max_retries,
+        cfg.seed,
+        cfg.retry_backoff_s,
+    )))
+}
+
+/// Transfer-side injection (checksum mismatches). No backoff: a failed
+/// verification re-enqueues immediately and the host FIFO itself is the
+/// wait.
+fn transfer_injection(cfg: &CampaignConfig) -> Result<Option<Injection>> {
+    let Some(model) = cfg.faults else { return Ok(None) };
+    model.validate().map_err(|e| anyhow!("campaign fault model: {e}"))?;
+    Ok(Some(Injection::campaign_transfer(&model, cfg.max_retries, cfg.seed)))
+}
+
+/// Fold both engines' fault events into campaign telemetry and bill the
+/// wasted compute allocation into each job's effective minutes (the cost
+/// fold then prices retries at the slot rate, replacing the old post-hoc
+/// duration scaling). Wasted *transfer* seconds are reported but not
+/// billed to the slot: while a transfer retries, the job holds no
+/// allocation (stage-in precedes it; copy-back follows its release).
+fn collect_faults(
     cfg: &CampaignConfig,
-    rng: &mut Rng,
-) -> (Vec<JobSpec>, Vec<crate::compute::JobOutcome>, usize) {
-    let Some(model) = cfg.faults else {
-        return (jobs.to_vec(), outcomes, 0);
-    };
-    let mut kept_jobs = Vec::with_capacity(jobs.len());
-    let mut kept = Vec::with_capacity(outcomes.len());
-    let mut aborted = 0;
-    for (job, mut out) in jobs.iter().cloned().zip(outcomes) {
-        let trace = run_with_retries(&model, cfg.max_retries, rng);
-        if trace.completed {
-            out.compute_minutes *= trace.effective_duration_factor;
-            out.cost_dollars *= trace.effective_duration_factor;
-            kept_jobs.push(job);
-            kept.push(out);
-        } else {
-            aborted += 1;
+    compute_events: &[FaultEvent],
+    compute_aborts: usize,
+    transfer_events: &[FaultEvent],
+    transfer_aborts: usize,
+    outcomes: &mut [JobOutcome],
+) -> FaultTelemetry {
+    // bill each failed compute attempt's wasted allocation into the
+    // job's effective minutes (compute ids are job indices — run_staged
+    // submits them so); the telemetry fold itself is shared with the
+    // `medflow faults` CLI via FaultTelemetry::collect
+    for ev in compute_events {
+        if let Some(out) = outcomes.get_mut(ev.id as usize) {
+            out.compute_minutes += ev.wasted_s / 60.0;
         }
     }
-    (kept_jobs, kept, aborted)
+    FaultTelemetry::collect(
+        cfg.faults.as_ref(),
+        cfg.max_retries,
+        cfg.seed,
+        compute_events,
+        transfer_events,
+        (compute_aborts + transfer_aborts) as u64,
+    )
+}
+
+/// Slot cost of the allocation consumed by jobs that never reached a
+/// verified copy-back: their outcomes are dropped by
+/// [`retain_completed`] (so the per-job billing in [`collect_faults`]
+/// never reaches the campaign total), but the cluster time they burned
+/// was real spend — paper §4's cost of "resubmitting failed jobs" does
+/// not vanish with the job. Two components: every failed attempt's
+/// wasted allocation, plus the full nominal allocation of dropped jobs
+/// whose compute *did* finish (a copy-back or re-stage transfer abort
+/// after a successful run).
+fn dropped_attempt_cost(
+    env: Env,
+    events: &[FaultEvent],
+    timings: &[StagedTiming],
+    plan: &[StagedJob],
+) -> f64 {
+    let wasted_min: f64 = events
+        .iter()
+        .filter(|ev| !timings.get(ev.id as usize).is_some_and(|t| t.completed))
+        .map(|ev| ev.wasted_s / 60.0)
+        .sum();
+    let computed_min: f64 = timings
+        .iter()
+        .zip(plan)
+        .filter(|(t, _)| !t.completed && t.compute_end_s > 0.0)
+        .map(|(_, j)| j.compute_s / 60.0)
+        .sum();
+    compute_cost(env, wasted_min + computed_min)
 }
 
 struct ExecOutcome {
@@ -542,6 +649,7 @@ struct ExecOutcome {
     total_cost: f64,
     artifact_exec_mean_s: f64,
     transfer: TransferStats,
+    faults: FaultTelemetry,
 }
 
 impl ExecOutcome {
@@ -565,6 +673,7 @@ impl ExecOutcome {
                 execs.iter().sum::<f64>() / execs.len() as f64
             },
             transfer: TransferStats::default(),
+            faults: FaultTelemetry::default(),
         }
     }
 }
@@ -698,24 +807,39 @@ mod tests {
     fn fault_model_inflates_cost_and_reports_aborts() {
         let (root, ds, mut coord) = setup("faults");
         let clean_cfg = CampaignConfig::default();
-        // measure the fault-free cost on a fresh twin dataset first
-        let harsh_cfg = CampaignConfig {
-            faults: Some(crate::faults::FaultModel::harsh()),
-            max_retries: 3,
+        // a deliberately heavy model so the 12-session MINI campaign
+        // deterministically sees failed attempts in every band
+        let heavy_cfg = CampaignConfig {
+            faults: Some(FaultModel {
+                p_checksum: 0.05,
+                p_pipeline: 0.4,
+                p_node: 0.05,
+                p_timeout: 0.1,
+            }),
+            max_retries: 4,
+            retry_backoff_s: 10.0,
             ..Default::default()
         };
         let r = coord
-            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &harsh_cfg)
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &heavy_cfg)
             .unwrap();
         // completed + aborted = all runnable
         assert_eq!(r.completed + r.failed, r.queried - r.skipped);
-        // the same campaign fault-free on the remaining work costs at the
-        // naive per-job rate; with harsh faults the per-job cost is higher
+        // the in-engine injection must have recorded real events…
+        assert!(r.faults.counts.total() > 0, "{:?}", r.faults);
+        assert!(r.faults.wasted_compute_minutes > 0.0, "{:?}", r.faults);
+        assert!(r.faults.compute_retries >= r.faults.restages);
+        // …and the closed-form §4 cross-check must agree on the sign
+        assert!(r.faults.expected_overrun_factor > 1.0);
+        // the same campaign fault-free on a twin dataset costs the naive
+        // per-job rate; with faults the per-job cost is higher (wasted
+        // attempts are billed at the slot rate)
         let per_job_faulty = r.total_cost_dollars / r.completed.max(1) as f64;
         let (root2, ds2, mut coord2) = setup("faults2");
         let r2 = coord2
             .run_campaign(&ds2, "freesurfer", SubmitTarget::Hpc, &clean_cfg)
             .unwrap();
+        assert_eq!(r2.faults, crate::faults::FaultTelemetry::default());
         let per_job_clean = r2.total_cost_dollars / r2.completed.max(1) as f64;
         assert!(
             per_job_faulty > per_job_clean,
@@ -723,6 +847,78 @@ mod tests {
         );
         std::fs::remove_dir_all(&root).unwrap();
         std::fs::remove_dir_all(&root2).unwrap();
+    }
+
+    #[test]
+    fn aborted_jobs_still_bill_their_wasted_attempts() {
+        // every attempt fails → every job aborts after max_retries + 1
+        // attempts; the campaign completes nothing but the cluster time
+        // those attempts burned is real spend and must reach the total
+        let (root, ds, mut coord) = setup("abortcost");
+        let cfg = CampaignConfig {
+            faults: Some(FaultModel {
+                p_checksum: 0.0,
+                p_pipeline: 1.0,
+                p_node: 0.0,
+                p_timeout: 0.0,
+            }),
+            max_retries: 1,
+            retry_backoff_s: 1.0,
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.failed, r.queried - r.skipped);
+        assert!(r.faults.wasted_compute_minutes > 0.0, "{:?}", r.faults);
+        assert!(
+            r.total_cost_dollars > 0.0,
+            "wasted attempts of aborted jobs are real cluster spend"
+        );
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn invalid_fault_model_is_a_campaign_error() {
+        let (root, ds, mut coord) = setup("badfaults");
+        let cfg = CampaignConfig {
+            faults: Some(FaultModel {
+                p_checksum: 0.0,
+                p_pipeline: 0.9,
+                p_node: 0.0,
+                p_timeout: 0.9,
+            }),
+            ..Default::default()
+        };
+        let err = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Hpc, &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fault model"), "{err}");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn local_burst_campaign_injects_faults_too() {
+        let (root, ds, mut coord) = setup("lfaults");
+        let cfg = CampaignConfig {
+            faults: Some(FaultModel {
+                p_checksum: 0.05,
+                p_pipeline: 0.4,
+                p_node: 0.05,
+                p_timeout: 0.1,
+            }),
+            max_retries: 4,
+            retry_backoff_s: 5.0,
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::LocalBurst { workers: 2 }, &cfg)
+            .unwrap();
+        assert_eq!(r.completed + r.failed, r.queried - r.skipped);
+        assert!(r.faults.counts.total() > 0, "{:?}", r.faults);
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

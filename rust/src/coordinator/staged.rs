@@ -31,11 +31,13 @@
 //! `next_event_time` scans per event.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
+use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
 use crate::slurm::{ArrayHandle, Scheduler, SimJob};
 use crate::util::ord::F64Ord;
+use crate::util::rng::Rng;
 
 const EPS: f64 = 1e-9;
 
@@ -51,6 +53,24 @@ pub struct StagedJob {
     pub compute_s: f64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+}
+
+/// Synthetic fault-sweep campaign: 1-core jobs with 1–10 minute compute
+/// and tens of MB staged in/out. One definition shared by the `medflow
+/// faults` CLI, `benches/fault_resilience.rs`, and
+/// `rust/tests/fault_cosim.rs`, so their outputs stay cross-comparable
+/// for the same (n, seed).
+pub fn synthetic_fault_campaign(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1,
+            ram_gb: 4,
+            compute_s: 60.0 + rng.next_f64() * 540.0,
+            bytes_in: 10_000_000 + rng.below(40_000_000),
+            bytes_out: 2_000_000 + rng.below(8_000_000),
+        })
+        .collect()
 }
 
 /// Per-job timeline produced by [`run_staged`].
@@ -89,6 +109,14 @@ pub trait ComputeSim {
     /// Advance to absolute time `t` (never overshooting), returning
     /// `(id, end_s)` for jobs that completed by `t`.
     fn advance_to(&mut self, t: f64) -> Vec<(u64, f64)>;
+    /// Drain (job id, fail time) pairs whose last attempt timed out with
+    /// in-engine fault injection parked ([`Injection::park_timeouts`]):
+    /// the timeout wiped node-local scratch, so [`run_staged`] must
+    /// re-stage the job's inputs and resubmit it when they land.
+    /// Backends without injection return nothing.
+    fn take_restage(&mut self) -> Vec<(u64, f64)> {
+        Vec::new()
+    }
 }
 
 /// The SLURM cluster simulator as a staged-campaign compute backend.
@@ -141,6 +169,10 @@ impl ComputeSim for SlurmSim {
         self.cursor = recs.len();
         done
     }
+
+    fn take_restage(&mut self) -> Vec<(u64, f64)> {
+        self.sched.take_parked()
+    }
 }
 
 /// A bounded pool of identical worker lanes (the local-burst backend):
@@ -152,6 +184,11 @@ impl ComputeSim for SlurmSim {
 /// job is O(log n) instead of the pre-PR full-queue scan; completions
 /// still replay the original lane/collection order exactly
 /// (`rust/tests/engine_parity.rs`).
+///
+/// In-engine fault injection (DESIGN.md §11) mirrors
+/// [`crate::slurm::Scheduler::set_faults`]: a failing attempt holds its
+/// lane for `wasted_fraction()` of the duration, then requeues with
+/// backoff, parks for re-staging (timeouts), or aborts.
 pub struct LanePool {
     /// Each lane's busy-until time.
     lanes: Vec<f64>,
@@ -159,9 +196,28 @@ pub struct LanePool {
     due: BTreeMap<(F64Ord, u64), f64>,
     /// Not-yet-ready jobs, min-heap by (ready_s, id), carrying duration.
     future: BinaryHeap<Reverse<(F64Ord, u64, F64Ord)>>,
-    /// (id, end_s) currently running.
-    running: Vec<(u64, f64)>,
+    /// Attempts currently occupying a lane.
+    running: Vec<LaneRun>,
     clock: f64,
+    /// In-engine failure injection; `None` = the fault-free engine.
+    faults: Option<Injection>,
+    /// Job id → retry count so far (only jobs with ≥ 1 failed attempt).
+    attempts: HashMap<u64, u32>,
+    fault_events: Vec<FaultEvent>,
+    /// (job id, fail time) awaiting external re-stage + resubmit.
+    parked: Vec<(u64, f64)>,
+    aborted: Vec<u64>,
+}
+
+/// One attempt occupying a lane.
+struct LaneRun {
+    id: u64,
+    /// When the attempt releases the lane (failure instant if failing).
+    end_s: f64,
+    /// Nominal full duration (requeues need it back).
+    duration_s: f64,
+    attempt: u32,
+    fail: Option<FailureMode>,
 }
 
 impl LanePool {
@@ -173,6 +229,47 @@ impl LanePool {
             future: BinaryHeap::new(),
             running: Vec::new(),
             clock: 0.0,
+            faults: None,
+            attempts: HashMap::new(),
+            fault_events: Vec::new(),
+            parked: Vec::new(),
+            aborted: Vec::new(),
+        }
+    }
+
+    /// Enable in-engine failure injection (before submitting work).
+    pub fn set_faults(&mut self, inj: Injection) {
+        if let Err(e) = inj.model.validate() {
+            panic!("LanePool::set_faults: {e}");
+        }
+        assert!(
+            self.running.is_empty() && self.due.is_empty() && self.future.is_empty(),
+            "set_faults must precede all submissions"
+        );
+        self.faults = Some(inj);
+    }
+
+    /// Failed-attempt events recorded so far (empty without injection).
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        &self.fault_events
+    }
+
+    /// Jobs dropped after exhausting their retries.
+    pub fn aborted_ids(&self) -> &[u64] {
+        &self.aborted
+    }
+
+    /// Lane seconds consumed by failed attempts so far.
+    pub fn wasted_alloc_s(&self) -> f64 {
+        self.fault_events.iter().map(|e| e.wasted_s).sum()
+    }
+
+    /// Queue a job attempt, due (ready ≤ clock) or future.
+    fn enqueue(&mut self, id: u64, ready: f64, duration_s: f64) {
+        if ready <= self.clock + EPS {
+            self.due.insert((F64Ord(ready), id), duration_s);
+        } else {
+            self.future.push(Reverse((F64Ord(ready), id, F64Ord(duration_s))));
         }
     }
 
@@ -193,9 +290,56 @@ impl LanePool {
                 return;
             };
             let ((_, id), dur) = self.due.pop_first().expect("non-empty due map");
-            self.lanes[lane] = self.clock + dur;
-            self.running.push((id, self.clock + dur));
+            let attempt = self.attempts.get(&id).copied().unwrap_or(0);
+            let fail = match &self.faults {
+                Some(inj) => inj.sample(id, attempt),
+                None => None,
+            };
+            // fault-free, alloc IS dur: bit-identical to the pre-fault pool
+            let alloc = match fail {
+                Some(mode) => dur * mode.wasted_fraction(),
+                None => dur,
+            };
+            self.lanes[lane] = self.clock + alloc;
+            self.running.push(LaneRun {
+                id,
+                end_s: self.clock + alloc,
+                duration_s: dur,
+                attempt,
+                fail,
+            });
         }
+    }
+
+    /// A sampled-to-fail attempt released its lane: requeue / park /
+    /// abort, mirroring [`crate::slurm::Scheduler`]'s policy.
+    fn fail_attempt(&mut self, run: LaneRun, mode: FailureMode) {
+        let inj = self.faults.expect("failing attempt implies an injection config");
+        let wasted_s = run.duration_s * mode.wasted_fraction();
+        let action = inj.disposition(run.attempt, mode);
+        match action {
+            FaultAction::Aborted => {
+                self.attempts.remove(&run.id);
+                self.aborted.push(run.id);
+            }
+            FaultAction::Parked => {
+                self.attempts.insert(run.id, run.attempt + 1);
+                self.parked.push((run.id, run.end_s));
+            }
+            FaultAction::Requeued => {
+                self.attempts.insert(run.id, run.attempt + 1);
+                let ready = (run.end_s + inj.backoff_s(run.attempt)).max(self.clock);
+                self.enqueue(run.id, ready, run.duration_s);
+            }
+        }
+        self.fault_events.push(FaultEvent {
+            id: run.id,
+            attempt: run.attempt,
+            mode,
+            fail_s: run.end_s,
+            wasted_s,
+            action,
+        });
     }
 }
 
@@ -212,8 +356,8 @@ impl ComputeSim for LanePool {
 
     fn next_event_time(&self) -> Option<f64> {
         let mut t = f64::INFINITY;
-        for &(_, end) in &self.running {
-            t = t.min(end);
+        for run in &self.running {
+            t = t.min(run.end_s);
         }
         if let Some(&Reverse((ready, ..))) = self.future.peek() {
             t = t.min(ready.0);
@@ -233,8 +377,12 @@ impl ComputeSim for LanePool {
             self.clock = self.clock.max(target);
             let mut i = 0;
             while i < self.running.len() {
-                if self.running[i].1 <= self.clock + EPS {
-                    done.push(self.running.swap_remove(i));
+                if self.running[i].end_s <= self.clock + EPS {
+                    let run = self.running.swap_remove(i);
+                    match run.fail {
+                        None => done.push((run.id, run.end_s)),
+                        Some(mode) => self.fail_attempt(run, mode),
+                    }
                 } else {
                     i += 1;
                 }
@@ -244,6 +392,10 @@ impl ComputeSim for LanePool {
                 return done;
             }
         }
+    }
+
+    fn take_restage(&mut self) -> Vec<(u64, f64)> {
+        std::mem::take(&mut self.parked)
     }
 }
 
@@ -300,6 +452,16 @@ impl MergedEvents {
 /// copy-back is submitted the moment compute finishes — so the three
 /// phases overlap across jobs and every transfer sees the contention
 /// actually present at that simulated instant.
+///
+/// With in-engine fault injection (DESIGN.md §11) both engines retry
+/// internally; the one cross-engine hand-off is the **timeout →
+/// re-stage** path: a timed-out compute attempt parks
+/// ([`Injection::park_timeouts`]), this loop submits a fresh stage-in
+/// (ids above the `2·jobs` range), and the job re-enters the compute
+/// backend only when the re-staged inputs land — re-contending for the
+/// shared link and the cluster both. Fault-free, the loop and every id
+/// it submits are identical to the pre-injection engine
+/// (`rust/tests/engine_parity.rs`).
 pub fn run_staged(
     jobs: &[StagedJob],
     compute: &mut dyn ComputeSim,
@@ -309,6 +471,9 @@ pub fn run_staged(
     for (i, j) in jobs.iter().enumerate() {
         transfers.submit_at(stage_in_id(i), STAGE_HOST, j.bytes_in, 0.0);
     }
+    // transfer ids ≥ 2·jobs are re-stages; the map recovers their job
+    let mut next_restage_id = (jobs.len() as u64) * 2;
+    let mut restage_job: BTreeMap<u64, usize> = BTreeMap::new();
     let mut events = MergedEvents::new();
     let mut seen = 0usize;
     loop {
@@ -324,8 +489,11 @@ pub fn run_staged(
         let new_from = seen;
         seen = records.len();
         for r in &records[new_from..] {
-            let i = (r.id / 2) as usize;
-            if r.id % 2 == 0 {
+            let (i, stage_in) = match restage_job.get(&r.id) {
+                Some(&i) => (i, true),
+                None => ((r.id / 2) as usize, r.id % 2 == 0),
+            };
+            if stage_in {
                 timings[i].stage_in_wait_s = r.queue_wait_s();
                 timings[i].stage_in_s = r.transfer_s();
                 compute.submit(i as u64, r.end_s, &jobs[i]);
@@ -341,6 +509,15 @@ pub fn run_staged(
             timings[i].compute_end_s = end_s;
             timings[i].compute_start_s = end_s - jobs[i].compute_s;
             transfers.submit_at(stage_out_id(i), STAGE_HOST, jobs[i].bytes_out, end_s);
+        }
+        // timed-out attempts hand back here: their scratch inputs are
+        // gone, so the retry waits on a fresh (re-contending) stage-in
+        for (id, fail_s) in compute.take_restage() {
+            let i = id as usize;
+            let rid = next_restage_id;
+            next_restage_id += 1;
+            restage_job.insert(rid, i);
+            transfers.submit_at(rid, STAGE_HOST, jobs[i].bytes_in, fail_s.max(transfers.clock()));
         }
     }
     let makespan_s = timings
@@ -485,5 +662,135 @@ mod tests {
         let out = run_staged(&js, &mut lanes, &mut transfers);
         assert!(out.timings.iter().all(|t| t.completed));
         assert_eq!(out.transfer.transfers, 10_000);
+    }
+
+    use crate::faults::FaultModel;
+
+    #[test]
+    fn zero_rate_injection_reproduces_fault_free_cosim() {
+        let js = jobs(8, 120.0);
+        let run = |inject: bool| {
+            let mut lanes = LanePool::new(3);
+            let mut transfers = TransferScheduler::for_env(Env::Local, 2, 19);
+            if inject {
+                lanes.set_faults(Injection::new(FaultModel::none(), 3, 77).with_parked_timeouts());
+                transfers.set_faults(Injection::new(FaultModel::none(), 3, 78));
+            }
+            run_staged(&js, &mut lanes, &mut transfers)
+        };
+        let plain = run(false);
+        let injected = run(true);
+        assert_eq!(plain.timings, injected.timings, "zero-rate injection must be a no-op");
+        assert_eq!(plain.makespan_s, injected.makespan_s);
+        assert_eq!(plain.transfer, injected.transfer);
+    }
+
+    #[test]
+    fn timed_out_attempts_restage_through_the_transfer_path() {
+        // every attempt times out: each of the 2 jobs runs 3 attempts
+        // (initial + 2 parked retries), each retry preceded by a fresh
+        // stage-in that re-contends on the shared path, then aborts
+        let js = jobs(2, 100.0);
+        let mut lanes = LanePool::new(2);
+        lanes.set_faults(
+            Injection::new(
+                FaultModel {
+                    p_timeout: 1.0,
+                    ..FaultModel::none()
+                },
+                2,
+                5,
+            )
+            .with_backoff(0.0)
+            .with_parked_timeouts(),
+        );
+        let mut transfers = TransferScheduler::for_env(Env::Local, 4, 21);
+        let out = run_staged(&js, &mut lanes, &mut transfers);
+        assert!(out.timings.iter().all(|t| !t.completed), "no job survives");
+        // 3 stage-ins per job (ids 0,2 then restage ids ≥ 4), no copy-backs
+        assert_eq!(out.transfer.transfers, 6);
+        assert!(transfers.records().iter().all(|r| r.id % 2 == 0 || r.id >= 4));
+        assert_eq!(lanes.fault_events().len(), 6);
+        assert_eq!(lanes.aborted_ids().len(), 2);
+        assert_eq!(
+            lanes.fault_events().iter().filter(|e| e.action == FaultAction::Parked).count(),
+            4,
+            "two parked retries per job"
+        );
+        // each timeout wasted the full allocation
+        assert!(lanes.fault_events().iter().all(|e| e.wasted_s == 100.0));
+    }
+
+    #[test]
+    fn requeued_compute_failures_stay_inside_the_backend() {
+        // node failures requeue in-engine: no extra stage-ins appear
+        let js = jobs(3, 60.0);
+        let mut lanes = LanePool::new(3);
+        lanes.set_faults(
+            Injection::new(
+                FaultModel {
+                    p_node: 1.0,
+                    ..FaultModel::none()
+                },
+                1,
+                9,
+            )
+            .with_backoff(5.0),
+        );
+        let mut transfers = TransferScheduler::for_env(Env::Local, 4, 23);
+        let out = run_staged(&js, &mut lanes, &mut transfers);
+        assert!(out.timings.iter().all(|t| !t.completed));
+        assert_eq!(out.transfer.transfers, 3, "stage-ins only, no restages, no copy-backs");
+        assert_eq!(lanes.fault_events().len(), 6, "two attempts per job");
+        assert_eq!(lanes.aborted_ids().len(), 3);
+        assert_eq!(lanes.wasted_alloc_s(), 6.0 * 30.0, "each attempt wastes half of 60 s");
+    }
+
+    #[test]
+    fn moderate_faults_complete_with_retries_and_extend_makespan() {
+        let js = jobs(30, 90.0);
+        let run = |faulty: bool| {
+            let mut lanes = LanePool::new(4);
+            let mut transfers = TransferScheduler::for_env(Env::Local, 4, 29);
+            if faulty {
+                lanes.set_faults(
+                    Injection::new(FaultModel::harsh().compute_only(), 5, 31).with_backoff(10.0),
+                );
+                transfers.set_faults(Injection::new(FaultModel::harsh().transfer_only(), 5, 33));
+            }
+            let out = run_staged(&js, &mut lanes, &mut transfers);
+            (out, lanes.aborted_ids().len(), lanes.fault_events().len())
+        };
+        let (clean, clean_aborts, clean_events) = run(false);
+        let (faulty, aborts, events) = run(true);
+        assert_eq!(clean_aborts + clean_events, 0);
+        assert!(clean.timings.iter().all(|t| t.completed));
+        let completed = faulty.timings.iter().filter(|t| t.completed).count();
+        assert_eq!(completed + aborts, 30, "jobs either complete or abort");
+        assert!(events > 0, "harsh rates over 30 jobs must fail some attempts");
+        assert!(
+            faulty.makespan_s > clean.makespan_s,
+            "retries must extend the campaign: {} vs {}",
+            faulty.makespan_s,
+            clean.makespan_s
+        );
+    }
+
+    #[test]
+    fn fault_cosim_deterministic_given_seed() {
+        let js = jobs(12, 45.0);
+        let run = || {
+            let mut lanes = LanePool::new(3);
+            lanes.set_faults(
+                Injection::new(FaultModel::harsh().compute_only(), 3, 61)
+                    .with_backoff(2.0)
+                    .with_parked_timeouts(),
+            );
+            let mut transfers = TransferScheduler::for_env(Env::Local, 2, 63);
+            transfers.set_faults(Injection::new(FaultModel::harsh().transfer_only(), 3, 65));
+            let out = run_staged(&js, &mut lanes, &mut transfers);
+            (out.timings, lanes.fault_events().to_vec(), transfers.fault_events().to_vec())
+        };
+        assert_eq!(run(), run());
     }
 }

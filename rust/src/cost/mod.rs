@@ -50,6 +50,16 @@ pub fn compute_cost(env: Env, minutes: f64) -> f64 {
 /// single-stream samples of `NetProfile::transfer_time`. Queue wait in
 /// the transfer scheduler does not hold the slot (the job has not been
 /// allocated yet while its inputs wait to stream).
+///
+/// Under in-engine fault injection (DESIGN.md §11) `compute_minutes` is
+/// the *effective* figure: the coordinator bills every failed attempt's
+/// wasted allocation (`FailureMode::wasted_fraction()` of the nominal
+/// duration, per attempt) into it before pricing, so retries pay the
+/// slot rate — the paper's §4 overrun, itemized per job. Wasted
+/// *transfer* seconds are deliberately not billed here: a checksum
+/// retry holds no compute allocation (stage-in precedes the slot,
+/// copy-back follows its release); they surface in the campaign's
+/// fault telemetry instead.
 pub fn staged_job_cost(env: Env, compute_minutes: f64, transfer_s: f64) -> f64 {
     compute_cost(env, compute_minutes + transfer_s / 60.0)
 }

@@ -2,13 +2,25 @@
 //! likely be much greater due to processing errors, debugging, and
 //! resubmitting failed jobs").
 //!
-//! A `FaultModel` assigns each job attempt a failure mode drawn from
+//! A [`FaultModel`] assigns each job attempt a failure mode drawn from
 //! calibrated rates; the retry policy resubmits up to `max_retries` times.
 //! Failed attempts still consume compute time (a fraction of the full
 //! duration — most pipeline failures surface mid-run), so the *effective*
-//! cost per completed job exceeds the naive estimate. The
-//! `ablation_faults` bench quantifies that overrun — the paper's warning,
-//! made measurable.
+//! cost per completed job exceeds the naive estimate.
+//!
+//! Two generations of the model coexist (DESIGN.md §11):
+//!
+//! * the **closed form** ([`run_with_retries`], [`expected_overrun`]) —
+//!   the §4 overrun factor in expectation, used by the cost planner and
+//!   as a cross-check against the co-simulation (`benches/ablations.rs`
+//!   measures it per fault regime);
+//! * the **in-engine injection** ([`Injection`]) — failures sampled
+//!   deterministically per (job id, attempt) *inside* the discrete-event
+//!   engines (`slurm::Scheduler`, `netsim::scheduler::TransferScheduler`,
+//!   `coordinator::staged::LanePool`), so retried jobs re-contend for
+//!   cluster slots and shared links instead of being scaled post hoc.
+//!   `benches/fault_resilience.rs` sweeps fault rates through the
+//!   co-simulation at 10³–10⁵ jobs.
 
 use crate::util::rng::Rng;
 
@@ -82,8 +94,60 @@ impl FaultModel {
         self.p_checksum + self.p_pipeline + self.p_node + self.p_timeout
     }
 
+    /// Check the rates form a valid sub-probability distribution: every
+    /// band in [0, 1] and the bands summing to ≤ 1. [`Self::sample`]'s
+    /// cumulative walk silently truncates the Timeout band otherwise
+    /// (e.g. `p_pipeline = 0.9, p_timeout = 0.9` would time out with
+    /// probability 0.1, not 0.9) — consumers must reject such models
+    /// loudly instead.
+    pub fn validate(&self) -> Result<(), String> {
+        let bands = [
+            ("p_checksum", self.p_checksum),
+            ("p_pipeline", self.p_pipeline),
+            ("p_node", self.p_node),
+            ("p_timeout", self.p_timeout),
+        ];
+        for (name, p) in bands {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!(
+                    "fault model: {name} = {p} is not a probability (want 0 ≤ p ≤ 1)"
+                ));
+            }
+        }
+        let total = self.total_rate();
+        if total > 1.0 {
+            return Err(format!(
+                "fault model: rates sum to {total} > 1 (checksum {} + pipeline {} + node {} + \
+                 timeout {}) — the cumulative sampling walk would truncate the Timeout band",
+                self.p_checksum, self.p_pipeline, self.p_node, self.p_timeout
+            ));
+        }
+        Ok(())
+    }
+
+    /// The compute-side bands only (checksum mismatches belong to the
+    /// transfer engine in the co-simulated split — see
+    /// [`crate::coordinator`]).
+    pub fn compute_only(&self) -> Self {
+        Self {
+            p_checksum: 0.0,
+            ..*self
+        }
+    }
+
+    /// The transfer-side band only (everything but checksum zeroed).
+    pub fn transfer_only(&self) -> Self {
+        Self {
+            p_pipeline: 0.0,
+            p_node: 0.0,
+            p_timeout: 0.0,
+            ..*self
+        }
+    }
+
     /// Sample one attempt's outcome.
     pub fn sample(&self, rng: &mut Rng) -> Option<FailureMode> {
+        debug_assert!(self.validate().is_ok(), "{:?}", self.validate());
         let x = rng.next_f64();
         let mut acc = self.p_checksum;
         if x < acc {
@@ -103,7 +167,291 @@ impl FaultModel {
         }
         None
     }
+
+    /// Sample the outcome of attempt `attempt` of job/transfer `id` from
+    /// the deterministic per-(id, attempt) stream ([`attempt_rng`]): the
+    /// verdict does not depend on event interleaving, cluster load, or
+    /// how many other jobs retried first — the co-simulated engines stay
+    /// replayable from the seed alone.
+    pub fn sample_attempt(&self, seed: u64, id: u64, attempt: u32) -> Option<FailureMode> {
+        self.sample(&mut attempt_rng(seed, id, attempt))
+    }
 }
+
+/// Deterministic sampling stream for attempt `attempt` of job `id` —
+/// shared by every engine that injects failures, so compute and transfer
+/// verdicts are independent exactly when their seeds are.
+pub fn attempt_rng(seed: u64, id: u64, attempt: u32) -> Rng {
+    Rng::new(
+        seed.wrapping_add(id.wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add((attempt as u64 + 1).wrapping_mul(0xD1B54A32D192ED03)),
+    )
+}
+
+/// In-engine failure-injection config (the co-simulated path): which
+/// model to sample, how many resubmissions a job gets, the sampling
+/// seed, and the requeue policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Injection {
+    pub model: FaultModel,
+    /// Resubmissions allowed per job; the attempt indexed `max_retries`
+    /// is the last one.
+    pub max_retries: u32,
+    /// Seed of the per-(id, attempt) sampling stream.
+    pub seed: u64,
+    /// Requeue delay after a failed attempt: `backoff_base_s · 2^attempt`
+    /// (the submit-loop's resubmit-with-backoff, paper Fig. 3).
+    pub backoff_base_s: f64,
+    /// Park timed-out attempts for the caller to re-stage inputs and
+    /// resubmit (the staged co-simulation drives this; a timeout wipes
+    /// the node-local scratch, so the retry needs a fresh stage-in)
+    /// instead of self-requeueing.
+    pub park_timeouts: bool,
+}
+
+impl Injection {
+    /// Injection with the default backoff (60 s base) and no parking.
+    /// Panics on an invalid model — validate first at the API boundary
+    /// for a recoverable error.
+    pub fn new(model: FaultModel, max_retries: u32, seed: u64) -> Self {
+        if let Err(e) = model.validate() {
+            panic!("Injection::new: {e}");
+        }
+        Self {
+            model,
+            max_retries,
+            seed,
+            backoff_base_s: 60.0,
+            park_timeouts: false,
+        }
+    }
+
+    pub fn with_backoff(mut self, base_s: f64) -> Self {
+        assert!(base_s >= 0.0 && base_s.is_finite(), "backoff must be ≥ 0");
+        self.backoff_base_s = base_s;
+        self
+    }
+
+    pub fn with_parked_timeouts(mut self) -> Self {
+        self.park_timeouts = true;
+        self
+    }
+
+    /// The campaign split (DESIGN.md §11), compute side: the pipeline /
+    /// node / timeout bands, timeouts parked so the staged loop can
+    /// re-stage inputs, sampling salted with [`FAULT_COMPUTE_SALT`].
+    /// One definition shared by the campaign coordinator and the
+    /// `medflow faults` CLI — the same campaign seed must replay the
+    /// same retry trace in both.
+    pub fn campaign_compute(
+        model: &FaultModel,
+        max_retries: u32,
+        seed: u64,
+        backoff_s: f64,
+    ) -> Self {
+        Self {
+            model: model.compute_only(),
+            max_retries,
+            seed: seed ^ FAULT_COMPUTE_SALT,
+            backoff_base_s: backoff_s,
+            park_timeouts: true,
+        }
+    }
+
+    /// The campaign split, transfer side: the checksum band only, with
+    /// immediate re-enqueue (the host FIFO is the backoff), sampling
+    /// salted with [`FAULT_TRANSFER_SALT`].
+    pub fn campaign_transfer(model: &FaultModel, max_retries: u32, seed: u64) -> Self {
+        Self {
+            model: model.transfer_only(),
+            max_retries,
+            seed: seed ^ FAULT_TRANSFER_SALT,
+            backoff_base_s: 0.0,
+            park_timeouts: false,
+        }
+    }
+
+    /// Outcome of attempt `attempt` of job `id` (deterministic).
+    pub fn sample(&self, id: u64, attempt: u32) -> Option<FailureMode> {
+        self.model.sample_attempt(self.seed, id, attempt)
+    }
+
+    /// Retry-policy verdict for failed attempt `attempt` with mode
+    /// `mode` — the single definition of the exhaustion and parking
+    /// rules every engine applies (`slurm::Scheduler`, `LanePool`,
+    /// `TransferScheduler` keep only the requeue *mechanics* local, so
+    /// the policy cannot drift between them).
+    pub fn disposition(&self, attempt: u32, mode: FailureMode) -> FaultAction {
+        if attempt >= self.max_retries {
+            FaultAction::Aborted
+        } else if self.park_timeouts && mode == FailureMode::Timeout {
+            FaultAction::Parked
+        } else {
+            FaultAction::Requeued
+        }
+    }
+
+    /// Requeue delay after failed attempt `attempt` (exponential,
+    /// capped so the doubling cannot overflow to infinity).
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * f64::from(2u32.saturating_pow(attempt.min(16)))
+    }
+}
+
+/// What an engine did with a failed attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Requeued internally (resubmitted after backoff).
+    Requeued,
+    /// Parked for the driver to re-stage inputs and resubmit
+    /// ([`Injection::park_timeouts`]).
+    Parked,
+    /// Retries exhausted; the job/transfer was dropped.
+    Aborted,
+}
+
+/// One failed attempt, as recorded by a discrete-event engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Job id (compute engines) or transfer id (transfer engine).
+    pub id: u64,
+    /// 0-based index of the attempt that failed.
+    pub attempt: u32,
+    pub mode: FailureMode,
+    /// Simulated time the failure surfaced.
+    pub fail_s: f64,
+    /// Allocation/wire seconds consumed by the failed attempt.
+    pub wasted_s: f64,
+    pub action: FaultAction,
+}
+
+/// Failed-attempt counts by mode.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub checksum: u64,
+    pub pipeline: u64,
+    pub node: u64,
+    pub timeout: u64,
+}
+
+impl FaultCounts {
+    pub fn record(&mut self, mode: FailureMode) {
+        match mode {
+            FailureMode::ChecksumMismatch => self.checksum += 1,
+            FailureMode::PipelineError => self.pipeline += 1,
+            FailureMode::NodeFailure => self.node += 1,
+            FailureMode::Timeout => self.timeout += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.checksum + self.pipeline + self.node + self.timeout
+    }
+}
+
+/// Campaign-level fault telemetry ([`crate::coordinator`] reports,
+/// `medflow faults`): per-mode failed-attempt counts, retry/requeue
+/// traffic, and the waste both engines accounted — plus the closed-form
+/// §4 overrun as a cross-check on the co-simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultTelemetry {
+    /// Failed attempts by mode, compute + transfer engines combined.
+    pub counts: FaultCounts,
+    /// Compute attempts requeued in-engine (backoff resubmissions).
+    pub compute_retries: u64,
+    /// Transfer attempts re-enqueued after a checksum mismatch.
+    pub transfer_retries: u64,
+    /// Timed-out attempts whose inputs were re-staged before resubmission.
+    pub restages: u64,
+    /// Jobs or transfers dropped after exhausting retries.
+    pub aborted: u64,
+    /// Allocation minutes consumed by failed compute attempts.
+    pub wasted_compute_minutes: f64,
+    /// Wire seconds consumed by failed transfer attempts.
+    pub wasted_transfer_s: f64,
+    /// Closed-form §4 expected duration-overrun factor for the same
+    /// model + retry budget (1.0 when fault-free) — the pre-co-simulation
+    /// model, kept as a cross-check.
+    pub expected_overrun_factor: f64,
+}
+
+impl Default for FaultTelemetry {
+    fn default() -> Self {
+        Self {
+            counts: FaultCounts::default(),
+            compute_retries: 0,
+            transfer_retries: 0,
+            restages: 0,
+            aborted: 0,
+            wasted_compute_minutes: 0.0,
+            wasted_transfer_s: 0.0,
+            expected_overrun_factor: 1.0,
+        }
+    }
+}
+
+impl FaultTelemetry {
+    /// Assemble campaign telemetry from both engines' outputs — the one
+    /// fold (tally rules, closed-form cross-check seeding) shared by the
+    /// campaign coordinator and the `medflow faults` CLI, so the two
+    /// reports cannot drift for the same model and seed.
+    pub fn collect(
+        model: Option<&FaultModel>,
+        max_retries: u32,
+        seed: u64,
+        compute_events: &[FaultEvent],
+        transfer_events: &[FaultEvent],
+        aborted: u64,
+    ) -> Self {
+        let mut t = Self {
+            expected_overrun_factor: match model {
+                Some(m) => expected_overrun(m, max_retries, 20_000, seed ^ FAULT_CROSSCHECK_SALT),
+                None => 1.0,
+            },
+            ..Self::default()
+        };
+        for ev in compute_events {
+            t.record_compute_event(ev);
+        }
+        for ev in transfer_events {
+            t.record_transfer_event(ev);
+        }
+        t.aborted = aborted;
+        t
+    }
+
+    /// Fold one compute-engine fault event in (counts, retry/restage
+    /// tally, wasted minutes).
+    pub fn record_compute_event(&mut self, ev: &FaultEvent) {
+        self.counts.record(ev.mode);
+        self.wasted_compute_minutes += ev.wasted_s / 60.0;
+        match ev.action {
+            FaultAction::Requeued => self.compute_retries += 1,
+            FaultAction::Parked => {
+                self.compute_retries += 1;
+                self.restages += 1;
+            }
+            FaultAction::Aborted => {}
+        }
+    }
+
+    /// Fold one transfer-engine fault event in.
+    pub fn record_transfer_event(&mut self, ev: &FaultEvent) {
+        self.counts.record(ev.mode);
+        self.wasted_transfer_s += ev.wasted_s;
+        if ev.action == FaultAction::Requeued {
+            self.transfer_retries += 1;
+        }
+    }
+}
+
+/// Seed salts decorrelating the fault-sampling streams from each other
+/// and from the compute-duration / transfer-sampling streams. Shared by
+/// every injection site (`coordinator`, `medflow faults`) so the same
+/// campaign seed replays the same retry trace everywhere.
+pub const FAULT_COMPUTE_SALT: u64 = 0x636f_6d70_6661_756c; // "compfaul"
+pub const FAULT_TRANSFER_SALT: u64 = 0x7866_6572_6661_756c; // "xferfaul"
+pub const FAULT_CROSSCHECK_SALT: u64 = 0x6f76_6572_7275_6e31; // "overrun1"
 
 /// Outcome of running one job under a fault model with retries.
 #[derive(Debug, Clone, PartialEq)]
@@ -117,8 +465,11 @@ pub struct AttemptTrace {
     pub effective_duration_factor: f64,
 }
 
-/// Simulate attempts until success or `max_retries` resubmissions.
+/// Simulate attempts until success or `max_retries` resubmissions (the
+/// closed-form model: no contention, no queueing — see [`Injection`] for
+/// the in-engine path).
 pub fn run_with_retries(model: &FaultModel, max_retries: u32, rng: &mut Rng) -> AttemptTrace {
+    debug_assert!(model.validate().is_ok(), "{:?}", model.validate());
     let mut failures = Vec::new();
     let mut factor = 0.0;
     for _attempt in 0..=max_retries {
@@ -228,5 +579,123 @@ mod tests {
     fn timeout_wastes_full_allocation() {
         assert_eq!(FailureMode::Timeout.wasted_fraction(), 1.0);
         assert!(FailureMode::ChecksumMismatch.wasted_fraction() < 0.1);
+    }
+
+    #[test]
+    fn validate_accepts_stock_models() {
+        for m in [FaultModel::none(), FaultModel::typical(), FaultModel::harsh()] {
+            assert!(m.validate().is_ok(), "{m:?}");
+        }
+        // total exactly 1 is a valid (always-failing) distribution
+        let all = FaultModel {
+            p_checksum: 0.25,
+            p_pipeline: 0.25,
+            p_node: 0.25,
+            p_timeout: 0.25,
+        };
+        assert!(all.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_truncating_rates() {
+        // the regression: sample() would truncate the Timeout band here
+        let over = FaultModel {
+            p_checksum: 0.0,
+            p_pipeline: 0.9,
+            p_node: 0.0,
+            p_timeout: 0.9,
+        };
+        let err = over.validate().unwrap_err();
+        assert!(err.contains("sum to"), "{err}");
+        assert!(err.contains("Timeout band"), "{err}");
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let m = FaultModel {
+                p_checksum: bad,
+                ..FaultModel::none()
+            };
+            assert!(m.validate().is_err(), "p_checksum = {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Injection::new")]
+    fn injection_rejects_invalid_model() {
+        let over = FaultModel {
+            p_checksum: 0.6,
+            p_pipeline: 0.6,
+            p_node: 0.0,
+            p_timeout: 0.0,
+        };
+        let _ = Injection::new(over, 3, 1);
+    }
+
+    #[test]
+    fn attempt_sampling_is_deterministic_and_independent() {
+        let m = FaultModel::harsh();
+        for id in 0..50u64 {
+            for attempt in 0..4u32 {
+                assert_eq!(
+                    m.sample_attempt(7, id, attempt),
+                    m.sample_attempt(7, id, attempt),
+                    "id {id} attempt {attempt} must replay"
+                );
+            }
+        }
+        // different attempts of one id draw from distinct streams
+        let distinct = (0..200u64).any(|id| {
+            m.sample_attempt(7, id, 0) != m.sample_attempt(7, id, 1)
+                || m.sample_attempt(7, id, 1) != m.sample_attempt(7, id, 2)
+        });
+        assert!(distinct, "attempt index must perturb the stream");
+        // and different seeds decorrelate the same (id, attempt)
+        let seed_matters =
+            (0..200u64).any(|id| m.sample_attempt(7, id, 0) != m.sample_attempt(8, id, 0));
+        assert!(seed_matters);
+    }
+
+    #[test]
+    fn attempt_rates_match_model() {
+        let m = FaultModel::harsh();
+        let n = 50_000u64;
+        let fails = (0..n).filter(|&id| m.sample_attempt(13, id, 0).is_some()).count();
+        let got = fails as f64 / n as f64;
+        assert!((got - m.total_rate()).abs() < 0.01, "got {got}");
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let inj = Injection::new(FaultModel::typical(), 3, 1).with_backoff(10.0);
+        assert_eq!(inj.backoff_s(0), 10.0);
+        assert_eq!(inj.backoff_s(1), 20.0);
+        assert_eq!(inj.backoff_s(3), 80.0);
+        assert!(inj.backoff_s(100).is_finite(), "cap must prevent overflow");
+        let immediate = Injection::new(FaultModel::typical(), 3, 1).with_backoff(0.0);
+        assert_eq!(immediate.backoff_s(5), 0.0);
+    }
+
+    #[test]
+    fn fault_counts_record_and_total() {
+        let mut c = FaultCounts::default();
+        c.record(FailureMode::ChecksumMismatch);
+        c.record(FailureMode::PipelineError);
+        c.record(FailureMode::PipelineError);
+        c.record(FailureMode::NodeFailure);
+        c.record(FailureMode::Timeout);
+        assert_eq!(c.checksum, 1);
+        assert_eq!(c.pipeline, 2);
+        assert_eq!(c.total(), 5);
+        assert_eq!(FaultTelemetry::default().expected_overrun_factor, 1.0);
+    }
+
+    #[test]
+    fn model_splits_partition_the_bands() {
+        let m = FaultModel::harsh();
+        let c = m.compute_only();
+        let t = m.transfer_only();
+        assert_eq!(c.p_checksum, 0.0);
+        assert_eq!(c.p_pipeline, m.p_pipeline);
+        assert_eq!(t.p_checksum, m.p_checksum);
+        assert_eq!(t.p_pipeline + t.p_node + t.p_timeout, 0.0);
+        assert!((c.total_rate() + t.total_rate() - m.total_rate()).abs() < 1e-15);
     }
 }

@@ -21,12 +21,16 @@ use medflow::archive::{Archive, SecurityTier};
 use medflow::bids::{validate_dataset, BidsDataset, Severity};
 use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
+use medflow::coordinator::staged::{run_staged, synthetic_fault_campaign, SlurmSim};
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::faults::{FaultModel, FaultTelemetry, Injection};
 use medflow::netsim::scheduler::{Topology, TransferScheduler};
 use medflow::netsim::Env;
 use medflow::pipeline::{by_name, registry};
 use medflow::query::{find_runnable, IncrementalEngine};
 use medflow::report;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
+use medflow::util::units::{fmt_duration, percentiles};
 use medflow::workload::{ingest_cohort, SynthCohort};
 
 fn main() {
@@ -120,6 +124,7 @@ fn run() -> Result<()> {
         }
         "sweep" => cmd_sweep(&args),
         "transfer-sim" => cmd_transfer_sim(&args),
+        "faults" => cmd_faults(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
             for years in [0.0, 1.0, 3.0, 5.0] {
@@ -338,9 +343,18 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         },
         None => SubmitTarget::Hpc,
     };
+    // --faults [none|typical|harsh] switches on in-engine injection
+    // (bare flag = typical); --retries bounds resubmissions per job
+    let faults = match args.get("faults") {
+        Some(name) => Some(parse_fault_model(name)?),
+        None if args.has("faults") => Some(FaultModel::typical()),
+        None => None,
+    };
     let cfg = CampaignConfig {
         user: args.get("user").unwrap_or("medflow").to_string(),
         seed: args.num("seed", 42),
+        faults,
+        max_retries: args.num("retries", 3) as u32,
         ..Default::default()
     };
     let r = coord.run_campaign(&ds, pipeline, target, &cfg)?;
@@ -358,6 +372,112 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     if r.transfer.transfers > 0 {
         print!("{}", report::format_transfer_stats(&r.transfer));
     }
+    if cfg.faults.is_some() {
+        print!("{}", report::format_fault_stats(&r.faults));
+    }
+    Ok(())
+}
+
+fn parse_fault_model(name: &str) -> Result<FaultModel> {
+    match name {
+        "none" => Ok(FaultModel::none()),
+        "typical" => Ok(FaultModel::typical()),
+        "harsh" => Ok(FaultModel::harsh()),
+        other => bail!("unknown fault model '{other}' (none | typical | harsh)"),
+    }
+}
+
+/// `medflow faults`: run the shared synthetic campaign
+/// ([`synthetic_fault_campaign`]) through the staged co-simulation
+/// fault-free and under the chosen model (in-engine injection,
+/// DESIGN.md §11), and print the retry/abort telemetry plus the
+/// makespan and queue-wait impact of re-contending retries.
+fn cmd_faults(args: &Args) -> Result<()> {
+    let n = args.num("jobs", 2_000) as usize;
+    let retries = args.num("retries", 3) as u32;
+    let seed = args.num("seed", 42);
+    let cap = args.num("cap", 16).max(1) as usize;
+    let model = parse_fault_model(args.get("model").unwrap_or("typical"))?;
+    model.validate().map_err(anyhow::Error::msg)?;
+    let jobs = synthetic_fault_campaign(n, seed);
+
+    let backoff_s = args.num("backoff", 60) as f64;
+
+    let run = |inject: bool| {
+        let mut sched = Scheduler::new(ClusterSpec::accre());
+        if inject {
+            // the exact injection split campaign reports use — same
+            // salts, same parking/backoff policy, comparable numbers
+            sched.set_faults(Injection::campaign_compute(&model, retries, seed, backoff_s));
+        }
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: args.num("concurrent", 2_000) as u32,
+        };
+        let mut sim = SlurmSim::new(sched, "medflow", Some(handle));
+        let mut transfers =
+            TransferScheduler::new(Topology::of(Env::Hpc).with_stream_cap(cap), seed ^ 0x7472);
+        if inject {
+            transfers.set_faults(Injection::campaign_transfer(&model, retries, seed));
+        }
+        let out = run_staged(&jobs, &mut sim, &mut transfers);
+        let transfer_waits: Vec<f64> =
+            transfers.records().iter().map(|r| r.queue_wait_s()).collect();
+        let slurm_waits: Vec<f64> = sim
+            .scheduler()
+            .records()
+            .iter()
+            .map(|r| r.queue_wait_s())
+            .collect();
+        // the exact fold campaign reports use (FaultTelemetry::collect):
+        // same tally rules, same cross-check seeding — comparable output
+        let telemetry = FaultTelemetry::collect(
+            inject.then_some(&model),
+            retries,
+            seed,
+            sim.scheduler().fault_events(),
+            transfers.fault_events(),
+            (sim.scheduler().aborted_ids().len() + transfers.aborted_ids().len()) as u64,
+        );
+        let completed = out.timings.iter().filter(|t| t.completed).count();
+        (out.makespan_s, completed, transfer_waits, slurm_waits, telemetry)
+    };
+
+    println!(
+        "fault co-simulation: {n} jobs on ACCRE (stream cap {cap}, retries {retries}, seed {seed})"
+    );
+    println!(
+        "model: checksum {:.3} pipeline {:.3} node {:.3} timeout {:.3}  (total {:.3}/attempt)\n",
+        model.p_checksum,
+        model.p_pipeline,
+        model.p_node,
+        model.p_timeout,
+        model.total_rate()
+    );
+    let (free_mk, free_done, free_tw, free_sw, _) = run(false);
+    let (mk, done, tw, sw, telemetry) = run(true);
+    let p95 = |xs: &[f64]| percentiles(xs, &[95.0])[0];
+    println!("{:<26}{:>14}{:>14}", "", "fault-free", "injected");
+    println!(
+        "{:<26}{:>14}{:>14}",
+        "makespan",
+        fmt_duration(free_mk),
+        fmt_duration(mk)
+    );
+    println!("{:<26}{:>14}{:>14}", "completed jobs", free_done, done);
+    println!(
+        "{:<26}{:>14}{:>14}",
+        "transfer wait p95",
+        fmt_duration(p95(&free_tw)),
+        fmt_duration(p95(&tw))
+    );
+    println!(
+        "{:<26}{:>14}{:>14}\n",
+        "cluster queue wait p95",
+        fmt_duration(p95(&free_sw)),
+        fmt_duration(p95(&sw))
+    );
+    print!("{}", report::format_fault_stats(&telemetry));
     Ok(())
 }
 
@@ -453,12 +573,15 @@ USAGE:
   medflow query     --root DIR --dataset NAME --pipeline P [--full] [--workers N]
   medflow index     --root DIR --dataset NAME [--rebuild | --invalidate PIPELINE]
   medflow campaign  --root DIR --dataset NAME --pipeline P [--local WORKERS]
+                    [--faults none|typical|harsh] [--retries N]
   medflow status    --root DIR
   medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)
   medflow project   [--faults]                    (paper-scale cost projection)
   medflow growth                                  (storage capacity forecast)
   medflow transfer-sim [--env hpc|cloud|local] [--streams N] [--gb X] [--cap N] [--seed S]
                                                   (shared-link contention simulation)
+  medflow faults    [--model none|typical|harsh] [--jobs N] [--retries N] [--cap N]
+                    [--backoff SECS] [--seed S]   (in-engine failure/retry co-simulation)
   medflow pipelines
   medflow table1 | table2 | table3 | fig1"
     );

@@ -370,6 +370,30 @@ pub fn format_transfer_waits(records: &[TransferRecord]) -> String {
     )
 }
 
+/// Render the in-engine fault telemetry of a campaign (DESIGN.md §11):
+/// per-mode failed-attempt counts, retry/restage/abort traffic, the
+/// wasted time both engines accounted, and the closed-form §4 overrun
+/// cross-check.
+pub fn format_fault_stats(f: &crate::faults::FaultTelemetry) -> String {
+    format!(
+        "faults: {:>4} failed attempts (checksum {}, pipeline {}, node {}, timeout {})\n\
+         retries: compute {} ({} re-staged), transfer {}   aborted {}\n\
+         wasted: {:.1} compute-min, {} transfer   closed-form overrun ×{:.3}\n",
+        f.counts.total(),
+        f.counts.checksum,
+        f.counts.pipeline,
+        f.counts.node,
+        f.counts.timeout,
+        f.compute_retries,
+        f.restages,
+        f.transfer_retries,
+        f.aborted,
+        f.wasted_compute_minutes,
+        fmt_duration(f.wasted_transfer_s),
+        f.expected_overrun_factor,
+    )
+}
+
 /// Render aggregate transfer-scheduler telemetry (campaign reports and
 /// `medflow transfer-sim`): link utilization, aggregate throughput,
 /// concurrency, queueing.
@@ -438,6 +462,37 @@ mod tests {
         assert!(s.contains("p50 10.0 s"), "{s}");
         assert!(s.contains("p90") && s.contains("p99"), "{s}");
         assert!(format_transfer_waits(&[]).contains("p50"), "empty set renders");
+    }
+
+    #[test]
+    fn format_fault_stats_reports_all_bands() {
+        use crate::faults::{FaultCounts, FaultTelemetry};
+        let t = FaultTelemetry {
+            counts: FaultCounts {
+                checksum: 1,
+                pipeline: 8,
+                node: 1,
+                timeout: 2,
+            },
+            compute_retries: 9,
+            transfer_retries: 1,
+            restages: 2,
+            aborted: 1,
+            wasted_compute_minutes: 84.25,
+            wasted_transfer_s: 12.5,
+            expected_overrun_factor: 1.142,
+        };
+        let s = format_fault_stats(&t);
+        assert!(s.contains("12 failed attempts"), "{s}");
+        assert!(s.contains("pipeline 8"), "{s}");
+        assert!(s.contains("compute 9 (2 re-staged)"), "{s}");
+        assert!(s.contains("aborted 1"), "{s}");
+        assert!(s.contains("84.2 compute-min"), "{s}");
+        assert!(s.contains("×1.142"), "{s}");
+        // fault-free telemetry renders cleanly too
+        let clean = format_fault_stats(&FaultTelemetry::default());
+        assert!(clean.contains("0 failed attempts"), "{clean}");
+        assert!(clean.contains("×1.000"), "{clean}");
     }
 
     #[test]

@@ -32,8 +32,22 @@ pub struct InputSpec {
 }
 
 impl InputSpec {
+    /// Total element count of the input buffer. Manifest parsing rejects
+    /// negative dims ([`ArtifactManifest::load`]); a hand-built spec that
+    /// smuggles one in panics here with the offending dim instead of
+    /// wrapping `as usize` into an astronomically large buffer size.
     pub fn elements(&self) -> usize {
-        self.shape.iter().map(|&d| d as usize).product()
+        self.shape
+            .iter()
+            .map(|&d| {
+                usize::try_from(d).unwrap_or_else(|_| {
+                    panic!(
+                        "input '{}': negative dimension {d} in shape {:?}",
+                        self.name, self.shape
+                    )
+                })
+            })
+            .product()
     }
 }
 
@@ -65,25 +79,41 @@ impl ArtifactManifest {
             .and_then(Json::as_arr)
             .context("manifest missing 'artifacts'")?
         {
+            let artifact_name: String = a
+                .get_path("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .into();
             let inputs = a
                 .get_path("inputs")
                 .and_then(Json::as_arr)
                 .unwrap_or(&[])
                 .iter()
                 .map(|i| -> Result<InputSpec> {
+                    let name: String = i
+                        .get_path("name")
+                        .and_then(Json::as_str)
+                        .context("input missing name")?
+                        .into();
+                    let shape: Vec<i64> = i
+                        .get_path("shape")
+                        .and_then(Json::as_arr)
+                        .context("input missing shape")?
+                        .iter()
+                        .filter_map(Json::as_i64)
+                        .collect();
+                    // a negative dim `as usize` would wrap to an enormous
+                    // buffer size downstream — reject it at the source
+                    if let Some(&bad) = shape.iter().find(|&&d| d < 0) {
+                        bail!(
+                            "manifest.json: artifact '{artifact_name}', input '{name}': \
+                             negative dimension {bad} in shape {shape:?} — a corrupt or \
+                             hand-edited manifest cannot size input buffers"
+                        );
+                    }
                     Ok(InputSpec {
-                        name: i
-                            .get_path("name")
-                            .and_then(Json::as_str)
-                            .context("input missing name")?
-                            .into(),
-                        shape: i
-                            .get_path("shape")
-                            .and_then(Json::as_arr)
-                            .context("input missing shape")?
-                            .iter()
-                            .filter_map(Json::as_i64)
-                            .collect(),
+                        name,
+                        shape,
                         dtype: i
                             .get_path("dtype")
                             .and_then(Json::as_str)
@@ -93,11 +123,7 @@ impl ArtifactManifest {
                 })
                 .collect::<Result<Vec<_>>>()?;
             artifacts.push(ArtifactSpec {
-                name: a
-                    .get_path("name")
-                    .and_then(Json::as_str)
-                    .context("artifact missing name")?
-                    .into(),
+                name: artifact_name,
                 file: a
                     .get_path("file")
                     .and_then(Json::as_str)
@@ -416,6 +442,55 @@ mod tests {
             }
         }
         v
+    }
+
+    fn write_manifest(tag: &str, body: &str) -> PathBuf {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir().join(format!("medflow_manifest_{tag}_{pid}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_rejects_negative_dims_with_context() {
+        // regression: a negative dim cast `as usize` wrapped to an
+        // enormous element count; the parse must refuse it instead
+        let dir = write_manifest(
+            "negdim",
+            r#"{"artifacts": [{"name": "seg_pipeline", "file": "seg.hlo.txt",
+                "inputs": [{"name": "vol", "shape": [64, -64, 64], "dtype": "float32"}],
+                "outputs": ["seg"]}]}"#,
+        );
+        let err = ArtifactManifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("seg_pipeline"), "{err}");
+        assert!(err.contains("vol"), "{err}");
+        assert!(err.contains("-64"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_accepts_well_formed_shapes() {
+        let dir = write_manifest(
+            "posdim",
+            r#"{"artifacts": [{"name": "a", "file": "a.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2, 3, 4]}],
+                "outputs": ["y"]}]}"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.get("a").unwrap().inputs[0].elements(), 24);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "negative dimension")]
+    fn elements_panics_clearly_on_smuggled_negative_dim() {
+        let spec = InputSpec {
+            name: "x".into(),
+            shape: vec![4, -2],
+            dtype: "float32".into(),
+        };
+        let _ = spec.elements();
     }
 
     #[test]

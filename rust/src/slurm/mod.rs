@@ -17,12 +17,26 @@
 //! engine ([`crate::sim_legacy`]) re-sorted the whole pending vector and
 //! re-scanned every running job on every event; the rewrite is
 //! record-for-record identical to it (`rust/tests/engine_parity.rs`).
+//!
+//! **In-engine failure injection (DESIGN.md §11):** with
+//! [`Scheduler::set_faults`], every started attempt samples a failure
+//! verdict deterministically per (job id, attempt) from the
+//! [`crate::faults::FaultModel`]. A failing attempt holds its allocation
+//! for `wasted_fraction()` of the nominal duration, releases it at the
+//! failure instant, and is requeued with exponential retry backoff — so
+//! retried jobs *re-contend* for nodes, fairshare, and array throttles
+//! instead of being scaled after the fact. Timed-out attempts can be
+//! parked for the staged co-simulation to re-stage inputs first
+//! ([`crate::coordinator::staged`]); exhausted retries abort the job.
+//! With no injection configured (or a zero-rate model) the event
+//! arithmetic is bit-identical to the fault-free engine.
 
 pub mod trace;
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
+use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
 use crate::util::ord::F64Ord;
 
 /// One node's capacity.
@@ -136,7 +150,14 @@ struct Running {
     job: SimJob,
     node: usize,
     start_s: f64,
+    /// When this *attempt* releases its allocation: the nominal end for
+    /// a clean run, the failure instant for a sampled-to-fail one.
     end_s: f64,
+    /// 0-based attempt index (0 unless the job was requeued).
+    attempt: u32,
+    /// The failure this attempt will surface at `end_s`, sampled at
+    /// start; `None` = the attempt completes.
+    fail: Option<FailureMode>,
 }
 
 /// A not-yet-due submission, heap-ordered by (submit_s, id, seq). The
@@ -218,6 +239,17 @@ pub struct Scheduler {
     sched_dirty: bool,
     /// Scratch node states for the release skyline (no per-call clone).
     skyline: Vec<NodeState>,
+    /// In-engine failure injection; `None` = the fault-free engine.
+    faults: Option<Injection>,
+    /// Job id → retry count so far (only jobs with ≥ 1 failed attempt).
+    attempts: HashMap<u64, u32>,
+    /// Every failed attempt, in completion-processing order.
+    fault_events: Vec<FaultEvent>,
+    /// (job id, fail time) of timed-out attempts awaiting an external
+    /// re-stage + resubmit ([`Injection::park_timeouts`]).
+    parked: Vec<(u64, f64)>,
+    /// Jobs dropped after exhausting retries.
+    aborted: Vec<u64>,
     /// Scheduling policy. Set it before submitting work: the dirty-gated
     /// pass skipping assumes the policy is fixed for a simulation run.
     pub policy: Policy,
@@ -255,9 +287,55 @@ impl Scheduler {
             needs_schedule: false,
             sched_dirty: false,
             skyline: Vec::new(),
+            faults: None,
+            attempts: HashMap::new(),
+            fault_events: Vec::new(),
+            parked: Vec::new(),
+            aborted: Vec::new(),
             policy,
             spec,
         }
+    }
+
+    /// Enable in-engine failure injection (before submitting work). The
+    /// model must be valid ([`crate::faults::FaultModel::validate`]) —
+    /// an over-unity rate set would silently truncate the Timeout band.
+    pub fn set_faults(&mut self, inj: Injection) {
+        if let Err(e) = inj.model.validate() {
+            panic!("Scheduler::set_faults: {e}");
+        }
+        assert!(
+            self.records.is_empty()
+                && self.running.is_empty()
+                && self.due.is_empty()
+                && self.future.is_empty(),
+            "set_faults must precede all submissions"
+        );
+        self.faults = Some(inj);
+    }
+
+    /// Failed-attempt events recorded so far (empty without injection).
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        &self.fault_events
+    }
+
+    /// Jobs dropped after exhausting their retries.
+    pub fn aborted_ids(&self) -> &[u64] {
+        &self.aborted
+    }
+
+    /// Allocation seconds consumed by failed attempts so far.
+    pub fn wasted_alloc_s(&self) -> f64 {
+        self.fault_events.iter().map(|e| e.wasted_s).sum()
+    }
+
+    /// Drain (job id, fail time) pairs parked by timed-out attempts
+    /// ([`Injection::park_timeouts`]). The driver owns them now: it must
+    /// re-stage the job's inputs and resubmit (same id — the retry count
+    /// is retained), or the job never finishes. Without a driver, parked
+    /// jobs simply drop out of the simulation like aborts.
+    pub fn take_parked(&mut self) -> Vec<(u64, f64)> {
+        std::mem::take(&mut self.parked)
     }
 
     pub fn clock(&self) -> f64 {
@@ -344,15 +422,27 @@ impl Scheduler {
     }
 
     fn start_job(&mut self, job: SimJob, node: usize) {
+        let attempt = self.attempts.get(&job.id).copied().unwrap_or(0);
+        let fail = match &self.faults {
+            Some(inj) => inj.sample(job.id, attempt),
+            None => None,
+        };
+        // A failing attempt holds its allocation only until the failure
+        // surfaces. Fault-free (or zero-rate model) `alloc_s` IS
+        // `job.duration_s` — no scaling touches the f64, so the engine
+        // stays bit-identical to the pre-injection one.
+        let alloc_s = match fail {
+            Some(mode) => job.duration_s * mode.wasted_fraction(),
+            None => job.duration_s,
+        };
         self.nodes[node].free_cores -= job.cores;
         self.nodes[node].free_ram_gb -= job.ram_gb;
         if let Some(h) = &job.array {
             *self.array_running.entry(h.array_id).or_insert(0) += 1;
         }
-        *self.usage.entry(job.user.clone()).or_insert(0.0) +=
-            job.cores as f64 * job.duration_s;
-        self.core_seconds_used += job.cores as f64 * job.duration_s;
-        let end_s = self.clock + job.duration_s;
+        *self.usage.entry(job.user.clone()).or_insert(0.0) += job.cores as f64 * alloc_s;
+        self.core_seconds_used += job.cores as f64 * alloc_s;
+        let end_s = self.clock + alloc_s;
         self.ends.push(Reverse((F64Ord(end_s), job.id)));
         self.running_pos.insert(job.id, self.running.len());
         self.running.push(Running {
@@ -360,6 +450,8 @@ impl Scheduler {
             node,
             start_s: self.clock,
             end_s,
+            attempt,
+            fail,
         });
     }
 
@@ -559,13 +651,60 @@ impl Scheduler {
                 }
             }
             self.sched_dirty = true;
-            self.records.push(JobRecord {
-                start_s: r.start_s,
-                end_s: r.end_s,
-                node: r.node,
-                job: r.job,
-            });
+            match r.fail {
+                None => self.records.push(JobRecord {
+                    start_s: r.start_s,
+                    end_s: r.end_s,
+                    node: r.node,
+                    job: r.job,
+                }),
+                Some(mode) => self.fail_attempt(r, mode),
+            }
         }
+    }
+
+    /// A sampled-to-fail attempt just released its allocation: requeue
+    /// with backoff, park for an external re-stage (timeouts under
+    /// [`Injection::park_timeouts`]), or abort on exhausted retries —
+    /// and record the [`FaultEvent`] either way.
+    fn fail_attempt(&mut self, r: Running, mode: FailureMode) {
+        let inj = self.faults.expect("failing attempt implies an injection config");
+        let Running {
+            job,
+            attempt,
+            start_s,
+            end_s,
+            ..
+        } = r;
+        let wasted_s = end_s - start_s;
+        let id = job.id;
+        let action = inj.disposition(attempt, mode);
+        match action {
+            FaultAction::Aborted => {
+                self.attempts.remove(&id);
+                self.aborted.push(id);
+            }
+            FaultAction::Parked => {
+                // a timeout wipes node-local scratch: the driver must
+                // re-stage inputs before resubmitting this id
+                self.attempts.insert(id, attempt + 1);
+                self.parked.push((id, end_s));
+            }
+            FaultAction::Requeued => {
+                self.attempts.insert(id, attempt + 1);
+                let mut job = job;
+                job.submit_s = (end_s + inj.backoff_s(attempt)).max(self.clock);
+                self.submit(job);
+            }
+        }
+        self.fault_events.push(FaultEvent {
+            id,
+            attempt,
+            mode,
+            fail_s: end_s,
+            wasted_s,
+            action,
+        });
     }
 
     /// Advance the clock, accounting capacity and flagging a pass when a
@@ -881,5 +1020,137 @@ mod tests {
         s.run_to_completion();
         assert_eq!(s.records().len(), 20_000);
         assert!(s.utilization() > 0.0);
+    }
+
+    use crate::faults::{FaultAction, FaultModel, Injection};
+
+    /// Model in which every attempt fails with `mode` (deterministic).
+    fn always(mode: FailureMode) -> FaultModel {
+        let mut m = FaultModel::none();
+        match mode {
+            FailureMode::ChecksumMismatch => m.p_checksum = 1.0,
+            FailureMode::PipelineError => m.p_pipeline = 1.0,
+            FailureMode::NodeFailure => m.p_node = 1.0,
+            FailureMode::Timeout => m.p_timeout = 1.0,
+        }
+        m
+    }
+
+    #[test]
+    fn zero_rate_injection_changes_nothing() {
+        let run = |inject: bool| {
+            let mut s = Scheduler::new(ClusterSpec::small(2, 4, 16));
+            if inject {
+                s.set_faults(Injection::new(FaultModel::none(), 3, 99));
+            }
+            for id in 0..40u64 {
+                s.submit(job(id, 1 + (id % 4) as u32, 50.0 + id as f64, (id / 3) as f64));
+            }
+            s.run_to_completion();
+            (s.records().to_vec(), s.makespan(), s.utilization())
+        };
+        let (plain_recs, plain_mk, plain_ut) = run(false);
+        let (inj_recs, inj_mk, inj_ut) = run(true);
+        assert_eq!(plain_recs, inj_recs, "zero-rate injection must be a no-op");
+        assert_eq!(plain_mk, inj_mk);
+        assert_eq!(plain_ut, inj_ut);
+    }
+
+    #[test]
+    fn always_failing_job_retries_then_aborts() {
+        // NodeFailure wastes exactly half the allocation (0.5 — exact in
+        // f64), backoff base 10 s doubles per retry: fail times are
+        // 50, 50+10+50 = 110, 110+20+50 = 180.
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.set_faults(Injection::new(always(FailureMode::NodeFailure), 2, 7).with_backoff(10.0));
+        s.submit(job(1, 2, 100.0, 0.0));
+        s.run_to_completion();
+        assert!(s.records().is_empty(), "an always-failing job never completes");
+        assert_eq!(s.aborted_ids(), &[1]);
+        let fails: Vec<f64> = s.fault_events().iter().map(|e| e.fail_s).collect();
+        assert_eq!(fails, vec![50.0, 110.0, 180.0]);
+        assert!(s.fault_events().iter().all(|e| e.wasted_s == 50.0));
+        assert_eq!(s.fault_events()[0].action, FaultAction::Requeued);
+        assert_eq!(s.fault_events()[2].action, FaultAction::Aborted);
+        assert_eq!(s.wasted_alloc_s(), 150.0);
+        assert_eq!(s.pending_count(), 0, "aborted jobs leave the system");
+    }
+
+    #[test]
+    fn failed_attempts_hold_slots_and_delay_others() {
+        // one 4-core node; job 1's failing attempt occupies the node for
+        // 50 s, so job 2 cannot start before t = 50 — the re-contention
+        // the post-hoc model never produced.
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.set_faults(Injection::new(always(FailureMode::NodeFailure), 0, 3).with_backoff(0.0));
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.submit(job(2, 4, 100.0, 0.0));
+        s.run_to_completion();
+        assert!(s.records().is_empty());
+        let fails: Vec<(u64, f64)> = s.fault_events().iter().map(|e| (e.id, e.fail_s)).collect();
+        assert_eq!(fails, vec![(1, 50.0), (2, 100.0)], "job 2 waited behind the failed slot");
+        assert_eq!(s.aborted_ids(), &[1, 2]);
+    }
+
+    #[test]
+    fn timeouts_park_for_external_restage() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.set_faults(
+            Injection::new(always(FailureMode::Timeout), 1, 5)
+                .with_backoff(0.0)
+                .with_parked_timeouts(),
+        );
+        s.submit(job(9, 1, 100.0, 0.0));
+        s.run_to_completion();
+        // a timeout consumes the whole allocation, then parks
+        assert_eq!(s.take_parked(), vec![(9, 100.0)]);
+        assert!(s.take_parked().is_empty(), "drained");
+        assert!(s.records().is_empty() && s.aborted_ids().is_empty());
+        // the driver re-stages and resubmits; the retry count carried
+        // over makes this the final attempt → abort, not park
+        s.submit(job(9, 1, 100.0, 150.0));
+        s.run_to_completion();
+        assert_eq!(s.aborted_ids(), &[9]);
+        assert!(s.take_parked().is_empty());
+        assert_eq!(s.fault_events().len(), 2);
+        assert_eq!(s.fault_events()[1].fail_s, 250.0);
+        assert_eq!(s.fault_events()[1].attempt, 1);
+    }
+
+    #[test]
+    fn injected_campaign_still_completes_with_retries() {
+        // harsh rates with a generous retry budget: every job should
+        // finish (abort probability 0.19⁶ ≈ 5e-5 per job), later than
+        // the fault-free run, with utilization accounting the waste.
+        let spec = ClusterSpec::small(4, 8, 64);
+        let submit_all = |s: &mut Scheduler| {
+            for id in 0..200u64 {
+                let dur = 60.0 + (id % 11) as f64 * 30.0;
+                s.submit(job(id, 1 + (id % 3) as u32, dur, (id / 4) as f64));
+            }
+        };
+        let mut clean = Scheduler::new(spec.clone());
+        submit_all(&mut clean);
+        clean.run_to_completion();
+
+        let mut faulty = Scheduler::new(spec);
+        let inj = Injection::new(FaultModel::harsh().compute_only(), 5, 11).with_backoff(5.0);
+        faulty.set_faults(inj);
+        submit_all(&mut faulty);
+        faulty.run_to_completion();
+
+        assert_eq!(faulty.records().len() + faulty.aborted_ids().len(), 200);
+        assert!(faulty.fault_events().len() > 5, "harsh rates must fail some attempts");
+        assert!(faulty.wasted_alloc_s() > 0.0);
+        assert!(
+            faulty.makespan() > clean.makespan(),
+            "retries must extend the makespan: {} vs {}",
+            faulty.makespan(),
+            clean.makespan()
+        );
+        // completed jobs carry their *successful* attempt's record only
+        for r in faulty.records() {
+            assert!(r.end_s - r.start_s > 0.0);
+        }
     }
 }

@@ -10,16 +10,30 @@ pub const GB: u64 = 1_000_000_000;
 pub const TB: u64 = 1_000_000_000_000;
 
 /// Format a byte count with SI units ("47 TB", "1.1 GB").
+///
+/// Boundary rounding carries into the next unit *before* formatting —
+/// the same carry [`fmt_duration`] applies: naively formatting
+/// 999 999 999 999 B as `{:.1} GB` rounds to "1000.0 GB" just under the
+/// branch boundary; it renders as "1.0 TB" instead (same at the KB/MB/GB
+/// edges).
 pub fn fmt_bytes(bytes: u64) -> String {
     let b = bytes as f64;
+    let scaled = |unit: u64, name: &str, next: &str| -> String {
+        let v = format!("{:.1}", b / unit as f64);
+        if v == "1000.0" {
+            format!("1.0 {next}")
+        } else {
+            format!("{v} {name}")
+        }
+    };
     if bytes >= TB {
         format!("{:.1} TB", b / TB as f64)
     } else if bytes >= GB {
-        format!("{:.1} GB", b / GB as f64)
+        scaled(GB, "GB", "TB")
     } else if bytes >= MB {
-        format!("{:.1} MB", b / MB as f64)
+        scaled(MB, "MB", "GB")
     } else if bytes >= KB {
-        format!("{:.1} KB", b / KB as f64)
+        scaled(KB, "KB", "MB")
     } else {
         format!("{bytes} B")
     }
@@ -165,6 +179,25 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(47 * TB), "47.0 TB");
         assert_eq!(fmt_bytes(1_100_000_000), "1.1 GB");
+    }
+
+    #[test]
+    fn bytes_rollover_carries_rounded_units() {
+        // regression: these used to render "1000.0 GB" / "1000.0 MB" /
+        // "1000.0 KB" — rounding just under a branch boundary must carry
+        // into the next unit, exactly like fmt_duration's "1m 60s" fix
+        assert_eq!(fmt_bytes(999_999_999_999), "1.0 TB");
+        assert_eq!(fmt_bytes(999_999_999), "1.0 GB");
+        assert_eq!(fmt_bytes(999_999), "1.0 MB");
+        assert_eq!(fmt_bytes(999_960), "1.0 MB");
+        // just below the rounding threshold stays in its own unit
+        assert_eq!(fmt_bytes(999_940), "999.9 KB");
+        assert_eq!(fmt_bytes(999_900_000_000), "999.9 GB");
+        // exact boundaries land in the larger unit directly
+        assert_eq!(fmt_bytes(KB), "1.0 KB");
+        assert_eq!(fmt_bytes(MB), "1.0 MB");
+        assert_eq!(fmt_bytes(GB), "1.0 GB");
+        assert_eq!(fmt_bytes(TB), "1.0 TB");
     }
 
     #[test]

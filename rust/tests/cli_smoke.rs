@@ -98,6 +98,21 @@ fn transfer_sim_reports_contention() {
 }
 
 #[test]
+fn faults_cli_reports_cosimulation() {
+    let out = run_ok(&[
+        "faults", "--model", "harsh", "--jobs", "300", "--retries", "3", "--seed", "11",
+    ]);
+    assert!(out.contains("fault co-simulation"), "{out}");
+    assert!(out.contains("fault-free"), "{out}");
+    assert!(out.contains("failed attempts"), "{out}");
+    assert!(out.contains("closed-form overrun"), "{out}");
+
+    let out = medflow().args(["faults", "--model", "mars"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown fault model"));
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = medflow().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

@@ -18,6 +18,7 @@
 //! property-style scenarios — and the Table 1 calibration cases.
 
 use medflow::coordinator::staged::{run_staged, LanePool, SlurmSim, StagedJob};
+use medflow::faults::{FaultModel, Injection};
 use medflow::netsim::scheduler::{scheduler_bandwidth_experiment, TransferScheduler};
 use medflow::netsim::Env;
 use medflow::sim_legacy;
@@ -351,6 +352,115 @@ fn staged_cosim_identical_through_slurm() {
         frozen_sim.scheduler().records(),
         "the compute backends must agree job-record-for-job-record too"
     );
+}
+
+/// Zero-rate injection wired into every live engine: the fault machinery
+/// present but sampling no failures must leave every record — every f64
+/// bit — identical to the frozen pre-injection engines (the ISSUE 4
+/// acceptance bar: with `FaultModel::none()` the co-simulated path
+/// reproduces the existing staged engine's records exactly).
+#[test]
+fn zero_rate_injection_keeps_transfer_parity() {
+    for env in Env::all() {
+        let mut live = TransferScheduler::for_env(env, 4, 71);
+        live.set_faults(Injection::new(FaultModel::none(), 3, 1234));
+        let mut frozen = sim_legacy::TransferScheduler::for_env(env, 4, 71);
+        for i in 0..60u64 {
+            let submit = (i % 6) as f64 * 3.5;
+            live.submit_at(i, i % 3, 30_000_000 + i * 1_000_000, submit);
+            frozen.submit_at(i, i % 3, 30_000_000 + i * 1_000_000, submit);
+        }
+        live.run_to_completion();
+        frozen.run_to_completion();
+        assert_eq!(live.records(), frozen.records(), "{env:?}");
+        assert_eq!(live.stats(), frozen.stats(), "{env:?}");
+        assert!(live.fault_events().is_empty() && live.aborted_ids().is_empty());
+    }
+}
+
+#[test]
+fn zero_rate_injection_keeps_slurm_parity() {
+    let jobs = generate_trace(
+        &TraceSpec {
+            jobs: 300,
+            users: 4,
+            mean_interarrival_s: 12.0,
+            array_throttle: 16,
+            ..Default::default()
+        },
+        31,
+    );
+    let mut live = Scheduler::new(ClusterSpec::small(5, 8, 64));
+    live.set_faults(
+        Injection::new(FaultModel::none(), 3, 77)
+            .with_backoff(30.0)
+            .with_parked_timeouts(),
+    );
+    let mut frozen = sim_legacy::Scheduler::new(ClusterSpec::small(5, 8, 64));
+    for j in &jobs {
+        live.submit(j.clone());
+        frozen.submit(j.clone());
+    }
+    live.run_to_completion();
+    frozen.run_to_completion();
+    assert_eq!(live.records(), frozen.records());
+    assert_eq!(live.makespan(), frozen.makespan());
+    assert_eq!(live.utilization(), frozen.utilization());
+    assert!(live.fault_events().is_empty() && live.take_parked().is_empty());
+}
+
+#[test]
+fn zero_rate_injection_keeps_staged_cosim_parity() {
+    // both hand-off directions, both compute backends, injectors armed
+    // everywhere — the fault-free co-simulated path must reproduce the
+    // frozen staged engine's StagedTiming records f64-exactly
+    let js = staged_jobs(90, 83);
+
+    let mut live_lanes = LanePool::new(8);
+    live_lanes.set_faults(
+        Injection::new(FaultModel::none(), 3, 11)
+            .with_backoff(60.0)
+            .with_parked_timeouts(),
+    );
+    let mut live_transfers = TransferScheduler::for_env(Env::Hpc, 4, 89);
+    live_transfers.set_faults(Injection::new(FaultModel::none(), 3, 13));
+    let live = run_staged(&js, &mut live_lanes, &mut live_transfers);
+
+    let mut frozen_lanes = sim_legacy::LanePool::new(8);
+    let mut frozen_transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, 4, 89);
+    let frozen = sim_legacy::run_staged(&js, &mut frozen_lanes, &mut frozen_transfers);
+
+    assert_eq!(live.timings, frozen.timings);
+    assert_eq!(live.makespan_s, frozen.makespan_s);
+    assert_eq!(live.transfer, frozen.transfer);
+
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: 32,
+    };
+    let mut sched = Scheduler::new(ClusterSpec::small(6, 8, 64));
+    sched.set_faults(
+        Injection::new(FaultModel::none(), 3, 17)
+            .with_backoff(60.0)
+            .with_parked_timeouts(),
+    );
+    let mut live_sim = SlurmSim::new(sched, "medflow", Some(handle));
+    let mut live_transfers = TransferScheduler::for_env(Env::Hpc, 6, 97);
+    live_transfers.set_faults(Injection::new(FaultModel::none(), 3, 19));
+    let live = run_staged(&js, &mut live_sim, &mut live_transfers);
+
+    let mut frozen_sim = sim_legacy::SlurmSim::new(
+        sim_legacy::Scheduler::new(ClusterSpec::small(6, 8, 64)),
+        "medflow",
+        Some(handle),
+    );
+    let mut frozen_transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, 6, 97);
+    let frozen = sim_legacy::run_staged(&js, &mut frozen_sim, &mut frozen_transfers);
+
+    assert_eq!(live.timings, frozen.timings);
+    assert_eq!(live.makespan_s, frozen.makespan_s);
+    assert_eq!(live.transfer, frozen.transfer);
+    assert_eq!(live_sim.scheduler().records(), frozen_sim.scheduler().records());
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Integration gates for in-engine failure injection (DESIGN.md §11):
+//! the co-simulated retry path must be deterministic, conserve jobs
+//! (completed + aborted = submitted), and make retried work visibly
+//! re-contend for shared resources — the modeling bug this replaces
+//! scaled outcomes *after* the simulation, so retries never queued.
+
+use medflow::coordinator::staged::{
+    run_staged, synthetic_fault_campaign as campaign, LanePool, SlurmSim, StagedJob,
+};
+use medflow::faults::{FaultAction, FaultModel, Injection};
+use medflow::netsim::scheduler::TransferScheduler;
+use medflow::netsim::Env;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
+use medflow::util::prop::forall;
+use medflow::util::units::percentiles;
+
+struct FaultRun {
+    timings: Vec<medflow::coordinator::staged::StagedTiming>,
+    makespan_s: f64,
+    transfer_waits: Vec<f64>,
+    compute_events: Vec<medflow::faults::FaultEvent>,
+    transfer_events: Vec<medflow::faults::FaultEvent>,
+    aborted: usize,
+}
+
+fn run_slurm_cosim(
+    jobs: &[StagedJob],
+    model: Option<FaultModel>,
+    retries: u32,
+    seed: u64,
+) -> FaultRun {
+    let mut sched = Scheduler::new(ClusterSpec::small(64, 8, 64));
+    if let Some(m) = model {
+        sched.set_faults(
+            Injection::new(m.compute_only(), retries, seed ^ 0xc0)
+                .with_backoff(30.0)
+                .with_parked_timeouts(),
+        );
+    }
+    let handle = ArrayHandle {
+        array_id: 1,
+        max_concurrent: 4_000,
+    };
+    let mut sim = SlurmSim::new(sched, "medflow", Some(handle));
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, 8, seed ^ 0x7f);
+    if let Some(m) = model {
+        transfers.set_faults(Injection::new(m.transfer_only(), retries, seed ^ 0xf0));
+    }
+    let out = run_staged(jobs, &mut sim, &mut transfers);
+    FaultRun {
+        timings: out.timings,
+        makespan_s: out.makespan_s,
+        transfer_waits: transfers.records().iter().map(|r| r.queue_wait_s()).collect(),
+        compute_events: sim.scheduler().fault_events().to_vec(),
+        transfer_events: transfers.fault_events().to_vec(),
+        aborted: sim.scheduler().aborted_ids().len() + transfers.aborted_ids().len(),
+    }
+}
+
+#[test]
+fn jobs_are_conserved_under_harsh_faults() {
+    let jobs = campaign(400, 3);
+    let run = run_slurm_cosim(&jobs, Some(FaultModel::harsh()), 5, 17);
+    let completed = run.timings.iter().filter(|t| t.completed).count();
+    // every job either reached a verified copy-back or aborted in one of
+    // the two engines — nothing silently vanishes
+    assert_eq!(completed + run.aborted, 400, "{} aborted", run.aborted);
+    assert!(
+        !run.compute_events.is_empty(),
+        "harsh rates over 400 jobs must fail some compute attempts"
+    );
+    // failure instants are recorded in simulation order per engine
+    for events in [&run.compute_events, &run.transfer_events] {
+        for w in events.windows(2) {
+            assert!(w[1].fail_s + 1e-9 >= w[0].fail_s, "{:?}", w);
+        }
+    }
+    // every failed attempt consumed real simulated time
+    assert!(run.compute_events.iter().all(|e| e.wasted_s > 0.0));
+}
+
+#[test]
+fn retried_work_recontends_visibly() {
+    // same campaign with and without harsh faults: retries add transfer
+    // and compute load to the *same* shared resources, so the campaign
+    // runs strictly longer, and queue waits do not improve
+    let jobs = campaign(1_000, 5);
+    let free = run_slurm_cosim(&jobs, None, 3, 23);
+    let harsh = run_slurm_cosim(&jobs, Some(FaultModel::harsh()), 3, 23);
+    assert!(free.compute_events.is_empty() && free.aborted == 0);
+    assert!(
+        harsh.makespan_s > free.makespan_s,
+        "retries must extend the makespan: {} vs {}",
+        harsh.makespan_s,
+        free.makespan_s
+    );
+    let p95 = |xs: &[f64]| percentiles(xs, &[95.0])[0];
+    assert!(
+        p95(&harsh.transfer_waits) + 1e-9 >= p95(&free.transfer_waits),
+        "extra retry transfers cannot shorten queue waits: {} vs {}",
+        p95(&harsh.transfer_waits),
+        p95(&free.transfer_waits)
+    );
+}
+
+#[test]
+fn fault_cosim_replays_exactly_from_the_seed() {
+    let jobs = campaign(300, 7);
+    let a = run_slurm_cosim(&jobs, Some(FaultModel::harsh()), 4, 29);
+    let b = run_slurm_cosim(&jobs, Some(FaultModel::harsh()), 4, 29);
+    assert_eq!(a.timings, b.timings);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.compute_events, b.compute_events);
+    assert_eq!(a.transfer_events, b.transfer_events);
+    // a different fault seed perturbs the retry trace
+    let c = run_slurm_cosim(&jobs, Some(FaultModel::harsh()), 4, 31);
+    assert_ne!(
+        (a.compute_events, a.transfer_events),
+        (c.compute_events, c.transfer_events),
+        "fault sampling must be keyed by the seed"
+    );
+}
+
+#[test]
+fn prop_random_models_conserve_jobs_through_lane_pool() {
+    forall("random valid fault models conserve jobs", 25, |rng| {
+        let model = FaultModel {
+            p_checksum: rng.next_f64() * 0.1,
+            p_pipeline: rng.next_f64() * 0.3,
+            p_node: rng.next_f64() * 0.1,
+            p_timeout: rng.next_f64() * 0.1,
+        };
+        assert!(model.validate().is_ok());
+        let n = 20 + rng.below(60) as usize;
+        let retries = rng.below(4) as u32;
+        let jobs = campaign(n, rng.next_u64());
+        let mut lanes = LanePool::new(1 + rng.below(8) as usize);
+        lanes.set_faults(
+            Injection::new(model.compute_only(), retries, rng.next_u64())
+                .with_backoff(rng.next_f64() * 60.0)
+                .with_parked_timeouts(),
+        );
+        let mut transfers = TransferScheduler::for_env(Env::Local, 4, rng.next_u64());
+        transfers.set_faults(Injection::new(model.transfer_only(), retries, rng.next_u64()));
+        let out = run_staged(&jobs, &mut lanes, &mut transfers);
+        let completed = out.timings.iter().filter(|t| t.completed).count();
+        let aborted = lanes.aborted_ids().len() + transfers.aborted_ids().len();
+        assert_eq!(completed + aborted, n, "jobs must not vanish or duplicate");
+        // parked attempts always come back as restage stage-ins: every
+        // park has a matching later event or abort for the same id
+        let parks = lanes
+            .fault_events()
+            .iter()
+            .filter(|e| e.action == FaultAction::Parked)
+            .count();
+        let restage_ins = transfers
+            .records()
+            .iter()
+            .filter(|r| r.id >= 2 * n as u64)
+            .count()
+            + transfers.aborted_ids().iter().filter(|&&id| id >= 2 * n as u64).count();
+        assert_eq!(parks, restage_ins, "each park triggers exactly one re-stage");
+    });
+}
