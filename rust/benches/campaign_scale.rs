@@ -25,7 +25,7 @@ use medflow::netsim::scheduler::TransferScheduler;
 use medflow::netsim::Env;
 use medflow::sim_legacy;
 use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
-use medflow::util::bench::metric;
+use medflow::util::bench::{gate_against_baseline, metric};
 use medflow::util::json::Json;
 use medflow::util::rng::Rng;
 
@@ -190,7 +190,13 @@ fn main() {
         assert_complete("frontier", n, &live.out);
         metric("lanes.n1000000.live_wall_s", live.wall_s, "s");
         runs.push(json_run(n, "lanepool", "event-heap", &live));
+    }
 
+    // regression gate against the committed baseline (checked before
+    // full mode overwrites it below)
+    gate_against_baseline(&runs);
+
+    if !test_mode {
         let mut doc = Json::obj();
         doc.set("bench", Json::str("campaign_scale"))
             .set(

@@ -33,7 +33,7 @@ use medflow::netsim::scheduler::TransferScheduler;
 use medflow::netsim::Env;
 use medflow::sim_legacy;
 use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
-use medflow::util::bench::metric;
+use medflow::util::bench::{gate_against_baseline, metric};
 use medflow::util::json::Json;
 use medflow::util::units::percentiles;
 
@@ -272,6 +272,10 @@ fn main() {
             wall_s
         );
     }
+
+    // regression gate against the committed baseline (checked before
+    // full mode overwrites it below)
+    gate_against_baseline(&runs);
 
     if !test_mode {
         let mut doc = Json::obj();

@@ -1,0 +1,245 @@
+//! Bench: heterogeneous multi-environment placement — the ISSUE 5
+//! tentpole numbers. One campaign split across a constrained HPC
+//! cluster, a wide cloud lane pool, and a few local workstations, all
+//! co-simulated against one shared staging path
+//! (`coordinator::placement`, DESIGN.md §12), asserting in **both**
+//! modes:
+//!
+//! * **CheapestFirst ≤ all-cloud** — the cheapest policy's total
+//!   dollars never exceed pinning the whole campaign to the cloud;
+//! * **DeadlineAware ≤ all-HPC** — bursting to meet a deadline never
+//!   ends later than the all-HPC run it bursts away from (and a tight
+//!   deadline actually uses ≥ 2 backends);
+//! * **zero-fault determinism** — the same seed replays the placement
+//!   co-simulation timing-for-timing, f64-exactly;
+//! * **undominated frontier** — the emitted cost-vs-makespan Pareto
+//!   set contains no dominated point (pairwise-checked, not trusted).
+//!
+//! Run: `cargo bench --bench placement_frontier` — full mode sweeps a
+//! larger campaign, prints the frontier rows, and writes
+//! `BENCH_placement_frontier.json`; `-- --test` is the reduced CI
+//! sweep. `--check-baseline <path>` gates this run's wall clocks
+//! against a committed baseline (`util::bench::check_baseline`).
+
+use std::time::Instant;
+
+use medflow::coordinator::placement::{
+    execute, frontier_sweep, BackendKind, BackendSpec, PlacementConfig, PlacementOutcome,
+    PlacementPolicy,
+};
+use medflow::coordinator::staged::synthetic_fault_campaign;
+use medflow::faults::FaultModel;
+use medflow::netsim::Env;
+use medflow::report::format_frontier;
+use medflow::slurm::ClusterSpec;
+use medflow::util::bench::{gate_against_baseline, metric};
+use medflow::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// A fleet where bursting matters: the HPC cluster holds 512 one-core
+/// slots (64 nodes), the cloud pool is 4× wider, locals are scarce.
+fn fleet() -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(64, 8, 64),
+                max_concurrent: 512,
+            },
+            faults: None,
+            transfer_streams: 8,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 2_048 },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 32 },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+struct Timed {
+    wall_s: f64,
+    out: PlacementOutcome,
+}
+
+fn run(
+    jobs: &[medflow::coordinator::staged::StagedJob],
+    fleet: &[BackendSpec],
+    policy: PlacementPolicy,
+    cfg: &PlacementConfig,
+) -> Timed {
+    let t0 = Instant::now();
+    let out = execute(jobs, fleet, policy, cfg);
+    Timed {
+        wall_s: t0.elapsed().as_secs_f64(),
+        out,
+    }
+}
+
+fn json_run(jobs: usize, policy: &str, t: &Timed) -> Json {
+    let per = |k: usize| t.out.per_backend.get(k).map_or(0, |u| u.jobs) as f64;
+    let mut o = Json::obj();
+    o.set("jobs", Json::num(jobs as f64))
+        .set("policy", Json::str(policy))
+        .set("wall_s", Json::num(t.wall_s))
+        .set("total_dollars", Json::num(t.out.total_cost_dollars))
+        .set("sim_makespan_s", Json::num(t.out.makespan_s))
+        .set("hpc_jobs", Json::num(per(0)))
+        .set("cloud_jobs", Json::num(per(1)))
+        .set("local_jobs", Json::num(per(2)));
+    Json::Obj(o)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Heterogeneous placement frontier (DESIGN.md §12) ===");
+    let n = if test_mode { 5_000 } else { 50_000 };
+    let jobs = synthetic_fault_campaign(n, SEED);
+    let fleet = fleet();
+    let cfg = PlacementConfig {
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- all-one-backend anchors (the two Fig. 1 points, plus local) ---
+    let all_hpc = run(&jobs, &fleet, PlacementPolicy::Pinned(0), &cfg);
+    let all_cloud = run(&jobs, &fleet, PlacementPolicy::Pinned(1), &cfg);
+    for (name, t) in [("all-hpc", &all_hpc), ("all-cloud", &all_cloud)] {
+        metric(&format!("{name}.n{n}.dollars"), t.out.total_cost_dollars, "$");
+        metric(&format!("{name}.n{n}.sim_makespan_s"), t.out.makespan_s, "s");
+        metric(&format!("{name}.n{n}.wall_s"), t.wall_s, "s");
+        runs.push(json_run(n, name, t));
+    }
+    let ratio = all_cloud.out.total_cost_dollars / all_hpc.out.total_cost_dollars;
+    metric("cloud_over_hpc_dollars", ratio, "x (paper: ~20x)");
+    assert!(ratio > 5.0, "cloud must cost several × HPC (got {ratio:.1}×)");
+
+    // --- CheapestFirst: never costlier than all-cloud ---
+    let cheapest = run(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+    metric(&format!("cheapest.n{n}.dollars"), cheapest.out.total_cost_dollars, "$");
+    metric(&format!("cheapest.n{n}.sim_makespan_s"), cheapest.out.makespan_s, "s");
+    runs.push(json_run(n, "cheapest", &cheapest));
+    assert!(
+        cheapest.out.total_cost_dollars <= all_cloud.out.total_cost_dollars + 1e-9,
+        "acceptance: CheapestFirst (${:.2}) must not exceed all-cloud (${:.2})",
+        cheapest.out.total_cost_dollars,
+        all_cloud.out.total_cost_dollars
+    );
+
+    // --- DeadlineAware: bursting never ends later than all-HPC ---
+    let deadline_s = all_hpc.out.makespan_s * 0.6;
+    let deadline = run(&jobs, &fleet, PlacementPolicy::DeadlineAware { deadline_s }, &cfg);
+    metric(&format!("deadline.n{n}.dollars"), deadline.out.total_cost_dollars, "$");
+    metric(&format!("deadline.n{n}.sim_makespan_s"), deadline.out.makespan_s, "s");
+    runs.push(json_run(n, "deadline-0.6hpc", &deadline));
+    assert!(
+        deadline.out.makespan_s <= all_hpc.out.makespan_s + 1e-6,
+        "acceptance: DeadlineAware makespan ({:.0} s) must not exceed all-HPC ({:.0} s)",
+        deadline.out.makespan_s,
+        all_hpc.out.makespan_s
+    );
+    let used = deadline.out.per_backend.iter().filter(|u| u.jobs > 0).count();
+    assert!(used >= 2, "a 0.6×-makespan deadline must force a burst: {used} backend(s) used");
+    let completed = deadline.out.staged.timings.iter().filter(|t| t.completed).count();
+    assert_eq!(completed, n, "clean deadline run completes everything");
+
+    // --- zero-fault determinism: same seed, identical records ---
+    let replay = run(&jobs, &fleet, PlacementPolicy::DeadlineAware { deadline_s }, &cfg);
+    assert_eq!(
+        deadline.out.staged.timings, replay.out.staged.timings,
+        "acceptance: zero-fault placement must replay f64-exactly"
+    );
+    assert_eq!(deadline.out.total_cost_dollars, replay.out.total_cost_dollars);
+    assert_eq!(deadline.out.plan.assignment, replay.out.plan.assignment);
+    println!("determinism OK at n={n}: deadline placement replays bit-identically");
+
+    // --- fault injection across the fleet: conservation under harsh ---
+    {
+        let mut faulty_fleet = fleet.clone();
+        for backend in &mut faulty_fleet {
+            backend.faults = Some(FaultModel::harsh());
+        }
+        let fcfg = PlacementConfig {
+            transfer_faults: Some(FaultModel::harsh()),
+            ..cfg
+        };
+        let harsh = run(&jobs, &faulty_fleet, PlacementPolicy::DeadlineAware { deadline_s }, &fcfg);
+        let done = harsh.out.staged.timings.iter().filter(|t| t.completed).count();
+        assert_eq!(done as u64 + harsh.out.aborted, n as u64, "harsh run conserves jobs");
+        assert!(!harsh.out.compute_events.is_empty(), "harsh rates must fail attempts");
+        assert!(
+            harsh.out.total_cost_dollars > deadline.out.total_cost_dollars,
+            "wasted attempts must be billed: harsh ${:.2} vs clean ${:.2}",
+            harsh.out.total_cost_dollars,
+            deadline.out.total_cost_dollars
+        );
+        metric(&format!("deadline-harsh.n{n}.dollars"), harsh.out.total_cost_dollars, "$");
+        metric(
+            &format!("deadline-harsh.n{n}.failed_attempts"),
+            (harsh.out.compute_events.len() + harsh.out.transfer_events.len()) as f64,
+            "",
+        );
+        runs.push(json_run(n, "deadline-harsh", &harsh));
+    }
+
+    // --- the frontier: full cost-vs-makespan curve, no dominated point ---
+    let steps = if test_mode { 2 } else { 6 };
+    let t0 = Instant::now();
+    let frontier = frontier_sweep(&jobs, &fleet, &cfg, steps);
+    let frontier_wall_s = t0.elapsed().as_secs_f64();
+    metric(&format!("frontier.n{n}.points"), frontier.len() as f64, "");
+    metric(&format!("frontier.n{n}.wall_s"), frontier_wall_s, "s");
+    print!("{}", format_frontier(&frontier));
+    assert!(frontier.len() >= 2, "anchors alone span ≥ 2 undominated points");
+    for (i, p) in frontier.iter().enumerate() {
+        for q in &frontier[i + 1..] {
+            let q_dominates = q.cost_dollars <= p.cost_dollars
+                && q.makespan_s <= p.makespan_s
+                && (q.cost_dollars < p.cost_dollars || q.makespan_s < p.makespan_s);
+            let p_dominates = p.cost_dollars <= q.cost_dollars
+                && p.makespan_s <= q.makespan_s
+                && (p.cost_dollars < q.cost_dollars || p.makespan_s < q.makespan_s);
+            assert!(
+                !q_dominates && !p_dominates,
+                "acceptance: frontier holds a dominated pair: {} vs {}",
+                p.label,
+                q.label
+            );
+        }
+    }
+    println!("frontier OK: {} undominated points from {} sweeps", frontier.len(), 3 + steps);
+
+    // --- regression gate vs the committed baseline, then (full mode)
+    // refresh the trajectory file ---
+    gate_against_baseline(&runs);
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("placement_frontier"))
+            .set(
+                "scenario",
+                Json::str(
+                    "synthetic campaign split across hpc (64×8-core nodes) / cloud (2048 \
+                     lanes) / local (32 lanes) on one shared staging path, seed 42 (see \
+                     benches/placement_frontier.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_placement_frontier.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("placement_frontier OK");
+}

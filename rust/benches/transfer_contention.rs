@@ -15,27 +15,35 @@
 //!
 //! Run: `cargo bench --bench transfer_contention` — or with `-- --test`
 //! for the reduced sweep CI runs so the assertions cannot bit-rot.
+//! Full mode records the sweep in `BENCH_transfer_contention.json`;
+//! `--check-baseline <path>` gates this run's wall clocks against a
+//! committed baseline (`util::bench::check_baseline`).
+
+use std::time::Instant;
 
 use medflow::netsim::scheduler::{scheduler_bandwidth_experiment, Topology, TransferScheduler};
 use medflow::netsim::Env;
-use medflow::util::bench::metric;
+use medflow::util::bench::{gate_against_baseline, metric};
+use medflow::util::json::Json;
 use medflow::util::units::mean_std;
 
 const GB: u64 = 1_000_000_000;
 
 /// Simulate `n` concurrent 1 GB streams; returns (per-stream observed
-/// Gb/s ordered by id, aggregate Gb/s, link utilization).
-fn contended(env: Env, n: usize, seed: u64) -> (Vec<f64>, f64, f64) {
+/// Gb/s ordered by id, aggregate Gb/s, link utilization, wall seconds).
+fn contended(env: Env, n: usize, seed: u64) -> (Vec<f64>, f64, f64, f64) {
     let mut sim = TransferScheduler::for_env(env, n.max(1), seed);
     for i in 0..n {
         sim.submit_at(i as u64, 0, GB, 0.0);
     }
+    let t0 = Instant::now();
     sim.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
     let mut recs = sim.records().to_vec();
     recs.sort_by_key(|r| r.id);
     let per_stream: Vec<f64> = recs.iter().map(|r| r.observed_gbps()).collect();
     let stats = sim.stats();
-    (per_stream, stats.aggregate_gbps, stats.link_utilization)
+    (per_stream, stats.aggregate_gbps, stats.link_utilization, wall_s)
 }
 
 fn main() {
@@ -48,6 +56,7 @@ fn main() {
     let k = if test_mode { 40 } else { 100 };
 
     println!("=== Shared-link transfer contention (netsim::scheduler) ===");
+    let mut runs: Vec<Json> = Vec::new();
     for (env, want) in [(Env::Hpc, 0.60), (Env::Cloud, 0.33), (Env::Local, 0.81)] {
         let cap = Topology::of(env).bottleneck_gbps();
         println!("--- {} (bottleneck {cap:.3} Gb/s) ---", env.name());
@@ -62,7 +71,7 @@ fn main() {
 
         let mut prev: Vec<f64> = Vec::new();
         for &n in counts {
-            let (per_stream, aggregate, util) = contended(env, n, 42);
+            let (per_stream, aggregate, util, wall_s) = contended(env, n, 42);
             metric(
                 &format!("{env:?}.n{n}.per_stream_gbps"),
                 mean_std(&per_stream).0,
@@ -82,7 +91,34 @@ fn main() {
                 );
             }
             prev = per_stream;
+            let mut o = Json::obj();
+            o.set("env", Json::str(format!("{env:?}")))
+                .set("streams", Json::num(n as f64))
+                .set("wall_s", Json::num(wall_s))
+                .set("per_stream_gbps", Json::num(mean_std(&prev).0))
+                .set("aggregate_gbps", Json::num(aggregate))
+                .set("link_utilization", Json::num(util));
+            runs.push(Json::Obj(o));
         }
+    }
+
+    // regression gate against the committed baseline (checked before
+    // full mode overwrites it below)
+    gate_against_baseline(&runs);
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("transfer_contention"))
+            .set(
+                "scenario",
+                Json::str(
+                    "n × 1 GB concurrent streams per environment through the \
+                     contention-aware scheduler, seed 42 (see benches/transfer_contention.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_transfer_contention.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
     }
     println!("transfer_contention OK");
 }

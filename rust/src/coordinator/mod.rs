@@ -15,6 +15,7 @@
 //! [`crate::netsim::scheduler`] instead of independent samples — see
 //! [`staged`].
 
+pub mod placement;
 pub mod planner;
 pub mod staged;
 
@@ -38,18 +39,24 @@ use crate::runtime::Runtime;
 use crate::scripts::{instance_script, local_runner_script, slurm_array_script, SlurmOptions};
 use crate::slurm::{ArrayHandle, ClusterSpec, Maintenance, Scheduler};
 
+use self::placement::{BackendUsage, PlacementConfig, PlacementPolicy};
 use self::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome, StagedTiming};
 use crate::util::pool::run_parallel;
 use crate::util::rng::Rng;
 use crate::util::units::mean_std;
 
-/// Where a campaign ran (paper Fig. 3's two submit paths).
+/// Where a campaign ran (paper Fig. 3's two submit paths, plus the
+/// heterogeneous placement fleet of DESIGN.md §12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitTarget {
     /// SLURM job array on the HPC.
     Hpc,
     /// Local-burst parallel runner.
     LocalBurst { workers: usize },
+    /// Split across the heterogeneous fleet (HPC + cloud + local) by
+    /// the policy in [`CampaignConfig::placement`]
+    /// ([`placement::PlacementPolicy::CheapestFirst`] when unset).
+    Placement,
 }
 
 /// Campaign configuration.
@@ -79,6 +86,13 @@ pub struct CampaignConfig {
     /// Base requeue delay after a failed compute attempt (doubles per
     /// retry — the submit loop's resubmit backoff).
     pub retry_backoff_s: f64,
+    /// Policy for [`SubmitTarget::Placement`] campaigns; `None` falls
+    /// back to [`PlacementPolicy::CheapestFirst`].
+    pub placement: Option<PlacementPolicy>,
+    /// Cloud lane-pool width of the placement fleet (the local width is
+    /// `local_max_in_flight`; the HPC backend is the coordinator's
+    /// cluster).
+    pub cloud_lanes: usize,
 }
 
 impl Default for CampaignConfig {
@@ -94,6 +108,8 @@ impl Default for CampaignConfig {
             faults: None,
             max_retries: 3,
             retry_backoff_s: 60.0,
+            placement: None,
+            cloud_lanes: 32,
         }
     }
 }
@@ -129,6 +145,9 @@ pub struct CampaignReport {
     /// and the closed-form §4 overrun as a cross-check. All-default when
     /// the campaign ran fault-free.
     pub faults: FaultTelemetry,
+    /// Per-backend usage of a [`SubmitTarget::Placement`] campaign
+    /// (DESIGN.md §12); `None` for single-backend targets.
+    pub placement: Option<Vec<BackendUsage>>,
 }
 
 /// Resource-monitor snapshot (paper §2.3: "a simple query for both
@@ -264,6 +283,7 @@ impl<'rt> Coordinator<'rt> {
             SubmitTarget::LocalBurst { workers } => {
                 self.execute_local(ds, &spec, &runnable, workers, cfg, &mut engine)?
             }
+            SubmitTarget::Placement => self.execute_placed(ds, &spec, &runnable, cfg, &mut engine)?,
         };
         // persist query state (processed-set, skip cache; index shards
         // only when changed) so the next campaign — even in a fresh
@@ -290,6 +310,7 @@ impl<'rt> Coordinator<'rt> {
             query_stats,
             transfer: outcome.transfer,
             faults: outcome.faults,
+            placement: outcome.placement,
         })
     }
 
@@ -346,7 +367,7 @@ impl<'rt> Coordinator<'rt> {
         // copy-back: they must not be finalized or recorded as processed
         // — they count as failed and stay runnable
         let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
-        self.finalize(ds, spec, &jobs, &outcomes, Env::Hpc, cfg, engine)?;
+        self.finalize(ds, spec, &jobs, &outcomes, &vec![Env::Hpc; jobs.len()], cfg, engine)?;
         let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
         out.total_cost += dropped_attempt_cost(
             Env::Hpc,
@@ -427,7 +448,7 @@ impl<'rt> Coordinator<'rt> {
         // a fault-free LanePool never drops jobs, but keep the same
         // completion contract as the HPC path (aborts drop out here too)
         let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &staged);
-        self.finalize(ds, spec, &jobs, &outcomes, Env::Local, cfg, engine)?;
+        self.finalize(ds, spec, &jobs, &outcomes, &vec![Env::Local; jobs.len()], cfg, engine)?;
         let mut out = ExecOutcome::collect(&outcomes, staged.makespan_s);
         out.total_cost +=
             dropped_attempt_cost(Env::Local, lanes.fault_events(), &staged.timings, &plan);
@@ -437,19 +458,110 @@ impl<'rt> Coordinator<'rt> {
         Ok(out)
     }
 
+    /// Placement campaign (DESIGN.md §12): split the runnable set across
+    /// the heterogeneous fleet — this coordinator's cluster, a cloud
+    /// lane pool, local workstations — by [`CampaignConfig::placement`]
+    /// and co-simulate every backend against the one shared staging
+    /// path. Compute durations are sampled on the HPC basis (speed
+    /// factor 1); the plan rescales each job to its assigned backend.
+    fn execute_placed(
+        &mut self,
+        ds: &BidsDataset,
+        spec: &PipelineSpec,
+        jobs: &[JobSpec],
+        cfg: &CampaignConfig,
+        engine: &mut IncrementalEngine,
+    ) -> Result<ExecOutcome> {
+        let mut rng = Rng::new(cfg.seed);
+        let executor = Executor::new(Env::Hpc, self.runtime);
+        let mut outcomes = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            outcomes.push(executor.run_compute(job, spec, &mut rng, None)?);
+        }
+        let mut fleet = placement::default_fleet(
+            self.cluster.clone(),
+            cfg.slurm.max_concurrent,
+            cfg.cloud_lanes.max(1),
+            cfg.local_max_in_flight.max(1),
+        );
+        if let Some(model) = &cfg.faults {
+            model.validate().map_err(|e| anyhow!("campaign fault model: {e}"))?;
+            for backend in &mut fleet {
+                backend.faults = Some(*model);
+            }
+        }
+        let pcfg = PlacementConfig {
+            seed: cfg.seed,
+            transfer_faults: cfg.faults,
+            max_retries: cfg.max_retries,
+            retry_backoff_s: cfg.retry_backoff_s,
+        };
+        let policy = cfg.placement.unwrap_or(PlacementPolicy::CheapestFirst);
+        let plan_jobs = staged_plan(jobs, &outcomes, spec, cfg);
+        let placed = placement::execute(&plan_jobs, &fleet, policy, &pcfg);
+
+        // fold the co-simulated timings and the assigned backend's
+        // pricing back into each job outcome; wasted attempts are billed
+        // into effective minutes BEFORE pricing, exactly like the
+        // single-backend paths (collect_faults precedes the cost fold)
+        let envs_all: Vec<Env> = placed.plan.assignment.iter().map(|&k| fleet[k].env).collect();
+        let mut wasted_min = vec![0.0f64; outcomes.len()];
+        for ev in &placed.compute_events {
+            if let Some(w) = wasted_min.get_mut(ev.id as usize) {
+                *w += ev.wasted_s / 60.0;
+            }
+        }
+        for (i, (out, t)) in outcomes.iter_mut().zip(&placed.staged.timings).enumerate() {
+            out.compute_minutes = placed.plan.effective[i].compute_s / 60.0 + wasted_min[i];
+            out.stage_in_s = t.stage_in_s;
+            out.stage_out_s = t.stage_out_s;
+            out.cost_dollars =
+                staged_job_cost(envs_all[i], out.compute_minutes, t.stage_in_s + t.stage_out_s);
+        }
+        let faults = FaultTelemetry::collect(
+            cfg.faults.as_ref(),
+            cfg.max_retries,
+            cfg.seed,
+            &placed.compute_events,
+            &placed.transfer_events,
+            placed.aborted,
+        );
+        let envs_kept: Vec<Env> = envs_all
+            .iter()
+            .zip(&placed.staged.timings)
+            .filter(|(_, t)| t.completed)
+            .map(|(&e, _)| e)
+            .collect();
+        let (jobs, outcomes, dropped) = retain_completed(jobs, outcomes, &placed.staged);
+        self.finalize(ds, spec, &jobs, &outcomes, &envs_kept, cfg, engine)?;
+        let mut out = ExecOutcome::collect(&outcomes, placed.makespan_s);
+        // the placement fold is the authoritative bill: per-backend slot
+        // rates, wasted attempts, and dropped-job spend included
+        out.total_cost = placed.total_cost_dollars;
+        out.failed = dropped;
+        out.transfer = placed.transfer;
+        out.faults = faults;
+        out.placement = Some(placed.per_backend);
+        Ok(out)
+    }
+
     /// Copy-back phase: write derivative outputs + provenance, and record
     /// the completion into the persistent processed index (so the next
-    /// query replays it instead of rescanning).
+    /// query replays it instead of rescanning). `envs` carries each
+    /// job's executing environment (uniform for the Hpc/LocalBurst
+    /// targets; per the assigned backend for placement campaigns) so
+    /// the provenance record names where the job actually ran.
     fn finalize(
         &mut self,
         ds: &BidsDataset,
         spec: &PipelineSpec,
         jobs: &[JobSpec],
         outcomes: &[crate::compute::JobOutcome],
-        env: Env,
+        envs: &[Env],
         cfg: &CampaignConfig,
         engine: &mut IncrementalEngine,
     ) -> Result<()> {
+        assert_eq!(jobs.len(), envs.len(), "one executing env per finalized job");
         let sif = self.ensure_image(spec)?;
         let sha = self
             .containers
@@ -474,7 +586,7 @@ impl<'rt> Coordinator<'rt> {
                 user: cfg.user.clone(),
                 timestamp: 1_720_000_000.0 + i as f64,
                 inputs: job.inputs.clone(),
-                compute_env: format!("{env:?}"),
+                compute_env: format!("{:?}", envs[i]),
                 job_id: Some(i as u64),
             }
             .save(&dir)?;
@@ -484,7 +596,7 @@ impl<'rt> Coordinator<'rt> {
             );
         }
         // check speed factor consistency (documentation invariant)
-        debug_assert!(env_speed_factor(env) > 0.0);
+        debug_assert!(envs.iter().all(|&e| env_speed_factor(e) > 0.0));
         Ok(())
     }
 }
@@ -650,6 +762,8 @@ struct ExecOutcome {
     artifact_exec_mean_s: f64,
     transfer: TransferStats,
     faults: FaultTelemetry,
+    /// Per-backend usage of a placement campaign (DESIGN.md §12).
+    placement: Option<Vec<BackendUsage>>,
 }
 
 impl ExecOutcome {
@@ -674,6 +788,7 @@ impl ExecOutcome {
             },
             transfer: TransferStats::default(),
             faults: FaultTelemetry::default(),
+            placement: None,
         }
     }
 }
@@ -785,6 +900,56 @@ mod tests {
             .unwrap();
         assert!(r.completed > 0);
         assert_eq!(r.failed, 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn placement_campaign_completes_and_reports_backends() {
+        let (root, ds, mut coord) = setup("placed");
+        let cfg = CampaignConfig {
+            placement: Some(PlacementPolicy::CheapestFirst),
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Placement, &cfg)
+            .unwrap();
+        assert!(r.completed > 0);
+        assert_eq!(r.failed, 0);
+        let usage = r.placement.as_ref().expect("placement campaigns report backend usage");
+        assert_eq!(usage.iter().map(|u| u.jobs).sum::<usize>(), r.completed);
+        // cheapest-first degenerates to all-HPC at the paper's rates
+        assert_eq!(usage[0].jobs, r.completed, "{usage:?}");
+        assert!(r.total_cost_dollars > 0.0);
+        assert_eq!(r.transfer.transfers, 2 * r.completed);
+        // idempotency holds through the placement path too
+        let r2 = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Placement, &cfg)
+            .unwrap();
+        assert_eq!(r2.completed, 0);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn placement_campaign_with_faults_conserves_jobs() {
+        let (root, ds, mut coord) = setup("placedf");
+        let cfg = CampaignConfig {
+            placement: Some(PlacementPolicy::DeadlineAware { deadline_s: 3.0 * 3600.0 }),
+            faults: Some(FaultModel {
+                p_checksum: 0.05,
+                p_pipeline: 0.4,
+                p_node: 0.05,
+                p_timeout: 0.1,
+            }),
+            max_retries: 4,
+            retry_backoff_s: 10.0,
+            ..Default::default()
+        };
+        let r = coord
+            .run_campaign(&ds, "freesurfer", SubmitTarget::Placement, &cfg)
+            .unwrap();
+        assert_eq!(r.completed + r.failed, r.queried - r.skipped);
+        assert!(r.faults.counts.total() > 0, "{:?}", r.faults);
+        assert!(r.total_cost_dollars > 0.0);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

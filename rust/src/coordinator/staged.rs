@@ -41,9 +41,6 @@ use crate::util::rng::Rng;
 
 const EPS: f64 = 1e-9;
 
-/// Host id used for a campaign's staging path (one shared gateway).
-const STAGE_HOST: u64 = 0;
-
 /// One job's staged-execution plan.
 #[derive(Debug, Clone)]
 pub struct StagedJob {
@@ -467,9 +464,37 @@ pub fn run_staged(
     compute: &mut dyn ComputeSim,
     transfers: &mut TransferScheduler,
 ) -> StagedOutcome {
+    let assignment = vec![0usize; jobs.len()];
+    run_multi(jobs, &assignment, &mut [compute], transfers)
+}
+
+/// Multi-backend staged co-simulation (DESIGN.md §12): one campaign
+/// split across several simultaneously simulated compute backends —
+/// `assignment[i]` names the backend job `i` runs on — all sharing one
+/// [`TransferScheduler`]. Each backend is a distinct *host* on the
+/// shared staging path (host id = backend index), so every backend's
+/// stage-ins and copy-backs contend for the same bottleneck link while
+/// per-host stream caps model each backend's own admission width.
+///
+/// This is [`run_staged`] generalized: with a single backend and an
+/// all-zeros assignment the sequence of engine calls — submissions,
+/// `advance_to` instants, hand-offs, re-stages — is identical call for
+/// call, so single-backend outcomes are f64-record-identical to the
+/// staged path (enforced by `rust/tests/placement_parity.rs`).
+pub fn run_multi(
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    backends: &mut [&mut dyn ComputeSim],
+    transfers: &mut TransferScheduler,
+) -> StagedOutcome {
+    assert_eq!(jobs.len(), assignment.len(), "one backend assignment per job");
+    assert!(!backends.is_empty(), "run_multi needs at least one backend");
+    if let Some(&bad) = assignment.iter().find(|&&b| b >= backends.len()) {
+        panic!("assignment names backend {bad}, but only {} exist", backends.len());
+    }
     let mut timings = vec![StagedTiming::default(); jobs.len()];
     for (i, j) in jobs.iter().enumerate() {
-        transfers.submit_at(stage_in_id(i), STAGE_HOST, j.bytes_in, 0.0);
+        transfers.submit_at(stage_in_id(i), assignment[i] as u64, j.bytes_in, 0.0);
     }
     // transfer ids ≥ 2·jobs are re-stages; the map recovers their job
     let mut next_restage_id = (jobs.len() as u64) * 2;
@@ -478,13 +503,15 @@ pub fn run_staged(
     let mut seen = 0usize;
     loop {
         events.arm(transfers.next_event_time());
-        events.arm(compute.next_event_time());
+        for backend in backends.iter() {
+            events.arm(backend.next_event_time());
+        }
         let Some(t) = events.pop_earliest() else { break };
-        // both engines advance to the merged-earliest instant — the
+        // every engine advances to the merged-earliest instant — the
         // hand-offs below assume a shared clock
         transfers.advance_to(t);
         // borrow, don't clone: this loop only reads the new completions
-        // (it mutates `compute` and `timings`, never `transfers`)
+        // (it mutates the backends and `timings`, never `transfers`)
         let records = transfers.records();
         let new_from = seen;
         seen = records.len();
@@ -496,7 +523,7 @@ pub fn run_staged(
             if stage_in {
                 timings[i].stage_in_wait_s = r.queue_wait_s();
                 timings[i].stage_in_s = r.transfer_s();
-                compute.submit(i as u64, r.end_s, &jobs[i]);
+                backends[assignment[i]].submit(i as u64, r.end_s, &jobs[i]);
             } else {
                 timings[i].stage_out_wait_s = r.queue_wait_s();
                 timings[i].stage_out_s = r.transfer_s();
@@ -504,20 +531,32 @@ pub fn run_staged(
                 timings[i].completed = true;
             }
         }
-        for (id, end_s) in compute.advance_to(t) {
-            let i = id as usize;
-            timings[i].compute_end_s = end_s;
-            timings[i].compute_start_s = end_s - jobs[i].compute_s;
-            transfers.submit_at(stage_out_id(i), STAGE_HOST, jobs[i].bytes_out, end_s);
-        }
-        // timed-out attempts hand back here: their scratch inputs are
-        // gone, so the retry waits on a fresh (re-contending) stage-in
-        for (id, fail_s) in compute.take_restage() {
-            let i = id as usize;
-            let rid = next_restage_id;
-            next_restage_id += 1;
-            restage_job.insert(rid, i);
-            transfers.submit_at(rid, STAGE_HOST, jobs[i].bytes_in, fail_s.max(transfers.clock()));
+        for backend in backends.iter_mut() {
+            for (id, end_s) in backend.advance_to(t) {
+                let i = id as usize;
+                timings[i].compute_end_s = end_s;
+                timings[i].compute_start_s = end_s - jobs[i].compute_s;
+                transfers.submit_at(
+                    stage_out_id(i),
+                    assignment[i] as u64,
+                    jobs[i].bytes_out,
+                    end_s,
+                );
+            }
+            // timed-out attempts hand back here: their scratch inputs are
+            // gone, so the retry waits on a fresh (re-contending) stage-in
+            for (id, fail_s) in backend.take_restage() {
+                let i = id as usize;
+                let rid = next_restage_id;
+                next_restage_id += 1;
+                restage_job.insert(rid, i);
+                transfers.submit_at(
+                    rid,
+                    assignment[i] as u64,
+                    jobs[i].bytes_in,
+                    fail_s.max(transfers.clock()),
+                );
+            }
         }
     }
     let makespan_s = timings

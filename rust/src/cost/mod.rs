@@ -39,7 +39,17 @@ pub fn instance_hourly_rate(env: Env) -> f64 {
 }
 
 /// Direct cost of holding a slot for `minutes` in `env`.
+///
+/// A real `assert!`, not `debug_assert!` (same pattern as the
+/// `Rng::below(0)` fix): negative minutes used to price as *negative
+/// dollars* and silently shrink campaign totals far from the bad
+/// caller; a sign bug must fail here, at the billing boundary.
 pub fn compute_cost(env: Env, minutes: f64) -> f64 {
+    assert!(
+        minutes >= 0.0,
+        "compute_cost: negative allocation ({minutes} min) would bill negative dollars — \
+         durations must be ≥ 0"
+    );
     instance_hourly_rate(env) * minutes / 60.0
 }
 
@@ -61,6 +71,11 @@ pub fn compute_cost(env: Env, minutes: f64) -> f64 {
 /// copy-back follows its release); they surface in the campaign's
 /// fault telemetry instead.
 pub fn staged_job_cost(env: Env, compute_minutes: f64, transfer_s: f64) -> f64 {
+    assert!(
+        compute_minutes >= 0.0 && transfer_s >= 0.0,
+        "staged_job_cost: negative time ({compute_minutes} min compute, {transfer_s} s \
+         transfer) would bill negative dollars — durations must be ≥ 0"
+    );
     compute_cost(env, compute_minutes + transfer_s / 60.0)
 }
 
@@ -128,5 +143,17 @@ mod tests {
         for env in Env::all() {
             assert_eq!(compute_cost(env, 0.0), 0.0);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "compute_cost: negative allocation")]
+    fn negative_minutes_panic_instead_of_billing_negative_dollars() {
+        let _ = compute_cost(Env::Hpc, -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "staged_job_cost: negative time")]
+    fn negative_transfer_seconds_panic_instead_of_discounting() {
+        let _ = staged_job_cost(Env::Cloud, 10.0, -0.5);
     }
 }

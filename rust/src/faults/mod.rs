@@ -271,6 +271,26 @@ impl Injection {
         }
     }
 
+    /// Compute-side injection for backend `backend` of a placement
+    /// fleet (DESIGN.md §12): the [`Self::campaign_compute`] split,
+    /// additionally decorrelated per backend — job ids repeat across a
+    /// frontier sweep's alternative placements, and two backends must
+    /// not replay each other's verdicts for the same (job, attempt).
+    /// One definition shared by `coordinator::placement` and the
+    /// `medflow place` CLI so the same seed replays the same per-(job,
+    /// backend, attempt) trace everywhere.
+    pub fn placement_compute(
+        model: &FaultModel,
+        max_retries: u32,
+        seed: u64,
+        backend: usize,
+        backoff_s: f64,
+    ) -> Self {
+        let salted = seed
+            .wrapping_add((backend as u64 + 1).wrapping_mul(FAULT_PLACEMENT_SALT));
+        Self::campaign_compute(model, max_retries, salted, backoff_s)
+    }
+
     /// Outcome of attempt `attempt` of job `id` (deterministic).
     pub fn sample(&self, id: u64, attempt: u32) -> Option<FailureMode> {
         self.model.sample_attempt(self.seed, id, attempt)
@@ -452,6 +472,9 @@ impl FaultTelemetry {
 pub const FAULT_COMPUTE_SALT: u64 = 0x636f_6d70_6661_756c; // "compfaul"
 pub const FAULT_TRANSFER_SALT: u64 = 0x7866_6572_6661_756c; // "xferfaul"
 pub const FAULT_CROSSCHECK_SALT: u64 = 0x6f76_6572_7275_6e31; // "overrun1"
+/// Multiplied by `backend index + 1` to decorrelate the per-backend
+/// compute-fault streams of a placement fleet (DESIGN.md §12).
+pub const FAULT_PLACEMENT_SALT: u64 = 0x706c_6163_6661_756c; // "placfaul"
 
 /// Outcome of running one job under a fault model with retries.
 #[derive(Debug, Clone, PartialEq)]
@@ -685,6 +708,24 @@ mod tests {
         assert_eq!(c.pipeline, 2);
         assert_eq!(c.total(), 5);
         assert_eq!(FaultTelemetry::default().expected_overrun_factor, 1.0);
+    }
+
+    #[test]
+    fn placement_injection_decorrelates_backends() {
+        let m = FaultModel::harsh();
+        let a = Injection::placement_compute(&m, 3, 42, 0, 60.0);
+        let b = Injection::placement_compute(&m, 3, 42, 1, 60.0);
+        assert_ne!(a.seed, b.seed, "backends must sample distinct streams");
+        assert!(a.park_timeouts && b.park_timeouts, "campaign_compute split applies");
+        assert_eq!(a.model.p_checksum, 0.0, "checksum band stays with the transfer engine");
+        // some (id, attempt) verdict differs between the two backends
+        let differs = (0..500u64).any(|id| {
+            a.model.sample_attempt(a.seed, id, 0) != b.model.sample_attempt(b.seed, id, 0)
+        });
+        assert!(differs, "per-backend salting must perturb verdicts");
+        // and the same backend replays identically
+        let a2 = Injection::placement_compute(&m, 3, 42, 0, 60.0);
+        assert_eq!(a.seed, a2.seed);
     }
 
     #[test]

@@ -46,17 +46,39 @@ pub struct Manifest {
 }
 
 /// A verification mismatch (the paper's abort condition).
-#[derive(Debug, thiserror::Error)]
+///
+/// Manual `Display`/`Error` impls: the crate is offline-first with
+/// `anyhow` as its only dependency (rust/Cargo.toml), so no derive
+/// macro crate is available here.
+#[derive(Debug)]
 pub enum IntegrityError {
-    #[error("checksum mismatch for '{path}': manifest {expected}, found {actual}")]
     Mismatch {
         path: String,
         expected: String,
         actual: String,
     },
-    #[error("file in manifest missing from tree: '{0}'")]
     Missing(String),
 }
+
+impl std::fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IntegrityError::Mismatch {
+                path,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "checksum mismatch for '{path}': manifest {expected}, found {actual}"
+            ),
+            IntegrityError::Missing(path) => {
+                write!(f, "file in manifest missing from tree: '{path}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IntegrityError {}
 
 impl Manifest {
     /// Hash every file under `root` (recursive), keyed by relative path.

@@ -21,6 +21,7 @@ use medflow::archive::{Archive, SecurityTier};
 use medflow::bids::{validate_dataset, BidsDataset, Severity};
 use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
+use medflow::coordinator::placement::{self, PlacementConfig, PlacementPolicy};
 use medflow::coordinator::staged::{run_staged, synthetic_fault_campaign, SlurmSim};
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
 use medflow::faults::{FaultModel, FaultTelemetry, Injection};
@@ -125,6 +126,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "transfer-sim" => cmd_transfer_sim(&args),
         "faults" => cmd_faults(&args),
+        "place" => cmd_place(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
             for years in [0.0, 1.0, 3.0, 5.0] {
@@ -337,11 +339,22 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let archive = Archive::at(&root.join("store"))?;
     let containers = ContainerArchive::open(&root.join("containers"))?;
     let mut coord = Coordinator::new(archive, containers, runtime.as_ref());
-    let target = match args.get("local") {
-        Some(w) => SubmitTarget::LocalBurst {
-            workers: w.parse().unwrap_or(4),
-        },
-        None => SubmitTarget::Hpc,
+    // --placement [cheapest|deadline|budget] splits the campaign across
+    // the heterogeneous fleet (DESIGN.md §12) instead of one target
+    let placement = match args.get("placement") {
+        Some(name) => Some(parse_placement_policy(name, args)?),
+        None if args.has("placement") => Some(PlacementPolicy::CheapestFirst),
+        None => None,
+    };
+    let target = if placement.is_some() {
+        SubmitTarget::Placement
+    } else {
+        match args.get("local") {
+            Some(w) => SubmitTarget::LocalBurst {
+                workers: w.parse().unwrap_or(4),
+            },
+            None => SubmitTarget::Hpc,
+        }
     };
     // --faults [none|typical|harsh] switches on in-engine injection
     // (bare flag = typical); --retries bounds resubmissions per job
@@ -355,6 +368,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         seed: args.num("seed", 42),
         faults,
         max_retries: args.num("retries", 3) as u32,
+        placement,
         ..Default::default()
     };
     let r = coord.run_campaign(&ds, pipeline, target, &cfg)?;
@@ -375,6 +389,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     if cfg.faults.is_some() {
         print!("{}", report::format_fault_stats(&r.faults));
     }
+    if let Some(usage) = &r.placement {
+        let label = cfg.placement.unwrap_or(PlacementPolicy::CheapestFirst).label();
+        print!("{}", report::format_placement(&label, usage));
+    }
     Ok(())
 }
 
@@ -385,6 +403,90 @@ fn parse_fault_model(name: &str) -> Result<FaultModel> {
         "harsh" => Ok(FaultModel::harsh()),
         other => bail!("unknown fault model '{other}' (none | typical | harsh)"),
     }
+}
+
+fn parse_placement_policy(name: &str, args: &Args) -> Result<PlacementPolicy> {
+    Ok(match name {
+        "cheapest" => PlacementPolicy::CheapestFirst,
+        // --deadline SECS (default: one simulated day)
+        "deadline" => PlacementPolicy::DeadlineAware {
+            deadline_s: args.num("deadline", 86_400) as f64,
+        },
+        // --budget DOLLARS (default $100)
+        "budget" => PlacementPolicy::BudgetCapped {
+            budget_dollars: args
+                .get("budget")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(100.0),
+        },
+        other => bail!("unknown placement policy '{other}' (cheapest | deadline | budget)"),
+    })
+}
+
+/// `medflow place`: run the shared synthetic campaign
+/// ([`synthetic_fault_campaign`]) through the heterogeneous placement
+/// optimizer (DESIGN.md §12) — ACCRE slots + a cloud lane pool + local
+/// workstations co-simulated against one shared staging path — and
+/// print the per-backend usage; `--frontier [STEPS]` sweeps and prints
+/// the cost-vs-makespan Pareto set.
+fn cmd_place(args: &Args) -> Result<()> {
+    let n = args.num("jobs", 2_000) as usize;
+    let seed = args.num("seed", 42);
+    let retries = args.num("retries", 3) as u32;
+    let policy = parse_placement_policy(args.get("policy").unwrap_or("cheapest"), args)?;
+    let model = match args.get("faults") {
+        Some(name) => Some(parse_fault_model(name)?),
+        None if args.has("faults") => Some(FaultModel::typical()),
+        None => None,
+    };
+    if let Some(m) = &model {
+        m.validate().map_err(anyhow::Error::msg)?;
+    }
+    let jobs = synthetic_fault_campaign(n, seed);
+    let mut fleet = placement::default_fleet(
+        ClusterSpec::accre(),
+        args.num("concurrent", 2_000) as u32,
+        args.num("cloud-lanes", 64).max(1) as usize,
+        args.num("local-lanes", 8).max(1) as usize,
+    );
+    if let Some(m) = model {
+        for backend in &mut fleet {
+            backend.faults = Some(m);
+        }
+    }
+    let cfg = PlacementConfig {
+        seed,
+        transfer_faults: model,
+        max_retries: retries,
+        retry_backoff_s: args.num("backoff", 60) as f64,
+    };
+    println!(
+        "placement co-simulation: {n} jobs across {} backends (retries {retries}, seed {seed})",
+        fleet.len()
+    );
+    let out = placement::execute(&jobs, &fleet, policy, &cfg);
+    let completed = out.staged.timings.iter().filter(|t| t.completed).count();
+    println!(
+        "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
+        out.total_cost_dollars,
+        fmt_duration(out.makespan_s)
+    );
+    print!("{}", report::format_placement(&policy.label(), &out.per_backend));
+    print!("{}", report::format_transfer_stats(&out.transfer));
+    if model.is_some() {
+        println!(
+            "faults: {} failed compute attempts, {} checksum retries, {} aborted",
+            out.compute_events.len(),
+            out.transfer_events.len(),
+            out.aborted
+        );
+    }
+    if args.has("frontier") || args.get("frontier").is_some() {
+        let steps = args.num("frontier", 5) as usize;
+        let frontier = placement::frontier_sweep(&jobs, &fleet, &cfg, steps);
+        print!("\n{}", report::format_frontier(&frontier));
+    }
+    Ok(())
 }
 
 /// `medflow faults`: run the shared synthetic campaign
@@ -574,6 +676,7 @@ USAGE:
   medflow index     --root DIR --dataset NAME [--rebuild | --invalidate PIPELINE]
   medflow campaign  --root DIR --dataset NAME --pipeline P [--local WORKERS]
                     [--faults none|typical|harsh] [--retries N]
+                    [--placement cheapest|deadline|budget [--deadline SECS] [--budget DOLLARS]]
   medflow status    --root DIR
   medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)
   medflow project   [--faults]                    (paper-scale cost projection)
@@ -582,6 +685,10 @@ USAGE:
                                                   (shared-link contention simulation)
   medflow faults    [--model none|typical|harsh] [--jobs N] [--retries N] [--cap N]
                     [--backoff SECS] [--seed S]   (in-engine failure/retry co-simulation)
+  medflow place     [--policy cheapest|deadline|budget] [--deadline SECS] [--budget DOLLARS]
+                    [--jobs N] [--frontier [STEPS]] [--faults none|typical|harsh]
+                    [--cloud-lanes N] [--local-lanes N] [--seed S]
+                                                  (heterogeneous fleet placement, DESIGN.md §12)
   medflow pipelines
   medflow table1 | table2 | table3 | fig1"
     );

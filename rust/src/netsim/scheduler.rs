@@ -82,6 +82,12 @@ pub struct Topology {
     /// Max concurrent streams a single host may hold open; further
     /// submissions queue FIFO (DESIGN.md §9: admission).
     pub max_streams_per_host: usize,
+    /// Per-host overrides of `max_streams_per_host` (DESIGN.md §12:
+    /// in a heterogeneous placement fleet each backend is a host on
+    /// the shared path, and the cloud's WAN admits fewer concurrent
+    /// streams than the HPC fabric). Hosts not listed use the uniform
+    /// cap; lookups are a linear scan — fleets hold a handful of hosts.
+    pub host_caps: Vec<(u64, usize)>,
 }
 
 impl Topology {
@@ -101,6 +107,7 @@ impl Topology {
                 })
                 .collect(),
             max_streams_per_host: 8,
+            host_caps: Vec::new(),
         }
     }
 
@@ -109,6 +116,25 @@ impl Topology {
         assert!(cap >= 1, "stream cap must be at least 1");
         self.max_streams_per_host = cap;
         self
+    }
+
+    /// Override the concurrent-stream cap of one specific host (must be
+    /// ≥ 1); other hosts keep the uniform `max_streams_per_host`.
+    pub fn with_host_stream_cap(mut self, host: u64, cap: usize) -> Self {
+        assert!(cap >= 1, "stream cap must be at least 1");
+        match self.host_caps.iter_mut().find(|(h, _)| *h == host) {
+            Some(entry) => entry.1 = cap,
+            None => self.host_caps.push((host, cap)),
+        }
+        self
+    }
+
+    /// The concurrent-stream cap in force for `host`.
+    pub fn stream_cap(&self, host: u64) -> usize {
+        self.host_caps
+            .iter()
+            .find(|(h, _)| *h == host)
+            .map_or(self.max_streams_per_host, |&(_, cap)| cap)
     }
 
     /// The binding shared capacity: every stream crosses every link, so
@@ -446,11 +472,11 @@ impl TransferScheduler {
         // Candidate heads: the earliest queued transfer of every host
         // still under its cap, popped in global (submit, id) order so
         // admissions interleave across hosts exactly like the pre-PR
-        // sorted-queue scan.
-        let cap = self.topo.max_streams_per_host;
+        // sorted-queue scan. Caps are per host ([`Topology::stream_cap`]
+        // — uniform unless a placement fleet overrode a backend's).
         let mut heads: BinaryHeap<Reverse<(F64Ord, u64, u64)>> = BinaryHeap::new();
         for (&host, queue) in &self.host_queues {
-            if self.host_active.get(&host).copied().unwrap_or(0) < cap {
+            if self.host_active.get(&host).copied().unwrap_or(0) < self.topo.stream_cap(host) {
                 if let Some((&(submit, id), _)) = queue.first_key_value() {
                     heads.push(Reverse((submit, id, host)));
                 }
@@ -465,7 +491,7 @@ impl TransferScheduler {
             }
             self.queued -= 1;
             self.start_stream(q);
-            if self.host_active.get(&host).copied().unwrap_or(0) < cap {
+            if self.host_active.get(&host).copied().unwrap_or(0) < self.topo.stream_cap(host) {
                 if let Some((submit, id)) = next_head {
                     heads.push(Reverse((submit, id, host)));
                 }
@@ -864,6 +890,28 @@ mod tests {
         sim.submit_at(1, 1, 100_000_000, 0.0);
         sim.run_to_completion();
         assert_eq!(sim.stats().peak_streams, 2, "caps are per host");
+    }
+
+    #[test]
+    fn per_host_cap_overrides_apply_only_to_that_host() {
+        let topo = Topology::of(Env::Local).with_stream_cap(4).with_host_stream_cap(1, 1);
+        assert_eq!(topo.stream_cap(0), 4);
+        assert_eq!(topo.stream_cap(1), 1);
+        assert_eq!(topo.with_host_stream_cap(1, 2).stream_cap(1), 2, "override replaces");
+        let topo = Topology::of(Env::Local).with_stream_cap(4).with_host_stream_cap(1, 1);
+        let mut sim = TransferScheduler::new(topo, 61);
+        // two transfers per host: host 0 admits both at once, host 1
+        // (capped at 1) serializes its pair
+        sim.submit_at(0, 0, 100_000_000, 0.0);
+        sim.submit_at(1, 0, 100_000_000, 0.0);
+        sim.submit_at(2, 1, 100_000_000, 0.0);
+        sim.submit_at(3, 1, 100_000_000, 0.0);
+        sim.run_to_completion();
+        let mut recs = sim.records().to_vec();
+        recs.sort_by_key(|r| r.id);
+        assert_eq!(recs[1].queue_wait_s(), 0.0, "host 0 admits both");
+        assert!(recs[3].queue_wait_s() > 0.0, "host 1 cap 1 must queue its second");
+        assert!(recs[3].start_s + 1e-9 >= recs[2].end_s);
     }
 
     #[test]

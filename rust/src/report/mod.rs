@@ -394,6 +394,66 @@ pub fn format_fault_stats(f: &crate::faults::FaultTelemetry) -> String {
     )
 }
 
+/// Render a placement run's per-backend usage (`medflow place`,
+/// `medflow campaign --placement`; DESIGN.md §12): where the policy
+/// sent the jobs and what each environment's slot rate billed.
+pub fn format_placement(
+    policy: &str,
+    usage: &[crate::coordinator::placement::BackendUsage],
+) -> String {
+    let mut s = format!("placement [{policy}]\n");
+    s.push_str(&format!(
+        "{:<10}{:<24}{:>7}{:>11}{:>14}{:>12}{:>9}{:>9}\n",
+        "backend", "env", "jobs", "completed", "compute min", "cost ($)", "failed", "aborted"
+    ));
+    let (mut jobs, mut completed, mut minutes, mut cost) = (0usize, 0usize, 0.0f64, 0.0f64);
+    for u in usage {
+        s.push_str(&format!(
+            "{:<10}{:<24}{:>7}{:>11}{:>14.1}{:>12.4}{:>9}{:>9}\n",
+            u.name,
+            u.env.name(),
+            u.jobs,
+            u.completed,
+            u.compute_minutes,
+            u.cost_dollars,
+            u.failed_attempts,
+            u.aborted
+        ));
+        jobs += u.jobs;
+        completed += u.completed;
+        minutes += u.compute_minutes;
+        cost += u.cost_dollars;
+    }
+    s.push_str(&format!(
+        "{:<10}{:<24}{:>7}{:>11}{:>14.1}{:>12.4}\n",
+        "TOTAL", "", jobs, completed, minutes, cost
+    ));
+    s
+}
+
+/// Render a cost-vs-makespan Pareto frontier (`medflow place
+/// --frontier`; DESIGN.md §12) — the full curve Fig. 1 only showed two
+/// points of. Points arrive pruned ([`crate::coordinator::placement::pareto`]):
+/// cost strictly rises, makespan strictly falls.
+pub fn format_frontier(points: &[crate::coordinator::placement::FrontierPoint]) -> String {
+    let mut s =
+        String::from("cost-vs-makespan frontier (Pareto set, dominated placements pruned)\n");
+    s.push_str(&format!(
+        "{:<24}{:>12}{:>14}   {}\n",
+        "placement", "cost ($)", "makespan", "jobs per backend"
+    ));
+    for p in points {
+        s.push_str(&format!(
+            "{:<24}{:>12.4}{:>14}   {:?}\n",
+            p.label,
+            p.cost_dollars,
+            fmt_duration(p.makespan_s),
+            p.jobs_per_backend
+        ));
+    }
+    s
+}
+
 /// Render aggregate transfer-scheduler telemetry (campaign reports and
 /// `medflow transfer-sim`): link utilization, aggregate throughput,
 /// concurrency, queueing.
@@ -537,6 +597,63 @@ mod tests {
         let stats = format_transfer_stats(&sim.stats());
         assert!(stats.contains("link utilization"), "{stats}");
         assert!(stats.contains("peak streams  2"), "{stats}");
+    }
+
+    #[test]
+    fn format_placement_sums_backend_rows() {
+        use crate::coordinator::placement::BackendUsage;
+        let usage = [
+            BackendUsage {
+                name: "hpc".into(),
+                env: Env::Hpc,
+                jobs: 10,
+                completed: 9,
+                compute_minutes: 900.5,
+                cost_dollars: 1.5,
+                failed_attempts: 2,
+                aborted: 1,
+            },
+            BackendUsage {
+                name: "cloud".into(),
+                env: Env::Cloud,
+                jobs: 4,
+                completed: 4,
+                compute_minutes: 350.0,
+                cost_dollars: 4.25,
+                failed_attempts: 0,
+                aborted: 0,
+            },
+        ];
+        let s = format_placement("deadline-aware ≤ 2h", &usage);
+        assert!(s.contains("deadline-aware"), "{s}");
+        assert!(s.contains("hpc") && s.contains("cloud"), "{s}");
+        assert!(s.lines().last().unwrap().contains("TOTAL"), "{s}");
+        assert!(s.contains("14"), "totals row sums jobs:\n{s}");
+        assert!(s.contains("5.7500"), "totals row sums dollars:\n{s}");
+    }
+
+    #[test]
+    fn format_frontier_lists_points_in_order() {
+        use crate::coordinator::placement::FrontierPoint;
+        let points = [
+            FrontierPoint {
+                label: "all-hpc".into(),
+                cost_dollars: 0.5,
+                makespan_s: 7200.0,
+                jobs_per_backend: vec![12, 0, 0],
+            },
+            FrontierPoint {
+                label: "deadline 1h".into(),
+                cost_dollars: 2.0,
+                makespan_s: 3600.0,
+                jobs_per_backend: vec![8, 4, 0],
+            },
+        ];
+        let s = format_frontier(&points);
+        assert!(s.contains("Pareto"), "{s}");
+        assert!(s.contains("all-hpc") && s.contains("deadline 1h"), "{s}");
+        assert!(s.contains("[12, 0, 0]"), "{s}");
+        assert_eq!(s.lines().count(), 4, "{s}");
     }
 
     #[test]

@@ -73,6 +73,24 @@ impl ClusterSpec {
     pub fn total_cores(&self) -> u64 {
         self.nodes.iter().map(|n| n.cores as u64).sum()
     }
+
+    /// How many jobs of shape (`cores`, `ram_gb`) the cluster can hold
+    /// concurrently — per node, the binding resource limits the count;
+    /// summed over nodes. This is the placement planner's release-skyline
+    /// width for the HPC backend (DESIGN.md §12): the co-simulated
+    /// [`Scheduler`] enforces the real packing, the planner only needs
+    /// the parallelism ceiling.
+    pub fn concurrent_slots(&self, cores: u32, ram_gb: u32) -> u64 {
+        assert!(cores >= 1, "concurrent_slots: a job occupies at least one core");
+        self.nodes
+            .iter()
+            .map(|n| {
+                let by_cores = n.cores / cores;
+                let by_ram = if ram_gb == 0 { u32::MAX } else { n.ram_gb / ram_gb };
+                u64::from(by_cores.min(by_ram))
+            })
+            .sum()
+    }
 }
 
 /// A job submitted to the simulator.
@@ -973,6 +991,17 @@ mod tests {
         assert_eq!(c.nodes.len(), 750);
         let cores = c.total_cores();
         assert!((20_000..21_000).contains(&cores), "{cores}");
+    }
+
+    #[test]
+    fn concurrent_slots_bound_by_binding_resource() {
+        let c = ClusterSpec::small(3, 8, 16);
+        assert_eq!(c.concurrent_slots(1, 1), 3 * 8, "core-bound");
+        assert_eq!(c.concurrent_slots(1, 8), 3 * 2, "RAM-bound");
+        assert_eq!(c.concurrent_slots(4, 4), 3 * 2, "cores bind before RAM");
+        assert_eq!(c.concurrent_slots(16, 1), 0, "oversized jobs fit nowhere");
+        assert_eq!(c.concurrent_slots(1, 0), 3 * 8, "zero RAM = unconstrained");
+        assert_eq!(ClusterSpec::accre().concurrent_slots(1, 4), 750 * 27);
     }
 
     #[test]

@@ -6,9 +6,18 @@
 //! ```text
 //! bench <name>: mean 1.234 ms  std 0.012 ms  min 1.210 ms  iters 100
 //! ```
+//!
+//! It also hosts the bench-regression gate ([`check_baseline`]): the
+//! trajectory benches accept `--check-baseline <path>` and compare this
+//! run's `runs[]` rows against the committed `BENCH_*.json` baseline,
+//! failing CI when a matching row's wall-clock regressed beyond the
+//! tolerance — a `report::gate`-style check for performance instead of
+//! paper calibration.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::units::{fmt_duration, mean_std};
 
 /// Result of one benchmark.
@@ -72,6 +81,125 @@ pub fn metric(name: &str, value: f64, unit: &str) {
     println!("metric {name}: {value:.4} {unit}");
 }
 
+/// The `--check-baseline <path>` argument of a bench invocation, if
+/// present (benches are plain binaries; args arrive after `--`).
+pub fn baseline_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == "--check-baseline")?;
+    Some(
+        args.get(i + 1)
+            .unwrap_or_else(|| panic!("--check-baseline needs a path argument"))
+            .clone(),
+    )
+}
+
+/// Below this absolute baseline wall-clock a row is never gated: CI
+/// timer noise on sub-second rows would flag phantom regressions.
+const BASELINE_FLOOR_S: f64 = 0.25;
+
+/// Apply the `--check-baseline <path>` gate when the invocation asked
+/// for one: compare `runs` against the named baseline on `wall_s` at
+/// the standard 1.5× tolerance, print the verdict, and exit non-zero
+/// on a regression. The one gate shared by every trajectory bench —
+/// call it before full mode overwrites the baseline file.
+pub fn gate_against_baseline(runs: &[Json]) {
+    let Some(path) = baseline_arg() else { return };
+    match check_baseline(Path::new(&path), runs, "wall_s", 1.5) {
+        Ok(note) => println!("baseline gate: {note}"),
+        Err(report) => {
+            eprintln!("baseline gate FAILED:\n{report}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Compare this run's `runs[]` rows against a committed `BENCH_*.json`
+/// baseline: rows pair up by identity (every string-valued field plus
+/// the `jobs`/`streams` counts), and a paired row fails when its
+/// `metric_key` value exceeds the baseline's by more than `factor`×
+/// (baselines under the 0.25 s noise floor are informational only).
+///
+/// An empty baseline `runs[]` — the committed placeholder before the
+/// first full bench run on CI hardware — gates nothing and reports so.
+/// Rows present on only one side are noted, not failed: semantic
+/// changes legitimately reshape the sweep, and the nightly trajectory
+/// workflow refreshes the baseline artifacts.
+///
+/// Returns `Ok(summary)` or `Err(report)` listing every regression.
+pub fn check_baseline(
+    baseline_path: &Path,
+    current_runs: &[Json],
+    metric_key: &str,
+    factor: f64,
+) -> Result<String, String> {
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("read baseline {}: {e}", baseline_path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| format!("parse baseline {}: {e}", baseline_path.display()))?;
+    let empty: [Json; 0] = [];
+    let baseline_runs: &[Json] = doc
+        .get_path("runs")
+        .and_then(|r| r.as_arr())
+        .unwrap_or(&empty);
+    if baseline_runs.is_empty() {
+        return Ok(format!(
+            "baseline {} has empty runs[] (pending its first full run) — nothing to gate",
+            baseline_path.display()
+        ));
+    }
+    let mut matched = 0usize;
+    let mut unmatched = 0usize;
+    let mut failures = Vec::new();
+    for row in current_runs {
+        let Some(base) = baseline_runs.iter().find(|b| identity(b) == identity(row)) else {
+            unmatched += 1;
+            continue;
+        };
+        let (Some(cur), Some(was)) = (
+            row.get_path(metric_key).and_then(Json::as_f64),
+            base.get_path(metric_key).and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        matched += 1;
+        if was >= BASELINE_FLOOR_S && cur > was * factor {
+            failures.push(format!(
+                "  {:?}: {metric_key} {cur:.3} vs baseline {was:.3} (> {factor}×)",
+                identity(row)
+            ));
+        }
+    }
+    if failures.is_empty() {
+        Ok(format!(
+            "{matched} rows within {factor}× of {} ({unmatched} new rows not in baseline)",
+            baseline_path.display()
+        ))
+    } else {
+        Err(format!(
+            "{} of {matched} rows regressed >{factor}× vs {}:\n{}",
+            failures.len(),
+            baseline_path.display(),
+            failures.join("\n")
+        ))
+    }
+}
+
+/// A run row's identity: every string-valued field (engine, path,
+/// model, policy, env…) plus the `jobs`/`streams` counts — the fields
+/// that name *what* was measured, never the measurements themselves.
+fn identity(row: &Json) -> Vec<(String, String)> {
+    let Some(obj) = row.as_obj() else { return Vec::new() };
+    obj.iter()
+        .filter_map(|(k, v)| match v {
+            Json::Str(s) => Some((k.to_string(), s.clone())),
+            Json::Num(n) if k == "jobs" || k == "streams" => {
+                Some((k.to_string(), format!("{n}")))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +223,60 @@ mod tests {
             min_s: 0.00121,
         };
         assert!(r.report().starts_with("bench x: mean "));
+    }
+
+    fn row(jobs: f64, engine: &str, wall_s: f64) -> Json {
+        let mut o = Json::obj();
+        o.set("jobs", Json::num(jobs))
+            .set("engine", Json::str(engine))
+            .set("wall_s", Json::num(wall_s))
+            .set("sim_makespan_s", Json::num(123.0));
+        Json::Obj(o)
+    }
+
+    fn write_baseline(tag: &str, runs: Vec<Json>) -> std::path::PathBuf {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("t")).set("runs", Json::Arr(runs));
+        let path = std::env::temp_dir()
+            .join(format!("medflow_baseline_{tag}_{}.json", std::process::id()));
+        std::fs::write(&path, Json::Obj(doc).to_string_pretty()).unwrap();
+        path
+    }
+
+    #[test]
+    fn baseline_gate_passes_within_factor_and_fails_beyond() {
+        let path = write_baseline("gate", vec![row(1000.0, "lanepool", 2.0)]);
+        // 2.9 s vs 2.0 s baseline: under 1.5× — passes
+        let ok = check_baseline(&path, &[row(1000.0, "lanepool", 2.9)], "wall_s", 1.5);
+        assert!(ok.is_ok(), "{ok:?}");
+        // 3.1 s vs 2.0 s: beyond 1.5× — fails with the row named
+        let err = check_baseline(&path, &[row(1000.0, "lanepool", 3.1)], "wall_s", 1.5)
+            .unwrap_err();
+        assert!(err.contains("regressed") && err.contains("lanepool"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn baseline_gate_skips_empty_tiny_and_unmatched_rows() {
+        // the committed placeholder: empty runs[] gates nothing
+        let empty = write_baseline("empty", vec![]);
+        let note = check_baseline(&empty, &[row(1000.0, "x", 9.0)], "wall_s", 1.5).unwrap();
+        assert!(note.contains("empty runs[]"), "{note}");
+        std::fs::remove_file(&empty).unwrap();
+
+        // sub-floor baselines are informational; unmatched rows noted
+        let tiny = write_baseline("tiny", vec![row(10.0, "x", 0.01)]);
+        let ok = check_baseline(
+            &tiny,
+            &[row(10.0, "x", 5.0), row(99.0, "brand-new", 1.0)],
+            "wall_s",
+            1.5,
+        );
+        assert!(ok.is_ok(), "{ok:?}");
+        assert!(ok.unwrap().contains("1 new rows"), "unmatched rows are counted");
+        std::fs::remove_file(&tiny).unwrap();
+
+        // a missing file is an error, not a silent pass
+        assert!(check_baseline(Path::new("/nonexistent/b.json"), &[], "wall_s", 1.5).is_err());
     }
 }

@@ -294,12 +294,23 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse failure with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+///
+/// Manual `Display`/`Error` impls: the crate is offline-first with
+/// `anyhow` as its only dependency (rust/Cargo.toml), so no derive
+/// macro crate is available here.
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -113,6 +113,50 @@ fn faults_cli_reports_cosimulation() {
 }
 
 #[test]
+fn place_cli_reports_fleet_and_frontier() {
+    // a small deadline-aware run over the default heterogeneous fleet
+    let out = run_ok(&[
+        "place", "--jobs", "300", "--policy", "deadline", "--deadline", "1200", "--seed", "7",
+    ]);
+    assert!(out.contains("placement co-simulation"), "{out}");
+    assert!(out.contains("deadline-aware"), "{out}");
+    assert!(out.contains("hpc") && out.contains("cloud") && out.contains("local"), "{out}");
+    assert!(out.contains("TOTAL"), "{out}");
+    assert!(out.contains("completed 300/300"), "{out}");
+
+    // the frontier sweep prints the Pareto rows
+    let out = run_ok(&[
+        "place", "--jobs", "120", "--policy", "cheapest", "--frontier", "2", "--seed", "7",
+        "--cloud-lanes", "32", "--local-lanes", "4",
+    ]);
+    assert!(out.contains("Pareto"), "{out}");
+    assert!(out.contains("all-"), "anchors must appear: {out}");
+
+    let out = medflow().args(["place", "--policy", "mars"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown placement policy"));
+}
+
+#[test]
+fn campaign_placement_reports_backend_usage() {
+    let root = std::env::temp_dir().join(format!("medflow_cli_place_{}", std::process::id()));
+    std::fs::create_dir_all(&root).unwrap();
+    let rootstr = root.to_string_lossy().to_string();
+    run_ok(&[
+        "ingest", "--root", &rootstr, "--dataset", "PLDS", "--participants", "2",
+        "--sessions", "3", "--dim", "8",
+    ]);
+    let out = run_ok(&[
+        "campaign", "--root", &rootstr, "--dataset", "PLDS", "--pipeline", "freesurfer",
+        "--placement", "cheapest",
+    ]);
+    assert!(out.contains("campaign PLDS/freesurfer"), "{out}");
+    assert!(out.contains("placement [cheapest-first]"), "{out}");
+    assert!(out.contains("TOTAL"), "{out}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = medflow().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
