@@ -1,0 +1,225 @@
+//! Bench: multi-tenant co-simulation sweep — the ISSUE 6 tentpole
+//! numbers. N independent tenant campaigns share ONE heterogeneous
+//! fleet and ONE staging path (`coordinator::tenancy`, DESIGN.md §13),
+//! swept from 1 tenant to 10³ tenants, asserting in **both** modes:
+//!
+//! * **N=1 parity** — a single unbounded tenant is f64-record-identical
+//!   to `coordinator::placement::execute` on the same fleet and seed;
+//! * **no starvation** — every tenant in a clean run completes every
+//!   job it submitted, at every swept scale;
+//! * **conservation under harsh faults** — completed + aborted equals
+//!   submitted, tenant-by-tenant totals included;
+//! * **determinism** — the largest swept scale replays to an identical
+//!   `TenancyReport` (PartialEq over every f64 field).
+//!
+//! Run: `cargo bench --bench tenancy_sweep` — full mode sweeps up to
+//! 1000 tenants and writes `BENCH_tenancy_sweep.json`; `-- --test` is
+//! the reduced CI sweep. `--check-baseline <path>` gates this run's
+//! wall clocks against a committed baseline.
+
+use std::time::Instant;
+
+use medflow::coordinator::placement::{execute, BackendKind, BackendSpec, PlacementPolicy};
+use medflow::coordinator::staged::synthetic_fault_campaign;
+use medflow::coordinator::tenancy::{
+    run_tenants, synthetic_tenants, TenancyConfig, TenancyOutcome, TenantSpec,
+};
+use medflow::faults::FaultModel;
+use medflow::netsim::Env;
+use medflow::slurm::ClusterSpec;
+use medflow::util::bench::{gate_against_baseline, metric};
+use medflow::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// The placement-frontier trio: a constrained HPC cluster, a wide
+/// cloud lane pool, and a few local workstations on one staging path.
+fn fleet() -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(64, 8, 64),
+                max_concurrent: 512,
+            },
+            faults: None,
+            transfer_streams: 8,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 2_048 },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 32 },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+fn config(queue_depth: Option<usize>) -> TenancyConfig {
+    TenancyConfig {
+        seed: SEED,
+        transfer_faults: None,
+        max_retries: 3,
+        retry_backoff_s: 60.0,
+        queue_depth,
+    }
+}
+
+struct Timed {
+    wall_s: f64,
+    out: TenancyOutcome,
+}
+
+fn json_run(label: &str, n_tenants: usize, jobs: usize, t: &Timed) -> Json {
+    let completed: usize = t.out.report.tenants.iter().map(|u| u.completed).sum();
+    let mut o = Json::obj();
+    o.set("tenants", Json::str(&format!("{n_tenants}")))
+        .set("scenario", Json::str(label))
+        .set("jobs", Json::num(jobs as f64))
+        .set("wall_s", Json::num(t.wall_s))
+        .set("sim_makespan_s", Json::num(t.out.report.makespan_s))
+        .set("total_dollars", Json::num(t.out.report.total_cost_dollars))
+        .set("completed", Json::num(completed as f64));
+    Json::Obj(o)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Multi-tenant fleet co-simulation sweep (DESIGN.md §13) ===");
+    let fleet = fleet();
+    let jobs_per = if test_mode { 10 } else { 20 };
+    let counts: &[usize] = if test_mode { &[1, 10, 100] } else { &[1, 10, 100, 1_000] };
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- N=1 parity: one unbounded tenant IS the placement engine ---
+    {
+        let n = if test_mode { 500 } else { 5_000 };
+        let jobs = synthetic_fault_campaign(n, SEED);
+        let cfg = config(None);
+        let base = execute(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg.placement());
+        let solo = vec![TenantSpec::new("solo", jobs.clone())];
+        let one = run_tenants(&solo, &fleet, &cfg);
+        assert_eq!(
+            one.staged.timings, base.staged.timings,
+            "acceptance: N=1 tenancy must replay placement f64-record-identically"
+        );
+        assert_eq!(one.report.total_cost_dollars, base.total_cost_dollars);
+        assert_eq!(one.report.makespan_s, base.makespan_s);
+        assert_eq!(one.assignment, base.plan.assignment);
+        println!("parity OK at n={n}: N=1 tenancy ≡ placement, f64-exact");
+    }
+
+    // --- the sweep: 1 → 10³ tenants on one shared fleet ---
+    let mut largest: Option<Timed> = None;
+    for &n_tenants in counts {
+        let mut tenants = synthetic_tenants(n_tenants, jobs_per, SEED);
+        for (k, t) in tenants.iter_mut().enumerate() {
+            t.weight = [1.0, 2.0, 4.0][k % 3];
+        }
+        let depth = if n_tenants > 1 { Some(256) } else { None };
+        let cfg = config(depth);
+        let t0 = Instant::now();
+        let out = run_tenants(&tenants, &fleet, &cfg);
+        let timed = Timed {
+            wall_s: t0.elapsed().as_secs_f64(),
+            out,
+        };
+        let total_jobs = n_tenants * jobs_per;
+        metric(&format!("tenancy.t{n_tenants}.wall_s"), timed.wall_s, "s");
+        metric(
+            &format!("tenancy.t{n_tenants}.sim_makespan_s"),
+            timed.out.report.makespan_s,
+            "s",
+        );
+        metric(
+            &format!("tenancy.t{n_tenants}.dollars"),
+            timed.out.report.total_cost_dollars,
+            "$",
+        );
+        for u in &timed.out.report.tenants {
+            assert_eq!(
+                u.completed, u.jobs,
+                "acceptance: clean run must not starve tenant '{}' ({} of {} jobs done)",
+                u.name, u.completed, u.jobs
+            );
+        }
+        assert_eq!(timed.out.report.aborted, 0, "clean run aborts nothing");
+        runs.push(json_run("clean-w124", n_tenants, total_jobs, &timed));
+        largest = Some(timed);
+    }
+
+    // --- determinism: the largest scale replays report-identically ---
+    {
+        let n_tenants = *counts.last().unwrap();
+        let mut tenants = synthetic_tenants(n_tenants, jobs_per, SEED);
+        for (k, t) in tenants.iter_mut().enumerate() {
+            t.weight = [1.0, 2.0, 4.0][k % 3];
+        }
+        let replay = run_tenants(&tenants, &fleet, &config(Some(256)));
+        let first = largest.expect("sweep ran");
+        assert_eq!(
+            replay.report, first.out.report,
+            "acceptance: same seed must replay an identical TenancyReport"
+        );
+        println!("determinism OK at {n_tenants} tenants: report replays identically");
+    }
+
+    // --- conservation under harsh faults on every backend ---
+    {
+        let n_tenants = if test_mode { 10 } else { 100 };
+        let mut faulty_fleet = fleet.clone();
+        for backend in &mut faulty_fleet {
+            backend.faults = Some(FaultModel::harsh());
+        }
+        let mut cfg = config(Some(128));
+        cfg.transfer_faults = Some(FaultModel::harsh());
+        let tenants = synthetic_tenants(n_tenants, jobs_per, SEED);
+        let t0 = Instant::now();
+        let out = run_tenants(&tenants, &faulty_fleet, &cfg);
+        let timed = Timed {
+            wall_s: t0.elapsed().as_secs_f64(),
+            out,
+        };
+        let total_jobs = n_tenants * jobs_per;
+        let done: usize = timed.out.report.tenants.iter().map(|u| u.completed).sum();
+        assert_eq!(
+            done as u64 + timed.out.report.aborted,
+            total_jobs as u64,
+            "harsh run conserves jobs across tenants"
+        );
+        assert!(!timed.out.compute_events.is_empty(), "harsh rates must fail attempts");
+        metric(&format!("tenancy-harsh.t{n_tenants}.wall_s"), timed.wall_s, "s");
+        metric(&format!("tenancy-harsh.t{n_tenants}.aborted"), timed.out.report.aborted as f64, "");
+        runs.push(json_run("harsh-depth128", n_tenants, total_jobs, &timed));
+    }
+
+    // --- regression gate vs the committed baseline, then (full mode)
+    // refresh the trajectory file ---
+    gate_against_baseline(&runs);
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("tenancy_sweep"))
+            .set(
+                "scenario",
+                Json::str(
+                    "1 → 10³ synthetic tenants (weights cycled 1/2/4, depth cap 256) sharing \
+                     the hpc/cloud/local trio on one staging path, seed 42 (see \
+                     benches/tenancy_sweep.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_tenancy_sweep.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("tenancy_sweep OK");
+}

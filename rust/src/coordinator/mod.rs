@@ -18,6 +18,7 @@
 pub mod placement;
 pub mod planner;
 pub mod staged;
+pub mod tenancy;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;

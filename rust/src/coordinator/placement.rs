@@ -390,28 +390,41 @@ pub fn plan(jobs: &[StagedJob], fleet: &[BackendSpec], policy: PlacementPolicy) 
 }
 
 /// One backend's live engine (kept alive past `run_multi` so fault
-/// telemetry can be drained).
-enum BackendEngine {
+/// telemetry can be drained). Shared with [`super::tenancy`], whose
+/// N=1 parity gate depends on constructing engines through the exact
+/// same path as [`run_plan`].
+pub(crate) enum BackendEngine {
     Slurm(SlurmSim),
     Lanes(LanePool),
 }
 
 impl BackendEngine {
-    fn as_compute(&mut self) -> &mut dyn ComputeSim {
+    pub(crate) fn as_compute(&mut self) -> &mut dyn ComputeSim {
         match self {
             BackendEngine::Slurm(s) => s,
             BackendEngine::Lanes(l) => l,
         }
     }
 
-    fn fault_events(&self) -> &[FaultEvent] {
+    /// `ComputeSim::next_event_time` without taking `&mut self` — the
+    /// tenancy loop re-arms its event heap while also reading abort
+    /// counters, so it cannot hold `as_compute` borrows across the
+    /// iteration the way `run_multi`'s `&mut dyn` slice does.
+    pub(crate) fn peek_next_event(&self) -> Option<f64> {
+        match self {
+            BackendEngine::Slurm(s) => s.next_event_time(),
+            BackendEngine::Lanes(l) => l.next_event_time(),
+        }
+    }
+
+    pub(crate) fn fault_events(&self) -> &[FaultEvent] {
         match self {
             BackendEngine::Slurm(s) => s.scheduler().fault_events(),
             BackendEngine::Lanes(l) => l.fault_events(),
         }
     }
 
-    fn aborted_count(&self) -> usize {
+    pub(crate) fn aborted_count(&self) -> usize {
         match self {
             BackendEngine::Slurm(s) => s.scheduler().aborted_ids().len(),
             BackendEngine::Lanes(l) => l.aborted_ids().len(),
@@ -419,7 +432,11 @@ impl BackendEngine {
     }
 }
 
-fn build_engine(spec: &BackendSpec, backend: usize, cfg: &PlacementConfig) -> BackendEngine {
+pub(crate) fn build_engine(
+    spec: &BackendSpec,
+    backend: usize,
+    cfg: &PlacementConfig,
+) -> BackendEngine {
     let inj = spec.faults.map(|m| {
         Injection::placement_compute(&m, cfg.max_retries, cfg.seed, backend, cfg.retry_backoff_s)
     });
@@ -449,7 +466,7 @@ fn build_engine(spec: &BackendSpec, backend: usize, cfg: &PlacementConfig) -> Ba
 }
 
 /// One backend's measured share of a placement run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BackendUsage {
     pub name: String,
     pub env: Env,
@@ -507,6 +524,95 @@ pub fn execute_pinned(
     execute(jobs, fleet, PlacementPolicy::Pinned(backend), cfg)
 }
 
+/// The per-job billing rule shared by placement and tenancy (the one
+/// definition both folds price with — `coordinator::tenancy`'s N=1
+/// parity gate would catch any drift between two copies).
+///
+/// Returns `(billed_minutes, dollars)`: a completed job pays its
+/// effective compute plus wasted failed attempts plus contended wire
+/// time at the backend's rate; a dropped job pays its wasted attempts
+/// as real spend, plus the full nominal allocation when compute itself
+/// finished (a post-compute abort) — the `dropped_attempt_cost` rule.
+pub(crate) fn job_billing(
+    env: Env,
+    effective_compute_s: f64,
+    wasted_min: f64,
+    t: &super::staged::StagedTiming,
+) -> (f64, f64) {
+    if t.completed {
+        let eff_min = effective_compute_s / 60.0 + wasted_min;
+        (eff_min, staged_job_cost(env, eff_min, t.stage_in_s + t.stage_out_s))
+    } else {
+        let mut lost_min = wasted_min;
+        if t.compute_end_s > 0.0 {
+            lost_min += effective_compute_s / 60.0;
+        }
+        (lost_min, compute_cost(env, lost_min))
+    }
+}
+
+/// Drain every engine's compute-fault telemetry: per-job wasted
+/// allocation minutes (compute ids are job indices) plus all events
+/// concatenated in backend order.
+pub(crate) fn collect_compute_faults(
+    engines: &[BackendEngine],
+    n_jobs: usize,
+) -> (Vec<f64>, Vec<FaultEvent>) {
+    let mut wasted_min = vec![0.0f64; n_jobs];
+    let mut compute_events = Vec::new();
+    for engine in engines {
+        for ev in engine.fault_events() {
+            if let Some(w) = wasted_min.get_mut(ev.id as usize) {
+                *w += ev.wasted_s / 60.0;
+            }
+            compute_events.push(*ev);
+        }
+    }
+    (wasted_min, compute_events)
+}
+
+/// Fold the co-simulated timings into per-backend usage rows (jobs,
+/// completions, billed minutes, dollars, fault counters) — in global
+/// job order, so the f64 accumulation order is identical wherever the
+/// fold runs.
+pub(crate) fn fold_backend_usage(
+    fleet: &[BackendSpec],
+    effective: &[StagedJob],
+    assignment: &[usize],
+    timings: &[super::staged::StagedTiming],
+    wasted_min: &[f64],
+    engines: &[BackendEngine],
+) -> Vec<BackendUsage> {
+    let mut per_backend: Vec<BackendUsage> = fleet
+        .iter()
+        .map(|b| BackendUsage {
+            name: b.name.clone(),
+            env: b.env,
+            jobs: 0,
+            completed: 0,
+            compute_minutes: 0.0,
+            cost_dollars: 0.0,
+            failed_attempts: 0,
+            aborted: 0,
+        })
+        .collect();
+    for (i, (&k, t)) in assignment.iter().zip(timings).enumerate() {
+        let usage = &mut per_backend[k];
+        usage.jobs += 1;
+        if t.completed {
+            usage.completed += 1;
+        }
+        let (minutes, dollars) = job_billing(fleet[k].env, effective[i].compute_s, wasted_min[i], t);
+        usage.compute_minutes += minutes;
+        usage.cost_dollars += dollars;
+    }
+    for (k, engine) in engines.iter().enumerate() {
+        per_backend[k].failed_attempts = engine.fault_events().len();
+        per_backend[k].aborted = engine.aborted_count();
+    }
+    per_backend
+}
+
 fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -> PlacementOutcome {
     let mut engines: Vec<BackendEngine> = fleet
         .iter()
@@ -523,57 +629,15 @@ fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -
             engines.iter_mut().map(|e| e.as_compute()).collect();
         run_multi(&plan.effective, &plan.assignment, &mut backends, &mut transfers)
     };
-    // wasted allocation per job (compute ids are job indices)
-    let mut wasted_min = vec![0.0f64; plan.effective.len()];
-    let mut compute_events = Vec::new();
-    for engine in &engines {
-        for ev in engine.fault_events() {
-            if let Some(w) = wasted_min.get_mut(ev.id as usize) {
-                *w += ev.wasted_s / 60.0;
-            }
-            compute_events.push(*ev);
-        }
-    }
-    let mut per_backend: Vec<BackendUsage> = fleet
-        .iter()
-        .map(|b| BackendUsage {
-            name: b.name.clone(),
-            env: b.env,
-            jobs: 0,
-            completed: 0,
-            compute_minutes: 0.0,
-            cost_dollars: 0.0,
-            failed_attempts: 0,
-            aborted: 0,
-        })
-        .collect();
-    for (i, (&k, t)) in plan.assignment.iter().zip(&staged.timings).enumerate() {
-        let usage = &mut per_backend[k];
-        usage.jobs += 1;
-        if t.completed {
-            // the slot held compute + wasted attempts + contended wire
-            // time, priced at this backend's rate
-            let eff_min = plan.effective[i].compute_s / 60.0 + wasted_min[i];
-            usage.completed += 1;
-            usage.compute_minutes += eff_min;
-            usage.cost_dollars +=
-                staged_job_cost(fleet[k].env, eff_min, t.stage_in_s + t.stage_out_s);
-        } else {
-            // dropped: the wasted attempts were real spend, plus the
-            // full nominal allocation when compute itself finished (a
-            // post-compute abort) — the `dropped_attempt_cost` rule
-            let mut lost_min = wasted_min[i];
-            if t.compute_end_s > 0.0 {
-                lost_min += plan.effective[i].compute_s / 60.0;
-            }
-            usage.compute_minutes += lost_min;
-            usage.cost_dollars += compute_cost(fleet[k].env, lost_min);
-        }
-    }
-    for (k, engine) in engines.iter().enumerate() {
-        per_backend[k].failed_attempts = engine.fault_events().len();
-        per_backend[k].aborted = engine.aborted_count();
-    }
+    let (wasted_min, compute_events) = collect_compute_faults(&engines, plan.effective.len());
+    let per_backend = fold_backend_usage(
+        fleet,
+        &plan.effective,
+        &plan.assignment,
+        &staged.timings,
+        &wasted_min,
+        &engines,
+    );
     let aborted = engines.iter().map(|e| e.aborted_count()).sum::<usize>()
         + transfers.aborted_ids().len();
     PlacementOutcome {

@@ -42,7 +42,7 @@ use crate::util::rng::Rng;
 const EPS: f64 = 1e-9;
 
 /// One job's staged-execution plan.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StagedJob {
     pub cores: u32,
     pub ram_gb: u32,
@@ -396,11 +396,11 @@ impl ComputeSim for LanePool {
     }
 }
 
-const fn stage_in_id(i: usize) -> u64 {
+pub(crate) const fn stage_in_id(i: usize) -> u64 {
     (i as u64) * 2
 }
 
-const fn stage_out_id(i: usize) -> u64 {
+pub(crate) const fn stage_out_id(i: usize) -> u64 {
     (i as u64) * 2 + 1
 }
 
@@ -418,25 +418,25 @@ const fn stage_out_id(i: usize) -> u64 {
 /// sources) per event against sources whose `next_event_time` is now a
 /// heap peek — the O(n) per-event scans this heap used to sit on top
 /// of are gone (DESIGN.md §10).
-struct MergedEvents {
+pub(crate) struct MergedEvents {
     heap: BinaryHeap<Reverse<F64Ord>>,
 }
 
 impl MergedEvents {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self {
             heap: BinaryHeap::with_capacity(4),
         }
     }
 
-    fn arm(&mut self, next: Option<f64>) {
+    pub(crate) fn arm(&mut self, next: Option<f64>) {
         if let Some(t) = next {
             self.heap.push(Reverse(F64Ord(t)));
         }
     }
 
     /// Earliest armed event time; clears the heap for the next re-arm.
-    fn pop_earliest(&mut self) -> Option<f64> {
+    pub(crate) fn pop_earliest(&mut self) -> Option<f64> {
         let Reverse(t) = self.heap.pop()?;
         self.heap.clear();
         Some(t.0)

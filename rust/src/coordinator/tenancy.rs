@@ -1,0 +1,803 @@
+//! Multi-tenant fleet co-simulation (DESIGN.md §13).
+//!
+//! Everything below `coordinator` so far simulates *one* campaign with
+//! the whole fleet to itself. The paper's engine exists so a team —
+//! and, in the brainlife.io brokering sense, many independent owners —
+//! can process national-study data on one shared low-cost fleet. This
+//! module co-simulates N independent campaigns ([`TenantSpec`]: owner,
+//! priority, fair-share weight, budget, deadline, job list) against one
+//! shared fleet of [`BackendSpec`]s and **one** shared
+//! [`TransferScheduler`], generalizing [`super::staged::run_multi`] the
+//! way placement generalized `run_staged`:
+//!
+//! * every tenant's jobs are planned per-tenant (its own
+//!   [`PlacementPolicy`]) and then flattened into one global job-id
+//!   space, tenant by tenant — ids keep `run_multi`'s `2i`/`2i+1`
+//!   transfer-id scheme unique on the single scheduler, and they are
+//!   what decorrelates two tenants' same-numbered jobs in every
+//!   engine's per-(id, attempt) fault stream
+//!   ([`crate::faults::attempt_rng`]);
+//! * **admission arbitration**: jobs enter the co-simulation through a
+//!   fleet-wide queue-depth cap ([`TenancyConfig::queue_depth`]).
+//!   Whenever a slot frees, the next job is drawn from the
+//!   highest-priority tier with pending work (admission-level
+//!   preemption: a higher-priority tenant's pending job always jumps
+//!   ahead of lower-priority pending work; running attempts are never
+//!   killed), and within the tier from the tenant with the lowest
+//!   *virtual service* — admitted effective compute seconds divided by
+//!   its weight — which is weighted fair-share in its
+//!   deficit-round-robin form. Tenants beyond the cap wait in their
+//!   per-tenant pending pool;
+//! * per-tenant telemetry folds into a [`TenancyReport`]: dollars (the
+//!   same [billing rule](super::placement) placement prices with),
+//!   makespan, queue-wait p50/p95, share of fleet compute actually
+//!   received, and the contended-window share the fairness gates assert
+//!   against.
+//!
+//! **Single-tenant parity** is the design constraint everything above
+//! bends around: with one tenant and no depth cap, the sequence of
+//! engine calls — engine construction, the shared scheduler's seed,
+//! every submission and `advance_to` instant — is identical call for
+//! call to `coordinator::placement`'s path, so N=1 outcomes are
+//! f64-record-identical to `placement::execute` for every policy
+//! (enforced by `rust/tests/tenancy_parity.rs`, the same golden
+//! discipline as `engine_parity.rs`). That is why this module *shares*
+//! placement's `build_engine`, billing fold, and topology rather than
+//! re-implementing them.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::faults::{tenant_seed, FaultEvent, FaultModel, Injection};
+use crate::netsim::scheduler::{TransferScheduler, TransferStats};
+use crate::util::units::percentiles;
+
+use super::placement::{
+    build_engine, collect_compute_faults, fold_backend_usage, job_billing, plan, shared_topology,
+    BackendEngine, BackendSpec, BackendUsage, PlacementConfig, PlacementPolicy,
+    PLACEMENT_TRANSFER_SALT,
+};
+use super::staged::{
+    stage_in_id, stage_out_id, synthetic_fault_campaign, MergedEvents, StagedJob, StagedOutcome,
+    StagedTiming,
+};
+
+/// One tenant of a shared fleet: an independent campaign with its own
+/// owner, arbitration knobs, and SLOs.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Owner label ("lab-a", "uker-7", …) — reporting only.
+    pub name: String,
+    /// Weighted fair-share weight (finite, > 0): within a priority
+    /// tier, admitted service converges to weights' proportions.
+    pub weight: f64,
+    /// Strict admission tier: a pending job of a higher-priority tenant
+    /// always admits before any lower-priority pending job.
+    pub priority: u32,
+    /// Placement policy for *this tenant's* jobs across the shared
+    /// fleet (each tenant plans independently; arbitration happens at
+    /// admission, not planning).
+    pub policy: PlacementPolicy,
+    /// Dollar budget SLO; `None` = unconstrained. Reported, not
+    /// enforced ([`TenantUsage::budget_met`]).
+    pub budget_dollars: Option<f64>,
+    /// Deadline SLO in simulated seconds; `None` = unconstrained.
+    pub deadline_s: Option<f64>,
+    pub jobs: Vec<StagedJob>,
+}
+
+impl TenantSpec {
+    /// A default tenant: weight 1, priority 0, cheapest-first, no SLOs.
+    pub fn new(name: impl Into<String>, jobs: Vec<StagedJob>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1.0,
+            priority: 0,
+            policy: PlacementPolicy::CheapestFirst,
+            budget_dollars: None,
+            deadline_s: None,
+            jobs,
+        }
+    }
+}
+
+/// Knobs of a multi-tenant run. Mirrors [`PlacementConfig`] (same
+/// defaults) plus the fleet-wide admission cap.
+#[derive(Debug, Clone, Copy)]
+pub struct TenancyConfig {
+    pub seed: u64,
+    /// Checksum-failure model on the shared staging path.
+    pub transfer_faults: Option<FaultModel>,
+    pub max_retries: u32,
+    pub retry_backoff_s: f64,
+    /// Max jobs admitted fleet-wide at once (≥ 1); `None` = unbounded,
+    /// which is also the N=1 parity configuration — with no cap every
+    /// job is admitted at t=0 exactly like `run_multi`.
+    pub queue_depth: Option<usize>,
+}
+
+impl Default for TenancyConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            transfer_faults: None,
+            max_retries: 3,
+            retry_backoff_s: 60.0,
+            queue_depth: None,
+        }
+    }
+}
+
+impl TenancyConfig {
+    /// The placement-layer view of these knobs — engine construction
+    /// and the shared scheduler go through the *same* config type so
+    /// the N=1 path cannot drift.
+    pub fn placement(&self) -> PlacementConfig {
+        PlacementConfig {
+            seed: self.seed,
+            transfer_faults: self.transfer_faults,
+            max_retries: self.max_retries,
+            retry_backoff_s: self.retry_backoff_s,
+        }
+    }
+}
+
+/// One tenant's measured share of a co-simulated fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantUsage {
+    pub name: String,
+    pub priority: u32,
+    pub weight: f64,
+    pub jobs: usize,
+    /// Jobs that reached a verified copy-back.
+    pub completed: usize,
+    /// Jobs dropped before completion (retries exhausted anywhere in
+    /// the staged pipeline).
+    pub aborted: usize,
+    /// Compute-fault events on this tenant's jobs.
+    pub failed_attempts: usize,
+    /// Billed effective minutes (wasted attempts included).
+    pub compute_minutes: f64,
+    pub cost_dollars: f64,
+    /// Last instant any of this tenant's jobs finished (copy-back, or
+    /// compute end for jobs dropped later in the pipeline).
+    pub makespan_s: f64,
+    /// p50/p95 of per-job queue wait: time spent in the pending pool
+    /// (admission instant − t=0) plus time queued for a transfer
+    /// stream. Jobs never admitted are excluded.
+    pub queue_wait_p50_s: f64,
+    pub queue_wait_p95_s: f64,
+    /// Share of the fleet's billed compute-minutes this tenant actually
+    /// received over the whole run (demand-dominated once queues
+    /// drain — see `contended_share` for the fairness signal).
+    pub fleet_share: f64,
+    /// Share of admitted effective-compute service granted while
+    /// *every* tenant still had pending work — the window where
+    /// arbitration, not demand, decides shares. 0.0 when the run never
+    /// contends (e.g. no depth cap). Fairness gates compare this to
+    /// `entitlement` (DESIGN.md §13 states the tolerance).
+    pub contended_share: f64,
+    /// weight / Σ weights.
+    pub entitlement: f64,
+    pub budget_dollars: Option<f64>,
+    pub deadline_s: Option<f64>,
+    pub budget_met: bool,
+    pub deadline_met: bool,
+}
+
+/// The fleet-wide fold of a multi-tenant run — `CampaignReport`'s
+/// multi-tenant sibling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenancyReport {
+    pub tenants: Vec<TenantUsage>,
+    /// Per-backend usage, identical fold to a placement run's.
+    pub per_backend: Vec<BackendUsage>,
+    pub total_cost_dollars: f64,
+    pub makespan_s: f64,
+    pub transfer: TransferStats,
+    /// Jobs + transfers dropped after exhausting retries, fleet-wide.
+    pub aborted: u64,
+    pub queue_depth: Option<usize>,
+}
+
+/// Full result of [`run_tenants`]: the report plus the flattened
+/// record-level detail the test battery asserts on.
+#[derive(Debug)]
+pub struct TenancyOutcome {
+    pub report: TenancyReport,
+    /// Flattened staged outcome over the global job-id space.
+    pub staged: StagedOutcome,
+    /// Global job → backend index.
+    pub assignment: Vec<usize>,
+    /// Global job → tenant index.
+    pub tenant_of: Vec<usize>,
+    /// Global job → admission instant (`f64::INFINITY` = never
+    /// admitted; cannot happen while slots are released on aborts).
+    pub admit_s: Vec<f64>,
+    /// Tenant index → `[start, end)` of its jobs in the global space.
+    pub tenant_ranges: Vec<(usize, usize)>,
+    pub compute_events: Vec<FaultEvent>,
+    pub transfer_events: Vec<FaultEvent>,
+}
+
+/// N tenants with decorrelated synthetic campaigns: tenant `k` draws
+/// its jobs from [`synthetic_fault_campaign`] seeded
+/// [`tenant_seed`]`(seed, k)` — the per-tenant analogue of placement's
+/// per-backend salt. Shared by `medflow tenants`, the tenancy benches,
+/// and the fairness battery so all three replay the same fleet.
+pub fn synthetic_tenants(n_tenants: usize, jobs_per_tenant: usize, seed: u64) -> Vec<TenantSpec> {
+    (0..n_tenants)
+        .map(|k| {
+            TenantSpec::new(
+                format!("tenant-{k:04}"),
+                synthetic_fault_campaign(jobs_per_tenant, tenant_seed(seed, k)),
+            )
+        })
+        .collect()
+}
+
+/// Admission arbiter: per-tenant pending pools, strict priority tiers,
+/// weighted fair-share (lowest virtual service first) within a tier,
+/// and the contended-window tallies the fairness gates read.
+struct Admission {
+    /// Per-tenant FIFO of global job indices not yet admitted.
+    pending: Vec<VecDeque<usize>>,
+    weight: Vec<f64>,
+    priority: Vec<u32>,
+    /// Admitted effective compute seconds / weight, per tenant.
+    vtime: Vec<f64>,
+    /// Global job → effective compute seconds (the service a grant
+    /// charges against the tenant's virtual time).
+    service: Vec<f64>,
+    in_flight: usize,
+    /// `usize::MAX` = unbounded.
+    depth: usize,
+    /// Tenants that started with ≥ 1 job — the population whose
+    /// simultaneous pending-ness defines the contended window.
+    active_total: usize,
+    contended_service: Vec<f64>,
+    contended_total: f64,
+}
+
+impl Admission {
+    fn new(
+        tenants: &[TenantSpec],
+        ranges: &[(usize, usize)],
+        effective: &[StagedJob],
+        queue_depth: Option<usize>,
+    ) -> Self {
+        let pending: Vec<VecDeque<usize>> =
+            ranges.iter().map(|&(lo, hi)| (lo..hi).collect()).collect();
+        Self {
+            active_total: pending.iter().filter(|q| !q.is_empty()).count(),
+            service: effective.iter().map(|j| j.compute_s).collect(),
+            weight: tenants.iter().map(|t| t.weight).collect(),
+            priority: tenants.iter().map(|t| t.priority).collect(),
+            vtime: vec![0.0; tenants.len()],
+            contended_service: vec![0.0; tenants.len()],
+            contended_total: 0.0,
+            in_flight: 0,
+            depth: queue_depth.unwrap_or(usize::MAX),
+            pending,
+        }
+    }
+
+    /// Grant one admission slot: highest priority tier first, lowest
+    /// virtual service within the tier, lowest tenant index on exact
+    /// ties — fully deterministic. Charges the job's service to the
+    /// tenant and to the contended tallies when every active tenant
+    /// still had pending work.
+    fn next(&mut self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut contending = 0usize;
+        for k in 0..self.pending.len() {
+            if self.pending[k].is_empty() {
+                continue;
+            }
+            contending += 1;
+            best = Some(match best {
+                None => k,
+                Some(b) => {
+                    let wins = self.priority[k] > self.priority[b]
+                        || (self.priority[k] == self.priority[b] && self.vtime[k] < self.vtime[b]);
+                    if wins {
+                        k
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        let k = best?;
+        let contended = contending == self.active_total;
+        let i = self.pending[k].pop_front().expect("best tenant has pending work");
+        let service = self.service[i];
+        self.vtime[k] += service / self.weight[k];
+        if contended {
+            self.contended_service[k] += service;
+            self.contended_total += service;
+        }
+        self.in_flight += 1;
+        Some(i)
+    }
+
+    fn release(&mut self) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+    }
+}
+
+/// [`super::staged::run_multi`]'s co-simulation loop with admission
+/// control threaded through: stage-ins are submitted when a job is
+/// *admitted* (not unconditionally at t=0), and a finished or dead job
+/// releases its fleet-wide admission slot to the arbiter.
+///
+/// With an unbounded depth the initial admission loop grants every job
+/// up front — for a single tenant that is `run_multi`'s
+/// all-stage-ins-at-zero loop in the same job order, and nothing below
+/// ever re-enters the arbiter, so the engine-call sequence is identical
+/// call for call (the N=1 parity gate).
+fn run_admitted(
+    effective: &[StagedJob],
+    assignment: &[usize],
+    engines: &mut [BackendEngine],
+    transfers: &mut TransferScheduler,
+    adm: &mut Admission,
+) -> (StagedOutcome, Vec<f64>) {
+    let n = effective.len();
+    let mut timings = vec![StagedTiming::default(); n];
+    let mut admit_s = vec![f64::INFINITY; n];
+    while adm.in_flight < adm.depth {
+        let Some(i) = adm.next() else { break };
+        admit_s[i] = 0.0;
+        transfers.submit_at(stage_in_id(i), assignment[i] as u64, effective[i].bytes_in, 0.0);
+    }
+    // transfer ids ≥ 2·jobs are re-stages; the map recovers their job
+    let mut next_restage_id = (n as u64) * 2;
+    let mut restage_job: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut events = MergedEvents::new();
+    let mut seen = 0usize;
+    let mut seen_engine_aborts = vec![0usize; engines.len()];
+    let mut seen_transfer_aborts = 0usize;
+    loop {
+        events.arm(transfers.next_event_time());
+        for engine in engines.iter() {
+            events.arm(engine.peek_next_event());
+        }
+        let Some(t) = events.pop_earliest() else { break };
+        transfers.advance_to(t);
+        // instants at which an admission slot freed this iteration
+        let mut freed: Vec<f64> = Vec::new();
+        {
+            // borrow, don't clone: this loop only reads the new
+            // completions (it mutates the engines and `timings`)
+            let records = transfers.records();
+            let new_from = seen;
+            seen = records.len();
+            for r in &records[new_from..] {
+                let (i, stage_in) = match restage_job.get(&r.id) {
+                    Some(&i) => (i, true),
+                    None => ((r.id / 2) as usize, r.id % 2 == 0),
+                };
+                if stage_in {
+                    timings[i].stage_in_wait_s = r.queue_wait_s();
+                    timings[i].stage_in_s = r.transfer_s();
+                    engines[assignment[i]].as_compute().submit(i as u64, r.end_s, &effective[i]);
+                } else {
+                    timings[i].stage_out_wait_s = r.queue_wait_s();
+                    timings[i].stage_out_s = r.transfer_s();
+                    timings[i].done_s = r.end_s;
+                    timings[i].completed = true;
+                    freed.push(r.end_s);
+                }
+            }
+        }
+        for engine in engines.iter_mut() {
+            for (id, end_s) in engine.as_compute().advance_to(t) {
+                let i = id as usize;
+                timings[i].compute_end_s = end_s;
+                timings[i].compute_start_s = end_s - effective[i].compute_s;
+                transfers.submit_at(
+                    stage_out_id(i),
+                    assignment[i] as u64,
+                    effective[i].bytes_out,
+                    end_s,
+                );
+            }
+            // timed-out attempts hand back here: their scratch inputs are
+            // gone, so the retry waits on a fresh (re-contending) stage-in
+            for (id, fail_s) in engine.as_compute().take_restage() {
+                let i = id as usize;
+                let rid = next_restage_id;
+                next_restage_id += 1;
+                restage_job.insert(rid, i);
+                transfers.submit_at(
+                    rid,
+                    assignment[i] as u64,
+                    effective[i].bytes_in,
+                    fail_s.max(transfers.clock()),
+                );
+            }
+        }
+        // dead jobs release their slots too, or a faulty run would leak
+        // admission capacity and starve the pending pool: the compute
+        // engines record retry-exhausted jobs, the transfer scheduler
+        // records dropped stage-ins/copy-backs — each dead job lands in
+        // exactly one of those lists
+        for (k, engine) in engines.iter().enumerate() {
+            let count = engine.aborted_count();
+            for _ in seen_engine_aborts[k]..count {
+                freed.push(t);
+            }
+            seen_engine_aborts[k] = count;
+        }
+        let transfer_aborts = transfers.aborted_ids().len();
+        for _ in seen_transfer_aborts..transfer_aborts {
+            freed.push(t);
+        }
+        seen_transfer_aborts = transfer_aborts;
+        // grant each freed slot to the next arbitrated pending job at
+        // the instant it freed
+        for at in freed {
+            adm.release();
+            if adm.in_flight < adm.depth {
+                if let Some(i) = adm.next() {
+                    let when = at.max(transfers.clock());
+                    admit_s[i] = when;
+                    transfers.submit_at(
+                        stage_in_id(i),
+                        assignment[i] as u64,
+                        effective[i].bytes_in,
+                        when,
+                    );
+                }
+            }
+        }
+    }
+    let makespan_s = timings
+        .iter()
+        .map(|x| x.compute_end_s)
+        .fold(transfers.stats().makespan_s, f64::max);
+    (
+        StagedOutcome {
+            makespan_s,
+            transfer: transfers.stats(),
+            timings,
+        },
+        admit_s,
+    )
+}
+
+/// Co-simulate N tenants against one shared fleet and one shared
+/// transfer scheduler (module docs; DESIGN.md §13).
+///
+/// Panics on invalid specs — non-finite or non-positive weights, a
+/// zero depth cap, an empty tenant list or fleet — matching the
+/// assert-early convention of `run_multi` and `Rng::below(0)`.
+pub fn run_tenants(
+    tenants: &[TenantSpec],
+    fleet: &[BackendSpec],
+    cfg: &TenancyConfig,
+) -> TenancyOutcome {
+    assert!(!tenants.is_empty(), "run_tenants needs at least one tenant");
+    assert!(!fleet.is_empty(), "run_tenants needs at least one backend");
+    for t in tenants {
+        assert!(
+            t.weight.is_finite() && t.weight > 0.0,
+            "tenant '{}': weight must be finite and > 0 (got {})",
+            t.name,
+            t.weight
+        );
+    }
+    if let Some(depth) = cfg.queue_depth {
+        assert!(depth >= 1, "queue depth cap must be at least 1");
+    }
+    let pcfg = cfg.placement();
+    // per-tenant plans over the shared fleet, flattened tenant-by-tenant
+    // into one global job-id space: unique transfer ids 2i/2i+1 on the
+    // ONE shared scheduler, and per-(tenant, job, attempt) fault
+    // decorrelation, both fall out of the flattening
+    let mut effective: Vec<StagedJob> = Vec::new();
+    let mut assignment: Vec<usize> = Vec::new();
+    let mut tenant_of: Vec<usize> = Vec::new();
+    let mut tenant_ranges: Vec<(usize, usize)> = Vec::with_capacity(tenants.len());
+    for (k, t) in tenants.iter().enumerate() {
+        let start = effective.len();
+        if !t.jobs.is_empty() {
+            let p = plan(&t.jobs, fleet, t.policy);
+            effective.extend(p.effective);
+            assignment.extend(p.assignment);
+        }
+        tenant_of.resize(effective.len(), k);
+        tenant_ranges.push((start, effective.len()));
+    }
+    let mut engines: Vec<BackendEngine> = fleet
+        .iter()
+        .enumerate()
+        .map(|(k, b)| build_engine(b, k, &pcfg))
+        .collect();
+    let mut transfers =
+        TransferScheduler::new(shared_topology(fleet), cfg.seed ^ PLACEMENT_TRANSFER_SALT);
+    if let Some(m) = cfg.transfer_faults {
+        transfers.set_faults(Injection::campaign_transfer(&m, cfg.max_retries, cfg.seed));
+    }
+    let mut adm = Admission::new(tenants, &tenant_ranges, &effective, cfg.queue_depth);
+    let (staged, admit_s) =
+        run_admitted(&effective, &assignment, &mut engines, &mut transfers, &mut adm);
+    let (wasted_min, compute_events) = collect_compute_faults(&engines, effective.len());
+    let per_backend = fold_backend_usage(
+        fleet,
+        &effective,
+        &assignment,
+        &staged.timings,
+        &wasted_min,
+        &engines,
+    );
+    let aborted = engines.iter().map(|e| e.aborted_count()).sum::<usize>()
+        + transfers.aborted_ids().len();
+
+    let weight_total: f64 = tenants.iter().map(|t| t.weight).sum();
+    let fleet_minutes_total: f64 = per_backend.iter().map(|u| u.compute_minutes).sum();
+    let mut failed_by_tenant = vec![0usize; tenants.len()];
+    for ev in &compute_events {
+        if let Some(&k) = tenant_of.get(ev.id as usize) {
+            failed_by_tenant[k] += 1;
+        }
+    }
+    let mut usages = Vec::with_capacity(tenants.len());
+    for (k, spec) in tenants.iter().enumerate() {
+        let (lo, hi) = tenant_ranges[k];
+        let mut completed = 0usize;
+        let mut minutes = 0.0f64;
+        let mut dollars = 0.0f64;
+        let mut makespan = 0.0f64;
+        let mut waits: Vec<f64> = Vec::with_capacity(hi - lo);
+        for i in lo..hi {
+            let t = &staged.timings[i];
+            if t.completed {
+                completed += 1;
+            }
+            let (m, d) =
+                job_billing(fleet[assignment[i]].env, effective[i].compute_s, wasted_min[i], t);
+            minutes += m;
+            dollars += d;
+            makespan = makespan.max(t.done_s).max(t.compute_end_s);
+            if admit_s[i].is_finite() {
+                waits.push(admit_s[i] + t.stage_in_wait_s);
+            }
+        }
+        let ps = percentiles(&waits, &[50.0, 95.0]);
+        usages.push(TenantUsage {
+            name: spec.name.clone(),
+            priority: spec.priority,
+            weight: spec.weight,
+            jobs: hi - lo,
+            completed,
+            aborted: (hi - lo) - completed,
+            failed_attempts: failed_by_tenant[k],
+            compute_minutes: minutes,
+            cost_dollars: dollars,
+            makespan_s: makespan,
+            queue_wait_p50_s: ps[0],
+            queue_wait_p95_s: ps[1],
+            fleet_share: if fleet_minutes_total > 0.0 {
+                minutes / fleet_minutes_total
+            } else {
+                0.0
+            },
+            contended_share: if adm.contended_total > 0.0 {
+                adm.contended_service[k] / adm.contended_total
+            } else {
+                0.0
+            },
+            entitlement: spec.weight / weight_total,
+            budget_dollars: spec.budget_dollars,
+            deadline_s: spec.deadline_s,
+            budget_met: spec.budget_dollars.is_none_or(|b| dollars <= b),
+            deadline_met: spec.deadline_s.is_none_or(|d| makespan <= d),
+        });
+    }
+    let report = TenancyReport {
+        tenants: usages,
+        // total from the per-backend fold, in fleet order — the same
+        // accumulation placement sums, so N=1 totals match f64-exactly
+        total_cost_dollars: per_backend.iter().map(|u| u.cost_dollars).sum(),
+        makespan_s: staged.makespan_s,
+        transfer: staged.transfer,
+        per_backend,
+        aborted: aborted as u64,
+        queue_depth: cfg.queue_depth,
+    };
+    TenancyOutcome {
+        report,
+        assignment,
+        tenant_of,
+        admit_s,
+        tenant_ranges,
+        compute_events,
+        transfer_events: transfers.fault_events().to_vec(),
+        staged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::BackendKind;
+    use crate::netsim::Env;
+
+    fn uniform_jobs(n: usize, compute_s: f64) -> Vec<StagedJob> {
+        (0..n)
+            .map(|_| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s,
+                bytes_in: 20_000_000,
+                bytes_out: 5_000_000,
+            })
+            .collect()
+    }
+
+    fn lanes_fleet(workers: usize) -> Vec<BackendSpec> {
+        vec![BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Lanes { workers },
+            faults: None,
+            transfer_streams: 4,
+        }]
+    }
+
+    fn spec(name: &str, weight: f64, priority: u32, jobs: Vec<StagedJob>) -> TenantSpec {
+        TenantSpec {
+            weight,
+            priority,
+            ..TenantSpec::new(name, jobs)
+        }
+    }
+
+    #[test]
+    fn arbiter_splits_service_by_weight() {
+        // uniform service, weights 1:2:4 — grant counts track weights
+        // within one-job granularity at every prefix of the sequence
+        let tenants = vec![
+            spec("w1", 1.0, 0, uniform_jobs(70, 100.0)),
+            spec("w2", 2.0, 0, uniform_jobs(70, 100.0)),
+            spec("w4", 4.0, 0, uniform_jobs(70, 100.0)),
+        ];
+        let ranges = [(0usize, 70usize), (70, 140), (140, 210)];
+        let effective: Vec<StagedJob> = tenants.iter().flat_map(|t| t.jobs.clone()).collect();
+        let mut adm = Admission::new(&tenants, &ranges, &effective, Some(1));
+        let mut counts = [0usize; 3];
+        for _ in 0..70 {
+            let i = adm.next().expect("work pending");
+            counts[ranges.iter().position(|&(lo, hi)| (lo..hi).contains(&i)).unwrap()] += 1;
+            adm.release();
+        }
+        // after 70 grants at weights 1:2:4, entitlements are 10/20/40
+        assert!((counts[0] as i64 - 10).abs() <= 1, "{counts:?}");
+        assert!((counts[1] as i64 - 20).abs() <= 1, "{counts:?}");
+        assert!((counts[2] as i64 - 40).abs() <= 1, "{counts:?}");
+        // contended tallies cover the whole prefix (nobody drained)
+        assert!(adm.contended_total > 0.0);
+    }
+
+    #[test]
+    fn arbiter_priority_preempts_pending_work() {
+        // the priority-2 tenant's pending jobs all admit before any
+        // priority-0 job, regardless of weights
+        let tenants = vec![
+            spec("low", 100.0, 0, uniform_jobs(5, 10.0)),
+            spec("high", 1.0, 2, uniform_jobs(5, 10.0)),
+        ];
+        let ranges = [(0usize, 5usize), (5, 10)];
+        let effective: Vec<StagedJob> = tenants.iter().flat_map(|t| t.jobs.clone()).collect();
+        let mut adm = Admission::new(&tenants, &ranges, &effective, None);
+        let order: Vec<usize> = std::iter::from_fn(|| adm.next()).collect();
+        assert_eq!(order[..5], [5, 6, 7, 8, 9], "high tier first");
+        assert_eq!(order[5..], [0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn depth_cap_serializes_and_unbounded_matches_multi() {
+        let tenants = vec![spec("solo", 1.0, 0, uniform_jobs(4, 50.0))];
+        let fleet = lanes_fleet(4);
+        // depth 1: at most one job in flight — each admission waits for
+        // the previous job's copy-back
+        let capped = run_tenants(
+            &tenants,
+            &fleet,
+            &TenancyConfig {
+                queue_depth: Some(1),
+                ..Default::default()
+            },
+        );
+        assert!(capped.staged.timings.iter().all(|t| t.completed));
+        for i in 1..4 {
+            let prev_done = capped.staged.timings[i - 1].done_s;
+            assert!(
+                capped.admit_s[i] >= prev_done,
+                "admission {i} at {} before predecessor finished at {prev_done}",
+                capped.admit_s[i]
+            );
+        }
+        // unbounded: everything admitted at t=0, finishing sooner
+        let open = run_tenants(&tenants, &fleet, &TenancyConfig::default());
+        assert!(open.admit_s.iter().all(|&a| a == 0.0));
+        assert!(open.report.makespan_s < capped.report.makespan_s);
+    }
+
+    #[test]
+    fn zero_job_tenant_reports_empty_telemetry() {
+        let tenants = vec![
+            spec("busy", 1.0, 0, uniform_jobs(3, 30.0)),
+            spec("idle", 1.0, 0, Vec::new()),
+        ];
+        let out = run_tenants(&tenants, &lanes_fleet(2), &TenancyConfig::default());
+        let idle = &out.report.tenants[1];
+        assert_eq!((idle.jobs, idle.completed, idle.aborted), (0, 0, 0));
+        assert_eq!(idle.cost_dollars, 0.0);
+        assert_eq!(idle.makespan_s, 0.0);
+        // empty queue-wait folds hit util::units' documented 0.0 return
+        assert_eq!((idle.queue_wait_p50_s, idle.queue_wait_p95_s), (0.0, 0.0));
+        assert_eq!(out.report.tenants[0].completed, 3);
+    }
+
+    #[test]
+    fn tenants_with_identical_jobs_draw_decorrelated_faults() {
+        // same job list, harsh faults: the flattened id space must keep
+        // the two tenants' retry traces apart
+        let jobs = uniform_jobs(40, 200.0);
+        let mut fleet = lanes_fleet(8);
+        fleet[0].faults = Some(crate::faults::FaultModel::harsh());
+        let tenants = vec![
+            spec("a", 1.0, 0, jobs.clone()),
+            spec("b", 1.0, 0, jobs),
+        ];
+        let out = run_tenants(&tenants, &fleet, &TenancyConfig::default());
+        assert!(!out.compute_events.is_empty(), "harsh faults must fire");
+        let (alo, ahi) = out.tenant_ranges[0];
+        let a: Vec<(u64, u32)> = out
+            .compute_events
+            .iter()
+            .filter(|e| (alo..ahi).contains(&(e.id as usize)))
+            .map(|e| (e.id, e.attempt))
+            .collect();
+        let b: Vec<(u64, u32)> = out
+            .compute_events
+            .iter()
+            .filter(|e| !(alo..ahi).contains(&(e.id as usize)))
+            .map(|e| (e.id - ahi as u64, e.attempt))
+            .collect();
+        assert_ne!(a, b, "tenants must not replay each other's verdicts");
+    }
+
+    #[test]
+    #[should_panic(expected = "weight must be finite and > 0")]
+    fn zero_weight_is_rejected() {
+        let tenants = vec![spec("bad", 0.0, 0, uniform_jobs(1, 10.0))];
+        run_tenants(&tenants, &lanes_fleet(1), &TenancyConfig::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "queue depth cap must be at least 1")]
+    fn zero_depth_is_rejected() {
+        let tenants = vec![spec("t", 1.0, 0, uniform_jobs(1, 10.0))];
+        run_tenants(
+            &tenants,
+            &lanes_fleet(1),
+            &TenancyConfig {
+                queue_depth: Some(0),
+                ..Default::default()
+            },
+        );
+    }
+
+    #[test]
+    fn synthetic_tenants_are_deterministic_and_decorrelated() {
+        let a = synthetic_tenants(3, 5, 7);
+        let b = synthetic_tenants(3, 5, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.jobs, y.jobs, "same seed replays the same fleet");
+        }
+        assert_ne!(a[0].jobs, a[1].jobs, "tenants draw distinct campaigns");
+    }
+}

@@ -475,6 +475,22 @@ pub const FAULT_CROSSCHECK_SALT: u64 = 0x6f76_6572_7275_6e31; // "overrun1"
 /// Multiplied by `backend index + 1` to decorrelate the per-backend
 /// compute-fault streams of a placement fleet (DESIGN.md §12).
 pub const FAULT_PLACEMENT_SALT: u64 = 0x706c_6163_6661_756c; // "placfaul"
+/// Multiplied by `tenant index + 1` to decorrelate per-tenant streams
+/// of a multi-tenant co-simulation (DESIGN.md §13): tenants with
+/// identical job lists must not draw identical workloads or verdicts.
+pub const FAULT_TENANT_SALT: u64 = 0x7465_6e61_6e74_3031; // "tenant01"
+
+/// Seed for tenant `tenant`'s private deterministic streams, following
+/// the [`FAULT_PLACEMENT_SALT`] pattern (`Injection::placement_compute`):
+/// `+1` so tenant 0 is salted too, multiply so nearby tenants land far
+/// apart. In-engine compute/transfer verdicts are *additionally*
+/// decorrelated per (tenant, job, attempt) without any per-tenant
+/// injection: `coordinator::tenancy` flattens tenants into one global
+/// job-id space, so [`attempt_rng`]'s id term separates two tenants'
+/// same-numbered jobs.
+pub fn tenant_seed(seed: u64, tenant: usize) -> u64 {
+    seed.wrapping_add((tenant as u64 + 1).wrapping_mul(FAULT_TENANT_SALT))
+}
 
 /// Outcome of running one job under a fault model with retries.
 #[derive(Debug, Clone, PartialEq)]
@@ -541,6 +557,20 @@ pub fn expected_overrun(model: &FaultModel, max_retries: u32, samples: u32, seed
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tenant_seed_decorrelates_and_replays() {
+        // deterministic: same (seed, tenant) → same stream seed
+        assert_eq!(tenant_seed(42, 7), tenant_seed(42, 7));
+        // tenant 0 is salted away from the raw seed, like backend 0 in
+        // Injection::placement_compute
+        assert_ne!(tenant_seed(42, 0), 42);
+        // neighbours land far apart
+        let a = tenant_seed(42, 0);
+        let b = tenant_seed(42, 1);
+        assert_ne!(a, b);
+        assert!(a.abs_diff(b) > 1 << 32, "{a:#x} vs {b:#x}");
+    }
 
     #[test]
     fn no_faults_means_factor_one() {

@@ -23,6 +23,7 @@ use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
 use medflow::coordinator::placement::{self, PlacementConfig, PlacementPolicy};
 use medflow::coordinator::staged::{run_staged, synthetic_fault_campaign, SlurmSim};
+use medflow::coordinator::tenancy;
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
 use medflow::faults::{FaultModel, FaultTelemetry, Injection};
 use medflow::netsim::scheduler::{Topology, TransferScheduler};
@@ -127,6 +128,7 @@ fn run() -> Result<()> {
         "transfer-sim" => cmd_transfer_sim(&args),
         "faults" => cmd_faults(&args),
         "place" => cmd_place(&args),
+        "tenants" => cmd_tenants(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
             for years in [0.0, 1.0, 3.0, 5.0] {
@@ -489,6 +491,104 @@ fn cmd_place(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `medflow tenants`: co-simulate N independent tenant campaigns
+/// against ONE shared heterogeneous fleet and staging path
+/// (DESIGN.md §13) — weighted fair-share + priority arbitration at
+/// admission time, optional queue-depth backpressure — and print the
+/// per-tenant telemetry table plus shared-fleet usage.
+fn cmd_tenants(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print_usage();
+        return Ok(());
+    }
+    let n_tenants = args.num("tenants", 8).max(1) as usize;
+    let jobs_per = args.num("jobs-per", 50).max(1) as usize;
+    let seed = args.num("seed", 42);
+    let retries = args.num("retries", 3) as u32;
+    let policy = parse_placement_policy(args.get("policy").unwrap_or("cheapest"), args)?;
+    let weights: Vec<f64> = args
+        .get("weights")
+        .unwrap_or("1")
+        .split(',')
+        .map(|w| {
+            let w = w.trim();
+            match w.parse::<f64>() {
+                Ok(v) if v.is_finite() && v > 0.0 => Ok(v),
+                _ => bail!("invalid tenant weight '{w}' (must be a finite number > 0)"),
+            }
+        })
+        .collect::<Result<_>>()?;
+    let priorities: Vec<u32> = args
+        .get("priorities")
+        .unwrap_or("0")
+        .split(',')
+        .map(|p| {
+            let p = p.trim();
+            match p.parse::<u32>() {
+                Ok(v) => Ok(v),
+                _ => bail!("invalid tenant priority '{p}' (must be a non-negative integer)"),
+            }
+        })
+        .collect::<Result<_>>()?;
+    let queue_depth = match args.get("depth") {
+        Some(d) => match d.parse::<usize>() {
+            Ok(v) if v >= 1 => Some(v),
+            _ => bail!("invalid queue depth '{d}' (must be an integer ≥ 1)"),
+        },
+        None => None,
+    };
+    let model = match args.get("faults") {
+        Some(name) => Some(parse_fault_model(name)?),
+        None if args.has("faults") => Some(FaultModel::typical()),
+        None => None,
+    };
+    if let Some(m) = &model {
+        m.validate().map_err(anyhow::Error::msg)?;
+    }
+    let mut fleet = placement::default_fleet(
+        ClusterSpec::accre(),
+        args.num("concurrent", 2_000) as u32,
+        args.num("cloud-lanes", 64).max(1) as usize,
+        args.num("local-lanes", 8).max(1) as usize,
+    );
+    if let Some(m) = model {
+        for backend in &mut fleet {
+            backend.faults = Some(m);
+        }
+    }
+    let mut tenants = tenancy::synthetic_tenants(n_tenants, jobs_per, seed);
+    for (k, t) in tenants.iter_mut().enumerate() {
+        t.weight = weights[k % weights.len()];
+        t.priority = priorities[k % priorities.len()];
+        t.policy = policy;
+    }
+    let cfg = tenancy::TenancyConfig {
+        seed,
+        transfer_faults: model,
+        max_retries: retries,
+        retry_backoff_s: args.num("backoff", 60) as f64,
+        queue_depth,
+    };
+    println!(
+        "tenancy co-simulation: {n_tenants} tenants × {jobs_per} jobs across {} backends (retries {retries}, seed {seed})",
+        fleet.len()
+    );
+    let out = tenancy::run_tenants(&tenants, &fleet, &cfg);
+    print!("{}", report::format_tenancy(&out.report));
+    println!();
+    print!("{}", report::format_placement(&policy.label(), &out.report.per_backend));
+    print!("{}", report::format_transfer_stats(&out.report.transfer));
+    if model.is_some() {
+        println!(
+            "faults: {} failed compute attempts, {} checksum retries, {} aborted",
+            out.compute_events.len(),
+            out.transfer_events.len(),
+            out.report.aborted
+        );
+    }
+    Ok(())
+}
+
 /// `medflow faults`: run the shared synthetic campaign
 /// ([`synthetic_fault_campaign`]) through the staged co-simulation
 /// fault-free and under the chosen model (in-engine injection,
@@ -689,6 +789,10 @@ USAGE:
                     [--jobs N] [--frontier [STEPS]] [--faults none|typical|harsh]
                     [--cloud-lanes N] [--local-lanes N] [--seed S]
                                                   (heterogeneous fleet placement, DESIGN.md §12)
+  medflow tenants   [--tenants N] [--jobs-per N] [--depth CAP] [--weights W1,W2,…]
+                    [--priorities P1,P2,…] [--policy cheapest|deadline|budget]
+                    [--faults none|typical|harsh] [--retries N] [--seed S]
+                                                  (multi-tenant shared fleet, DESIGN.md §13)
   medflow pipelines
   medflow table1 | table2 | table3 | fig1"
     );

@@ -431,6 +431,71 @@ pub fn format_placement(
     s
 }
 
+/// Render a multi-tenant co-simulation's per-tenant telemetry
+/// (`medflow tenants`; DESIGN.md §13). The per-tenant table caps at 16
+/// rows — the sweeps run 10^3 tenants — and summarizes the remainder;
+/// the TOTAL row always folds every tenant.
+pub fn format_tenancy(report: &crate::coordinator::tenancy::TenancyReport) -> String {
+    let depth = match report.queue_depth {
+        Some(d) => format!("depth {d}"),
+        None => "unbounded depth".to_string(),
+    };
+    let mut s = format!(
+        "tenancy co-simulation [{} tenants, {depth}]\n",
+        report.tenants.len()
+    );
+    s.push_str(&format!(
+        "{:<14}{:>5}{:>8}{:>6}{:>6}{:>12}{:>11}{:>11}{:>11}{:>9}{:>9}\n",
+        "tenant", "prio", "weight", "jobs", "done", "cost ($)", "makespan", "wait p50", "wait p95",
+        "share%", "entl%"
+    ));
+    const MAX_ROWS: usize = 16;
+    for u in report.tenants.iter().take(MAX_ROWS) {
+        s.push_str(&format!(
+            "{:<14}{:>5}{:>8.2}{:>6}{:>6}{:>12.4}{:>11}{:>11}{:>11}{:>9.2}{:>9.2}\n",
+            u.name,
+            u.priority,
+            u.weight,
+            u.jobs,
+            u.completed,
+            u.cost_dollars,
+            fmt_duration(u.makespan_s),
+            fmt_duration(u.queue_wait_p50_s),
+            fmt_duration(u.queue_wait_p95_s),
+            100.0 * u.fleet_share,
+            100.0 * u.entitlement
+        ));
+    }
+    if report.tenants.len() > MAX_ROWS {
+        s.push_str(&format!(
+            "… {} more tenants\n",
+            report.tenants.len() - MAX_ROWS
+        ));
+    }
+    let jobs: usize = report.tenants.iter().map(|u| u.jobs).sum();
+    let completed: usize = report.tenants.iter().map(|u| u.completed).sum();
+    s.push_str(&format!(
+        "{:<14}{:>5}{:>8}{:>6}{:>6}{:>12.4}{:>11}\n",
+        "TOTAL",
+        "",
+        "",
+        jobs,
+        completed,
+        report.total_cost_dollars,
+        fmt_duration(report.makespan_s)
+    ));
+    let violations = report
+        .tenants
+        .iter()
+        .filter(|u| !u.budget_met || !u.deadline_met)
+        .count();
+    s.push_str(&format!(
+        "aborted {}  ·  SLO violations {violations}\n",
+        report.aborted
+    ));
+    s
+}
+
 /// Render a cost-vs-makespan Pareto frontier (`medflow place
 /// --frontier`; DESIGN.md §12) — the full curve Fig. 1 only showed two
 /// points of. Points arrive pruned ([`crate::coordinator::placement::pareto`]):
@@ -630,6 +695,36 @@ mod tests {
         assert!(s.lines().last().unwrap().contains("TOTAL"), "{s}");
         assert!(s.contains("14"), "totals row sums jobs:\n{s}");
         assert!(s.contains("5.7500"), "totals row sums dollars:\n{s}");
+    }
+
+    #[test]
+    fn format_tenancy_caps_rows_and_totals_all() {
+        use crate::coordinator::placement::{BackendKind, BackendSpec};
+        use crate::coordinator::tenancy::{run_tenants, synthetic_tenants, TenancyConfig};
+        let fleet = vec![BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Lanes { workers: 4 },
+            faults: None,
+            transfer_streams: 4,
+        }];
+        let tenants = synthetic_tenants(20, 2, 5);
+        let cfg = TenancyConfig {
+            queue_depth: Some(8),
+            ..Default::default()
+        };
+        let out = run_tenants(&tenants, &fleet, &cfg);
+        let s = format_tenancy(&out.report);
+        assert!(s.contains("tenancy co-simulation [20 tenants, depth 8]"), "{s}");
+        assert!(s.contains("tenant-0000"), "{s}");
+        // 20 tenants, 16-row cap: the remainder is summarized …
+        assert!(s.contains("… 4 more tenants"), "{s}");
+        assert!(!s.contains("tenant-0019"), "row 20 must be elided: {s}");
+        // … but the TOTAL row folds all 40 jobs
+        let total = s.lines().find(|l| l.starts_with("TOTAL")).unwrap();
+        assert!(total.contains("40"), "{total}");
+        assert!(s.contains("wait p95"), "{s}");
+        assert!(s.contains("SLO violations 0"), "{s}");
     }
 
     #[test]

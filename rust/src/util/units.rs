@@ -102,6 +102,13 @@ pub fn fmt_duration(secs: f64) -> String {
 }
 
 /// Mean and sample standard deviation.
+///
+/// **Empty-slice contract:** returns `(0.0, 0.0)` — never NaN. Report
+/// folds call this on telemetry that can legitimately be empty (a
+/// tenant with zero jobs, a run with zero transfers), and a 0.0 row
+/// renders; a NaN row poisons every downstream aggregate. A single
+/// sample likewise reports `std = 0.0`, not NaN from the `n - 1`
+/// divisor.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
         return (0.0, 0.0);
@@ -125,7 +132,17 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 /// NaN samples (reachable from any f64 telemetry) order after every
 /// number via `total_cmp` instead of panicking the comparator; they
 /// surface in the top percentiles rather than poisoning the call.
+///
+/// **Empty-slice contract:** returns `0.0` — same sentinel as
+/// [`mean_std`], for the same reason (empty telemetry renders as a
+/// zero row, never NaN). A percentile outside [0, 100] is a caller
+/// bug and asserts instead of indexing out of range (p > 100) or
+/// silently clamping (p < 0).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(
+        (0.0..=100.0).contains(&p),
+        "percentile {p} out of range [0, 100]"
+    );
     if xs.is_empty() {
         return 0.0;
     }
@@ -150,7 +167,17 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// every requested percentile off the same order statistics — the
 /// multi-percentile report tables (queue-wait p50/p95, transfer-wait
 /// rows) sit on this instead of re-sorting per percentile.
+///
+/// **Empty-slice contract:** returns `0.0` for every requested
+/// percentile ([`percentile`]'s sentinel, element-wise), and asserts
+/// the same [0, 100] range on each `p`.
 pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    for &p in ps {
+        assert!(
+            (0.0..=100.0).contains(&p),
+            "percentile {p} out of range [0, 100]"
+        );
+    }
     if xs.is_empty() {
         return vec![0.0; ps.len()];
     }
@@ -245,6 +272,34 @@ mod tests {
     fn mean_std_degenerate() {
         assert_eq!(mean_std(&[]), (0.0, 0.0));
         assert_eq!(mean_std(&[3.0]), (3.0, 0.0));
+    }
+
+    #[test]
+    fn empty_slices_return_zero_sentinels_not_nan() {
+        // the documented contract, pinned for all three folds: empty
+        // telemetry reports 0.0 rows, never NaN
+        let (m, s) = mean_std(&[]);
+        assert_eq!((m, s), (0.0, 0.0));
+        assert!(!m.is_nan() && !s.is_nan());
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        assert_eq!(percentiles(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
+        assert_eq!(percentiles(&[], &[]), Vec::<f64>::new());
+        // non-empty slices of zeros are indistinguishable on purpose
+        assert_eq!(percentiles(&[0.0], &[50.0]), vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range [0, 100]")]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0, 2.0], 101.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range [0, 100]")]
+    fn percentiles_reject_negative_p() {
+        percentiles(&[1.0, 2.0], &[50.0, -0.5]);
     }
 
     #[test]

@@ -157,6 +157,41 @@ fn campaign_placement_reports_backend_usage() {
 }
 
 #[test]
+fn tenants_cli_reports_fairness_table() {
+    // happy path: a small weighted, prioritized co-simulation over the
+    // default fleet, with a binding admission cap
+    let out = run_ok(&[
+        "tenants", "--tenants", "6", "--jobs-per", "20", "--depth", "16", "--weights", "1,2",
+        "--priorities", "1,0", "--faults", "typical", "--seed", "7",
+    ]);
+    assert!(out.contains("tenancy co-simulation"), "{out}");
+    assert!(out.contains("tenant-0000") && out.contains("tenant-0005"), "{out}");
+    assert!(out.contains("wait p95") && out.contains("entl%"), "{out}");
+    assert!(out.contains("TOTAL"), "{out}");
+    assert!(out.contains("SLO violations"), "{out}");
+    assert!(out.contains("failed compute attempts"), "{out}");
+
+    // rejected knobs fail cleanly, naming the offending value
+    for (args, needle) in [
+        (vec!["tenants", "--weights", "0"], "invalid tenant weight"),
+        (vec!["tenants", "--weights", "1,nope"], "invalid tenant weight"),
+        (vec!["tenants", "--priorities", "nope"], "invalid tenant priority"),
+        (vec!["tenants", "--priorities", "-1"], "invalid tenant priority"),
+        (vec!["tenants", "--depth", "0"], "invalid queue depth"),
+    ] {
+        let out = medflow().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(stderr.contains(needle), "{args:?}: {stderr}");
+    }
+
+    // --help prints the usage block instead of running a simulation
+    let out = run_ok(&["tenants", "--help"]);
+    assert!(out.contains("medflow tenants"), "{out}");
+    assert!(out.contains("--weights"), "{out}");
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = medflow().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

@@ -1,0 +1,153 @@
+//! Tenancy parity gates (DESIGN.md §13): a single tenant with no
+//! admission cap IS the placement engine. `run_tenants` over one
+//! `TenantSpec` must be **f64-record-identical** to
+//! `coordinator::placement::execute` on the same fleet, seed, and
+//! policy — timings, transfer stats, per-backend usage, dollars, and
+//! fault-event streams — for every policy, clean and under harsh
+//! faults. The multi-tenant machinery must cost exactly nothing in
+//! bit-drift when there is nothing to arbitrate.
+
+use medflow::coordinator::placement::{execute, BackendKind, BackendSpec, PlacementPolicy};
+use medflow::coordinator::staged::StagedJob;
+use medflow::coordinator::tenancy::{run_tenants, TenancyConfig, TenantSpec};
+use medflow::faults::FaultModel;
+use medflow::netsim::Env;
+use medflow::slurm::ClusterSpec;
+use medflow::util::rng::Rng;
+
+fn staged_jobs(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1 + rng.below(3) as u32,
+            ram_gb: 1 + rng.below(8) as u32,
+            compute_s: 20.0 + rng.next_f64() * 400.0,
+            bytes_in: 10_000_000 + rng.below(150_000_000),
+            bytes_out: 1_000_000 + rng.below(50_000_000),
+        })
+        .collect()
+}
+
+/// The heterogeneous trio — a constrained Slurm cluster plus two lane
+/// pools — so parity crosses every engine kind in one run.
+fn trio_fleet() -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(6, 8, 64),
+                max_concurrent: 24,
+            },
+            faults: None,
+            transfer_streams: 6,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 16 },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 2 },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+fn solo(policy: PlacementPolicy, jobs: Vec<StagedJob>) -> Vec<TenantSpec> {
+    vec![TenantSpec {
+        policy,
+        ..TenantSpec::new("solo", jobs)
+    }]
+}
+
+fn every_policy() -> [PlacementPolicy; 6] {
+    [
+        PlacementPolicy::CheapestFirst,
+        PlacementPolicy::DeadlineAware { deadline_s: 2_000.0 },
+        PlacementPolicy::BudgetCapped { budget_dollars: 5.0 },
+        PlacementPolicy::Pinned(0),
+        PlacementPolicy::Pinned(1),
+        PlacementPolicy::Pinned(2),
+    ]
+}
+
+/// Acceptance: clean N=1 parity across every policy — the whole
+/// record surface matches f64-exactly, and the tenancy-only telemetry
+/// is coherent with it (all jobs admitted at t=0, all completed).
+#[test]
+fn single_unbounded_tenant_is_record_identical_to_placement() {
+    let js = staged_jobs(120, 61);
+    let fleet = trio_fleet();
+    for policy in every_policy() {
+        let cfg = TenancyConfig {
+            seed: 61,
+            ..Default::default()
+        };
+        let base = execute(&js, &fleet, policy, &cfg.placement());
+        let one = run_tenants(&solo(policy, js.clone()), &fleet, &cfg);
+        assert_eq!(one.staged.timings, base.staged.timings, "{policy:?}");
+        assert_eq!(one.staged.makespan_s, base.staged.makespan_s, "{policy:?}");
+        assert_eq!(one.staged.transfer, base.staged.transfer, "{policy:?}");
+        assert_eq!(one.assignment, base.plan.assignment, "{policy:?}");
+        assert_eq!(one.report.per_backend, base.per_backend, "{policy:?}");
+        assert_eq!(one.report.total_cost_dollars, base.total_cost_dollars, "{policy:?}");
+        assert_eq!(one.report.makespan_s, base.makespan_s, "{policy:?}");
+        assert_eq!(one.report.aborted, base.aborted, "{policy:?}");
+        assert!(one.compute_events.is_empty() && base.compute_events.is_empty());
+        assert!(one.transfer_events.is_empty() && base.transfer_events.is_empty());
+
+        let u = &one.report.tenants[0];
+        assert_eq!(u.completed, js.len(), "{policy:?}");
+        assert!(one.admit_s.iter().all(|&t| t == 0.0), "unbounded: all admitted at t=0");
+        assert_eq!(u.entitlement, 1.0, "a lone tenant is entitled to the whole fleet");
+        assert!(
+            (u.cost_dollars - base.total_cost_dollars).abs() < 1e-6,
+            "{policy:?}: tenant fold ${} vs placement fold ${}",
+            u.cost_dollars,
+            base.total_cost_dollars
+        );
+    }
+}
+
+/// The same parity under harsh compute + transfer faults: retry
+/// traces, wasted-minute billing, aborts, and both fault-event streams
+/// replay identically through the tenancy path.
+#[test]
+fn single_tenant_parity_holds_under_harsh_faults() {
+    let js = staged_jobs(90, 67);
+    let mut fleet = trio_fleet();
+    for backend in &mut fleet {
+        backend.faults = Some(FaultModel::harsh());
+    }
+    for policy in every_policy() {
+        let cfg = TenancyConfig {
+            seed: 67,
+            transfer_faults: Some(FaultModel::harsh()),
+            ..Default::default()
+        };
+        let base = execute(&js, &fleet, policy, &cfg.placement());
+        let one = run_tenants(&solo(policy, js.clone()), &fleet, &cfg);
+        assert_eq!(one.staged.timings, base.staged.timings, "{policy:?}");
+        assert_eq!(one.staged.transfer, base.staged.transfer, "{policy:?}");
+        assert_eq!(one.report.per_backend, base.per_backend, "{policy:?}");
+        assert_eq!(one.report.total_cost_dollars, base.total_cost_dollars, "{policy:?}");
+        assert_eq!(one.report.aborted, base.aborted, "{policy:?}");
+        assert_eq!(one.compute_events, base.compute_events, "{policy:?}");
+        assert_eq!(one.transfer_events, base.transfer_events, "{policy:?}");
+    }
+    // harsh rates over 90 jobs × 6 policies must actually exercise the
+    // fault path somewhere, or the parity above is vacuous
+    let cfg = TenancyConfig {
+        seed: 67,
+        transfer_faults: Some(FaultModel::harsh()),
+        ..Default::default()
+    };
+    let one = run_tenants(&solo(PlacementPolicy::CheapestFirst, js), &fleet, &cfg);
+    assert!(!one.compute_events.is_empty() || !one.transfer_events.is_empty());
+}
