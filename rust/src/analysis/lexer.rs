@@ -1,0 +1,364 @@
+//! Source stripper for the determinism lint ([`crate::analysis`]).
+//!
+//! Splits Rust source into per-line **code** and **comment** channels so
+//! the rule matchers in [`crate::analysis::rules`] never fire on tokens
+//! inside comments or string literals, and suppression directives are
+//! only read from comments. A character-level state machine, not a
+//! parser: it tracks line comments, nested block comments, string
+//! literals (including byte strings and raw strings of any `#` arity),
+//! char literals, and lifetimes — exactly the fidelity the token-level
+//! rules need, and deliberately no more (DESIGN.md §14 explains why the
+//! lint stops short of full type analysis).
+
+/// One source line, split into masked code and extracted comment text.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Code with every comment/string/char-literal character replaced by
+    /// a single space, so stripping never glues adjacent tokens
+    /// together and rule tokens inside literals are invisible.
+    pub code: String,
+    /// Concatenated comment text of the line (the body after `//`, or
+    /// this line's portion of a `/* … */` block), without delimiters.
+    pub comment: String,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+enum State {
+    Code,
+    /// Nested block comment depth (Rust block comments nest).
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string; the payload is the `#` arity of the opener.
+    RawStr(u32),
+}
+
+/// Strip `source` into per-line code/comment channels.
+pub fn strip(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    // line comment: everything to end-of-line is comment
+                    i += 2;
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if let Some(skip) = raw_string_open(&chars, i) {
+                    let hashes = skip - raw_quote_offset(&chars, i) - 1;
+                    state = State::RawStr(hashes as u32);
+                    cur.code.push(' ');
+                    i += skip;
+                } else if c == 'b' && chars.get(i + 1) == Some(&'"') && !prev_is_ident(&chars, i) {
+                    state = State::Str;
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime: `'\…'` and `'x'` are
+                    // literals; `'a` (no closing quote) is a lifetime
+                    if chars.get(i + 1) == Some(&'\\') {
+                        cur.code.push(' ');
+                        i += 2; // opening quote + backslash
+                        if i < chars.len() {
+                            i += 1; // the escaped character itself (handles '\'')
+                        }
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            i += 1;
+                        }
+                        if i < chars.len() && chars[i] == '\'' {
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth > 1 { State::Block(depth - 1) } else { State::Code };
+                    if matches!(state, State::Code) {
+                        cur.code.push(' ');
+                    }
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // `\<newline>` is a line continuation: leave the
+                    // newline for the top-of-loop handler so line
+                    // numbering never drifts
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2; // escape: skip the escaped char too
+                    }
+                } else if c == '"' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let n = hashes as usize;
+                if c == '"' && (0..n).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    state = State::Code;
+                    i += 1 + n;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+/// Offset from `i` to the opening quote of an `r`/`br` raw string
+/// candidate starting at `i` (past the `r` or `br` prefix).
+fn raw_quote_offset(chars: &[char], i: usize) -> usize {
+    if chars[i] == 'b' && chars.get(i + 1) == Some(&'r') {
+        2
+    } else {
+        1
+    }
+}
+
+/// If a raw string literal (`r"…"`, `r#"…"#`, `br##"…"##`, …) opens at
+/// `i`, the number of chars the opener spans; `None` otherwise.
+fn raw_string_open(chars: &[char], i: usize) -> Option<usize> {
+    if prev_is_ident(chars, i) {
+        return None;
+    }
+    let start = match chars[i] {
+        'r' => i + 1,
+        'b' if chars.get(i + 1) == Some(&'r') => i + 2,
+        _ => return None,
+    };
+    let mut j = start;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(j + 1 - i)
+    } else {
+        None
+    }
+}
+
+/// A parsed `lint:allow` suppression directive.
+///
+/// Syntax, recognized only at the **start** of a comment's text:
+///
+/// ```text
+/// … hazardous line   // lint:allow(rule-id) — reason
+/// // lint:allow(rule-id) — reason
+/// … hazardous line (the directive covers the next code line)
+/// // lint:allow-file(rule-id) — reason   (whole-file suppression)
+/// ```
+///
+/// The reason is mandatory — an allow nobody can audit is itself a
+/// hazard — and separator punctuation (`—`, `-`, `:`) is optional.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    /// 1-based line the directive sits on.
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub file_level: bool,
+}
+
+/// A directive that failed to parse — surfaced as a deny-level finding
+/// so a suppression can never silently fail to apply.
+#[derive(Debug, Clone)]
+pub struct Malformed {
+    /// 1-based line of the broken directive.
+    pub line: usize,
+    pub detail: String,
+}
+
+/// Extract suppression directives from stripped lines. `known_rule`
+/// vets rule ids; unknown ids and missing reasons come back malformed.
+pub fn directives(
+    lines: &[Line],
+    known_rule: impl Fn(&str) -> bool,
+) -> (Vec<Directive>, Vec<Malformed>) {
+    let mut out = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let text = line.comment.trim_start();
+        let (rest, file_level) = if let Some(r) = text.strip_prefix("lint:allow-file") {
+            (r, true)
+        } else if let Some(r) = text.strip_prefix("lint:allow") {
+            (r, false)
+        } else {
+            continue;
+        };
+        let lineno = idx + 1;
+        let Some(rest) = rest.strip_prefix('(') else {
+            bad.push(Malformed {
+                line: lineno,
+                detail: "lint:allow must name a rule: `lint:allow(rule-id) — reason`".into(),
+            });
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad.push(Malformed {
+                line: lineno,
+                detail: "unclosed `(` in lint:allow directive".into(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !known_rule(&rule) {
+            bad.push(Malformed {
+                line: lineno,
+                detail: format!("lint:allow names unknown rule '{rule}'"),
+            });
+            continue;
+        }
+        let reason = rest[close + 1..]
+            .trim_start()
+            .trim_start_matches(&['—', '–', '-', ':'][..])
+            .trim()
+            .to_string();
+        if reason.is_empty() {
+            bad.push(Malformed {
+                line: lineno,
+                detail: format!(
+                    "lint:allow({rule}) has no reason — suppressions must be auditable"
+                ),
+            });
+            continue;
+        }
+        out.push(Directive {
+            line: lineno,
+            rule,
+            reason,
+            file_level,
+        });
+    }
+    (out, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let lines = strip("let a = 1; // HashMap here\nlet b = 2; /* SystemTime */ let c;\n");
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap"));
+        assert!(!lines[1].code.contains("SystemTime"));
+        assert!(lines[1].code.contains("let c;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lines = code_of("a /* one /* two */ still */ b\n/* open\nInstant::now\n*/ tail");
+        assert!(lines[0].starts_with('a') && lines[0].ends_with('b'));
+        assert!(!lines[2].contains("Instant::now"));
+        assert!(lines[3].contains("tail"));
+    }
+
+    #[test]
+    fn strips_strings_and_raw_strings() {
+        let lines = code_of("let s = \"Instant::now \\\" quoted\"; let t = 1;");
+        assert!(!lines[0].contains("Instant::now"));
+        assert!(lines[0].contains("let t = 1;"));
+        let lines = code_of("let r = r#\"partial_cmp \" inner\"#; end();");
+        assert!(!lines[0].contains("partial_cmp"));
+        assert!(lines[0].contains("end();"));
+        let lines = code_of("let b = br##\"thread_rng\"##; after();");
+        assert!(!lines[0].contains("thread_rng"));
+        assert!(lines[0].contains("after();"));
+    }
+
+    #[test]
+    fn char_literals_masked_lifetimes_kept() {
+        let lines = code_of("let q = '\"'; let l: &'static str = x; let e = '\\n';");
+        // the quote char literal must not open a string
+        assert!(lines[0].contains("static"));
+        assert!(lines[0].contains("let e ="));
+    }
+
+    #[test]
+    fn multiline_string_masks_middle_lines() {
+        let lines = code_of("let s = \"first\nHashMap second\nthird\"; done();");
+        assert!(!lines[1].contains("HashMap"));
+        assert!(lines[2].contains("done();"));
+    }
+
+    #[test]
+    fn parses_directives_and_rejects_malformed() {
+        let src = "\
+// lint:allow(float-ord) — frozen reference\n\
+// lint:allow-file(map-iter): keyed access only\n\
+// lint:allow(unknown-rule) — whatever\n\
+// lint:allow(float-ord)\n\
+// prose that merely mentions lint:allow syntax later is prose\n";
+        let lines = strip(src);
+        let (dirs, bad) = directives(&lines, |r| r == "float-ord" || r == "map-iter");
+        assert_eq!(dirs.len(), 2);
+        assert_eq!(dirs[0].rule, "float-ord");
+        assert_eq!(dirs[0].reason, "frozen reference");
+        assert!(!dirs[0].file_level);
+        assert!(dirs[1].file_level);
+        assert_eq!(dirs[1].reason, "keyed access only");
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        assert!(bad[0].detail.contains("unknown rule"));
+        assert!(bad[1].detail.contains("no reason"));
+    }
+
+    #[test]
+    fn directives_in_strings_are_invisible() {
+        let src = "let s = \"// lint:allow(float-ord) — not a directive\";";
+        let (dirs, bad) = directives(&strip(src), |_| true);
+        assert!(dirs.is_empty() && bad.is_empty());
+    }
+}

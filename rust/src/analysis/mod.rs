@@ -1,0 +1,336 @@
+//! medflow-lint: the determinism static-analysis pass (`medflow lint`).
+//!
+//! Walks the crate's own source tree and flags hazards that would break
+//! the replay contract — the property that every engine run is
+//! bit-identical given the same inputs, which the parity batteries
+//! (`engine_parity.rs`, `placement_parity.rs`, `tenancy_parity.rs`)
+//! check dynamically and this pass enforces statically. DESIGN.md §14
+//! is the contract document; [`rules::RULES`] is the machine-readable
+//! half of it.
+//!
+//! Pipeline: [`lexer::strip`] splits each file into code/comment
+//! channels → [`excluded_lines`] masks `#[cfg(test)]` items →
+//! [`rules::scan`] runs the token-level matchers → suppression
+//! directives (`lexer::directives`) downgrade intentional exceptions,
+//! each carrying an auditable reason. The report is deterministic:
+//! files in sorted path order, findings by (path, line, rule).
+//!
+//! Exit semantics (`--deny`): unsuppressed findings and malformed
+//! directives are deny-level; unused allows are warn-level notes so a
+//! fixed hazard whose stale annotation lingers never blocks CI.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use self::lexer::Line;
+use self::rules::Rule;
+
+/// One rule hit, carrying its suppression state.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static Rule,
+    /// Slash-separated path relative to the linted source root.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub what: String,
+    /// The directive's reason when a `lint:allow` covers this hit.
+    pub suppressed: Option<String>,
+}
+
+/// A location-tagged diagnostic that is not a rule finding (malformed
+/// directive, unused allow).
+#[derive(Debug, Clone)]
+pub struct Note {
+    pub path: String,
+    pub line: usize,
+    pub detail: String,
+}
+
+/// Scan results for one file ([`lint_source`]) or a whole tree
+/// ([`lint_tree`]).
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Files scanned.
+    pub files: usize,
+    /// Every rule hit, suppressed or not, in (path, line, rule) order.
+    pub findings: Vec<Finding>,
+    /// Broken suppression directives — deny-level: a suppression that
+    /// silently fails to apply would hide a real hazard.
+    pub malformed: Vec<Note>,
+    /// Directives that matched no finding — warn-level notes.
+    pub unused_allows: Vec<Note>,
+}
+
+impl LintReport {
+    /// Findings an auditable `lint:allow` downgraded.
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed.is_some()).count()
+    }
+
+    /// What `--deny` gates on: live findings plus malformed directives.
+    pub fn deny_count(&self) -> usize {
+        let live = self.findings.len() - self.suppressed_count();
+        live + self.malformed.len()
+    }
+
+    /// Human-readable report, byte-identical across runs on the same
+    /// tree (paths sorted, findings ordered by line then rule id).
+    pub fn render(&self) -> String {
+        let suppressed = self.suppressed_count();
+        let mut out = format!(
+            "determinism lint: {} file(s) scanned, {} finding(s) ({suppressed} suppressed), \
+             {} malformed directive(s), {} unused allow(s)\n",
+            self.files,
+            self.findings.len(),
+            self.malformed.len(),
+            self.unused_allows.len()
+        );
+        for f in &self.findings {
+            match &f.suppressed {
+                None => {
+                    out.push_str(&format!(
+                        "  {} {:<12} {}:{}  {}\n",
+                        f.rule.code, f.rule.id, f.path, f.line, f.what
+                    ));
+                }
+                Some(reason) => {
+                    out.push_str(&format!(
+                        "  {} {:<12} {}:{}  allowed ({reason}) — {}\n",
+                        f.rule.code, f.rule.id, f.path, f.line, f.what
+                    ));
+                }
+            }
+        }
+        for n in &self.malformed {
+            out.push_str(&format!("  DENY  {}:{}  {}\n", n.path, n.line, n.detail));
+        }
+        for n in &self.unused_allows {
+            out.push_str(&format!("  note  {}:{}  {}\n", n.path, n.line, n.detail));
+        }
+        out
+    }
+}
+
+/// Lint one file. `rel_path` is slash-separated relative to the source
+/// root and decides rule scope ([`rules::in_scope`]); `filter`, when
+/// `Some`, restricts the active rules and mutes unused-allow notes
+/// (a directive for a filtered-out rule is not stale).
+pub fn lint_source(rel_path: &str, source: &str, filter: Option<&[&'static Rule]>) -> LintReport {
+    let lines = lexer::strip(source);
+    let excluded = excluded_lines(&lines);
+    let (dirs, bad) = lexer::directives(&lines, |id| rules::rule(id).is_some());
+    let all: Vec<&'static Rule> = rules::RULES.iter().collect();
+    let active: &[&'static Rule] = filter.unwrap_or(&all);
+    let raw = rules::scan(rel_path, &lines, &excluded, active);
+
+    let mut used = vec![false; dirs.len()];
+    let mut findings = Vec::new();
+    for hit in raw {
+        let suppressed = suppression_for(&hit, &lines, &dirs, &mut used);
+        findings.push(Finding {
+            rule: hit.rule,
+            path: rel_path.to_string(),
+            line: hit.line,
+            what: hit.what,
+            suppressed,
+        });
+    }
+
+    let malformed = bad
+        .into_iter()
+        .map(|m| Note { path: rel_path.to_string(), line: m.line, detail: m.detail })
+        .collect();
+
+    let mut unused_allows = Vec::new();
+    if filter.is_none() {
+        for (d, was_used) in dirs.iter().zip(used.iter()) {
+            if !was_used {
+                unused_allows.push(Note {
+                    path: rel_path.to_string(),
+                    line: d.line,
+                    detail: format!("unused lint:allow({}) — no matching finding", d.rule),
+                });
+            }
+        }
+    }
+
+    LintReport { files: 1, findings, malformed, unused_allows }
+}
+
+/// Lint every `.rs` file under `src_root`, in sorted path order.
+pub fn lint_tree(src_root: &Path, filter: Option<&[&'static Rule]>) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut report = LintReport::default();
+    for rel in files {
+        let path = src_root.join(&rel);
+        let source = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let one = lint_source(&rel, &source, filter);
+        report.files += one.files;
+        report.findings.extend(one.findings);
+        report.malformed.extend(one.malformed);
+        report.unused_allows.extend(one.unused_allows);
+    }
+    Ok(report)
+}
+
+/// Recursively collect slash-separated `.rs` paths relative to `root`.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// The suppression covering `hit`, if any: a file-level allow for its
+/// rule, a directive on the same line, or one reachable by walking up
+/// over a contiguous run of comment-only/blank lines directly above.
+fn suppression_for(
+    hit: &rules::RawFinding,
+    lines: &[Line],
+    dirs: &[lexer::Directive],
+    used: &mut [bool],
+) -> Option<String> {
+    for (i, d) in dirs.iter().enumerate() {
+        if d.file_level && d.rule == hit.rule.id {
+            used[i] = true;
+            return Some(d.reason.clone());
+        }
+    }
+    let mut line = hit.line;
+    loop {
+        for (i, d) in dirs.iter().enumerate() {
+            if !d.file_level && d.line == line && d.rule == hit.rule.id {
+                used[i] = true;
+                return Some(d.reason.clone());
+            }
+        }
+        if line <= 1 {
+            return None;
+        }
+        let above = &lines[line - 2];
+        if !above.code.trim().is_empty() {
+            return None;
+        }
+        line -= 1;
+    }
+}
+
+/// Mark lines belonging to `#[cfg(test)]` items (attribute through the
+/// item's closing brace, or its terminating `;` for brace-less items).
+/// Tests assert on engine output rather than producing it, and
+/// idiomatic test scaffolding (HashMap scratch state, wall-clock
+/// timing around assertions) would drown the report in noise.
+fn excluded_lines(lines: &[Line]) -> Vec<bool> {
+    let mut out = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            out[j] = true;
+            let mut done = false;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            done = true;
+                        }
+                    }
+                    ';' if !opened => done = true,
+                    _ => {}
+                }
+            }
+            if done {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_deterministically_and_counts_deny() {
+        let src = "fn f(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let a = lint_source("slurm/mod.rs", src, None);
+        let b = lint_source("slurm/mod.rs", src, None);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.deny_count(), 1);
+        assert!(a.render().contains("DL002"));
+        assert!(a.render().contains("slurm/mod.rs:1"));
+    }
+
+    #[test]
+    fn filter_restricts_rules_and_mutes_unused_allow_notes() {
+        let src = "\
+// lint:allow(wall-clock) — reserved for a future measured section\n\
+fn f(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let float_only: Vec<_> = rules::RULES.iter().filter(|r| r.id == "float-ord").collect();
+        let scan = lint_source("netsim/mod.rs", src, Some(&float_only));
+        assert_eq!(scan.findings.len(), 1);
+        assert!(scan.unused_allows.is_empty(), "no unused-allow noise under a rule filter");
+        let full = lint_source("netsim/mod.rs", src, None);
+        assert_eq!(full.unused_allows.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_exclusion_spans_the_block_only() {
+        let src = "\
+fn live(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn t(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n\
+}\n\
+fn live2(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let scan = lint_source("faults/mod.rs", src, None);
+        let hit_lines: Vec<_> = scan.findings.iter().map(|f| f.line).collect();
+        assert_eq!(hit_lines, vec![1, 6]);
+    }
+
+    #[test]
+    fn single_line_cfg_test_item_is_excluded() {
+        let src = "\
+#[cfg(test)] use std::collections::HashMap;\n\
+fn live(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let scan = lint_source("slurm/mod.rs", src, None);
+        let hit_lines: Vec<_> = scan.findings.iter().map(|f| f.line).collect();
+        assert_eq!(hit_lines, vec![2], "the cfg(test) use must not leak exclusion downward");
+    }
+}

@@ -1,0 +1,669 @@
+//! The determinism rule set (DESIGN.md §14).
+//!
+//! Every guarantee the reproduction makes — the f64-record-identical
+//! parity batteries (`engine_parity.rs`, `placement_parity.rs`,
+//! `tenancy_parity.rs`), the paper's "consistent and reproducible
+//! manner" — rests on the engines being bit-deterministic. These rules
+//! encode the replay contract as token-level static checks over the
+//! crate's own source, so the hazard class is caught at lint time
+//! instead of when a parity test breaks three PRs later.
+//!
+//! Scoping: `Engine` rules cover the simulation-critical modules
+//! (`slurm`, `netsim`, `coordinator`, `faults`, `compute`,
+//! `sim_legacy`); `Billing` rules cover the money paths (`cost`).
+//! `#[cfg(test)]` blocks are skipped — tests assert on engine output,
+//! they do not produce it.
+
+use std::collections::BTreeSet;
+
+use super::lexer::Line;
+
+/// Which part of the tree a rule patrols.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Simulation-critical modules: anything whose execution order or
+    /// arithmetic reaches a simulated record.
+    Engine,
+    /// Money paths: lossy numeric conversions silently corrupt bills.
+    Billing,
+}
+
+/// One determinism rule: a stable id for suppressions and CLI filters,
+/// a short code for reports, and the rationale the report prints.
+#[derive(Debug)]
+pub struct Rule {
+    pub id: &'static str,
+    pub code: &'static str,
+    pub scope: Scope,
+    pub summary: &'static str,
+    pub rationale: &'static str,
+}
+
+/// The registry. Order is the report's rule-table order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "map-iter",
+        code: "DL001",
+        scope: Scope::Engine,
+        summary: "iteration over HashMap/HashSet in engine code",
+        rationale: "std hash collections iterate in RandomState order; any iteration \
+                    order that reaches simulated state or telemetry breaks bit-identical \
+                    replay. Keyed get/insert/remove is fine — iterate a BTreeMap/BTreeSet \
+                    or an explicitly sorted collect instead.",
+    },
+    Rule {
+        id: "float-ord",
+        code: "DL002",
+        scope: Scope::Engine,
+        summary: "float ordering via partial_cmp instead of total_cmp/F64Ord",
+        rationale: "partial_cmp(..).unwrap() panics on NaN and treats -0.0 == +0.0, so \
+                    a single poisoned sample either aborts replay or reorders ties \
+                    platform-dependently. Use f64::total_cmp or util::ord::F64Ord keys.",
+    },
+    Rule {
+        id: "wall-clock",
+        code: "DL003",
+        scope: Scope::Engine,
+        summary: "wall-clock or entropy source in engine code",
+        rationale: "Instant::now/SystemTime/external RNG inject host state into the \
+                    simulation; replay then depends on when and where it ran. All engine \
+                    time comes from the simulated clock, all randomness from explicit \
+                    seeds via util::rng.",
+    },
+    Rule {
+        id: "lossy-cast",
+        code: "DL004",
+        scope: Scope::Billing,
+        summary: "lossy `as` cast to an integer type in a billing path",
+        rationale: "`as` silently saturates and truncates; on time/money values that \
+                    turns NaN into $0 and overflow into a plausible-looking bill. Use a \
+                    checked conversion (util::units::checked_u64) that panics loudly.",
+    },
+    Rule {
+        id: "thread-spawn",
+        code: "DL005",
+        scope: Scope::Engine,
+        summary: "threading/channel primitive outside an annotated sync layer",
+        rationale: "ROADMAP item 2 will parallelize the engines behind a conservative \
+                    time-window sync layer; until that layer exists (and is file-level \
+                    allowed), any thread::spawn/mpsc/lock in engine code is schedule \
+                    nondeterminism waiting to reach a record.",
+    },
+];
+
+/// Look up a rule by its stable id.
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Whether `rel_path` (slash-separated, relative to `src/`) is patrolled
+/// by `scope`.
+pub fn in_scope(scope: Scope, rel_path: &str) -> bool {
+    const ENGINE_DIRS: [&str; 5] = ["slurm/", "netsim/", "coordinator/", "faults/", "compute/"];
+    match scope {
+        Scope::Engine => {
+            ENGINE_DIRS.iter().any(|d| rel_path.starts_with(d)) || rel_path == "sim_legacy.rs"
+        }
+        Scope::Billing => rel_path.starts_with("cost/"),
+    }
+}
+
+/// A rule hit before suppression is applied.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    pub rule: &'static Rule,
+    /// 1-based source line.
+    pub line: usize,
+    pub what: String,
+}
+
+/// Run every rule in `active` over one file's stripped lines.
+/// `excluded[i]` marks `#[cfg(test)]` lines the rules skip.
+pub fn scan(
+    rel_path: &str,
+    lines: &[Line],
+    excluded: &[bool],
+    active: &[&'static Rule],
+) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    for &r in active {
+        if !in_scope(r.scope, rel_path) {
+            continue;
+        }
+        match r.id {
+            "map-iter" => map_iter(r, lines, excluded, &mut out),
+            "float-ord" => float_ord(r, lines, excluded, &mut out),
+            "wall-clock" => wall_clock(r, lines, excluded, &mut out),
+            "lossy-cast" => lossy_cast(r, lines, excluded, &mut out),
+            "thread-spawn" => thread_spawn(r, lines, excluded, &mut out),
+            other => unreachable!("rule '{other}' has no matcher"),
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule.id).cmp(&(b.line, b.rule.id)));
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of `needle` in `hay` where it is a whole word (not part
+/// of a longer identifier on either side).
+fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    hay.match_indices(needle)
+        .filter(|(i, _)| {
+            let before_ok = !hay[..*i].chars().next_back().is_some_and(is_ident);
+            let after_ok = !hay[*i + needle.len()..].chars().next().is_some_and(is_ident);
+            before_ok && after_ok
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Lines eligible for scanning: in-range and not `#[cfg(test)]`.
+fn included<'a>(
+    lines: &'a [Line],
+    excluded: &'a [bool],
+) -> impl Iterator<Item = (usize, &'a str)> + 'a {
+    lines
+        .iter()
+        .enumerate()
+        .filter(move |(i, _)| !excluded.get(*i).copied().unwrap_or(false))
+        .map(|(i, l)| (i + 1, l.code.as_str()))
+}
+
+// --- DL001 map-iter -------------------------------------------------------
+
+const HASH_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+const ITER_METHODS: [&str; 8] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "retain",
+];
+
+/// Two-pass, flow-insensitive: pass 1 collects identifiers bound to a
+/// hash-ordered collection anywhere in the file (struct fields, lets,
+/// fn params); pass 2 flags iteration syntax over those identifiers and
+/// hash-typed return positions. Keyed access (`get`/`insert`/`remove`)
+/// never fires. A same-named Vec elsewhere in the file would
+/// false-positive — that is the conservative trade of a token-level
+/// pass, and `lint:allow` is the documented escape hatch.
+fn map_iter(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for (lineno, code) in included(lines, excluded) {
+        let chars: Vec<char> = code.chars().collect();
+        for ty in HASH_TYPES {
+            for pos in word_positions(code, ty) {
+                let cpos = code[..pos].chars().count();
+                if returns_hash(&chars, cpos) {
+                    out.push(RawFinding {
+                        rule: r,
+                        line: lineno,
+                        what: format!("engine function returns a {ty} (order leaks to callers)"),
+                    });
+                } else if let Some(name) = bound_ident(&chars, cpos) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    for (lineno, code) in included(lines, excluded) {
+        for name in &names {
+            for pos in word_positions(code, name) {
+                let after = &code[pos + name.len()..];
+                if let Some(m) = iter_method_after(after) {
+                    out.push(RawFinding {
+                        rule: r,
+                        line: lineno,
+                        what: format!("`{name}.{m}()` iterates a hash-ordered collection"),
+                    });
+                }
+            }
+        }
+        if let Some(name) = for_loop_over(code, &names) {
+            out.push(RawFinding {
+                rule: r,
+                line: lineno,
+                what: format!("`for … in {name}` iterates a hash-ordered collection"),
+            });
+        }
+    }
+}
+
+/// After hopping a `std::collections::`-style path prefix backwards
+/// from the type token at `pos`, the char index where the full path
+/// expression starts.
+fn path_start(chars: &[char], pos: usize) -> usize {
+    let mut j = pos;
+    while j >= 2 && chars[j - 1] == ':' && chars[j - 2] == ':' {
+        j -= 2;
+        while j > 0 && is_ident(chars[j - 1]) {
+            j -= 1;
+        }
+    }
+    j
+}
+
+/// Is the hash type at `pos` in return position (`-> HashMap<…>`)?
+fn returns_hash(chars: &[char], pos: usize) -> bool {
+    let mut j = path_start(chars, pos);
+    while j > 0 && chars[j - 1].is_whitespace() {
+        j -= 1;
+    }
+    j >= 2 && chars[j - 1] == '>' && chars[j - 2] == '-'
+}
+
+/// The identifier a hash type at `pos` is bound to, if the line reads
+/// `name: HashMap<…>` / `name: &mut HashSet<…>` (field, param, or
+/// struct-literal init) or `let [mut] name = HashMap::new()`.
+fn bound_ident(chars: &[char], pos: usize) -> Option<String> {
+    let mut j = path_start(chars, pos);
+    // skip type decorations backwards: whitespace, `&`, `mut`, `'a`
+    loop {
+        while j > 0 && chars[j - 1].is_whitespace() {
+            j -= 1;
+        }
+        if j > 0 && chars[j - 1] == '&' {
+            j -= 1;
+            continue;
+        }
+        if j > 0 && is_ident(chars[j - 1]) {
+            let mut k = j;
+            while k > 0 && is_ident(chars[k - 1]) {
+                k -= 1;
+            }
+            let word: String = chars[k..j].iter().collect();
+            if word == "mut" {
+                j = k;
+                continue;
+            }
+            if k > 0 && chars[k - 1] == '\'' {
+                j = k - 1; // a lifetime like `&'a `
+                continue;
+            }
+            return None; // some other token — not a binding we track
+        }
+        break;
+    }
+    if j == 0 {
+        return None;
+    }
+    if chars[j - 1] == ':' && !(j >= 2 && chars[j - 2] == ':') {
+        // `name: HashMap<…>` — read the identifier before the colon
+        let mut k = j - 1;
+        while k > 0 && chars[k - 1].is_whitespace() {
+            k -= 1;
+        }
+        let end = k;
+        while k > 0 && is_ident(chars[k - 1]) {
+            k -= 1;
+        }
+        let name: String = chars[k..end].iter().collect();
+        return if name.is_empty() { None } else { Some(name) };
+    }
+    if chars[j - 1] == '=' {
+        // `let [mut] name = HashMap::new()` — find the let binding
+        let line: String = chars.iter().collect();
+        let let_pos = word_positions(&line, "let").into_iter().next()?;
+        let after = line[let_pos + 3..].trim_start();
+        let after = after.strip_prefix("mut ").unwrap_or(after).trim_start();
+        let name: String = after.chars().take_while(|&c| is_ident(c)).collect();
+        return if name.is_empty() { None } else { Some(name) };
+    }
+    None
+}
+
+/// If `after` (text following a tracked identifier) starts with a call
+/// to an iteration method, that method's name.
+fn iter_method_after(after: &str) -> Option<&'static str> {
+    let rest = after.strip_prefix('.')?;
+    for m in ITER_METHODS {
+        if let Some(tail) = rest.strip_prefix(m) {
+            let mut t = tail.chars();
+            if t.next() == Some('(') {
+                return Some(m);
+            }
+        }
+    }
+    None
+}
+
+/// If the line is a `for … in <expr>` loop whose iterated expression
+/// starts with a tracked identifier, that identifier.
+fn for_loop_over(code: &str, names: &BTreeSet<String>) -> Option<String> {
+    if word_positions(code, "for").is_empty() {
+        return None;
+    }
+    let in_pos = code.find(" in ")?;
+    let mut expr = code[in_pos + 4..].trim_start();
+    loop {
+        if let Some(rest) = expr.strip_prefix('&') {
+            expr = rest;
+        } else if let Some(rest) = expr.strip_prefix("mut ") {
+            expr = rest.trim_start();
+        } else if let Some(rest) = expr.strip_prefix("self.") {
+            expr = rest;
+        } else if let Some(rest) = expr.strip_prefix('(') {
+            expr = rest;
+        } else {
+            break;
+        }
+    }
+    let ident: String = expr.chars().take_while(|&c| is_ident(c)).collect();
+    let tail = expr[ident.len()..].chars().next();
+    // `map.keys()`-style tails are the method scan's finding, not ours
+    if names.contains(&ident) && tail != Some('.') {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+// --- DL002 float-ord ------------------------------------------------------
+
+/// Flags `.partial_cmp(` / `::partial_cmp(` call sites. Implementing
+/// `fn partial_cmp` (a `PartialOrd` impl delegating to `Ord`) has
+/// neither prefix and stays legal.
+fn float_ord(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    for (lineno, code) in included(lines, excluded) {
+        if code.contains(".partial_cmp(") || code.contains("::partial_cmp(") {
+            out.push(RawFinding {
+                rule: r,
+                line: lineno,
+                what: "partial_cmp call site — use total_cmp or util::ord::F64Ord".into(),
+            });
+        }
+    }
+}
+
+// --- DL003 wall-clock -----------------------------------------------------
+
+const CLOCK_TOKENS: [&str; 8] = [
+    "Instant::now",
+    "SystemTime",
+    "UNIX_EPOCH",
+    "thread_rng",
+    "from_entropy",
+    "rand::random",
+    "RandomState",
+    "getrandom",
+];
+
+fn wall_clock(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    for (lineno, code) in included(lines, excluded) {
+        for tok in CLOCK_TOKENS {
+            if let Some(pos) = code.find(tok) {
+                let before_ok = !code[..pos].chars().next_back().is_some_and(is_ident);
+                if before_ok {
+                    out.push(RawFinding {
+                        rule: r,
+                        line: lineno,
+                        what: format!("`{tok}` reads host state the replay cannot reproduce"),
+                    });
+                    break; // one finding per line is enough to act on
+                }
+            }
+        }
+    }
+}
+
+// --- DL004 lossy-cast -----------------------------------------------------
+
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Flags `<expr> as <int-type>` in billing modules. Casts to float
+/// types (`count as f64`) are widening and stay legal.
+fn lossy_cast(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    for (lineno, code) in included(lines, excluded) {
+        for pos in word_positions(code, "as") {
+            let after = code[pos + 2..].trim_start();
+            let target: String = after.chars().take_while(|&c| is_ident(c)).collect();
+            if INT_TYPES.contains(&target.as_str()) {
+                out.push(RawFinding {
+                    rule: r,
+                    line: lineno,
+                    what: format!(
+                        "`as {target}` silently truncates/saturates — use \
+                         util::units::checked_u64 or a widening conversion"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// --- DL005 thread-spawn ---------------------------------------------------
+
+const SYNC_TOKENS: [&str; 9] = [
+    "thread::spawn",
+    "std::thread",
+    "mpsc",
+    "crossbeam",
+    "rayon",
+    "Mutex<",
+    "RwLock<",
+    "Condvar",
+    "Atomic",
+];
+
+fn thread_spawn(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    for (lineno, code) in included(lines, excluded) {
+        for tok in SYNC_TOKENS {
+            if let Some(pos) = code.find(tok) {
+                let before_ok = !code[..pos].chars().next_back().is_some_and(is_ident);
+                if before_ok {
+                    out.push(RawFinding {
+                        rule: r,
+                        line: lineno,
+                        what: format!(
+                            "`{tok}` — engine parallelism belongs to the annotated sync layer"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_source;
+
+    fn deny_rules(path: &str, src: &str) -> Vec<String> {
+        let scan = lint_source(path, src, None);
+        scan.findings
+            .iter()
+            .filter(|f| f.suppressed.is_none())
+            .map(|f| f.rule.id.to_string())
+            .collect()
+    }
+
+    // -- map-iter ----------------------------------------------------------
+
+    #[test]
+    fn map_iter_flags_iteration_not_keyed_access() {
+        let src = "\
+use std::collections::HashMap;\n\
+struct S { attempts: HashMap<u64, u32> }\n\
+impl S {\n\
+    fn ok(&self) -> u32 { *self.attempts.get(&1).unwrap_or(&0) }\n\
+    fn bad(&self) -> u32 { self.attempts.values().sum() }\n\
+}\n";
+        let hits = deny_rules("slurm/mod.rs", src);
+        assert_eq!(hits, vec!["map-iter"], "values() fires, get() does not");
+    }
+
+    #[test]
+    fn map_iter_flags_for_loops_and_returns() {
+        let src = "\
+fn leak() -> std::collections::HashMap<u64, u32> { todo!() }\n\
+fn walk() {\n\
+    let mut seen = std::collections::HashSet::new();\n\
+    seen.insert(1u64);\n\
+    for v in &seen { drop(v); }\n\
+}\n";
+        let hits = deny_rules("netsim/scheduler.rs", src);
+        assert_eq!(hits, vec!["map-iter", "map-iter"], "return position + for loop");
+    }
+
+    #[test]
+    fn map_iter_ignores_other_modules_and_other_types() {
+        let src = "\
+struct S { attempts: HashMap<u64, u32>, log: Vec<u64> }\n\
+impl S { fn f(&self) { for v in &self.log { drop(v); } } }\n";
+        assert!(deny_rules("report/mod.rs", src).is_empty(), "report/ is out of scope");
+        assert!(
+            deny_rules("slurm/mod.rs", "fn f(xs: &[u64]) { for x in xs { drop(x); } }").is_empty(),
+            "slice iteration is fine"
+        );
+    }
+
+    #[test]
+    fn map_iter_suppression_with_reason_downgrades() {
+        let src = "\
+struct S { attempts: std::collections::HashMap<u64, u32> }\n\
+impl S {\n\
+    fn sum(&self) -> u32 {\n\
+        // lint:allow(map-iter) — order-independent fold (sum is commutative)\n\
+        self.attempts.values().sum()\n\
+    }\n\
+}\n";
+        let scan = lint_source("slurm/mod.rs", src, None);
+        assert!(scan.findings.iter().all(|f| f.suppressed.is_some()), "{:?}", scan.findings);
+        assert_eq!(scan.findings.len(), 1);
+        assert!(scan.malformed.is_empty());
+    }
+
+    // -- float-ord ---------------------------------------------------------
+
+    #[test]
+    fn float_ord_flags_call_sites_not_impls() {
+        let bad = "fn f(xs: &mut Vec<f64>) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        assert_eq!(deny_rules("coordinator/staged.rs", bad), vec!["float-ord"]);
+        let good = "fn f(xs: &mut Vec<f64>) { xs.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert!(deny_rules("coordinator/staged.rs", good).is_empty());
+        let impl_ok = "\
+impl PartialOrd for K {\n\
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> { Some(self.cmp(other)) }\n\
+}\n";
+        assert!(deny_rules("slurm/mod.rs", impl_ok).is_empty(), "PartialOrd impls are legal");
+    }
+
+    #[test]
+    fn float_ord_ignores_comments_and_strings() {
+        let src = "// a.partial_cmp(b) used to live here\nlet s = \".partial_cmp(\";\n";
+        assert!(deny_rules("slurm/mod.rs", src).is_empty());
+    }
+
+    // -- wall-clock --------------------------------------------------------
+
+    #[test]
+    fn wall_clock_flags_host_time_and_entropy() {
+        for tok in ["std::time::Instant::now()", "SystemTime::now()", "RandomState::new()"] {
+            let src = format!("fn f() {{ let t = {tok}; }}\n");
+            assert_eq!(deny_rules("faults/mod.rs", &src), vec!["wall-clock"], "{tok}");
+        }
+        // out of engine scope: the bench harness may time things
+        assert!(deny_rules("util/bench.rs", "let t0 = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_suppressed_inline() {
+        let src = "\
+fn f() {\n\
+    let t0 = std::time::Instant::now(); // lint:allow(wall-clock) — measured, not simulated\n\
+    drop(t0);\n\
+}\n";
+        let scan = lint_source("compute/mod.rs", src, None);
+        assert_eq!(scan.findings.len(), 1);
+        assert!(scan.findings[0].suppressed.is_some());
+    }
+
+    // -- lossy-cast --------------------------------------------------------
+
+    #[test]
+    fn lossy_cast_flags_int_casts_in_billing_only() {
+        let src = "fn f(x: f64) -> u64 { x.round() as u64 }\n";
+        assert_eq!(deny_rules("cost/planner.rs", src), vec!["lossy-cast"]);
+        assert!(deny_rules("report/mod.rs", src).is_empty(), "report/ is not a billing path");
+        let widening = "fn f(n: u64) -> f64 { n as f64 * 0.5 }\n";
+        assert!(deny_rules("cost/mod.rs", widening).is_empty(), "casts to float are widening");
+    }
+
+    // -- thread-spawn ------------------------------------------------------
+
+    #[test]
+    fn thread_spawn_flags_sync_primitives_in_engines() {
+        for tok in ["std::thread::spawn(|| {})", "std::sync::mpsc::channel::<u64>()"] {
+            let src = format!("fn f() {{ let _ = {tok}; }}\n");
+            assert_eq!(deny_rules("coordinator/tenancy.rs", &src), vec!["thread-spawn"], "{tok}");
+        }
+        assert!(deny_rules("coordinator/staged.rs", "fn f() { let x = 1; }\n").is_empty());
+    }
+
+    // -- shared machinery --------------------------------------------------
+
+    #[test]
+    fn cfg_test_blocks_are_skipped() {
+        let src = "\
+fn live() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use std::collections::HashMap;\n\
+    #[test]\n\
+    fn t() {\n\
+        let m: HashMap<u64, u64> = HashMap::new();\n\
+        for v in m.values() { drop(v); }\n\
+        let t0 = std::time::Instant::now();\n\
+        drop(t0);\n\
+    }\n\
+}\n";
+        assert!(deny_rules("slurm/mod.rs", src).is_empty(), "test code is exempt");
+    }
+
+    #[test]
+    fn file_level_allow_covers_every_hit() {
+        let src = "\
+// lint:allow-file(float-ord) — frozen golden reference\n\
+fn a(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n\
+fn b(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let scan = lint_source("sim_legacy.rs", src, None);
+        assert_eq!(scan.findings.len(), 2);
+        assert!(scan.findings.iter().all(|f| f.suppressed.is_some()));
+        assert!(scan.unused_allows.is_empty());
+    }
+
+    #[test]
+    fn unused_and_malformed_allows_are_reported() {
+        let src = "\
+fn clean() {}\n\
+// lint:allow(float-ord) — nothing here actually needs it\n\
+fn also_clean() {}\n\
+// lint:allow(float-ord)\n\
+fn c(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n";
+        let scan = lint_source("slurm/mod.rs", src, None);
+        // the reasonless directive is malformed, so line 5's hit stays live
+        assert_eq!(scan.malformed.len(), 1);
+        assert_eq!(scan.findings.iter().filter(|f| f.suppressed.is_none()).count(), 1);
+        assert_eq!(scan.unused_allows.len(), 1, "{:?}", scan.unused_allows);
+    }
+
+    #[test]
+    fn findings_sort_by_line_then_rule() {
+        let src = "\
+fn z(x: f64, y: f64) { let _ = x.partial_cmp(&y); }\n\
+fn f() { let t = std::time::Instant::now(); drop(t); }\n";
+        let scan = lint_source("netsim/mod.rs", src, None);
+        let ids: Vec<_> = scan.findings.iter().map(|f| (f.line, f.rule.id)).collect();
+        assert_eq!(ids, vec![(1, "float-ord"), (2, "wall-clock")]);
+    }
+}

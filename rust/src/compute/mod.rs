@@ -140,6 +140,8 @@ impl<'rt> Executor<'rt> {
         let mut artifact_exec_s = 0.0;
         let mut qa = Vec::new();
         if let (Some(artifact), Some(rt)) = (spec.artifact, self.runtime) {
+            // lint:allow(wall-clock) — measures real PJRT artifact execution,
+            // reported as artifact_exec_s; it never feeds the simulated clock
             let t0 = std::time::Instant::now();
             match artifact {
                 "seg_pipeline" => {

@@ -9,6 +9,7 @@ use crate::cost::compute_cost;
 use crate::faults::{expected_overrun, FaultModel};
 use crate::netsim::Env;
 use crate::pipeline::{registry, InputReq, PipelineSpec};
+use crate::util::units::checked_u64;
 use crate::workload::{catalog, DatasetCatalogEntry};
 
 /// Projection for one pipeline over the full catalog.
@@ -49,7 +50,7 @@ fn project_pipeline(
     total_sessions: u64,
     overrun: f64,
 ) -> PipelineProjection {
-    let eligible = (total_sessions as f64 * eligible_fraction(&spec.input)).round() as u64;
+    let eligible = checked_u64(total_sessions as f64 * eligible_fraction(&spec.input));
     let minutes = spec.resources.minutes_mean * overrun;
     let core_hours = eligible as f64 * minutes / 60.0 * spec.resources.cores as f64;
     // unit economics: HPC charges per core; cloud jobs need enough

@@ -21,6 +21,9 @@
 //! See README.md for the quickstart and paper→module map, and DESIGN.md
 //! for the full system inventory and experiment index.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod archive;
 pub mod backup;
 pub mod bids;

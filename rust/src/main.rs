@@ -17,6 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use medflow::analysis;
 use medflow::archive::{Archive, SecurityTier};
 use medflow::bids::{validate_dataset, BidsDataset, Severity};
 use medflow::compute::load_runtime;
@@ -129,6 +130,7 @@ fn run() -> Result<()> {
         "faults" => cmd_faults(&args),
         "place" => cmd_place(&args),
         "tenants" => cmd_tenants(&args),
+        "lint" => cmd_lint(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
             for years in [0.0, 1.0, 3.0, 5.0] {
@@ -765,6 +767,64 @@ fn cmd_status(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print_usage();
+        return Ok(());
+    }
+    if args.has("list") {
+        println!("{:<12} {:<6} {:<8} {}", "rule", "code", "scope", "summary");
+        for r in analysis::rules::RULES {
+            let scope = match r.scope {
+                analysis::rules::Scope::Engine => "engine",
+                analysis::rules::Scope::Billing => "billing",
+            };
+            println!("{:<12} {:<6} {:<8} {}", r.id, r.code, scope, r.summary);
+        }
+        return Ok(());
+    }
+    let src = match args.get("src") {
+        Some(dir) => PathBuf::from(dir),
+        None => default_lint_src()?,
+    };
+    let filter: Option<Vec<&'static analysis::rules::Rule>> = match args.get("rules") {
+        None => None,
+        Some(list) => {
+            let mut picked = Vec::new();
+            for id in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let r = analysis::rules::rule(id).with_context(|| {
+                    format!("unknown lint rule '{id}' (see `medflow lint --list`)")
+                })?;
+                picked.push(r);
+            }
+            Some(picked)
+        }
+    };
+    let report = analysis::lint_tree(&src, filter.as_deref())?;
+    print!("{}", report.render());
+    if args.has("deny") && report.deny_count() > 0 {
+        bail!("lint --deny: {} deny-level finding(s)", report.deny_count());
+    }
+    Ok(())
+}
+
+/// The tree `medflow lint` scans when `--src` is not given: the crate's
+/// own `src/` when the binary runs from a checkout, else a best-effort
+/// relative guess.
+fn default_lint_src() -> Result<PathBuf> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    if manifest.is_dir() {
+        return Ok(manifest);
+    }
+    for candidate in ["rust/src", "src"] {
+        let p = PathBuf::from(candidate);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    bail!("cannot locate a src/ tree to lint — pass --src DIR");
+}
+
 fn print_usage() {
     println!(
         "medflow — scalable, reproducible, cost-effective medical-imaging processing
@@ -793,6 +853,8 @@ USAGE:
                     [--priorities P1,P2,…] [--policy cheapest|deadline|budget]
                     [--faults none|typical|harsh] [--retries N] [--seed S]
                                                   (multi-tenant shared fleet, DESIGN.md §13)
+  medflow lint      [--src DIR] [--rules id1,id2,…] [--deny] [--list]
+                                                  (determinism static analysis, DESIGN.md §14)
   medflow pipelines
   medflow table1 | table2 | table3 | fig1"
     );

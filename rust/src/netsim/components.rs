@@ -45,7 +45,7 @@ impl TransferPath {
         *self
             .stages
             .iter()
-            .min_by(|a, b| a.mbps.partial_cmp(&b.mbps).unwrap())
+            .min_by(|a, b| a.mbps.total_cmp(&b.mbps))
             .expect("non-empty path")
     }
 

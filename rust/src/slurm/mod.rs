@@ -515,7 +515,10 @@ impl Scheduler {
         let mut order: Vec<(usize, (f64, f64, u64))> = (0..self.due.len())
             .map(|i| (i, self.priority(&self.due[i])))
             .collect();
-        order.sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // total_cmp keys: priority() components are finite and ids are
+        // unique, so the order is total — identical to the old
+        // partial_cmp comparator, minus its NaN panic path
+        order.sort_unstable_by_key(|&(_, (u, s, id))| (F64Ord(u), F64Ord(s), id));
 
         let mut started: Vec<usize> = Vec::new();
         let mut shadow: Option<f64> = None; // head job's reserved start
@@ -586,7 +589,7 @@ impl Scheduler {
             .iter()
             .map(|r| (r.end_s, r.node, r.job.cores, r.job.ram_gb))
             .collect();
-        frees.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        frees.sort_by_key(|&(end, ..)| F64Ord(end));
         self.skyline.clear();
         self.skyline.extend_from_slice(&self.nodes);
         for (end, node, cores, ram) in frees {

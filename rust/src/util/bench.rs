@@ -123,9 +123,13 @@ pub fn gate_against_baseline(runs: &[Json]) {
 /// first full bench run on CI hardware — gates nothing and reports so.
 /// Rows present on only one side are noted, not failed: semantic
 /// changes legitimately reshape the sweep, and the nightly trajectory
-/// workflow refreshes the baseline artifacts.
+/// workflow refreshes the baseline artifacts. Both directions are
+/// counted — new rows the baseline lacks *and* baseline rows this run
+/// no longer produces.
 ///
-/// Returns `Ok(summary)` or `Err(report)` listing every regression.
+/// Returns `Ok(summary)` or `Err(report)` listing every regression in
+/// sorted identity order, so the verdict is deterministic regardless
+/// of the sweep's row order.
 pub fn check_baseline(
     baseline_path: &Path,
     current_runs: &[Json],
@@ -169,9 +173,15 @@ pub fn check_baseline(
             ));
         }
     }
+    let missing = baseline_runs
+        .iter()
+        .filter(|&b| !current_runs.iter().any(|r| identity(r) == identity(b)))
+        .count();
+    failures.sort();
     if failures.is_empty() {
         Ok(format!(
-            "{matched} rows within {factor}× of {} ({unmatched} new rows not in baseline)",
+            "{matched} rows within {factor}× of {} ({unmatched} new rows not in baseline, \
+             {missing} baseline rows absent from this run)",
             baseline_path.display()
         ))
     } else {
@@ -189,7 +199,8 @@ pub fn check_baseline(
 /// that name *what* was measured, never the measurements themselves.
 fn identity(row: &Json) -> Vec<(String, String)> {
     let Some(obj) = row.as_obj() else { return Vec::new() };
-    obj.iter()
+    let mut id: Vec<(String, String)> = obj
+        .iter()
         .filter_map(|(k, v)| match v {
             Json::Str(s) => Some((k.to_string(), s.clone())),
             Json::Num(n) if k == "jobs" || k == "streams" => {
@@ -197,7 +208,11 @@ fn identity(row: &Json) -> Vec<(String, String)> {
             }
             _ => None,
         })
-        .collect()
+        .collect();
+    // JsonObj iterates in insertion order — two rows naming the same
+    // run with fields emitted in a different order must still pair up
+    id.sort();
+    id
 }
 
 #[cfg(test)]
@@ -278,5 +293,36 @@ mod tests {
 
         // a missing file is an error, not a silent pass
         assert!(check_baseline(Path::new("/nonexistent/b.json"), &[], "wall_s", 1.5).is_err());
+    }
+
+    #[test]
+    fn identity_matching_is_field_order_independent() {
+        // regression: identity() used to return fields in insertion
+        // order, so a bench that reordered its row fields unpaired
+        // every baseline row
+        let mut a = Json::obj();
+        a.set("engine", Json::str("lanepool")).set("jobs", Json::num(10.0));
+        let mut b = Json::obj();
+        b.set("jobs", Json::num(10.0)).set("engine", Json::str("lanepool"));
+        assert_eq!(identity(&Json::Obj(a)), identity(&Json::Obj(b)));
+    }
+
+    #[test]
+    fn baseline_rows_absent_from_run_are_reported() {
+        let path = write_baseline("missing", vec![row(10.0, "x", 2.0), row(20.0, "y", 2.0)]);
+        let note = check_baseline(&path, &[row(10.0, "x", 2.0)], "wall_s", 1.5).unwrap();
+        assert!(note.contains("1 baseline rows absent"), "{note}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn regression_report_rows_are_sorted() {
+        let path = write_baseline("sorted", vec![row(20.0, "b", 1.0), row(10.0, "a", 1.0)]);
+        let err = check_baseline(&path, &[row(20.0, "b", 9.0), row(10.0, "a", 9.0)], "wall_s", 1.5)
+            .unwrap_err();
+        let a_pos = err.find("\"a\"").expect("row a in report");
+        let b_pos = err.find("\"b\"").expect("row b in report");
+        assert!(a_pos < b_pos, "failure rows sort by identity: {err}");
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -197,6 +197,22 @@ pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
         .collect()
 }
 
+/// Checked f64 → u64 conversion for billing and count paths: rounds,
+/// then asserts instead of letting `as` saturate silently (the
+/// `lossy-cast` determinism-lint rule, DESIGN.md §14). NaN would cast
+/// to 0 — a free campaign — +∞ to `u64::MAX`, and anything beyond 2⁵³
+/// has already lost integer precision; all three are caller bugs a
+/// bill must not absorb.
+pub fn checked_u64(x: f64) -> u64 {
+    assert!(x.is_finite(), "checked_u64({x}) — not finite");
+    assert!(x >= 0.0, "checked_u64({x}) — negative");
+    assert!(
+        x <= 9_007_199_254_740_992.0,
+        "checked_u64({x}) — beyond 2^53, integer precision already lost"
+    );
+    x.round() as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +316,32 @@ mod tests {
     #[should_panic(expected = "out of range [0, 100]")]
     fn percentiles_reject_negative_p() {
         percentiles(&[1.0, 2.0], &[50.0, -0.5]);
+    }
+
+    #[test]
+    fn checked_u64_rounds_and_accepts_exact_range() {
+        assert_eq!(checked_u64(0.0), 0);
+        assert_eq!(checked_u64(2.4), 2);
+        assert_eq!(checked_u64(2.5), 3);
+        assert_eq!(checked_u64(1e6), 1_000_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn checked_u64_rejects_nan() {
+        checked_u64(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn checked_u64_rejects_negative() {
+        checked_u64(-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond 2^53")]
+    fn checked_u64_rejects_precision_loss() {
+        checked_u64(1e18);
     }
 
     #[test]

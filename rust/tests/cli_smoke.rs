@@ -192,6 +192,30 @@ fn tenants_cli_reports_fairness_table() {
 }
 
 #[test]
+fn lint_cli_reports_and_gates() {
+    // happy path: the committed tree is lint-clean, so --deny passes
+    let out = run_ok(&["lint", "--deny"]);
+    assert!(out.contains("determinism lint"), "{out}");
+    assert!(out.contains("0 malformed directive(s)"), "{out}");
+
+    // the rule table names every rule with its code and scope
+    let out = run_ok(&["lint", "--list"]);
+    assert!(out.contains("map-iter") && out.contains("DL001"), "{out}");
+    assert!(out.contains("lossy-cast") && out.contains("billing"), "{out}");
+
+    // a rule filter narrows the pass; unknown rules fail cleanly
+    let out = run_ok(&["lint", "--rules", "float-ord,wall-clock"]);
+    assert!(out.contains("determinism lint"), "{out}");
+    let out = medflow().args(["lint", "--rules", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown lint rule"));
+
+    // --help prints the usage block instead of linting
+    let out = run_ok(&["lint", "--help"]);
+    assert!(out.contains("medflow lint"), "{out}");
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = medflow().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

@@ -1,0 +1,48 @@
+//! Self-run integration gate: the committed tree must be clean under
+//! the determinism lint (DESIGN.md §14).
+//!
+//! CI re-checks the same property through the binary (`medflow lint
+//! --deny` in the `lint-determinism` job); this test pins it at the
+//! library level so plain `cargo test` catches a freshly introduced
+//! hazard — or a suppression without an auditable reason — before a
+//! parity battery ever has the chance to.
+
+use std::path::PathBuf;
+
+use medflow::analysis::lint_tree;
+
+#[test]
+fn committed_tree_is_lint_clean_under_deny() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&src, None).expect("lint tree");
+    assert!(report.files >= 50, "walked the real tree, not a stub: {}", report.files);
+    assert_eq!(
+        report.deny_count(),
+        0,
+        "determinism hazards in the committed tree:\n{}",
+        report.render()
+    );
+    // intentional exceptions exist (the frozen sim_legacy comparators,
+    // the measured PJRT artifact timing) and each carries a reason
+    assert!(report.suppressed_count() >= 1, "{}", report.render());
+    for f in &report.findings {
+        if let Some(reason) = &f.suppressed {
+            assert!(!reason.trim().is_empty(), "{}:{} allowed without reason", f.path, f.line);
+        }
+    }
+    assert!(report.unused_allows.is_empty(), "stale allows:\n{}", report.render());
+}
+
+#[test]
+fn self_run_report_is_deterministic() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let a = lint_tree(&src, None).expect("lint tree").render();
+    let b = lint_tree(&src, None).expect("lint tree").render();
+    assert_eq!(a, b, "the report must be byte-identical across runs");
+    // findings arrive path-sorted, lines ascending within a path
+    let report = lint_tree(&src, None).expect("lint tree");
+    let keys: Vec<_> = report.findings.iter().map(|f| (f.path.clone(), f.line)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "findings must be path/line sorted");
+}
