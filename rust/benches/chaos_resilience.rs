@@ -1,0 +1,236 @@
+//! Bench: chaos-resilience sweep — the DESIGN.md §15 tentpole numbers.
+//! The shared synthetic campaign runs through `placement::execute_chaos`
+//! under seeded infrastructure-fault schedules, swept over outage
+//! severity (none / mild / harsh) × fleet size, asserting in **both**
+//! modes:
+//!
+//! * **empty-schedule parity** — `execute_chaos` with no outages is
+//!   f64-record-identical to `placement::execute`;
+//! * **conservation** — with no fault model armed, every job completes
+//!   under every severity: outages delay work, never lose it;
+//! * **determinism** — the harshest swept scenario replays to identical
+//!   timings and outage stats;
+//! * **monotonicity** — on a single-backend fleet with nowhere to flee,
+//!   growing the outage window never shortens the makespan.
+//!
+//! Run: `cargo bench --bench chaos_resilience` — full mode sweeps 2·10³
+//! jobs per scenario and writes `BENCH_chaos_resilience.json`;
+//! `-- --test` is the reduced CI sweep. `--check-baseline <path>` gates
+//! this run's wall clocks against a committed baseline.
+
+use std::time::Instant;
+
+use medflow::coordinator::placement::{
+    execute, execute_chaos, BackendKind, BackendSpec, PlacementOutcome, PlacementPolicy,
+};
+use medflow::coordinator::staged::synthetic_fault_campaign;
+use medflow::coordinator::tenancy::TenancyConfig;
+use medflow::faults::outage::{ComputeOutage, OutageMode, OutageSchedule, OutageSeverity};
+use medflow::netsim::Env;
+use medflow::slurm::ClusterSpec;
+use medflow::util::bench::{gate_against_baseline, metric};
+use medflow::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// The placement trio at a swept scale: `scale` multiplies the Slurm
+/// concurrency and both lane pools.
+fn fleet(scale: usize) -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(8 * scale as u32, 8, 64),
+                max_concurrent: 64 * scale as u32,
+            },
+            faults: None,
+            transfer_streams: 8,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 256 * scale },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 8 * scale },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+fn config() -> medflow::coordinator::placement::PlacementConfig {
+    TenancyConfig {
+        seed: SEED,
+        ..Default::default()
+    }
+    .placement()
+}
+
+fn json_run(severity: &str, fleet_name: &str, jobs: usize, wall_s: f64, out: &PlacementOutcome) -> Json {
+    let completed = out.staged.timings.iter().filter(|t| t.completed).count();
+    let o_stats = out.outage.unwrap_or_default();
+    let mut o = Json::obj();
+    o.set("scenario", Json::str(severity))
+        .set("fleet", Json::str(fleet_name))
+        .set("jobs", Json::num(jobs as f64))
+        .set("wall_s", Json::num(wall_s))
+        .set("sim_makespan_s", Json::num(out.makespan_s))
+        .set("total_dollars", Json::num(out.total_cost_dollars))
+        .set("completed", Json::num(completed as f64))
+        .set("killed", Json::num(o_stats.killed as f64))
+        .set("orphaned", Json::num(o_stats.orphaned as f64))
+        .set("re_placed", Json::num(o_stats.re_placed as f64));
+    Json::Obj(o)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Chaos-resilience sweep (DESIGN.md §15) ===");
+    let n = if test_mode { 150 } else { 2_000 };
+    let jobs = synthetic_fault_campaign(n, SEED);
+    let cfg = config();
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- empty-schedule parity: the chaos path costs nothing ---
+    {
+        let fleet = fleet(1);
+        let base = execute(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+        let chaos = execute_chaos(
+            &jobs,
+            &fleet,
+            PlacementPolicy::CheapestFirst,
+            &cfg,
+            &OutageSchedule::empty(),
+        );
+        assert_eq!(
+            chaos.staged.timings, base.staged.timings,
+            "acceptance: empty schedule must replay execute f64-record-identically"
+        );
+        assert_eq!(chaos.per_backend, base.per_backend);
+        assert_eq!(chaos.total_cost_dollars, base.total_cost_dollars);
+        assert_eq!(chaos.makespan_s, base.makespan_s);
+        println!("parity OK at n={n}: empty-schedule chaos ≡ execute, f64-exact");
+    }
+
+    // --- the sweep: severity × fleet size. The outage horizon is each
+    // fleet's own fault-free makespan, so the synthetic windows always
+    // land mid-campaign regardless of job count or fleet scale ---
+    let mut harshest: Option<(PlacementOutcome, f64)> = None;
+    for (fleet_name, scale) in [("trio-x1", 1usize), ("trio-x4", 4usize)] {
+        let fleet = fleet(scale);
+        let mut horizon_s = 1.0; // severity none ignores it; set by that run
+        for severity in [OutageSeverity::None, OutageSeverity::Mild, OutageSeverity::Harsh] {
+            let schedule = OutageSchedule::synthetic(severity, fleet.len(), horizon_s, SEED);
+            let t0 = Instant::now();
+            let out = execute_chaos(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+            let wall_s = t0.elapsed().as_secs_f64();
+            let label = severity.label();
+            let completed = out.staged.timings.iter().filter(|t| t.completed).count();
+            assert_eq!(
+                completed, n,
+                "acceptance: {label}/{fleet_name} must conserve jobs — delayed, never lost"
+            );
+            assert_eq!(out.aborted, 0, "no fault model ⇒ nothing aborts");
+            let o = out.outage.expect("chaos runs report outage stats");
+            if severity == OutageSeverity::None {
+                horizon_s = (out.makespan_s * 0.8).max(60.0);
+            }
+            if severity == OutageSeverity::Harsh {
+                assert!(o.killed > 0, "harsh Down windows must kill work ({fleet_name}): {o:?}");
+                if scale == 1 {
+                    // the contended fleet queues deep behind 64 slots —
+                    // onsets must find queued work to orphan there
+                    assert!(o.orphaned > 0, "harsh onset must orphan the queue: {o:?}");
+                }
+            }
+            metric(&format!("chaos.{label}.{fleet_name}.wall_s"), wall_s, "s");
+            metric(
+                &format!("chaos.{label}.{fleet_name}.sim_makespan_s"),
+                out.makespan_s,
+                "s",
+            );
+            metric(&format!("chaos.{label}.{fleet_name}.killed"), o.killed as f64, "");
+            metric(&format!("chaos.{label}.{fleet_name}.orphaned"), o.orphaned as f64, "");
+            runs.push(json_run(label, fleet_name, n, wall_s, &out));
+            if severity == OutageSeverity::Harsh && scale == 4 {
+                harshest = Some((out, horizon_s));
+            }
+        }
+    }
+
+    // --- determinism: the harshest scenario replays identically ---
+    {
+        let fleet = fleet(4);
+        let (first, horizon_s) = harshest.expect("sweep ran");
+        let schedule = OutageSchedule::synthetic(OutageSeverity::Harsh, fleet.len(), horizon_s, SEED);
+        let replay = execute_chaos(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+        assert_eq!(
+            replay.staged.timings, first.staged.timings,
+            "acceptance: same seed must replay identical timings under harsh chaos"
+        );
+        assert_eq!(replay.outage, first.outage);
+        assert_eq!(replay.total_cost_dollars, first.total_cost_dollars);
+        println!("determinism OK: harsh/trio-x4 replays f64-identically");
+    }
+
+    // --- monotonicity: one backend, growing Down window ---
+    {
+        let solo = vec![BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Lanes { workers: 8 },
+            faults: None,
+            transfer_streams: 8,
+        }];
+        let small = if test_mode { 60 } else { 200 };
+        let js = synthetic_fault_campaign(small, SEED);
+        let mut last = execute(&js, &solo, PlacementPolicy::CheapestFirst, &cfg).makespan_s;
+        for len_s in [0.0, 300.0, 1_500.0] {
+            let mut schedule = OutageSchedule::empty();
+            if len_s > 0.0 {
+                schedule.compute.push(ComputeOutage {
+                    backend: 0,
+                    mode: OutageMode::Down,
+                    start_s: 100.0,
+                    end_s: 100.0 + len_s,
+                });
+            }
+            let out = execute_chaos(&js, &solo, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+            assert!(
+                out.makespan_s >= last - 1e-9,
+                "acceptance: a longer outage may not finish earlier ({len_s} s window: {} < {last})",
+                out.makespan_s
+            );
+            last = out.makespan_s;
+        }
+        println!("monotonicity OK: single-backend makespan is monotone in the window");
+    }
+
+    // --- regression gate vs the committed baseline, then (full mode)
+    // refresh the trajectory file ---
+    gate_against_baseline(&runs);
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("chaos_resilience"))
+            .set(
+                "scenario",
+                Json::str(
+                    "2·10³-job campaign under seeded outage schedules (none/mild/harsh) on the \
+                     hpc/cloud/local trio at two fleet scales, seed 42 (see \
+                     benches/chaos_resilience.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chaos_resilience.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("chaos_resilience OK");
+}

@@ -48,6 +48,7 @@ use std::collections::BinaryHeap;
 
 use crate::compute::env_speed_factor;
 use crate::cost::{compute_cost, instance_hourly_rate, staged_job_cost};
+use crate::faults::outage::{OutageSchedule, OutageStats, OutageWindow};
 use crate::faults::{FaultEvent, FaultModel, Injection};
 use crate::netsim::scheduler::{Topology, TransferScheduler, TransferStats};
 use crate::netsim::Env;
@@ -55,7 +56,7 @@ use crate::slurm::{ArrayHandle, ClusterSpec, Scheduler};
 use crate::util::ord::F64Ord;
 use crate::util::units::{fmt_duration, gbps_to_bytes_per_sec};
 
-use super::staged::{run_multi, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome};
+use super::staged::{run_multi_chaos, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome};
 
 /// Salt decorrelating the shared staging path's per-transfer sampling
 /// from the campaign/faults streams ("placxfr").
@@ -280,8 +281,20 @@ impl Skyline {
 /// shared path's bottleneck at full rate. Optimistic under contention,
 /// but uniformly so across backends — which is all the ranking needs;
 /// the co-simulation is the measurement.
-fn transfer_estimate_s(job: &StagedJob, bottleneck_gbps: f64) -> f64 {
+pub(crate) fn transfer_estimate_s(job: &StagedJob, bottleneck_gbps: f64) -> f64 {
     (job.bytes_in + job.bytes_out) as f64 / gbps_to_bytes_per_sec(bottleneck_gbps)
+}
+
+/// Fleet indices in "cheapest" order: $/hr ascending, index-stable —
+/// the tie-break every policy (and the outage re-placement rule) uses.
+pub(crate) fn rate_order(fleet: &[BackendSpec]) -> Vec<usize> {
+    let mut by_rate: Vec<usize> = (0..fleet.len()).collect();
+    by_rate.sort_by(|&a, &b| {
+        F64Ord(fleet[a].hourly_rate())
+            .cmp(&F64Ord(fleet[b].hourly_rate()))
+            .then(a.cmp(&b))
+    });
+    by_rate
 }
 
 /// A deterministic job→backend assignment plus the planner's
@@ -314,13 +327,7 @@ pub fn plan(jobs: &[StagedJob], fleet: &[BackendSpec], policy: PlacementPolicy) 
         .map(|b| Skyline::new(b.slots(shape.0, shape.1)))
         .collect();
     let bottleneck_gbps = shared_topology(fleet).bottleneck_gbps();
-    // "cheapest" below means this order: $/hr ascending, index-stable
-    let mut by_rate: Vec<usize> = (0..fleet.len()).collect();
-    by_rate.sort_by(|&a, &b| {
-        F64Ord(fleet[a].hourly_rate())
-            .cmp(&F64Ord(fleet[b].hourly_rate()))
-            .then(a.cmp(&b))
-    });
+    let by_rate = rate_order(fleet);
 
     let mut assignment = Vec::with_capacity(jobs.len());
     let mut spent = 0.0f64;
@@ -430,6 +437,29 @@ impl BackendEngine {
             BackendEngine::Lanes(l) => l.aborted_ids().len(),
         }
     }
+
+    /// Install this backend's outage windows (DESIGN.md §15) — must
+    /// precede all submissions, like the underlying engines require.
+    pub(crate) fn set_outages(&mut self, windows: Vec<OutageWindow>, kill_backoff_s: f64) {
+        match self {
+            BackendEngine::Slurm(s) => s.scheduler_mut().set_outages(windows, kill_backoff_s),
+            BackendEngine::Lanes(l) => l.set_outages(windows, kill_backoff_s),
+        }
+    }
+
+    pub(crate) fn outage_killed(&self) -> u64 {
+        match self {
+            BackendEngine::Slurm(s) => s.scheduler().outage_killed(),
+            BackendEngine::Lanes(l) => l.outage_killed(),
+        }
+    }
+
+    pub(crate) fn outage_wasted_s(&self) -> f64 {
+        match self {
+            BackendEngine::Slurm(s) => s.scheduler().outage_wasted_s(),
+            BackendEngine::Lanes(l) => l.outage_wasted_s(),
+        }
+    }
 }
 
 pub(crate) fn build_engine(
@@ -499,6 +529,10 @@ pub struct PlacementOutcome {
     pub transfer_events: Vec<FaultEvent>,
     /// Jobs + transfers dropped after exhausting retries, fleet-wide.
     pub aborted: u64,
+    /// Infrastructure-outage telemetry (DESIGN.md §15): `Some` exactly
+    /// when the run went through [`execute_chaos`] — the chaos-free
+    /// path never constructs it.
+    pub outage: Option<OutageStats>,
 }
 
 /// Plan under `policy`, then co-simulate the fleet (every backend's
@@ -511,6 +545,30 @@ pub fn execute(
     cfg: &PlacementConfig,
 ) -> PlacementOutcome {
     run_plan(fleet, plan(jobs, fleet, policy), cfg)
+}
+
+/// [`execute`] under an infrastructure-fault schedule (DESIGN.md §15):
+/// each backend's outage windows go to its engine, the shared staging
+/// path gets the schedule's brownouts, and every job orphaned at an
+/// onset is **re-placed** — onto the cheapest backend not inside a
+/// window at the orphan instant (rate order, index-stable; the
+/// original backend if none survives), its compute rescaled to the new
+/// backend's speed, its inputs re-staged over the degraded path. With
+/// an empty schedule the engine-call sequence is identical to
+/// [`execute`], so the outcome is f64-record-identical
+/// (`rust/tests/chaos_cosim.rs`); panics if the schedule fails
+/// [`OutageSchedule::validate`].
+pub fn execute_chaos(
+    jobs: &[StagedJob],
+    fleet: &[BackendSpec],
+    policy: PlacementPolicy,
+    cfg: &PlacementConfig,
+    schedule: &OutageSchedule,
+) -> PlacementOutcome {
+    if let Err(e) = schedule.validate() {
+        panic!("execute_chaos: {e}");
+    }
+    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, Some(schedule))
 }
 
 /// [`execute`] with every job pinned to one backend — the frontier's
@@ -614,6 +672,15 @@ pub(crate) fn fold_backend_usage(
 }
 
 fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -> PlacementOutcome {
+    run_plan_chaos(fleet, plan, cfg, None)
+}
+
+fn run_plan_chaos(
+    fleet: &[BackendSpec],
+    plan: PlacementPlan,
+    cfg: &PlacementConfig,
+    schedule: Option<&OutageSchedule>,
+) -> PlacementOutcome {
     let mut engines: Vec<BackendEngine> = fleet
         .iter()
         .enumerate()
@@ -624,22 +691,70 @@ fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -
     if let Some(m) = cfg.transfer_faults {
         transfers.set_faults(Injection::campaign_transfer(&m, cfg.max_retries, cfg.seed));
     }
-    let staged = {
+    if let Some(s) = schedule {
+        transfers.set_brownouts(s.brownouts.clone());
+        for (k, engine) in engines.iter_mut().enumerate() {
+            engine.set_outages(s.windows_for(k), s.kill_backoff_s);
+        }
+    }
+    // re-placement rule: cheapest backend alive at the orphan instant
+    // (rate order, index-stable), the original backend when none is;
+    // compute rescales to the new backend's speed via the job's nominal
+    // duration (recovered from its planned backend's factor)
+    let by_rate = rate_order(fleet);
+    let planned: Vec<usize> = plan.assignment.clone();
+    let planned_eff: Vec<StagedJob> = plan.effective.clone();
+    let (staged, chaos) = {
         let mut backends: Vec<&mut dyn ComputeSim> =
             engines.iter_mut().map(|e| e.as_compute()).collect();
-        run_multi(&plan.effective, &plan.assignment, &mut backends, &mut transfers)
+        match schedule {
+            None => run_multi_chaos(&plan.effective, &plan.assignment, &mut backends, &mut transfers, None),
+            Some(s) => {
+                let mut replace = |i: usize, t: f64, from: usize| {
+                    let to = by_rate
+                        .iter()
+                        .copied()
+                        .find(|&k| s.in_window(k, t).is_none())
+                        .unwrap_or(from);
+                    let nominal_s =
+                        planned_eff[i].compute_s * env_speed_factor(fleet[planned[i]].env);
+                    let job = StagedJob {
+                        compute_s: nominal_s / env_speed_factor(fleet[to].env),
+                        ..planned_eff[i].clone()
+                    };
+                    (to, job)
+                };
+                run_multi_chaos(
+                    &plan.effective,
+                    &plan.assignment,
+                    &mut backends,
+                    &mut transfers,
+                    Some(&mut replace),
+                )
+            }
+        }
     };
     let (wasted_min, compute_events) = collect_compute_faults(&engines, plan.effective.len());
+    // fold against the FINAL placements: an orphan billed where it ran,
+    // not where the plan put it (chaos-free, these equal the plan's)
     let per_backend = fold_backend_usage(
         fleet,
-        &plan.effective,
-        &plan.assignment,
+        &chaos.effective,
+        &chaos.assignment,
         &staged.timings,
         &wasted_min,
         &engines,
     );
     let aborted = engines.iter().map(|e| e.aborted_count()).sum::<usize>()
         + transfers.aborted_ids().len();
+    let outage = schedule.map(|s| OutageStats {
+        windows: s.compute.len(),
+        brownouts: s.brownouts.len(),
+        killed: engines.iter().map(|e| e.outage_killed()).sum(),
+        orphaned: chaos.orphaned,
+        re_placed: chaos.re_placed,
+        killed_wasted_s: engines.iter().map(|e| e.outage_wasted_s()).sum(),
+    });
     PlacementOutcome {
         total_cost_dollars: per_backend.iter().map(|u| u.cost_dollars).sum(),
         makespan_s: staged.makespan_s,
@@ -648,6 +763,7 @@ fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -
         compute_events,
         transfer_events: transfers.fault_events().to_vec(),
         aborted: aborted as u64,
+        outage,
         staged,
         plan,
     }
@@ -923,6 +1039,73 @@ mod tests {
                 assert!(!dominates && !dominated_by, "{} vs {}", p.label, q.label);
             }
         }
+    }
+
+    use crate::faults::outage::{ComputeOutage, OutageMode};
+
+    #[test]
+    fn empty_chaos_schedule_reproduces_execute_exactly() {
+        let fleet = trio();
+        let js = jobs(12, 180.0);
+        let cfg = PlacementConfig::default();
+        let plain = execute(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+        let chaos = execute_chaos(
+            &js,
+            &fleet,
+            PlacementPolicy::CheapestFirst,
+            &cfg,
+            &OutageSchedule::empty(),
+        );
+        assert_eq!(plain.staged.timings, chaos.staged.timings);
+        assert_eq!(plain.per_backend, chaos.per_backend);
+        assert_eq!(plain.total_cost_dollars, chaos.total_cost_dollars);
+        assert_eq!(plain.makespan_s, chaos.makespan_s);
+        assert_eq!(plain.transfer, chaos.transfer);
+        assert!(plain.outage.is_none(), "chaos-free path reports no stats");
+        assert_eq!(chaos.outage, Some(OutageStats::default()));
+    }
+
+    #[test]
+    fn outage_re_places_orphans_onto_surviving_backends() {
+        let fleet = trio(); // hpc = 2 lanes, cheapest: everything plans there
+        let js = jobs(8, 300.0);
+        let cfg = PlacementConfig::default();
+        let mut schedule = OutageSchedule::empty();
+        schedule.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Down,
+            start_s: 400.0,
+            end_s: 1.0e7,
+        });
+        let out = execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+        let stats = out.outage.expect("chaos path reports stats");
+        assert!(stats.orphaned > 0, "jobs queued behind 2 lanes must orphan at onset");
+        assert_eq!(stats.re_placed, stats.orphaned, "a surviving backend exists for every orphan");
+        assert!(stats.killed >= 1, "the running wave dies with the backend");
+        assert!(stats.killed_wasted_s > 0.0);
+        assert!(out.staged.timings.iter().all(|t| t.completed), "degradation, not loss");
+        let moved: usize = out.per_backend.iter().skip(1).map(|u| u.jobs).sum();
+        assert_eq!(moved as u64, stats.re_placed, "orphans bill on the backend that ran them");
+    }
+
+    #[test]
+    fn chaos_runs_replay_given_the_seed() {
+        let fleet = trio();
+        let js = jobs(20, 150.0);
+        let cfg = PlacementConfig::default();
+        let schedule = OutageSchedule::synthetic(
+            crate::faults::outage::OutageSeverity::Harsh,
+            fleet.len(),
+            3_000.0,
+            cfg.seed,
+        );
+        let run = || execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+        let a = run();
+        let b = run();
+        assert_eq!(a.staged.timings, b.staged.timings);
+        assert_eq!(a.outage, b.outage);
+        assert_eq!(a.per_backend, b.per_backend);
+        assert_eq!(a.total_cost_dollars, b.total_cost_dollars);
     }
 
     #[test]

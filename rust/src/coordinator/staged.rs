@@ -33,6 +33,7 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
+use crate::faults::outage::{OutageMode, OutageWindow};
 use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
 use crate::slurm::{ArrayHandle, Scheduler, SimJob};
@@ -114,6 +115,14 @@ pub trait ComputeSim {
     fn take_restage(&mut self) -> Vec<(u64, f64)> {
         Vec::new()
     }
+    /// Drain (job id, onset time) pairs released back to the planner at
+    /// an outage onset (DESIGN.md §15): the backend orphaned its queue,
+    /// so [`run_multi_chaos`] must re-place each job — a fresh stage-in
+    /// to the chosen backend, then resubmission when it lands. Backends
+    /// without an outage schedule return nothing.
+    fn take_orphans(&mut self) -> Vec<(u64, f64)> {
+        Vec::new()
+    }
 }
 
 /// The SLURM cluster simulator as a staged-campaign compute backend.
@@ -136,6 +145,13 @@ impl SlurmSim {
 
     pub fn scheduler(&self) -> &Scheduler {
         &self.sched
+    }
+
+    /// Mutable scheduler access for pre-run configuration (e.g.
+    /// [`Scheduler::set_outages`]); the co-simulation itself drives the
+    /// engine only through [`ComputeSim`].
+    pub fn scheduler_mut(&mut self) -> &mut Scheduler {
+        &mut self.sched
     }
 }
 
@@ -169,6 +185,10 @@ impl ComputeSim for SlurmSim {
 
     fn take_restage(&mut self) -> Vec<(u64, f64)> {
         self.sched.take_parked()
+    }
+
+    fn take_orphans(&mut self) -> Vec<(u64, f64)> {
+        self.sched.take_orphans()
     }
 }
 
@@ -204,6 +224,16 @@ pub struct LanePool {
     /// (job id, fail time) awaiting external re-stage + resubmit.
     parked: Vec<(u64, f64)>,
     aborted: Vec<u64>,
+    /// Backend outage windows (DESIGN.md §15); empty = immortal pool.
+    outages: Vec<OutageWindow>,
+    /// Onset-processed flag per window, aligned with `outages`.
+    outage_fired: Vec<bool>,
+    /// Requeue delay for attempts killed at a `Down` onset.
+    outage_backoff_s: f64,
+    /// Queued jobs released to the planner at onsets: (job id, onset time).
+    orphans: Vec<(u64, f64)>,
+    outage_killed: u64,
+    outage_wasted_s: f64,
 }
 
 /// One attempt occupying a lane.
@@ -231,6 +261,91 @@ impl LanePool {
             fault_events: Vec::new(),
             parked: Vec::new(),
             aborted: Vec::new(),
+            outages: Vec::new(),
+            outage_fired: Vec::new(),
+            outage_backoff_s: 0.0,
+            orphans: Vec::new(),
+            outage_killed: 0,
+            outage_wasted_s: 0.0,
+        }
+    }
+
+    /// Install the pool's outage windows (before submitting work),
+    /// mirroring [`crate::slurm::Scheduler::set_outages`]: no job starts
+    /// inside a window; each onset orphans the queue back to the planner
+    /// and — under [`OutageMode::Down`] — kills every running attempt
+    /// (progress wasted), requeueing it after `kill_backoff_s`. An empty
+    /// schedule is bit-identical to never calling this.
+    pub fn set_outages(&mut self, windows: Vec<OutageWindow>, kill_backoff_s: f64) {
+        for w in &windows {
+            assert!(
+                w.start_s.is_finite() && w.end_s.is_finite() && w.start_s >= 0.0,
+                "outage window bounds must be finite and ≥ 0"
+            );
+            assert!(w.end_s > w.start_s, "outage window end must exceed start");
+        }
+        assert!(
+            kill_backoff_s.is_finite() && kill_backoff_s >= 0.0,
+            "kill backoff must be finite and ≥ 0"
+        );
+        assert!(
+            self.running.is_empty() && self.due.is_empty() && self.future.is_empty(),
+            "set_outages must precede all submissions"
+        );
+        self.outage_fired = vec![false; windows.len()];
+        self.outages = windows;
+        self.outage_backoff_s = kill_backoff_s;
+    }
+
+    /// Running attempts killed at `Down` onsets so far.
+    pub fn outage_killed(&self) -> u64 {
+        self.outage_killed
+    }
+
+    /// Lane seconds wasted by outage-killed attempts so far.
+    pub fn outage_wasted_s(&self) -> f64 {
+        self.outage_wasted_s
+    }
+
+    /// True if the clock sits inside any outage window (no job starts).
+    fn in_outage(&self) -> bool {
+        self.outages
+            .iter()
+            .any(|w| self.clock >= w.start_s && self.clock < w.end_s)
+    }
+
+    /// Fire every outage onset the clock has reached, once per window:
+    /// orphan the due queue back to the planner; under `Down` also kill
+    /// the running attempts — waste recorded, lanes freed, retries
+    /// requeued after the kill backoff. A no-op without a schedule.
+    fn process_outage_onsets(&mut self) {
+        for k in 0..self.outages.len() {
+            if self.outage_fired[k] || self.clock < self.outages[k].start_s {
+                continue;
+            }
+            self.outage_fired[k] = true;
+            let w = self.outages[k];
+            for ((_, id), _) in std::mem::take(&mut self.due) {
+                self.orphans.push((id, self.clock));
+            }
+            if w.mode == OutageMode::Down {
+                for run in std::mem::take(&mut self.running) {
+                    let alloc = match run.fail {
+                        Some(mode) => run.duration_s * mode.wasted_fraction(),
+                        None => run.duration_s,
+                    };
+                    self.outage_killed += 1;
+                    self.outage_wasted_s += (self.clock - (run.end_s - alloc)).max(0.0);
+                    self.enqueue(run.id, self.clock + self.outage_backoff_s, run.duration_s);
+                }
+                // `Down` kills everything at once, so resetting every
+                // busy lane to the kill instant is exact
+                for lane in &mut self.lanes {
+                    if *lane > self.clock {
+                        *lane = self.clock;
+                    }
+                }
+            }
         }
     }
 
@@ -272,12 +387,16 @@ impl LanePool {
 
     /// Start queued-and-ready jobs on free lanes, FIFO by (ready, id).
     fn start_ready(&mut self) {
+        self.process_outage_onsets();
         while let Some(&Reverse((ready, id, dur))) = self.future.peek() {
             if ready.0 > self.clock + EPS {
                 break; // min-heap: everything after is future too
             }
             self.future.pop();
             self.due.insert((ready, id), dur.0);
+        }
+        if self.in_outage() {
+            return; // nothing starts inside a window
         }
         loop {
             if self.due.is_empty() {
@@ -359,6 +478,17 @@ impl ComputeSim for LanePool {
         if let Some(&Reverse((ready, ..))) = self.future.peek() {
             t = t.min(ready.0);
         }
+        // outage boundaries are events: onsets must fire exactly on time
+        // (they orphan the queue) and blocked starts resume at each
+        // window's end
+        for (k, w) in self.outages.iter().enumerate() {
+            if !self.outage_fired[k] && w.start_s > self.clock + EPS {
+                t = t.min(w.start_s);
+            }
+            if w.start_s <= self.clock && w.end_s > self.clock && !self.due.is_empty() {
+                t = t.min(w.end_s);
+            }
+        }
         t.is_finite().then_some(t)
     }
 
@@ -393,6 +523,10 @@ impl ComputeSim for LanePool {
 
     fn take_restage(&mut self) -> Vec<(u64, f64)> {
         std::mem::take(&mut self.parked)
+    }
+
+    fn take_orphans(&mut self) -> Vec<(u64, f64)> {
+        std::mem::take(&mut self.orphans)
     }
 }
 
@@ -487,13 +621,55 @@ pub fn run_multi(
     backends: &mut [&mut dyn ComputeSim],
     transfers: &mut TransferScheduler,
 ) -> StagedOutcome {
+    run_multi_chaos(jobs, assignment, backends, transfers, None).0
+}
+
+/// Extra bookkeeping from a chaos-enabled co-simulation
+/// ([`run_multi_chaos`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosCosim {
+    /// Jobs orphaned at outage onsets (a job may be orphaned more than
+    /// once if its new backend fails too).
+    pub orphaned: u64,
+    /// Orphans re-placed onto a *different* backend (the rest re-staged
+    /// to their original backend and waited out the window).
+    pub re_placed: u64,
+    /// Final (possibly re-placed) backend of each job.
+    pub assignment: Vec<usize>,
+    /// Final effective jobs (re-placement rescales compute to the new
+    /// backend's speed) — what billing must fold against.
+    pub effective: Vec<StagedJob>,
+}
+
+/// [`run_multi`] plus graceful degradation (DESIGN.md §15): when a
+/// backend's outage onset orphans queued jobs, `replace` picks each
+/// orphan's new backend and its effective (speed-rescaled) job; the loop
+/// submits a fresh stage-in there and resubmits the job when it lands —
+/// orphans conserve: every one re-enters exactly one backend. With
+/// `replace = None`, orphans re-stage to their original backend. With no
+/// outage schedules installed the engine-call sequence is identical to
+/// [`run_multi`] call for call, so chaos-free runs stay
+/// f64-record-identical (`rust/tests/chaos_cosim.rs`).
+pub fn run_multi_chaos(
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    backends: &mut [&mut dyn ComputeSim],
+    transfers: &mut TransferScheduler,
+    mut replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+) -> (StagedOutcome, ChaosCosim) {
     assert_eq!(jobs.len(), assignment.len(), "one backend assignment per job");
     assert!(!backends.is_empty(), "run_multi needs at least one backend");
     if let Some(&bad) = assignment.iter().find(|&&b| b >= backends.len()) {
         panic!("assignment names backend {bad}, but only {} exist", backends.len());
     }
     let mut timings = vec![StagedTiming::default(); jobs.len()];
-    for (i, j) in jobs.iter().enumerate() {
+    // orphan re-placement may move a job and rescale its compute; the
+    // working copies start as exact clones, so the chaos-free path reads
+    // the same values it always did
+    let mut jobs_eff: Vec<StagedJob> = jobs.to_vec();
+    let mut assignment: Vec<usize> = assignment.to_vec();
+    let mut chaos = ChaosCosim::default();
+    for (i, j) in jobs_eff.iter().enumerate() {
         transfers.submit_at(stage_in_id(i), assignment[i] as u64, j.bytes_in, 0.0);
     }
     // transfer ids ≥ 2·jobs are re-stages; the map recovers their job
@@ -501,6 +677,7 @@ pub fn run_multi(
     let mut restage_job: BTreeMap<u64, usize> = BTreeMap::new();
     let mut events = MergedEvents::new();
     let mut seen = 0usize;
+    let n_backends = backends.len();
     loop {
         events.arm(transfers.next_event_time());
         for backend in backends.iter() {
@@ -523,7 +700,7 @@ pub fn run_multi(
             if stage_in {
                 timings[i].stage_in_wait_s = r.queue_wait_s();
                 timings[i].stage_in_s = r.transfer_s();
-                backends[assignment[i]].submit(i as u64, r.end_s, &jobs[i]);
+                backends[assignment[i]].submit(i as u64, r.end_s, &jobs_eff[i]);
             } else {
                 timings[i].stage_out_wait_s = r.queue_wait_s();
                 timings[i].stage_out_s = r.transfer_s();
@@ -535,11 +712,11 @@ pub fn run_multi(
             for (id, end_s) in backend.advance_to(t) {
                 let i = id as usize;
                 timings[i].compute_end_s = end_s;
-                timings[i].compute_start_s = end_s - jobs[i].compute_s;
+                timings[i].compute_start_s = end_s - jobs_eff[i].compute_s;
                 transfers.submit_at(
                     stage_out_id(i),
                     assignment[i] as u64,
-                    jobs[i].bytes_out,
+                    jobs_eff[i].bytes_out,
                     end_s,
                 );
             }
@@ -553,8 +730,36 @@ pub fn run_multi(
                 transfers.submit_at(
                     rid,
                     assignment[i] as u64,
-                    jobs[i].bytes_in,
+                    jobs_eff[i].bytes_in,
                     fail_s.max(transfers.clock()),
+                );
+            }
+            // outage onsets hand orphans back here: the planner picks a
+            // surviving backend (or keeps the original), a fresh stage-in
+            // goes there, and the job resubmits when it lands — if the
+            // chosen backend is still inside its window, its own start
+            // blocking makes the job wait the window out
+            for (id, orphan_s) in backend.take_orphans() {
+                let i = id as usize;
+                chaos.orphaned += 1;
+                let (to, job) = match replace.as_mut() {
+                    Some(f) => f(i, orphan_s, assignment[i]),
+                    None => (assignment[i], jobs_eff[i].clone()),
+                };
+                assert!(to < n_backends, "orphan re-placed onto unknown backend {to}");
+                if to != assignment[i] {
+                    chaos.re_placed += 1;
+                }
+                assignment[i] = to;
+                jobs_eff[i] = job;
+                let rid = next_restage_id;
+                next_restage_id += 1;
+                restage_job.insert(rid, i);
+                transfers.submit_at(
+                    rid,
+                    to as u64,
+                    jobs_eff[i].bytes_in,
+                    orphan_s.max(transfers.clock()),
                 );
             }
         }
@@ -563,11 +768,16 @@ pub fn run_multi(
         .iter()
         .map(|x| x.compute_end_s)
         .fold(transfers.stats().makespan_s, f64::max);
-    StagedOutcome {
-        makespan_s,
-        transfer: transfers.stats(),
-        timings,
-    }
+    chaos.assignment = assignment;
+    chaos.effective = jobs_eff;
+    (
+        StagedOutcome {
+            makespan_s,
+            transfer: transfers.stats(),
+            timings,
+        },
+        chaos,
+    )
 }
 
 #[cfg(test)]
@@ -831,5 +1041,123 @@ mod tests {
             (out.timings, lanes.fault_events().to_vec(), transfers.fault_events().to_vec())
         };
         assert_eq!(run(), run());
+    }
+
+    use crate::netsim::scheduler::Topology;
+
+    fn window(mode: OutageMode, start_s: f64, end_s: f64) -> OutageWindow {
+        OutageWindow { mode, start_s, end_s }
+    }
+
+    #[test]
+    fn empty_lane_outage_schedule_is_bit_identical() {
+        let js = jobs(6, 80.0);
+        let run = |chaos: bool| {
+            let mut lanes = LanePool::new(2);
+            if chaos {
+                lanes.set_outages(Vec::new(), 30.0);
+            }
+            let mut transfers = TransferScheduler::for_env(Env::Local, 3, 41);
+            run_staged(&js, &mut lanes, &mut transfers)
+        };
+        let plain = run(false);
+        let chaos = run(true);
+        assert_eq!(plain.timings, chaos.timings, "empty outage schedule must be a no-op");
+        assert_eq!(plain.makespan_s, chaos.makespan_s);
+        assert_eq!(plain.transfer, chaos.transfer);
+    }
+
+    #[test]
+    fn lane_drain_onset_orphans_queue_and_blocks_starts() {
+        let j = StagedJob {
+            cores: 1,
+            ram_gb: 1,
+            compute_s: 60.0,
+            bytes_in: 0,
+            bytes_out: 0,
+        };
+        let mut lanes = LanePool::new(1);
+        lanes.set_outages(vec![window(OutageMode::Drain, 50.0, 100.0)], 0.0);
+        lanes.submit(0, 0.0, &j);
+        lanes.submit(1, 10.0, &j);
+        let done = lanes.advance_to(300.0);
+        // job 0 was already running at the onset: Drain lets it finish
+        assert_eq!(done, vec![(0, 60.0)]);
+        // job 1 was queued behind it: released back to the planner
+        assert_eq!(lanes.take_orphans(), vec![(1, 50.0)]);
+        assert_eq!(lanes.outage_killed(), 0);
+        assert_eq!(lanes.outage_wasted_s(), 0.0);
+    }
+
+    #[test]
+    fn lane_down_onset_kills_running_attempts_and_requeues() {
+        let j = StagedJob {
+            cores: 1,
+            ram_gb: 1,
+            compute_s: 100.0,
+            bytes_in: 0,
+            bytes_out: 0,
+        };
+        let mut lanes = LanePool::new(1);
+        lanes.set_outages(vec![window(OutageMode::Down, 30.0, 40.0)], 5.0);
+        lanes.submit(0, 0.0, &j);
+        let done = lanes.advance_to(500.0);
+        // killed at 30 (30 s wasted), requeued at 35 — still inside the
+        // window — so the retry starts at the window end and runs in full
+        assert_eq!(done, vec![(0, 140.0)]);
+        assert_eq!(lanes.outage_killed(), 1);
+        assert_eq!(lanes.outage_wasted_s(), 30.0);
+        assert!(lanes.take_orphans().is_empty(), "running attempts requeue locally");
+    }
+
+    #[test]
+    fn lane_outage_cosim_is_deterministic() {
+        let js = jobs(10, 70.0);
+        let run = || {
+            let mut lanes = LanePool::new(2);
+            lanes.set_outages(
+                vec![
+                    window(OutageMode::Down, 120.0, 180.0),
+                    window(OutageMode::Drain, 400.0, 450.0),
+                ],
+                10.0,
+            );
+            let mut transfers = TransferScheduler::for_env(Env::Local, 3, 43);
+            let out = run_staged(&js, &mut lanes, &mut transfers);
+            (out.timings, lanes.outage_killed(), lanes.outage_wasted_s())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn chaos_orphans_re_place_onto_a_surviving_backend() {
+        // backend 0 drains mid-campaign; the orphaned queued job re-places
+        // onto backend 1 via a fresh stage-in and completes there
+        let js: Vec<StagedJob> = (0..2)
+            .map(|_| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s: 100.0,
+                bytes_in: 1_000,
+                bytes_out: 1_000,
+            })
+            .collect();
+        let mut a = LanePool::new(1);
+        a.set_outages(vec![window(OutageMode::Drain, 30.0, 10_000.0)], 0.0);
+        let mut b = LanePool::new(1);
+        let mut backends: Vec<&mut dyn ComputeSim> = vec![&mut a, &mut b];
+        let topo = Topology::of(Env::Local)
+            .with_host_stream_cap(0, 4)
+            .with_host_stream_cap(1, 4);
+        let mut transfers = TransferScheduler::new(topo, 47);
+        let mut replace = |i: usize, _orphan_s: f64, _from: usize| (1usize, js[i].clone());
+        let (out, chaos) =
+            run_multi_chaos(&js, &[0, 0], &mut backends, &mut transfers, Some(&mut replace));
+        assert_eq!(chaos.orphaned, 1);
+        assert_eq!(chaos.re_placed, 1);
+        assert_eq!(chaos.assignment, vec![0, 1]);
+        assert!(out.timings.iter().all(|t| t.completed), "every orphan re-enters a backend");
+        // 2 stage-ins + 1 re-stage + 2 copy-backs
+        assert_eq!(out.transfer.transfers, 5);
     }
 }

@@ -47,14 +47,17 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::compute::env_speed_factor;
+use crate::cost::staged_job_cost;
+use crate::faults::outage::{OutageSchedule, OutageStats};
 use crate::faults::{tenant_seed, FaultEvent, FaultModel, Injection};
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
 use crate::util::units::percentiles;
 
 use super::placement::{
-    build_engine, collect_compute_faults, fold_backend_usage, job_billing, plan, shared_topology,
-    BackendEngine, BackendSpec, BackendUsage, PlacementConfig, PlacementPolicy,
-    PLACEMENT_TRANSFER_SALT,
+    build_engine, collect_compute_faults, fold_backend_usage, job_billing, plan, rate_order,
+    shared_topology, transfer_estimate_s, BackendEngine, BackendSpec, BackendUsage,
+    PlacementConfig, PlacementPolicy, PLACEMENT_TRANSFER_SALT,
 };
 use super::staged::{
     stage_in_id, stage_out_id, synthetic_fault_campaign, MergedEvents, StagedJob, StagedOutcome,
@@ -77,8 +80,10 @@ pub struct TenantSpec {
     /// fleet (each tenant plans independently; arbitration happens at
     /// admission, not planning).
     pub policy: PlacementPolicy,
-    /// Dollar budget SLO; `None` = unconstrained. Reported, not
-    /// enforced ([`TenantUsage::budget_met`]).
+    /// Dollar budget SLO; `None` = unconstrained. Reported by default
+    /// ([`TenantUsage::budget_met`]); [`run_tenants_chaos`] with
+    /// `enforce = true` additionally stops admitting this tenant once
+    /// projected committed spend would burn through it (DESIGN.md §15).
     pub budget_dollars: Option<f64>,
     /// Deadline SLO in simulated seconds; `None` = unconstrained.
     pub deadline_s: Option<f64>,
@@ -151,8 +156,15 @@ pub struct TenantUsage {
     /// Jobs that reached a verified copy-back.
     pub completed: usize,
     /// Jobs dropped before completion (retries exhausted anywhere in
-    /// the staged pipeline).
+    /// the staged pipeline, or never admitted under SLO enforcement).
     pub aborted: usize,
+    /// Jobs never admitted because SLO enforcement stopped this tenant
+    /// (budget burned) — billed $0, a subset of `aborted`. Always 0
+    /// without enforcement.
+    pub slo_aborted: usize,
+    /// Jobs escalated to the fleet's fastest backend because they were
+    /// admitted past this tenant's deadline (enforcement only).
+    pub escalated: usize,
     /// Compute-fault events on this tenant's jobs.
     pub failed_attempts: usize,
     /// Billed effective minutes (wasted attempts included).
@@ -197,6 +209,12 @@ pub struct TenancyReport {
     /// Jobs + transfers dropped after exhausting retries, fleet-wide.
     pub aborted: u64,
     pub queue_depth: Option<usize>,
+    /// Infrastructure-outage telemetry (DESIGN.md §15): `Some` exactly
+    /// when the run went through [`run_tenants_chaos`].
+    pub outage: Option<OutageStats>,
+    /// True when SLO enforcement (budget stop + deadline escalation)
+    /// was armed for this run.
+    pub enforced: bool,
 }
 
 /// Full result of [`run_tenants`]: the report plus the flattened
@@ -256,6 +274,16 @@ struct Admission {
     active_total: usize,
     contended_service: Vec<f64>,
     contended_total: f64,
+    /// SLO enforcement armed ([`Admission::with_enforcement`]): budget
+    /// gates below are live, `committed`/`proj_cost` are populated.
+    enforce: bool,
+    /// Per-tenant budget SLO (enforcement only; `None` = unconstrained).
+    budget: Vec<Option<f64>>,
+    /// Projected dollars committed by this tenant's grants so far.
+    committed: Vec<f64>,
+    /// Global job → projected dollars (planner estimate, the admission
+    /// analogue of the placement policies' `staged_job_cost` ranking).
+    proj_cost: Vec<f64>,
 }
 
 impl Admission {
@@ -277,8 +305,24 @@ impl Admission {
             contended_total: 0.0,
             in_flight: 0,
             depth: queue_depth.unwrap_or(usize::MAX),
+            enforce: false,
+            budget: vec![None; tenants.len()],
+            committed: vec![0.0; tenants.len()],
+            proj_cost: Vec::new(),
             pending,
         }
+    }
+
+    /// Arm SLO enforcement (DESIGN.md §15): [`Admission::next`] stops
+    /// admitting a tenant once its committed projected spend plus the
+    /// head job's projection would exceed its budget — the stranded
+    /// jobs drain as [`TenantUsage::slo_aborted`], billed $0.
+    fn with_enforcement(mut self, tenants: &[TenantSpec], proj_cost: Vec<f64>) -> Self {
+        assert_eq!(proj_cost.len(), self.service.len(), "one projection per job");
+        self.enforce = true;
+        self.budget = tenants.iter().map(|t| t.budget_dollars).collect();
+        self.proj_cost = proj_cost;
+        self
     }
 
     /// Grant one admission slot: highest priority tier first, lowest
@@ -292,6 +336,16 @@ impl Admission {
         for k in 0..self.pending.len() {
             if self.pending[k].is_empty() {
                 continue;
+            }
+            // a budget-stopped tenant is done contending: budgets only
+            // burn, so its FIFO head can never admit again
+            if self.enforce {
+                if let Some(b) = self.budget[k] {
+                    let head = *self.pending[k].front().expect("non-empty pending pool");
+                    if self.committed[k] + self.proj_cost[head] > b + 1e-9 {
+                        continue;
+                    }
+                }
             }
             contending += 1;
             best = Some(match best {
@@ -312,6 +366,9 @@ impl Admission {
         let i = self.pending[k].pop_front().expect("best tenant has pending work");
         let service = self.service[i];
         self.vtime[k] += service / self.weight[k];
+        if self.enforce {
+            self.committed[k] += self.proj_cost[i];
+        }
         if contended {
             self.contended_service[k] += service;
             self.contended_total += service;
@@ -325,6 +382,63 @@ impl Admission {
     }
 }
 
+/// Graceful-degradation context threaded through [`run_admitted`] on
+/// the chaos path (DESIGN.md §15): the outage schedule driving orphan
+/// re-placement, plus the SLO-escalation inputs when enforcement is on.
+struct DegradeCtx<'a> {
+    schedule: &'a OutageSchedule,
+    fleet: &'a [BackendSpec],
+    /// Fleet in $/hr-ascending order — orphans re-place onto the first
+    /// backend alive at the orphan instant.
+    by_rate: Vec<usize>,
+    /// Escalation target: highest speed factor, lowest index on ties.
+    fastest: usize,
+    enforce: bool,
+    /// Per-tenant deadline SLO.
+    deadline: Vec<Option<f64>>,
+    tenant_of: &'a [usize],
+    /// Global job → nominal (speed-factor-free) compute seconds, so a
+    /// moved job's compute rescales from the invariant, not the last
+    /// backend's scaled value.
+    nominal_s: Vec<f64>,
+}
+
+/// What the degradation machinery did during one run.
+#[derive(Default)]
+struct DegradeTally {
+    orphaned: u64,
+    re_placed: u64,
+    /// Per-tenant count of deadline-escalated jobs.
+    escalated: Vec<usize>,
+}
+
+/// Deadline escalation (enforcement only): a job granted admission
+/// *after* its tenant's deadline can no longer meet it on a cheap
+/// backend — move it to the fleet's fastest and rescale its compute.
+fn escalate_if_late(
+    ctx: &DegradeCtx,
+    i: usize,
+    when: f64,
+    effective: &mut [StagedJob],
+    assignment: &mut [usize],
+    escalated: &mut [usize],
+) {
+    if !ctx.enforce {
+        return;
+    }
+    let k = ctx.tenant_of[i];
+    let Some(deadline) = ctx.deadline[k] else { return };
+    if when <= deadline || assignment[i] == ctx.fastest {
+        return;
+    }
+    assignment[i] = ctx.fastest;
+    effective[i] = StagedJob {
+        compute_s: ctx.nominal_s[i] / env_speed_factor(ctx.fleet[ctx.fastest].env),
+        ..effective[i].clone()
+    };
+    escalated[k] += 1;
+}
+
 /// [`super::staged::run_multi`]'s co-simulation loop with admission
 /// control threaded through: stage-ins are submitted when a job is
 /// *admitted* (not unconditionally at t=0), and a finished or dead job
@@ -335,18 +449,31 @@ impl Admission {
 /// all-stage-ins-at-zero loop in the same job order, and nothing below
 /// ever re-enters the arbiter, so the engine-call sequence is identical
 /// call for call (the N=1 parity gate).
+///
+/// With `chaos` present, orphans handed back at outage onsets re-place
+/// exactly like `placement::execute_chaos` (cheapest alive at the
+/// orphan instant), and grants past an enforced deadline escalate
+/// ([`escalate_if_late`]). `chaos = None` adds no engine calls.
 fn run_admitted(
-    effective: &[StagedJob],
-    assignment: &[usize],
+    effective: &mut [StagedJob],
+    assignment: &mut [usize],
     engines: &mut [BackendEngine],
     transfers: &mut TransferScheduler,
     adm: &mut Admission,
-) -> (StagedOutcome, Vec<f64>) {
+    chaos: Option<&DegradeCtx>,
+) -> (StagedOutcome, Vec<f64>, DegradeTally) {
     let n = effective.len();
     let mut timings = vec![StagedTiming::default(); n];
     let mut admit_s = vec![f64::INFINITY; n];
+    let mut tally = DegradeTally {
+        escalated: vec![0; adm.pending.len()],
+        ..Default::default()
+    };
     while adm.in_flight < adm.depth {
         let Some(i) = adm.next() else { break };
+        if let Some(ctx) = chaos {
+            escalate_if_late(ctx, i, 0.0, effective, assignment, &mut tally.escalated);
+        }
         admit_s[i] = 0.0;
         transfers.submit_at(stage_in_id(i), assignment[i] as u64, effective[i].bytes_in, 0.0);
     }
@@ -416,6 +543,39 @@ fn run_admitted(
                     fail_s.max(transfers.clock()),
                 );
             }
+            // outage onsets hand orphans back here: re-place onto the
+            // cheapest backend alive at the orphan instant (the original
+            // when none survives — its engine blocks until window end),
+            // re-stage inputs there, resubmit when they land
+            if let Some(ctx) = chaos {
+                for (id, orphan_s) in engine.as_compute().take_orphans() {
+                    let i = id as usize;
+                    tally.orphaned += 1;
+                    let to = ctx
+                        .by_rate
+                        .iter()
+                        .copied()
+                        .find(|&k| ctx.schedule.in_window(k, orphan_s).is_none())
+                        .unwrap_or(assignment[i]);
+                    if to != assignment[i] {
+                        tally.re_placed += 1;
+                        assignment[i] = to;
+                        effective[i] = StagedJob {
+                            compute_s: ctx.nominal_s[i] / env_speed_factor(ctx.fleet[to].env),
+                            ..effective[i].clone()
+                        };
+                    }
+                    let rid = next_restage_id;
+                    next_restage_id += 1;
+                    restage_job.insert(rid, i);
+                    transfers.submit_at(
+                        rid,
+                        assignment[i] as u64,
+                        effective[i].bytes_in,
+                        orphan_s.max(transfers.clock()),
+                    );
+                }
+            }
         }
         // dead jobs release their slots too, or a faulty run would leak
         // admission capacity and starve the pending pool: the compute
@@ -441,6 +601,9 @@ fn run_admitted(
             if adm.in_flight < adm.depth {
                 if let Some(i) = adm.next() {
                     let when = at.max(transfers.clock());
+                    if let Some(ctx) = chaos {
+                        escalate_if_late(ctx, i, when, effective, assignment, &mut tally.escalated);
+                    }
                     admit_s[i] = when;
                     transfers.submit_at(
                         stage_in_id(i),
@@ -463,6 +626,7 @@ fn run_admitted(
             timings,
         },
         admit_s,
+        tally,
     )
 }
 
@@ -476,6 +640,47 @@ pub fn run_tenants(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
     cfg: &TenancyConfig,
+) -> TenancyOutcome {
+    run_tenants_impl(tenants, fleet, cfg, None, false)
+}
+
+/// [`run_tenants`] under an infrastructure-fault schedule with optional
+/// SLO *enforcement* (DESIGN.md §15) — the landing of ROADMAP item 1's
+/// "enforced SLOs":
+///
+/// * backend outage windows and link brownouts co-simulate exactly as
+///   in [`super::placement::execute_chaos`]; orphaned jobs re-place
+///   onto the cheapest backend alive at the orphan instant;
+/// * `enforce = true` arms degradation control: a tenant whose
+///   *projected committed spend* would burn through its
+///   [`TenantSpec::budget_dollars`] stops being admitted (the stranded
+///   jobs drain as [`TenantUsage::slo_aborted`], billed $0), and a job
+///   granted admission past its tenant's [`TenantSpec::deadline_s`]
+///   escalates to the fleet's fastest backend;
+/// * `enforce = false` keeps SLOs report-only — with an empty schedule
+///   the outcome is f64-record-identical to [`run_tenants`]
+///   (`rust/tests/chaos_cosim.rs`).
+///
+/// Panics if the schedule fails [`OutageSchedule::validate`].
+pub fn run_tenants_chaos(
+    tenants: &[TenantSpec],
+    fleet: &[BackendSpec],
+    cfg: &TenancyConfig,
+    schedule: &OutageSchedule,
+    enforce: bool,
+) -> TenancyOutcome {
+    if let Err(e) = schedule.validate() {
+        panic!("run_tenants_chaos: {e}");
+    }
+    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce)
+}
+
+fn run_tenants_impl(
+    tenants: &[TenantSpec],
+    fleet: &[BackendSpec],
+    cfg: &TenancyConfig,
+    schedule: Option<&OutageSchedule>,
+    enforce: bool,
 ) -> TenancyOutcome {
     assert!(!tenants.is_empty(), "run_tenants needs at least one tenant");
     assert!(!fleet.is_empty(), "run_tenants needs at least one backend");
@@ -519,9 +724,59 @@ pub fn run_tenants(
     if let Some(m) = cfg.transfer_faults {
         transfers.set_faults(Injection::campaign_transfer(&m, cfg.max_retries, cfg.seed));
     }
+    if let Some(s) = schedule {
+        transfers.set_brownouts(s.brownouts.clone());
+        for (k, engine) in engines.iter_mut().enumerate() {
+            engine.set_outages(s.windows_for(k), s.kill_backoff_s);
+        }
+    }
     let mut adm = Admission::new(tenants, &tenant_ranges, &effective, cfg.queue_depth);
-    let (staged, admit_s) =
-        run_admitted(&effective, &assignment, &mut engines, &mut transfers, &mut adm);
+    if enforce {
+        let bottleneck_gbps = shared_topology(fleet).bottleneck_gbps();
+        let proj: Vec<f64> = effective
+            .iter()
+            .zip(&assignment)
+            .map(|(j, &k)| {
+                staged_job_cost(
+                    fleet[k].env,
+                    j.compute_s / 60.0,
+                    transfer_estimate_s(j, bottleneck_gbps),
+                )
+            })
+            .collect();
+        adm = adm.with_enforcement(tenants, proj);
+    }
+    let ctx = schedule.map(|s| {
+        let mut fastest = 0usize;
+        for k in 1..fleet.len() {
+            if env_speed_factor(fleet[k].env) > env_speed_factor(fleet[fastest].env) {
+                fastest = k;
+            }
+        }
+        DegradeCtx {
+            schedule: s,
+            fleet,
+            by_rate: rate_order(fleet),
+            fastest,
+            enforce,
+            deadline: tenants.iter().map(|t| t.deadline_s).collect(),
+            tenant_of: &tenant_of,
+            nominal_s: effective
+                .iter()
+                .zip(&assignment)
+                .map(|(j, &k)| j.compute_s * env_speed_factor(fleet[k].env))
+                .collect(),
+        }
+    });
+    let (staged, admit_s, tally) = run_admitted(
+        &mut effective,
+        &mut assignment,
+        &mut engines,
+        &mut transfers,
+        &mut adm,
+        ctx.as_ref(),
+    );
+    drop(ctx);
     let (wasted_min, compute_events) = collect_compute_faults(&engines, effective.len());
     let per_backend = fold_backend_usage(
         fleet,
@@ -546,6 +801,7 @@ pub fn run_tenants(
     for (k, spec) in tenants.iter().enumerate() {
         let (lo, hi) = tenant_ranges[k];
         let mut completed = 0usize;
+        let mut slo_aborted = 0usize;
         let mut minutes = 0.0f64;
         let mut dollars = 0.0f64;
         let mut makespan = 0.0f64;
@@ -554,6 +810,10 @@ pub fn run_tenants(
             let t = &staged.timings[i];
             if t.completed {
                 completed += 1;
+            } else if !admit_s[i].is_finite() {
+                // never admitted: only SLO enforcement strands jobs in
+                // the pending pool (aborts release their slots)
+                slo_aborted += 1;
             }
             let (m, d) =
                 job_billing(fleet[assignment[i]].env, effective[i].compute_s, wasted_min[i], t);
@@ -572,6 +832,8 @@ pub fn run_tenants(
             jobs: hi - lo,
             completed,
             aborted: (hi - lo) - completed,
+            slo_aborted,
+            escalated: tally.escalated[k],
             failed_attempts: failed_by_tenant[k],
             compute_minutes: minutes,
             cost_dollars: dollars,
@@ -595,6 +857,14 @@ pub fn run_tenants(
             deadline_met: spec.deadline_s.is_none_or(|d| makespan <= d),
         });
     }
+    let outage = schedule.map(|s| OutageStats {
+        windows: s.compute.len(),
+        brownouts: s.brownouts.len(),
+        killed: engines.iter().map(|e| e.outage_killed()).sum(),
+        orphaned: tally.orphaned,
+        re_placed: tally.re_placed,
+        killed_wasted_s: engines.iter().map(|e| e.outage_wasted_s()).sum(),
+    });
     let report = TenancyReport {
         tenants: usages,
         // total from the per-backend fold, in fleet order — the same
@@ -605,6 +875,8 @@ pub fn run_tenants(
         per_backend,
         aborted: aborted as u64,
         queue_depth: cfg.queue_depth,
+        outage,
+        enforced: enforce,
     };
     TenancyOutcome {
         report,
@@ -789,6 +1061,148 @@ mod tests {
                 ..Default::default()
             },
         );
+    }
+
+    use crate::faults::outage::{ComputeOutage, OutageMode};
+
+    fn tiny_jobs(n: usize, compute_s: f64) -> Vec<StagedJob> {
+        // 1-byte staging: projected job cost ≈ billed job cost, which
+        // the budget-quantum assertions lean on
+        (0..n)
+            .map(|_| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s,
+                bytes_in: 1,
+                bytes_out: 1,
+            })
+            .collect()
+    }
+
+    fn duo_fleet() -> Vec<BackendSpec> {
+        vec![
+            BackendSpec {
+                name: "hpc".into(),
+                env: Env::Hpc,
+                kind: BackendKind::Lanes { workers: 2 },
+                faults: None,
+                transfer_streams: 4,
+            },
+            BackendSpec {
+                name: "cloud".into(),
+                env: Env::Cloud,
+                kind: BackendKind::Lanes { workers: 4 },
+                faults: None,
+                transfer_streams: 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn enforcement_off_empty_schedule_matches_run_tenants() {
+        let tenants = vec![
+            spec("a", 1.0, 0, uniform_jobs(6, 120.0)),
+            spec("b", 2.0, 1, uniform_jobs(4, 90.0)),
+        ];
+        let fleet = lanes_fleet(2);
+        let cfg = TenancyConfig {
+            queue_depth: Some(3),
+            ..Default::default()
+        };
+        let plain = run_tenants(&tenants, &fleet, &cfg);
+        let chaos = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), false);
+        assert_eq!(plain.staged.timings, chaos.staged.timings);
+        assert_eq!(plain.admit_s, chaos.admit_s);
+        assert_eq!(plain.report.tenants, chaos.report.tenants);
+        assert_eq!(plain.report.per_backend, chaos.report.per_backend);
+        assert_eq!(plain.report.total_cost_dollars, chaos.report.total_cost_dollars);
+        assert!(plain.report.outage.is_none() && !plain.report.enforced);
+        assert_eq!(chaos.report.outage, Some(OutageStats::default()));
+    }
+
+    #[test]
+    fn budget_enforcement_stops_admission_within_one_job_quantum() {
+        let mut tenants = vec![spec("capped", 1.0, 0, tiny_jobs(10, 600.0))];
+        let fleet = lanes_fleet(2);
+        let cfg = TenancyConfig::default();
+        // no budget: enforcement admits (and bills) everything
+        let free = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), true);
+        assert_eq!(free.report.tenants[0].slo_aborted, 0);
+        let total = free.report.tenants[0].cost_dollars;
+        assert!(total > 0.0);
+
+        let budget = total * 0.4;
+        tenants[0].budget_dollars = Some(budget);
+        let capped = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), true);
+        let usage = &capped.report.tenants[0];
+        assert!(usage.slo_aborted > 0, "a 40% budget must strand jobs");
+        assert_eq!(
+            usage.completed + usage.slo_aborted,
+            10,
+            "clean run: every admitted job finishes, every stranded job is counted"
+        );
+        let quantum = total / 10.0;
+        assert!(
+            usage.cost_dollars <= budget + quantum + 1e-9,
+            "billed {} vs budget {budget} + one-job quantum {quantum}",
+            usage.cost_dollars
+        );
+        // reported-only SLOs admit everything and blow the budget
+        let reported = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), false);
+        assert_eq!(reported.report.tenants[0].slo_aborted, 0);
+        assert!(reported.report.tenants[0].cost_dollars > usage.cost_dollars);
+        assert!(!reported.report.tenants[0].budget_met);
+    }
+
+    #[test]
+    fn deadline_escalation_moves_late_grants_to_the_fastest_backend() {
+        // cheapest-first plans everything on 1-lane hpc; depth 1
+        // serializes admissions, so grants from ~600 s on land past the
+        // deadline and escalate to cloud (the highest speed factor)
+        let mut fleet = duo_fleet();
+        fleet[0].kind = BackendKind::Lanes { workers: 1 };
+        let mut t = spec("slo", 1.0, 0, tiny_jobs(6, 300.0));
+        t.deadline_s = Some(500.0);
+        let cfg = TenancyConfig {
+            queue_depth: Some(1),
+            ..Default::default()
+        };
+        let out = run_tenants_chaos(&[t], &fleet, &cfg, &OutageSchedule::empty(), true);
+        let usage = &out.report.tenants[0];
+        assert!(usage.escalated > 0, "late grants must escalate");
+        assert!(usage.escalated < 6, "early grants stay on the planned backend");
+        assert_eq!(usage.completed, 6);
+        let moved = out.assignment.iter().filter(|&&k| k == 1).count();
+        assert_eq!(moved, usage.escalated);
+        for (i, &k) in out.assignment.iter().enumerate() {
+            if k == 1 {
+                assert!(out.admit_s[i] > 500.0, "only past-deadline grants move");
+                let ran_s = out.staged.timings[i].compute_end_s - out.staged.timings[i].compute_start_s;
+                assert!(ran_s < 299.0, "escalated compute rescales to cloud speed: {ran_s}");
+            }
+        }
+    }
+
+    #[test]
+    fn outage_orphans_re_place_and_the_fleet_degrades_gracefully() {
+        let fleet = duo_fleet(); // cheapest-first plans everything on hpc
+        let tenants = vec![spec("lab", 1.0, 0, uniform_jobs(8, 300.0))];
+        let mut schedule = OutageSchedule::empty();
+        schedule.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Down,
+            start_s: 350.0,
+            end_s: 1.0e6,
+        });
+        let out =
+            run_tenants_chaos(&tenants, &fleet, &TenancyConfig::default(), &schedule, false);
+        let stats = out.report.outage.expect("chaos path reports stats");
+        assert!(stats.orphaned > 0, "queued jobs behind 2 lanes must orphan");
+        assert_eq!(stats.re_placed, stats.orphaned, "cloud survives: every orphan moves");
+        assert!(stats.killed >= 1, "the running wave dies with hpc");
+        assert_eq!(out.report.tenants[0].completed, 8, "degradation, not loss");
+        let on_cloud = out.assignment.iter().filter(|&&k| k == 1).count();
+        assert_eq!(on_cloud as u64, stats.re_placed);
     }
 
     #[test]

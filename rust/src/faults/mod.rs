@@ -24,6 +24,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod outage;
+
 /// Why an attempt failed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailureMode {
@@ -202,6 +204,11 @@ pub struct Injection {
     /// Requeue delay after a failed attempt: `backoff_base_s · 2^attempt`
     /// (the submit-loop's resubmit-with-backoff, paper Fig. 3).
     pub backoff_base_s: f64,
+    /// Ceiling on the exponential backoff: [`Self::backoff_s`] never
+    /// exceeds this. `f64::INFINITY` (the default) keeps the historical
+    /// uncapped doubling — `x.min(INFINITY)` is `x` bit-for-bit, so the
+    /// default replays every pre-cap trace identically.
+    pub backoff_cap_s: f64,
     /// Park timed-out attempts for the caller to re-stage inputs and
     /// resubmit (the staged co-simulation drives this; a timeout wipes
     /// the node-local scratch, so the retry needs a fresh stage-in)
@@ -222,6 +229,7 @@ impl Injection {
             max_retries,
             seed,
             backoff_base_s: 60.0,
+            backoff_cap_s: f64::INFINITY,
             park_timeouts: false,
         }
     }
@@ -229,6 +237,16 @@ impl Injection {
     pub fn with_backoff(mut self, base_s: f64) -> Self {
         assert!(base_s >= 0.0 && base_s.is_finite(), "backoff must be ≥ 0");
         self.backoff_base_s = base_s;
+        self
+    }
+
+    /// Cap the exponential backoff at `cap_s` seconds (must be ≥ 0; NaN
+    /// rejected). Without a cap the doubling saturates only at
+    /// `2^16 · base` — hours of simulated dead air at high attempt
+    /// counts.
+    pub fn with_backoff_cap(mut self, cap_s: f64) -> Self {
+        assert!(cap_s >= 0.0 && !cap_s.is_nan(), "backoff cap must be ≥ 0");
+        self.backoff_cap_s = cap_s;
         self
     }
 
@@ -254,6 +272,7 @@ impl Injection {
             max_retries,
             seed: seed ^ FAULT_COMPUTE_SALT,
             backoff_base_s: backoff_s,
+            backoff_cap_s: f64::INFINITY,
             park_timeouts: true,
         }
     }
@@ -267,6 +286,7 @@ impl Injection {
             max_retries,
             seed: seed ^ FAULT_TRANSFER_SALT,
             backoff_base_s: 0.0,
+            backoff_cap_s: f64::INFINITY,
             park_timeouts: false,
         }
     }
@@ -311,10 +331,12 @@ impl Injection {
         }
     }
 
-    /// Requeue delay after failed attempt `attempt` (exponential,
-    /// capped so the doubling cannot overflow to infinity).
+    /// Requeue delay after failed attempt `attempt`: exponential in the
+    /// attempt index (the exponent saturates at 16 so the doubling
+    /// cannot overflow), then clamped to [`Self::backoff_cap_s`].
     pub fn backoff_s(&self, attempt: u32) -> f64 {
-        self.backoff_base_s * f64::from(2u32.saturating_pow(attempt.min(16)))
+        (self.backoff_base_s * f64::from(2u32.saturating_pow(attempt.min(16))))
+            .min(self.backoff_cap_s)
     }
 }
 
@@ -389,6 +411,14 @@ pub struct FaultTelemetry {
     pub wasted_compute_minutes: f64,
     /// Wire seconds consumed by failed transfer attempts.
     pub wasted_transfer_s: f64,
+    /// Running attempts killed at infrastructure `Down` onsets
+    /// ([`outage::OutageSchedule`], DESIGN.md §15); zero without a
+    /// chaos schedule.
+    pub outage_kills: u64,
+    /// Queued jobs orphaned back to the planner at outage onsets.
+    pub outage_orphans: u64,
+    /// Allocation minutes wasted by outage-killed attempts.
+    pub outage_wasted_minutes: f64,
     /// Closed-form §4 expected duration-overrun factor for the same
     /// model + retry budget (1.0 when fault-free) — the pre-co-simulation
     /// model, kept as a cross-check.
@@ -405,6 +435,9 @@ impl Default for FaultTelemetry {
             aborted: 0,
             wasted_compute_minutes: 0.0,
             wasted_transfer_s: 0.0,
+            outage_kills: 0,
+            outage_orphans: 0,
+            outage_wasted_minutes: 0.0,
             expected_overrun_factor: 1.0,
         }
     }
@@ -462,6 +495,13 @@ impl FaultTelemetry {
         if ev.action == FaultAction::Requeued {
             self.transfer_retries += 1;
         }
+    }
+
+    /// Fold an infrastructure-outage summary in (DESIGN.md §15).
+    pub fn record_outage(&mut self, o: &outage::OutageStats) {
+        self.outage_kills += o.killed;
+        self.outage_orphans += o.orphaned;
+        self.outage_wasted_minutes += o.killed_wasted_s / 60.0;
     }
 }
 
@@ -724,6 +764,43 @@ mod tests {
         assert!(inj.backoff_s(100).is_finite(), "cap must prevent overflow");
         let immediate = Injection::new(FaultModel::typical(), 3, 1).with_backoff(0.0);
         assert_eq!(immediate.backoff_s(5), 0.0);
+    }
+
+    #[test]
+    fn backoff_cap_bounds_the_doubling() {
+        let inj = Injection::new(FaultModel::typical(), 3, 1)
+            .with_backoff(10.0)
+            .with_backoff_cap(120.0);
+        // below the ceiling the doubling is untouched
+        assert_eq!(inj.backoff_s(0), 10.0);
+        assert_eq!(inj.backoff_s(3), 80.0);
+        // at and beyond the crossing attempt the ceiling binds
+        assert_eq!(inj.backoff_s(4), 120.0);
+        assert_eq!(inj.backoff_s(16), 120.0);
+        assert_eq!(inj.backoff_s(1000), 120.0);
+        // a zero cap disables backoff entirely
+        let none = Injection::new(FaultModel::typical(), 3, 1)
+            .with_backoff(10.0)
+            .with_backoff_cap(0.0);
+        assert_eq!(none.backoff_s(7), 0.0);
+    }
+
+    #[test]
+    fn default_backoff_cap_is_bit_identical_to_uncapped() {
+        // the default INFINITY cap must not perturb a single pre-cap
+        // delay: x.min(INFINITY) == x for every finite x
+        let inj = Injection::new(FaultModel::typical(), 3, 1).with_backoff(60.0);
+        assert_eq!(inj.backoff_cap_s, f64::INFINITY);
+        for attempt in 0..40u32 {
+            let uncapped = 60.0 * f64::from(2u32.saturating_pow(attempt.min(16)));
+            assert_eq!(inj.backoff_s(attempt), uncapped, "attempt {attempt}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "backoff cap")]
+    fn backoff_cap_rejects_negative() {
+        let _ = Injection::new(FaultModel::typical(), 3, 1).with_backoff_cap(-1.0);
     }
 
     #[test]

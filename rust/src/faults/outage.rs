@@ -1,0 +1,433 @@
+//! Infrastructure-fault schedules (DESIGN.md §15): whole-backend
+//! down/drain windows and shared-link capacity brownouts, co-simulated
+//! inside the engines.
+//!
+//! [`super::Injection`] (DESIGN.md §11) makes individual *job attempts*
+//! fail; this module makes the *infrastructure* fail. An
+//! [`OutageSchedule`] is a deterministic, validated list of
+//! per-backend [`ComputeOutage`] windows (a backend drains or dies for
+//! an interval) and fleet-wide [`Brownout`] windows (the shared
+//! bottleneck link degrades to a fraction of its capacity — factor 0 is
+//! a full storage-egress stall). The engines respond in kind:
+//!
+//! * `slurm::Scheduler` / `coordinator::staged::LanePool` block starts
+//!   inside a window (maintenance-like), orphan their queued jobs back
+//!   to the planner at onset, and — under [`OutageMode::Down`] — kill
+//!   running attempts (progress wasted and billed) and requeue them
+//!   locally after [`OutageSchedule::kill_backoff_s`];
+//! * `netsim::TransferScheduler` re-runs max-min fair share against the
+//!   degraded capacity, so in-flight transfers re-contend;
+//! * `coordinator::placement` re-places orphans onto surviving
+//!   backends, and `coordinator::tenancy` layers SLO *enforcement* on
+//!   top (budget-burn admission stops, deadline escalation).
+//!
+//! Everything is seeded and replayable: [`OutageSchedule::synthetic`]
+//! derives a severity-scaled schedule from `(severity, fleet, horizon,
+//! seed)` alone, and an empty schedule is contractually a no-op — the
+//! chaos execution paths are f64-record-identical to the non-chaos ones
+//! (`rust/tests/chaos_cosim.rs`).
+
+use crate::util::rng::Rng;
+
+/// Salt decorrelating the synthetic-schedule stream from the fault and
+/// workload streams sharing the campaign seed.
+pub const OUTAGE_SALT: u64 = 0x6f75_7461_6765_3031; // "outage01"
+
+/// How a compute backend fails during an outage window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutageMode {
+    /// The backend dies: running attempts are killed at onset (their
+    /// progress is wasted and billed), requeued locally with the
+    /// schedule's kill backoff; queued jobs are orphaned to the planner.
+    Down,
+    /// Administrative drain: running attempts survive to completion but
+    /// nothing new starts; queued jobs are orphaned to the planner.
+    Drain,
+}
+
+/// One backend-outage window `[start_s, end_s)` of a fleet schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeOutage {
+    /// Fleet backend index (`coordinator::placement` order).
+    pub backend: usize,
+    pub mode: OutageMode,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// A backend-local outage window, as handed to one compute engine —
+/// [`ComputeOutage`] stripped of its backend index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutageWindow {
+    pub mode: OutageMode,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// One shared-link brownout window `[start_s, end_s)`: the bottleneck
+/// capacity is multiplied by `factor` while the window is active
+/// (`factor = 0` stalls storage egress completely).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Brownout {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Remaining capacity fraction in `[0, 1]`.
+    pub factor: f64,
+}
+
+/// A full infrastructure-fault schedule for one co-simulated run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageSchedule {
+    pub compute: Vec<ComputeOutage>,
+    pub brownouts: Vec<Brownout>,
+    /// Requeue delay applied to attempts killed at a [`OutageMode::Down`]
+    /// onset (the infrastructure analogue of `Injection::backoff_s`).
+    pub kill_backoff_s: f64,
+}
+
+impl Default for OutageSchedule {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl OutageSchedule {
+    /// The no-op schedule: contractually f64-record-identical to not
+    /// passing a schedule at all (`rust/tests/chaos_cosim.rs`).
+    pub fn empty() -> Self {
+        Self {
+            compute: Vec::new(),
+            brownouts: Vec::new(),
+            kill_backoff_s: 30.0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compute.is_empty() && self.brownouts.is_empty()
+    }
+
+    /// Reject malformed windows loudly — a backwards window would make
+    /// the engines' boundary events fire in the past, and an over-unity
+    /// brownout factor would *add* link capacity.
+    pub fn validate(&self) -> Result<(), String> {
+        for (k, w) in self.compute.iter().enumerate() {
+            if !w.start_s.is_finite() || !w.end_s.is_finite() || w.start_s < 0.0 {
+                return Err(format!(
+                    "invalid outage window #{k}: bounds must be finite and ≥ 0 \
+                     (got [{}, {}))",
+                    w.start_s, w.end_s
+                ));
+            }
+            if w.end_s <= w.start_s {
+                return Err(format!(
+                    "invalid outage window #{k}: end {} must exceed start {}",
+                    w.end_s, w.start_s
+                ));
+            }
+        }
+        for (k, b) in self.brownouts.iter().enumerate() {
+            if !b.start_s.is_finite() || !b.end_s.is_finite() || b.start_s < 0.0 {
+                return Err(format!(
+                    "invalid brownout window #{k}: bounds must be finite and ≥ 0 \
+                     (got [{}, {}))",
+                    b.start_s, b.end_s
+                ));
+            }
+            if b.end_s <= b.start_s {
+                return Err(format!(
+                    "invalid brownout window #{k}: end {} must exceed start {}",
+                    b.end_s, b.start_s
+                ));
+            }
+            if !b.factor.is_finite() || !(0.0..=1.0).contains(&b.factor) {
+                return Err(format!(
+                    "invalid brownout window #{k}: factor {} must be in [0, 1]",
+                    b.factor
+                ));
+            }
+        }
+        if !self.kill_backoff_s.is_finite() || self.kill_backoff_s < 0.0 {
+            return Err(format!(
+                "invalid kill backoff {} (want finite, ≥ 0)",
+                self.kill_backoff_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// The windows hitting backend `backend`, in schedule order.
+    pub fn windows_for(&self, backend: usize) -> Vec<OutageWindow> {
+        self.compute
+            .iter()
+            .filter(|w| w.backend == backend)
+            .map(|w| OutageWindow {
+                mode: w.mode,
+                start_s: w.start_s,
+                end_s: w.end_s,
+            })
+            .collect()
+    }
+
+    /// If backend `backend` is inside any outage window at time `t`,
+    /// the latest end among the covering windows (the earliest instant
+    /// the planner may hand it new work); `None` when the backend is up.
+    pub fn in_window(&self, backend: usize, t: f64) -> Option<f64> {
+        self.compute
+            .iter()
+            .filter(|w| w.backend == backend && w.start_s <= t && t < w.end_s)
+            .map(|w| w.end_s)
+            .fold(None, |acc, end| Some(acc.map_or(end, |a: f64| a.max(end))))
+    }
+
+    /// Severity-scaled synthetic schedule for an `n_backends` fleet over
+    /// `horizon_s` simulated seconds — deterministic in the seed, the
+    /// shared preset behind `medflow chaos --severity` and
+    /// `benches/chaos_resilience.rs`.
+    pub fn synthetic(
+        severity: OutageSeverity,
+        n_backends: usize,
+        horizon_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(
+            horizon_s > 0.0 && horizon_s.is_finite(),
+            "outage horizon must be finite and > 0"
+        );
+        let mut sched = Self::empty();
+        if n_backends == 0 {
+            return sched;
+        }
+        let mut rng = Rng::new(seed ^ OUTAGE_SALT);
+        match severity {
+            OutageSeverity::None => {}
+            OutageSeverity::Mild => {
+                // an administrative drain on roughly half the fleet plus
+                // one half-capacity brownout
+                for backend in 0..n_backends {
+                    if rng.next_f64() < 0.5 {
+                        let start_s = (0.10 + 0.40 * rng.next_f64()) * horizon_s;
+                        sched.compute.push(ComputeOutage {
+                            backend,
+                            mode: OutageMode::Drain,
+                            start_s,
+                            end_s: start_s + 0.10 * horizon_s,
+                        });
+                    }
+                }
+                sched.brownouts.push(Brownout {
+                    start_s: 0.20 * horizon_s,
+                    end_s: 0.35 * horizon_s,
+                    factor: 0.5,
+                });
+            }
+            OutageSeverity::Harsh => {
+                // every backend dies once; half also drain later; the
+                // link browns out to quarter capacity and then stalls
+                for backend in 0..n_backends {
+                    let start_s = (0.05 + 0.35 * rng.next_f64()) * horizon_s;
+                    let len_s = (0.10 + 0.15 * rng.next_f64()) * horizon_s;
+                    sched.compute.push(ComputeOutage {
+                        backend,
+                        mode: OutageMode::Down,
+                        start_s,
+                        end_s: start_s + len_s,
+                    });
+                    if rng.next_f64() < 0.5 {
+                        let start_s = (0.55 + 0.20 * rng.next_f64()) * horizon_s;
+                        sched.compute.push(ComputeOutage {
+                            backend,
+                            mode: OutageMode::Drain,
+                            start_s,
+                            end_s: start_s + 0.10 * horizon_s,
+                        });
+                    }
+                }
+                sched.brownouts.push(Brownout {
+                    start_s: 0.15 * horizon_s,
+                    end_s: 0.40 * horizon_s,
+                    factor: 0.25,
+                });
+                sched.brownouts.push(Brownout {
+                    start_s: 0.45 * horizon_s,
+                    end_s: 0.50 * horizon_s,
+                    factor: 0.0,
+                });
+            }
+        }
+        debug_assert!(sched.validate().is_ok(), "{:?}", sched.validate());
+        sched
+    }
+}
+
+/// Synthetic-schedule severity presets (`medflow chaos --severity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutageSeverity {
+    None,
+    Mild,
+    Harsh,
+}
+
+impl OutageSeverity {
+    pub fn label(self) -> &'static str {
+        match self {
+            OutageSeverity::None => "none",
+            OutageSeverity::Mild => "mild",
+            OutageSeverity::Harsh => "harsh",
+        }
+    }
+}
+
+/// Outage/degradation telemetry for one chaos run, folded into
+/// `PlacementOutcome`/`TenancyReport` and `FaultTelemetry`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OutageStats {
+    /// Compute-outage windows in the schedule.
+    pub windows: usize,
+    /// Brownout windows in the schedule.
+    pub brownouts: usize,
+    /// Running attempts killed at `Down` onsets.
+    pub killed: u64,
+    /// Queued jobs orphaned back to the planner at onsets.
+    pub orphaned: u64,
+    /// Orphans re-placed onto a surviving backend (the rest resubmit to
+    /// their original backend at window end).
+    pub re_placed: u64,
+    /// Allocation seconds wasted by outage-killed attempts.
+    pub killed_wasted_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_schedule_is_empty_and_valid() {
+        let s = OutageSchedule::empty();
+        assert!(s.is_empty());
+        assert!(s.validate().is_ok());
+        assert!(s.windows_for(0).is_empty());
+        assert_eq!(s.in_window(0, 10.0), None);
+        assert_eq!(s, OutageSchedule::default());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_windows() {
+        let mut s = OutageSchedule::empty();
+        s.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Down,
+            start_s: 10.0,
+            end_s: 5.0,
+        });
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("invalid outage window"), "{err}");
+
+        let mut s = OutageSchedule::empty();
+        s.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Drain,
+            start_s: f64::NAN,
+            end_s: 5.0,
+        });
+        assert!(s.validate().is_err());
+
+        let mut s = OutageSchedule::empty();
+        s.brownouts.push(Brownout {
+            start_s: 0.0,
+            end_s: 10.0,
+            factor: 1.5,
+        });
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("factor"), "{err}");
+
+        let mut s = OutageSchedule::empty();
+        s.brownouts.push(Brownout {
+            start_s: 20.0,
+            end_s: 10.0,
+            factor: 0.5,
+        });
+        assert!(s.validate().is_err());
+
+        let mut s = OutageSchedule::empty();
+        s.kill_backoff_s = -1.0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn windows_for_filters_by_backend() {
+        let mut s = OutageSchedule::empty();
+        s.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Down,
+            start_s: 10.0,
+            end_s: 20.0,
+        });
+        s.compute.push(ComputeOutage {
+            backend: 1,
+            mode: OutageMode::Drain,
+            start_s: 30.0,
+            end_s: 40.0,
+        });
+        assert_eq!(s.windows_for(0).len(), 1);
+        assert_eq!(s.windows_for(0)[0].mode, OutageMode::Down);
+        assert_eq!(s.windows_for(1)[0].start_s, 30.0);
+        assert!(s.windows_for(2).is_empty());
+    }
+
+    #[test]
+    fn in_window_reports_latest_covering_end() {
+        let mut s = OutageSchedule::empty();
+        s.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Down,
+            start_s: 10.0,
+            end_s: 20.0,
+        });
+        s.compute.push(ComputeOutage {
+            backend: 0,
+            mode: OutageMode::Drain,
+            start_s: 15.0,
+            end_s: 30.0,
+        });
+        assert_eq!(s.in_window(0, 5.0), None);
+        assert_eq!(s.in_window(0, 10.0), Some(20.0), "window start is inclusive");
+        assert_eq!(s.in_window(0, 16.0), Some(30.0), "overlap: latest end wins");
+        assert_eq!(s.in_window(0, 20.0), Some(30.0), "window end is exclusive");
+        assert_eq!(s.in_window(0, 30.0), None);
+        assert_eq!(s.in_window(1, 16.0), None);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_severity_scaled() {
+        let a = OutageSchedule::synthetic(OutageSeverity::Harsh, 3, 10_000.0, 42);
+        let b = OutageSchedule::synthetic(OutageSeverity::Harsh, 3, 10_000.0, 42);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        let c = OutageSchedule::synthetic(OutageSeverity::Harsh, 3, 10_000.0, 43);
+        assert_ne!(a, c, "the seed must matter");
+
+        let none = OutageSchedule::synthetic(OutageSeverity::None, 3, 10_000.0, 42);
+        assert!(none.is_empty());
+        let mild = OutageSchedule::synthetic(OutageSeverity::Mild, 3, 10_000.0, 42);
+        // harsh hits every backend with a Down window; mild only drains
+        assert!(a.compute.len() >= 3, "{a:?}");
+        assert!(a.compute.iter().filter(|w| w.mode == OutageMode::Down).count() >= 3);
+        assert!(mild.compute.iter().all(|w| w.mode == OutageMode::Drain), "{mild:?}");
+        assert!(a.brownouts.len() > mild.brownouts.len());
+        assert!(a.brownouts.iter().any(|b| b.factor == 0.0), "harsh includes a stall");
+        for s in [&a, &mild] {
+            assert!(s.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn synthetic_handles_empty_fleet() {
+        let s = OutageSchedule::synthetic(OutageSeverity::Harsh, 0, 1_000.0, 7);
+        assert!(s.compute.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon")]
+    fn synthetic_rejects_bad_horizon() {
+        let _ = OutageSchedule::synthetic(OutageSeverity::Mild, 2, 0.0, 7);
+    }
+}

@@ -26,6 +26,7 @@ use medflow::coordinator::placement::{self, PlacementConfig, PlacementPolicy};
 use medflow::coordinator::staged::{run_staged, synthetic_fault_campaign, SlurmSim};
 use medflow::coordinator::tenancy;
 use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::faults::outage::{Brownout, ComputeOutage, OutageMode, OutageSchedule, OutageSeverity};
 use medflow::faults::{FaultModel, FaultTelemetry, Injection};
 use medflow::netsim::scheduler::{Topology, TransferScheduler};
 use medflow::netsim::Env;
@@ -130,6 +131,7 @@ fn run() -> Result<()> {
         "faults" => cmd_faults(&args),
         "place" => cmd_place(&args),
         "tenants" => cmd_tenants(&args),
+        "chaos" => cmd_chaos(&args),
         "lint" => cmd_lint(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
@@ -591,6 +593,115 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `medflow chaos`: run the shared synthetic campaign through the
+/// heterogeneous fleet under a seeded infrastructure-fault schedule
+/// (DESIGN.md §15) — per-backend Down/Drain windows plus link
+/// brownouts — and print the outage damage report next to the usual
+/// placement telemetry. `--severity` picks the synthetic preset;
+/// explicit `--window`/`--brownout` events stack on top of it.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print_usage();
+        return Ok(());
+    }
+    let n = args.num("jobs", 500) as usize;
+    let seed = args.num("seed", 42);
+    let retries = args.num("retries", 3) as u32;
+    let policy = parse_placement_policy(args.get("policy").unwrap_or("cheapest"), args)?;
+    let horizon_s = args.num("horizon", 14_400).max(1) as f64;
+    let severity = match args.get("severity").unwrap_or("harsh") {
+        "none" => OutageSeverity::None,
+        "mild" => OutageSeverity::Mild,
+        "harsh" => OutageSeverity::Harsh,
+        other => bail!("unknown outage severity '{other}' (none | mild | harsh)"),
+    };
+    let fleet = placement::default_fleet(
+        ClusterSpec::accre(),
+        args.num("concurrent", 2_000) as u32,
+        args.num("cloud-lanes", 64).max(1) as usize,
+        args.num("local-lanes", 8).max(1) as usize,
+    );
+    let mut schedule = OutageSchedule::synthetic(severity, fleet.len(), horizon_s, seed);
+    if let Some(w) = args.get("window") {
+        schedule.compute.push(parse_outage_window(w, fleet.len())?);
+    }
+    if let Some(b) = args.get("brownout") {
+        schedule.brownouts.push(parse_brownout(b)?);
+    }
+    schedule.validate().map_err(anyhow::Error::msg)?;
+    let cfg = PlacementConfig {
+        seed,
+        transfer_faults: None,
+        max_retries: retries,
+        retry_backoff_s: args.num("backoff", 60) as f64,
+    };
+    let jobs = synthetic_fault_campaign(n, seed);
+    println!(
+        "chaos co-simulation: {n} jobs across {} backends under '{}' outages \
+         ({} windows, {} brownouts, seed {seed})",
+        fleet.len(),
+        severity.label(),
+        schedule.compute.len(),
+        schedule.brownouts.len()
+    );
+    let out = placement::execute_chaos(&jobs, &fleet, policy, &cfg, &schedule);
+    let completed = out.staged.timings.iter().filter(|t| t.completed).count();
+    println!(
+        "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
+        out.total_cost_dollars,
+        fmt_duration(out.makespan_s)
+    );
+    if let Some(o) = &out.outage {
+        print!("{}", report::format_outage(o));
+    }
+    print!("{}", report::format_placement(&policy.label(), &out.per_backend));
+    print!("{}", report::format_transfer_stats(&out.transfer));
+    Ok(())
+}
+
+/// Parse `--window BACKEND:down|drain:START:END`.
+fn parse_outage_window(spec: &str, n_backends: usize) -> Result<ComputeOutage> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let fail = || format!("invalid outage window '{spec}' (expect BACKEND:down|drain:START:END)");
+    if parts.len() != 4 {
+        bail!(fail());
+    }
+    let backend: usize = parts[0].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    if backend >= n_backends {
+        bail!("invalid outage window '{spec}': backend {backend} outside the {n_backends}-backend fleet");
+    }
+    let mode = match parts[1] {
+        "down" => OutageMode::Down,
+        "drain" => OutageMode::Drain,
+        _ => bail!(fail()),
+    };
+    let start_s: f64 = parts[2].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    let end_s: f64 = parts[3].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    Ok(ComputeOutage {
+        backend,
+        mode,
+        start_s,
+        end_s,
+    })
+}
+
+/// Parse `--brownout START:END:FACTOR`.
+fn parse_brownout(spec: &str) -> Result<Brownout> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let fail = || format!("invalid brownout window '{spec}' (expect START:END:FACTOR)");
+    if parts.len() != 3 {
+        bail!(fail());
+    }
+    let start_s: f64 = parts[0].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    let end_s: f64 = parts[1].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    let factor: f64 = parts[2].parse().map_err(|_| anyhow::anyhow!(fail()))?;
+    Ok(Brownout {
+        start_s,
+        end_s,
+        factor,
+    })
+}
+
 /// `medflow faults`: run the shared synthetic campaign
 /// ([`synthetic_fault_campaign`]) through the staged co-simulation
 /// fault-free and under the chosen model (in-engine injection,
@@ -853,6 +964,10 @@ USAGE:
                     [--priorities P1,P2,…] [--policy cheapest|deadline|budget]
                     [--faults none|typical|harsh] [--retries N] [--seed S]
                                                   (multi-tenant shared fleet, DESIGN.md §13)
+  medflow chaos     [--severity none|mild|harsh] [--jobs N] [--horizon SECS]
+                    [--window BACKEND:down|drain:START:END] [--brownout START:END:FACTOR]
+                    [--policy cheapest|deadline|budget] [--retries N] [--seed S]
+                                                  (infrastructure outages + graceful degradation, DESIGN.md §15)
   medflow lint      [--src DIR] [--rules id1,id2,…] [--deny] [--list]
                                                   (determinism static analysis, DESIGN.md §14)
   medflow pipelines

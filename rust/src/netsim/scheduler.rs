@@ -55,6 +55,7 @@ use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 use super::components::TransferPath;
 use super::{Env, NetProfile};
+use crate::faults::outage::Brownout;
 use crate::faults::{FaultAction, FaultEvent, Injection};
 use crate::util::ord::F64Ord;
 use crate::util::rng::Rng;
@@ -293,6 +294,14 @@ pub struct TransferScheduler {
     /// Earliest pending latency expiry among active streams (∞ when all
     /// flow): crossing it on a clock advance invalidates `rates`.
     next_flow_start: f64,
+    /// Shared-link brownout windows (DESIGN.md §15): while one is
+    /// active the bottleneck capacity is scaled by its factor and every
+    /// flowing stream re-contends. Empty = full capacity forever,
+    /// contractually bit-identical to the pre-chaos engine.
+    brownouts: Vec<Brownout>,
+    /// Earliest brownout boundary strictly ahead of the clock (∞ when
+    /// none): crossing it on a clock advance invalidates `rates`.
+    next_cap_change: f64,
     /// Scratch buffers reused across `refresh_rates` calls (the event
     /// loop's hottest allocation site at 10⁶ transfers).
     flowing_scratch: Vec<usize>,
@@ -331,6 +340,8 @@ impl TransferScheduler {
             rates: Vec::new(),
             rates_dirty: false,
             next_flow_start: f64::INFINITY,
+            brownouts: Vec::new(),
+            next_cap_change: f64::INFINITY,
             flowing_scratch: Vec::new(),
             caps_scratch: Vec::new(),
             records: Vec::new(),
@@ -367,6 +378,69 @@ impl TransferScheduler {
             "set_faults must precede all submissions"
         );
         self.faults = Some(inj);
+    }
+
+    /// Install shared-link brownout windows (before submitting
+    /// transfers): while a window is active the bottleneck capacity is
+    /// scaled by its factor (0 = full storage-egress stall) and the
+    /// max-min fair share is re-run against the degraded capacity, so
+    /// in-flight streams re-contend at every window boundary. An empty
+    /// schedule is bit-identical to never calling this.
+    pub fn set_brownouts(&mut self, brownouts: Vec<Brownout>) {
+        for b in &brownouts {
+            assert!(
+                b.start_s.is_finite() && b.end_s.is_finite() && b.start_s >= 0.0,
+                "brownout bounds must be finite and ≥ 0"
+            );
+            assert!(b.end_s > b.start_s, "brownout end must exceed start");
+            assert!(
+                b.factor.is_finite() && (0.0..=1.0).contains(&b.factor),
+                "brownout factor must be in [0, 1]"
+            );
+        }
+        assert!(
+            self.records.is_empty()
+                && self.active.is_empty()
+                && self.queued == 0
+                && self.arrivals.is_empty(),
+            "set_brownouts must precede all submissions"
+        );
+        self.brownouts = brownouts;
+        self.next_cap_change = self.next_cap_boundary();
+    }
+
+    /// The bottleneck capacity in force at time `t`: the topology's
+    /// bottleneck scaled by the most severe brownout covering `t`.
+    /// Without a covering window this returns the cached bottleneck
+    /// *unchanged* — no arithmetic — so brownout-free runs stay
+    /// bit-identical to the pre-chaos engine.
+    fn capacity_at(&self, t: f64) -> f64 {
+        let mut factor = f64::INFINITY;
+        for b in &self.brownouts {
+            if t + EPS >= b.start_s && t + EPS < b.end_s {
+                factor = factor.min(b.factor);
+            }
+        }
+        if factor.is_finite() {
+            self.bottleneck_gbps * factor
+        } else {
+            self.bottleneck_gbps
+        }
+    }
+
+    /// Earliest brownout boundary strictly ahead of the clock (∞ when
+    /// none remain) — each boundary is an event while streams are open.
+    fn next_cap_boundary(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        for b in &self.brownouts {
+            if b.start_s > self.clock + EPS {
+                t = t.min(b.start_s);
+            }
+            if b.end_s > self.clock + EPS {
+                t = t.min(b.end_s);
+            }
+        }
+        t
     }
 
     /// Failed-attempt events recorded so far (empty without injection).
@@ -550,13 +624,14 @@ impl TransferScheduler {
             }
         }
         caps.extend(flowing.iter().map(|&i| self.active[i].stream_gbps));
-        let shares = fair_share(&caps, self.bottleneck_gbps);
+        let shares = fair_share(&caps, self.capacity_at(self.clock));
         self.rates.clear();
         self.rates.resize(self.active.len(), 0.0);
         for (k, &i) in flowing.iter().enumerate() {
             self.rates[i] = shares[k];
         }
         self.next_flow_start = next_flow;
+        self.next_cap_change = self.next_cap_boundary();
         self.flowing_scratch = flowing;
         self.caps_scratch = caps;
     }
@@ -577,6 +652,12 @@ impl TransferScheduler {
             } else if r > 0.0 {
                 t = t.min(self.clock + a.bytes_left.max(0.0) / gbps_to_bytes_per_sec(r));
             }
+        }
+        if !self.active.is_empty() {
+            // brownout boundaries change the capacity every open stream
+            // contends for (a full stall leaves zero-rate streams whose
+            // only way forward is the window's end)
+            t = t.min(self.next_cap_change);
         }
         t.is_finite().then_some(t)
     }
@@ -694,6 +775,11 @@ impl TransferScheduler {
             if self.clock + EPS >= self.next_flow_start {
                 // a latency window ended inside this step: the flowing
                 // set (and thus the allocation) changes at the new clock
+                self.rates_dirty = true;
+            }
+            if self.clock + EPS >= self.next_cap_change {
+                // a brownout boundary crossed: the shared capacity (and
+                // thus the allocation) changes at the new clock
                 self.rates_dirty = true;
             }
             self.complete_finished();
@@ -1037,6 +1123,7 @@ mod tests {
             max_retries: 5,
             seed: 0,
             backoff_base_s: 0.0,
+            backoff_cap_s: f64::INFINITY,
             park_timeouts: false,
         };
         // find a seed where id 0 fails attempt 0 and succeeds attempt 1,
@@ -1064,6 +1151,144 @@ mod tests {
         // …and the retry of 0 runs only after 1 finishes: re-contention
         assert!(recs[0].start_s + 1e-9 >= recs[1].end_s, "{recs:?}");
         assert!(recs[0].queue_wait_s() > 0.0, "the retry waited in the FIFO");
+    }
+
+    #[test]
+    fn empty_brownout_schedule_is_bit_identical() {
+        let run = |set: bool| {
+            let mut sim = TransferScheduler::for_env(Env::Hpc, 4, 57);
+            if set {
+                sim.set_brownouts(Vec::new());
+            }
+            for i in 0..30u64 {
+                sim.submit_at(i, i % 3, 120_000_000, (i % 7) as f64);
+            }
+            sim.run_to_completion();
+            (sim.records().to_vec(), sim.stats())
+        };
+        assert_eq!(run(false), run(true), "empty schedule must be a no-op");
+    }
+
+    #[test]
+    fn brownout_slows_inflight_transfers() {
+        // Cloud: a lone stream's ~0.33 Gb/s ceiling fits under the
+        // 0.504 Gb/s WAN, but not under half of it — the brownout binds
+        let solo = {
+            let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 63);
+            sim.submit_at(0, 0, GB, 0.0);
+            sim.run_to_completion();
+            sim.records()[0].clone()
+        };
+        let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 63);
+        sim.set_brownouts(vec![Brownout {
+            start_s: 0.0,
+            end_s: 1e9,
+            factor: 0.5,
+        }]);
+        sim.submit_at(0, 0, GB, 0.0);
+        sim.run_to_completion();
+        let slowed = &sim.records()[0];
+        assert!(
+            slowed.end_s > solo.end_s * 1.2,
+            "half capacity must slow the stream: {} vs {}",
+            slowed.end_s,
+            solo.end_s
+        );
+        assert_eq!(slowed.stream_gbps, solo.stream_gbps, "sampling is untouched");
+    }
+
+    #[test]
+    fn brownout_boundary_recontends_mid_flight() {
+        // a window opening mid-transfer delays completion, but less than
+        // one covering the whole run
+        let solo_end = {
+            let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 67);
+            sim.submit_at(0, 0, GB, 0.0);
+            sim.run_to_completion();
+            sim.records()[0].end_s
+        };
+        let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 67);
+        sim.set_brownouts(vec![Brownout {
+            start_s: solo_end * 0.5,
+            end_s: solo_end * 0.9,
+            factor: 0.25,
+        }]);
+        sim.submit_at(0, 0, GB, 0.0);
+        sim.run_to_completion();
+        let mid = sim.records()[0].end_s;
+
+        let mut sim = TransferScheduler::for_env(Env::Cloud, 4, 67);
+        sim.set_brownouts(vec![Brownout {
+            start_s: 0.0,
+            end_s: 1e9,
+            factor: 0.25,
+        }]);
+        sim.submit_at(0, 0, GB, 0.0);
+        sim.run_to_completion();
+        let full = sim.records()[0].end_s;
+        assert!(mid > solo_end, "mid-flight brownout must delay completion");
+        assert!(mid < full, "a partial window beats a permanent one");
+    }
+
+    #[test]
+    fn egress_stall_freezes_flows_until_window_end() {
+        // factor 0: nothing moves inside the window; the stream drains
+        // only after the stall lifts
+        let mut sim = TransferScheduler::for_env(Env::Local, 2, 71);
+        sim.set_brownouts(vec![Brownout {
+            start_s: 0.0,
+            end_s: 50.0,
+            factor: 0.0,
+        }]);
+        sim.submit_at(0, 0, 1_000_000, 0.0);
+        sim.run_to_completion();
+        let r = &sim.records()[0];
+        assert!(r.end_s > 50.0 - 1e-9, "stalled stream cannot finish early: {r:?}");
+        assert!(r.end_s < 60.0, "it drains promptly once the stall lifts: {r:?}");
+    }
+
+    #[test]
+    fn brownout_runs_are_deterministic() {
+        let run = || {
+            let mut sim = TransferScheduler::for_env(Env::Hpc, 3, 73);
+            sim.set_brownouts(vec![
+                Brownout {
+                    start_s: 2.0,
+                    end_s: 9.0,
+                    factor: 0.3,
+                },
+                Brownout {
+                    start_s: 12.0,
+                    end_s: 14.0,
+                    factor: 0.0,
+                },
+            ]);
+            for i in 0..40u64 {
+                sim.submit_at(i, i % 4, 90_000_000, (i % 6) as f64);
+            }
+            sim.run_to_completion();
+            (sim.records().to_vec(), sim.stats())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "precede all submissions")]
+    fn brownouts_must_precede_submissions() {
+        let mut sim = TransferScheduler::for_env(Env::Local, 2, 3);
+        sim.submit_at(0, 0, 1_000, 0.0);
+        sim.set_brownouts(Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "factor")]
+    fn brownouts_reject_over_unity_factor() {
+        let mut sim = TransferScheduler::for_env(Env::Local, 2, 3);
+        sim.set_brownouts(vec![Brownout {
+            start_s: 0.0,
+            end_s: 1.0,
+            factor: 1.5,
+        }]);
     }
 
     #[test]

@@ -375,7 +375,7 @@ pub fn format_transfer_waits(records: &[TransferRecord]) -> String {
 /// wasted time both engines accounted, and the closed-form §4 overrun
 /// cross-check.
 pub fn format_fault_stats(f: &crate::faults::FaultTelemetry) -> String {
-    format!(
+    let mut s = format!(
         "faults: {:>4} failed attempts (checksum {}, pipeline {}, node {}, timeout {})\n\
          retries: compute {} ({} re-staged), transfer {}   aborted {}\n\
          wasted: {:.1} compute-min, {} transfer   closed-form overrun ×{:.3}\n",
@@ -391,6 +391,30 @@ pub fn format_fault_stats(f: &crate::faults::FaultTelemetry) -> String {
         f.wasted_compute_minutes,
         fmt_duration(f.wasted_transfer_s),
         f.expected_overrun_factor,
+    );
+    // infrastructure-outage band (DESIGN.md §15), only when a chaos run
+    // actually recorded something — fault-only reports stay unchanged
+    if f.outage_kills > 0 || f.outage_orphans > 0 || f.outage_wasted_minutes > 0.0 {
+        s.push_str(&format!(
+            "outages: {} killed, {} orphaned, {:.1} compute-min wasted\n",
+            f.outage_kills, f.outage_orphans, f.outage_wasted_minutes
+        ));
+    }
+    s
+}
+
+/// Render a chaos run's infrastructure-outage telemetry (`medflow
+/// chaos`; DESIGN.md §15): the injected schedule's size and what the
+/// engines killed, orphaned, and re-placed under it.
+pub fn format_outage(o: &crate::faults::outage::OutageStats) -> String {
+    format!(
+        "chaos: {} outage windows, {} brownouts   killed {}   orphaned {} ({} re-placed)   wasted {}\n",
+        o.windows,
+        o.brownouts,
+        o.killed,
+        o.orphaned,
+        o.re_placed,
+        fmt_duration(o.killed_wasted_s),
     )
 }
 
@@ -493,6 +517,16 @@ pub fn format_tenancy(report: &crate::coordinator::tenancy::TenancyReport) -> St
         "aborted {}  ·  SLO violations {violations}\n",
         report.aborted
     ));
+    if report.enforced {
+        let stranded: usize = report.tenants.iter().map(|u| u.slo_aborted).sum();
+        let escalated: usize = report.tenants.iter().map(|u| u.escalated).sum();
+        s.push_str(&format!(
+            "SLO enforcement: {stranded} stranded by budget, {escalated} escalated past deadline\n"
+        ));
+    }
+    if let Some(o) = &report.outage {
+        s.push_str(&format_outage(o));
+    }
     s
 }
 
@@ -606,6 +640,9 @@ mod tests {
             wasted_compute_minutes: 84.25,
             wasted_transfer_s: 12.5,
             expected_overrun_factor: 1.142,
+            outage_kills: 3,
+            outage_orphans: 5,
+            outage_wasted_minutes: 7.5,
         };
         let s = format_fault_stats(&t);
         assert!(s.contains("12 failed attempts"), "{s}");
@@ -614,10 +651,30 @@ mod tests {
         assert!(s.contains("aborted 1"), "{s}");
         assert!(s.contains("84.2 compute-min"), "{s}");
         assert!(s.contains("×1.142"), "{s}");
-        // fault-free telemetry renders cleanly too
+        assert!(s.contains("outages: 3 killed, 5 orphaned, 7.5 compute-min"), "{s}");
+        // fault-free telemetry renders cleanly, with no outage band
         let clean = format_fault_stats(&FaultTelemetry::default());
         assert!(clean.contains("0 failed attempts"), "{clean}");
         assert!(clean.contains("×1.000"), "{clean}");
+        assert!(!clean.contains("outages:"), "{clean}");
+    }
+
+    #[test]
+    fn format_outage_reports_schedule_and_damage() {
+        use crate::faults::outage::OutageStats;
+        let s = format_outage(&OutageStats {
+            windows: 4,
+            brownouts: 2,
+            killed: 3,
+            orphaned: 6,
+            re_placed: 5,
+            killed_wasted_s: 90.0,
+        });
+        assert!(s.contains("4 outage windows"), "{s}");
+        assert!(s.contains("2 brownouts"), "{s}");
+        assert!(s.contains("killed 3"), "{s}");
+        assert!(s.contains("orphaned 6 (5 re-placed)"), "{s}");
+        assert!(s.contains("wasted 1m 30s"), "{s}");
     }
 
     #[test]
@@ -725,6 +782,31 @@ mod tests {
         assert!(total.contains("40"), "{total}");
         assert!(s.contains("wait p95"), "{s}");
         assert!(s.contains("SLO violations 0"), "{s}");
+    }
+
+    #[test]
+    fn format_tenancy_renders_enforcement_and_outage_bands() {
+        use crate::coordinator::placement::{BackendKind, BackendSpec};
+        use crate::coordinator::tenancy::{run_tenants_chaos, synthetic_tenants, TenancyConfig};
+        use crate::faults::outage::OutageSchedule;
+        let fleet = vec![BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Lanes { workers: 4 },
+            faults: None,
+            transfer_streams: 4,
+        }];
+        let tenants = synthetic_tenants(3, 2, 5);
+        let out = run_tenants_chaos(
+            &tenants,
+            &fleet,
+            &TenancyConfig::default(),
+            &OutageSchedule::empty(),
+            true,
+        );
+        let s = format_tenancy(&out.report);
+        assert!(s.contains("SLO enforcement: 0 stranded"), "{s}");
+        assert!(s.contains("chaos: 0 outage windows, 0 brownouts"), "{s}");
     }
 
     #[test]

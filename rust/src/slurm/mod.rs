@@ -36,6 +36,7 @@ pub mod trace;
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
+use crate::faults::outage::{OutageMode, OutageWindow};
 use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
 use crate::util::ord::F64Ord;
 
@@ -176,6 +177,10 @@ struct Running {
     /// The failure this attempt will surface at `end_s`, sampled at
     /// start; `None` = the attempt completes.
     fail: Option<FailureMode>,
+    /// Start generation: matches this attempt's ends-heap entry. An
+    /// outage kill leaves the entry stale; [`Scheduler::complete_finished`]
+    /// skips entries whose generation no longer matches.
+    start_seq: u64,
 }
 
 /// A not-yet-due submission, heap-ordered by (submit_s, id, seq). The
@@ -233,9 +238,14 @@ pub struct Scheduler {
     /// Job id → position in `running`, maintained across swap-removals
     /// so end-heap pops translate to positions in O(1).
     running_pos: HashMap<u64, usize>,
-    /// Min-heap of (end_s, id) over running jobs: `next_event_time` is a
-    /// peek, `complete_finished` pops instead of scanning every runner.
-    ends: BinaryHeap<Reverse<(F64Ord, u64)>>,
+    /// Min-heap of (end_s, id, start generation) over running jobs:
+    /// `next_event_time` is a peek, `complete_finished` pops instead of
+    /// scanning every runner. The generation disambiguates entries left
+    /// stale by outage kills; live (end, id) pairs are unique, so
+    /// appending it never reorders live completions.
+    ends: BinaryHeap<Reverse<(F64Ord, u64, u64)>>,
+    /// Monotone start counter feeding `Running::start_seq`.
+    start_seq: u64,
     records: Vec<JobRecord>,
     /// Fairshare: accumulated core-seconds per user (decayed); lower usage
     /// → higher priority.
@@ -268,6 +278,20 @@ pub struct Scheduler {
     parked: Vec<(u64, f64)>,
     /// Jobs dropped after exhausting retries.
     aborted: Vec<u64>,
+    /// Cluster outage windows (DESIGN.md §15); empty = immortal cluster.
+    outages: Vec<OutageWindow>,
+    /// Onset-processed flag per window, aligned with `outages`.
+    outage_fired: Vec<bool>,
+    /// Requeue delay for attempts killed at a [`OutageMode::Down`] onset.
+    outage_backoff_s: f64,
+    /// Queued jobs released to the planner at onsets: (job id, onset
+    /// time). Drained by [`Self::take_orphans`]; undrained orphans drop
+    /// out of the simulation like parked jobs without a driver.
+    orphans: Vec<(u64, f64)>,
+    /// Running attempts killed at `Down` onsets.
+    outage_killed: u64,
+    /// Allocation seconds wasted by outage-killed attempts.
+    outage_wasted_s: f64,
     /// Scheduling policy. Set it before submitting work: the dirty-gated
     /// pass skipping assumes the policy is fixed for a simulation run.
     pub policy: Policy,
@@ -296,6 +320,7 @@ impl Scheduler {
             running: Vec::new(),
             running_pos: HashMap::new(),
             ends: BinaryHeap::new(),
+            start_seq: 0,
             records: Vec::new(),
             usage: BTreeMap::new(),
             maintenance: Vec::new(),
@@ -310,8 +335,112 @@ impl Scheduler {
             fault_events: Vec::new(),
             parked: Vec::new(),
             aborted: Vec::new(),
+            outages: Vec::new(),
+            outage_fired: Vec::new(),
+            outage_backoff_s: 0.0,
+            orphans: Vec::new(),
+            outage_killed: 0,
+            outage_wasted_s: 0.0,
             policy,
             spec,
+        }
+    }
+
+    /// Install the cluster's outage windows (before submitting work).
+    /// Inside a window no job starts; at each window's onset every
+    /// queued job is released back to the planner ([`Self::take_orphans`])
+    /// and — under [`OutageMode::Down`] — every running attempt is
+    /// killed (progress wasted) and requeued after `kill_backoff_s`.
+    /// An empty schedule is bit-identical to never calling this.
+    pub fn set_outages(&mut self, windows: Vec<OutageWindow>, kill_backoff_s: f64) {
+        for w in &windows {
+            assert!(
+                w.start_s.is_finite() && w.end_s.is_finite() && w.start_s >= 0.0,
+                "outage window bounds must be finite and ≥ 0"
+            );
+            assert!(w.end_s > w.start_s, "outage window end must exceed start");
+        }
+        assert!(
+            kill_backoff_s.is_finite() && kill_backoff_s >= 0.0,
+            "kill backoff must be finite and ≥ 0"
+        );
+        assert!(
+            self.records.is_empty()
+                && self.running.is_empty()
+                && self.due.is_empty()
+                && self.future.is_empty(),
+            "set_outages must precede all submissions"
+        );
+        self.outage_fired = vec![false; windows.len()];
+        self.outages = windows;
+        self.outage_backoff_s = kill_backoff_s;
+    }
+
+    /// Drain (job id, onset time) pairs released by outage onsets. The
+    /// driver owns them now: re-place (and re-stage) each job or it
+    /// never finishes.
+    pub fn take_orphans(&mut self) -> Vec<(u64, f64)> {
+        std::mem::take(&mut self.orphans)
+    }
+
+    /// Running attempts killed at [`OutageMode::Down`] onsets so far.
+    pub fn outage_killed(&self) -> u64 {
+        self.outage_killed
+    }
+
+    /// Allocation seconds wasted by outage-killed attempts so far.
+    pub fn outage_wasted_s(&self) -> f64 {
+        self.outage_wasted_s
+    }
+
+    /// True if `t` falls inside any outage window (no job starts).
+    fn in_outage_at(&self, t: f64) -> bool {
+        self.outages.iter().any(|w| t >= w.start_s && t < w.end_s)
+    }
+
+    /// Fire every outage onset the clock has reached, once per window:
+    /// orphan the queued jobs back to the planner; under
+    /// [`OutageMode::Down`] also kill the running attempts — their
+    /// progress is wasted, their remaining allocation is refunded, and
+    /// they requeue locally after the kill backoff. A no-op without an
+    /// outage schedule.
+    fn process_outage_onsets(&mut self) {
+        for k in 0..self.outages.len() {
+            if self.outage_fired[k] || self.clock < self.outages[k].start_s {
+                continue;
+            }
+            self.outage_fired[k] = true;
+            let w = self.outages[k];
+            for job in std::mem::take(&mut self.due) {
+                self.orphans.push((job.id, self.clock));
+            }
+            self.sched_dirty = true;
+            if w.mode == OutageMode::Down {
+                for r in std::mem::take(&mut self.running) {
+                    self.running_pos.remove(&r.job.id);
+                    self.nodes[r.node].free_cores += r.job.cores;
+                    self.nodes[r.node].free_ram_gb += r.job.ram_gb;
+                    if let Some(h) = &r.job.array {
+                        if let Some(c) = self.array_running.get_mut(&h.array_id) {
+                            *c -= 1;
+                        }
+                    }
+                    // the attempt was charged for its full allocation at
+                    // start; refund the part the kill never let it hold
+                    let unheld = (r.end_s - self.clock).max(0.0) * r.job.cores as f64;
+                    self.core_seconds_used -= unheld;
+                    if let Some(u) = self.usage.get_mut(&r.job.user) {
+                        *u -= unheld;
+                    }
+                    self.outage_killed += 1;
+                    self.outage_wasted_s += self.clock - r.start_s;
+                    let mut job = r.job;
+                    job.submit_s = self.clock + self.outage_backoff_s;
+                    self.submit(job);
+                    // the killed attempt's ends-heap entry is now stale;
+                    // its start_seq no longer matches and is skipped
+                }
+            }
         }
     }
 
@@ -461,7 +590,8 @@ impl Scheduler {
         *self.usage.entry(job.user.clone()).or_insert(0.0) += job.cores as f64 * alloc_s;
         self.core_seconds_used += job.cores as f64 * alloc_s;
         let end_s = self.clock + alloc_s;
-        self.ends.push(Reverse((F64Ord(end_s), job.id)));
+        self.start_seq += 1;
+        self.ends.push(Reverse((F64Ord(end_s), job.id, self.start_seq)));
         self.running_pos.insert(job.id, self.running.len());
         self.running.push(Running {
             job,
@@ -470,6 +600,7 @@ impl Scheduler {
             end_s,
             attempt,
             fail,
+            start_seq: self.start_seq,
         });
     }
 
@@ -496,8 +627,9 @@ impl Scheduler {
     /// backfill window only narrowing over time, a re-run provably
     /// starts nothing.
     fn schedule(&mut self) {
+        self.process_outage_onsets();
         self.drain_due();
-        if self.in_maintenance(self.clock) {
+        if self.in_maintenance(self.clock) || self.in_outage_at(self.clock) {
             return;
         }
         debug_assert!(
@@ -613,11 +745,15 @@ impl Scheduler {
     /// with the transfer scheduler without overshooting either.
     /// Heap peeks — O(maintenance windows), no job scans.
     pub fn next_event_time(&self) -> Option<f64> {
-        if self.needs_schedule && !self.in_maintenance(self.clock) && !self.due.is_empty() {
+        if self.needs_schedule
+            && !self.in_maintenance(self.clock)
+            && !self.in_outage_at(self.clock)
+            && !self.due.is_empty()
+        {
             return Some(self.clock);
         }
         let next_end = match self.ends.peek() {
-            Some(&Reverse((end, _))) => end.0,
+            Some(&Reverse((end, ..))) => end.0,
             None => f64::INFINITY,
         };
         let next_arrival = match self.future.peek() {
@@ -631,7 +767,19 @@ impl Scheduler {
             .filter(|w| w.end_s > self.clock && w.start_s <= self.clock)
             .map(|w| w.end_s)
             .fold(f64::INFINITY, f64::min);
-        let next_t = next_end.min(next_arrival).min(next_maint_end);
+        // outage boundaries are events too: onsets must fire exactly on
+        // time (they orphan the queue), and blocked starts resume at
+        // each window's end
+        let mut next_outage = f64::INFINITY;
+        for (k, w) in self.outages.iter().enumerate() {
+            if !self.outage_fired[k] && w.start_s > self.clock {
+                next_outage = next_outage.min(w.start_s);
+            }
+            if w.start_s <= self.clock && w.end_s > self.clock {
+                next_outage = next_outage.min(w.end_s);
+            }
+        }
+        let next_t = next_end.min(next_arrival).min(next_maint_end).min(next_outage);
         next_t.is_finite().then_some(next_t)
     }
 
@@ -645,12 +793,21 @@ impl Scheduler {
     /// byte-identical to [`crate::sim_legacy`].
     fn complete_finished(&mut self) {
         let mut due_pos: BTreeSet<usize> = BTreeSet::new();
-        while let Some(&Reverse((end, id))) = self.ends.peek() {
+        while let Some(&Reverse((end, id, seq))) = self.ends.peek() {
             if end.0 > self.clock {
                 break;
             }
             self.ends.pop();
-            let pos = *self.running_pos.get(&id).expect("running job indexed");
+            // an outage kill leaves its attempt's entry behind: the job
+            // is gone from `running` (or re-running under a newer
+            // generation) — skip the stale entry either way
+            let Some(&pos) = self.running_pos.get(&id) else {
+                debug_assert!(!self.outages.is_empty(), "running job indexed");
+                continue;
+            };
+            if self.running[pos].start_seq != seq {
+                continue;
+            }
             due_pos.insert(pos);
         }
         while let Some(pos) = due_pos.pop_first() {
@@ -734,8 +891,13 @@ impl Scheduler {
         let dt = next_t - self.clock;
         self.core_seconds_capacity += self.spec.total_cores() as f64 * dt.max(0.0);
         let was_maint = self.in_maintenance(self.clock);
+        let was_out = self.in_outage_at(self.clock);
         self.clock = self.clock.max(next_t);
         if was_maint && !self.in_maintenance(self.clock) {
+            self.sched_dirty = true;
+        }
+        if was_out && !self.in_outage_at(self.clock) {
+            // an outage window ended inside the step: blocked jobs may start
             self.sched_dirty = true;
         }
     }
@@ -1184,5 +1346,83 @@ mod tests {
         for r in faulty.records() {
             assert!(r.end_s - r.start_s > 0.0);
         }
+    }
+
+    fn window(mode: OutageMode, start_s: f64, end_s: f64) -> OutageWindow {
+        OutageWindow { mode, start_s, end_s }
+    }
+
+    #[test]
+    fn empty_outage_schedule_changes_nothing() {
+        let run = |set: bool| {
+            let mut s = Scheduler::new(ClusterSpec::small(2, 4, 16));
+            if set {
+                s.set_outages(Vec::new(), 30.0);
+            }
+            for id in 0..40u64 {
+                s.submit(job(id, 1 + (id % 4) as u32, 50.0 + id as f64, (id / 3) as f64));
+            }
+            s.run_to_completion();
+            (s.records().to_vec(), s.makespan(), s.utilization())
+        };
+        assert_eq!(run(false), run(true), "empty schedule must be a no-op");
+    }
+
+    #[test]
+    fn drain_window_blocks_starts_and_orphans_the_queue() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.set_outages(vec![window(OutageMode::Drain, 50.0, 200.0)], 0.0);
+        s.submit(job(1, 4, 100.0, 0.0)); // starts at 0, survives the drain
+        s.submit(job(2, 4, 100.0, 10.0)); // queued at the onset → orphaned
+        s.submit(job(3, 4, 50.0, 70.0)); // arrives inside the window → waits
+        s.run_to_completion();
+        assert_eq!(s.take_orphans(), vec![(2, 50.0)]);
+        assert!(s.take_orphans().is_empty(), "drained");
+        assert_eq!(s.outage_killed(), 0);
+        let r1 = s.records().iter().find(|r| r.job.id == 1).unwrap();
+        assert_eq!((r1.start_s, r1.end_s), (0.0, 100.0), "running attempts survive a drain");
+        let r3 = s.records().iter().find(|r| r.job.id == 3).unwrap();
+        assert_eq!(r3.start_s, 200.0, "no start inside the window");
+        assert!(s.records().iter().all(|r| r.job.id != 2), "the orphan left the cluster");
+    }
+
+    #[test]
+    fn down_window_kills_running_attempts_and_requeues_with_backoff() {
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        s.set_outages(vec![window(OutageMode::Down, 40.0, 60.0)], 5.0);
+        s.submit(job(1, 4, 100.0, 0.0));
+        s.run_to_completion();
+        assert_eq!(s.outage_killed(), 1);
+        assert_eq!(s.outage_wasted_s(), 40.0);
+        assert!(s.take_orphans().is_empty(), "killed attempts requeue locally, not orphan");
+        // the killed attempt's stale ends-heap entry (end 100) must not
+        // complete the retry early — the start generation skips it
+        assert_eq!(s.records().len(), 1);
+        let r = &s.records()[0];
+        assert_eq!(r.start_s, 60.0, "the retry waits out the window");
+        assert_eq!(r.end_s, 160.0);
+        // the kill refunded the allocation the attempt never held
+        assert!(s.utilization() <= 1.0 + 1e-9, "{}", s.utilization());
+    }
+
+    #[test]
+    fn outage_runs_are_deterministic() {
+        let run = || {
+            let mut s = Scheduler::new(ClusterSpec::small(2, 8, 32));
+            s.set_outages(
+                vec![
+                    window(OutageMode::Down, 30.0, 80.0),
+                    window(OutageMode::Drain, 120.0, 150.0),
+                ],
+                10.0,
+            );
+            for id in 0..60u64 {
+                let dur = 20.0 + (id % 9) as f64 * 10.0;
+                s.submit(job(id, 1 + (id % 3) as u32, dur, (id / 2) as f64));
+            }
+            s.run_to_completion();
+            (s.records().to_vec(), s.take_orphans(), s.outage_killed(), s.outage_wasted_s())
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -1,0 +1,288 @@
+//! Chaos co-simulation gates (DESIGN.md §15): the infrastructure-fault
+//! layer must cost exactly nothing when the schedule is empty — every
+//! chaos entry point is **f64-record-identical** to its plain sibling —
+//! and under real outages it must degrade gracefully (orphans conserved,
+//! no job silently lost), replay seed-identically at campaign scale, and
+//! never make a constrained fleet *faster*.
+
+use medflow::coordinator::placement::{
+    execute, execute_chaos, BackendKind, BackendSpec, PlacementPolicy,
+};
+use medflow::coordinator::staged::StagedJob;
+use medflow::coordinator::tenancy::{
+    run_tenants, run_tenants_chaos, TenancyConfig, TenantSpec,
+};
+use medflow::faults::outage::{
+    ComputeOutage, OutageMode, OutageSchedule, OutageSeverity, OutageStats,
+};
+use medflow::netsim::Env;
+use medflow::slurm::ClusterSpec;
+use medflow::util::rng::Rng;
+
+fn staged_jobs(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1 + rng.below(3) as u32,
+            ram_gb: 1 + rng.below(8) as u32,
+            compute_s: 20.0 + rng.next_f64() * 400.0,
+            bytes_in: 10_000_000 + rng.below(150_000_000),
+            bytes_out: 1_000_000 + rng.below(50_000_000),
+        })
+        .collect()
+}
+
+/// The heterogeneous trio — a constrained Slurm cluster plus two lane
+/// pools — so every engine kind crosses the chaos path in one run.
+fn trio_fleet() -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(6, 8, 64),
+                max_concurrent: 24,
+            },
+            faults: None,
+            transfer_streams: 6,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 16 },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 2 },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+fn every_policy() -> [PlacementPolicy; 6] {
+    [
+        PlacementPolicy::CheapestFirst,
+        PlacementPolicy::DeadlineAware { deadline_s: 2_000.0 },
+        PlacementPolicy::BudgetCapped { budget_dollars: 5.0 },
+        PlacementPolicy::Pinned(0),
+        PlacementPolicy::Pinned(1),
+        PlacementPolicy::Pinned(2),
+    ]
+}
+
+/// Acceptance: an empty outage schedule is a no-op at the record level
+/// for every placement policy — the chaos plumbing (owned job copies,
+/// engine outage hooks, brownout-aware scheduler) must not perturb a
+/// single f64.
+#[test]
+fn empty_schedule_is_record_identical_to_execute_for_every_policy() {
+    let js = staged_jobs(120, 61);
+    let fleet = trio_fleet();
+    let empty = OutageSchedule::empty();
+    let cfg = TenancyConfig {
+        seed: 61,
+        ..Default::default()
+    }
+    .placement();
+    for policy in every_policy() {
+        let base = execute(&js, &fleet, policy, &cfg);
+        let chaos = execute_chaos(&js, &fleet, policy, &cfg, &empty);
+        assert_eq!(chaos.staged.timings, base.staged.timings, "{policy:?}");
+        assert_eq!(chaos.staged.transfer, base.staged.transfer, "{policy:?}");
+        assert_eq!(chaos.plan.assignment, base.plan.assignment, "{policy:?}");
+        assert_eq!(chaos.per_backend, base.per_backend, "{policy:?}");
+        assert_eq!(chaos.total_cost_dollars, base.total_cost_dollars, "{policy:?}");
+        assert_eq!(chaos.makespan_s, base.makespan_s, "{policy:?}");
+        assert_eq!(chaos.aborted, base.aborted, "{policy:?}");
+        assert!(base.outage.is_none(), "plain runs carry no outage stats");
+        assert_eq!(chaos.outage, Some(OutageStats::default()), "{policy:?}");
+    }
+}
+
+fn three_tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            weight: 1.0,
+            ..TenantSpec::new("a", staged_jobs(40, 11))
+        },
+        TenantSpec {
+            weight: 2.0,
+            ..TenantSpec::new("b", staged_jobs(40, 12))
+        },
+        TenantSpec {
+            priority: 1,
+            ..TenantSpec::new("c", staged_jobs(40, 13))
+        },
+    ]
+}
+
+/// The same no-op guarantee through the tenancy layer: empty schedule +
+/// enforcement off reproduces `run_tenants` exactly, under contention.
+#[test]
+fn empty_schedule_tenancy_is_record_identical_to_run_tenants() {
+    let tenants = three_tenants();
+    let fleet = trio_fleet();
+    let cfg = TenancyConfig {
+        seed: 91,
+        queue_depth: Some(6),
+        ..Default::default()
+    };
+    let plain = run_tenants(&tenants, &fleet, &cfg);
+    let chaos = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), false);
+    assert_eq!(plain.staged.timings, chaos.staged.timings);
+    assert_eq!(plain.admit_s, chaos.admit_s);
+    assert_eq!(plain.assignment, chaos.assignment);
+    assert_eq!(plain.report.tenants, chaos.report.tenants);
+    assert_eq!(plain.report.per_backend, chaos.report.per_backend);
+    assert_eq!(plain.report.total_cost_dollars, chaos.report.total_cost_dollars);
+    assert_eq!(plain.report.makespan_s, chaos.report.makespan_s);
+    assert_eq!(plain.report.transfer, chaos.report.transfer);
+    assert_eq!(plain.report.aborted, chaos.report.aborted);
+    assert!(plain.report.outage.is_none() && !plain.report.enforced);
+    assert_eq!(chaos.report.outage, Some(OutageStats::default()));
+    assert!(!chaos.report.enforced);
+}
+
+/// Acceptance: a harsh synthetic schedule over a ~10³-job campaign
+/// replays **seed-identically** — the chaos layer stays inside the
+/// replay contract — and the damage is conserved: kills and orphans
+/// happen, every orphan is re-placed or waits out its window, and no
+/// job is silently lost (no fault model ⇒ nothing may abort).
+#[test]
+fn harsh_chaos_replays_seed_identically_at_campaign_scale() {
+    let n = 1_000;
+    let js = staged_jobs(n, 73);
+    let fleet = trio_fleet();
+    let schedule = OutageSchedule::synthetic(OutageSeverity::Harsh, fleet.len(), 20_000.0, 73);
+    let cfg = TenancyConfig {
+        seed: 73,
+        ..Default::default()
+    }
+    .placement();
+    let a = execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+    let b = execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+    assert_eq!(a.staged.timings, b.staged.timings);
+    assert_eq!(a.staged.transfer, b.staged.transfer);
+    assert_eq!(a.per_backend, b.per_backend);
+    assert_eq!(a.total_cost_dollars, b.total_cost_dollars);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.outage, b.outage);
+
+    // the schedule must actually bite, or the replay gate is vacuous
+    let o = a.outage.expect("chaos run reports outage stats");
+    assert!(o.windows > 0 && o.brownouts > 0, "{o:?}");
+    assert!(o.killed > 0, "harsh Down windows must kill running work: {o:?}");
+    assert!(o.orphaned > 0, "drains must orphan queued work: {o:?}");
+    assert!(o.re_placed <= o.orphaned, "{o:?}");
+    assert!(o.killed_wasted_s > 0.0, "{o:?}");
+
+    // conservation: every window ends before the campaign does, no
+    // fault model is armed — all n jobs must still complete
+    let completed = a.staged.timings.iter().filter(|t| t.completed).count();
+    assert_eq!(completed, n, "graceful degradation may delay, never lose");
+    assert_eq!(a.aborted, 0);
+}
+
+/// On a fleet with nowhere to flee, an outage can only delay work:
+/// makespan is monotone in the window length.
+#[test]
+fn outages_never_shorten_a_single_backend_campaign() {
+    let js = staged_jobs(60, 29);
+    let fleet = vec![BackendSpec {
+        name: "hpc".into(),
+        env: Env::Hpc,
+        kind: BackendKind::Lanes { workers: 4 },
+        faults: None,
+        transfer_streams: 4,
+    }];
+    let cfg = TenancyConfig {
+        seed: 29,
+        ..Default::default()
+    }
+    .placement();
+    let base = execute(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+    let mut last = base.makespan_s;
+    for (mode, len_s) in [
+        (OutageMode::Drain, 200.0),
+        (OutageMode::Down, 200.0),
+        (OutageMode::Down, 900.0),
+    ] {
+        let mut schedule = OutageSchedule::empty();
+        schedule.compute.push(ComputeOutage {
+            backend: 0,
+            mode,
+            start_s: 120.0,
+            end_s: 120.0 + len_s,
+        });
+        let out = execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+        assert!(
+            out.makespan_s >= base.makespan_s - 1e-9,
+            "{mode:?} {len_s}: {} < baseline {}",
+            out.makespan_s,
+            base.makespan_s
+        );
+        if mode == OutageMode::Down {
+            assert!(
+                out.makespan_s >= last - 1e-9,
+                "longer window may not finish earlier: {} < {last}",
+                out.makespan_s
+            );
+            last = out.makespan_s;
+        }
+        let completed = out.staged.timings.iter().filter(|t| t.completed).count();
+        assert_eq!(completed, js.len(), "the window ends; everything drains through");
+    }
+}
+
+/// Satellite SLO gate at integration scale: under budget enforcement a
+/// tenant's billed spend never exceeds its budget by more than one
+/// job's billing quantum, stranded jobs bill $0, and unconstrained
+/// co-tenants are untouched.
+#[test]
+fn budget_enforcement_bounds_spend_within_one_job_quantum() {
+    let tiny = |n: usize, seed: u64| -> Vec<StagedJob> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| StagedJob {
+                cores: 1,
+                ram_gb: 1,
+                compute_s: 200.0 + rng.next_f64() * 100.0,
+                bytes_in: 1_000,
+                bytes_out: 1_000,
+            })
+            .collect()
+    };
+    let fleet = trio_fleet();
+    let cfg = TenancyConfig {
+        seed: 37,
+        ..Default::default()
+    };
+    let mut tenants = vec![
+        TenantSpec::new("capped", tiny(24, 5)),
+        TenantSpec::new("free", tiny(24, 6)),
+    ];
+    let baseline = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), true);
+    let total = baseline.report.tenants[0].cost_dollars;
+    assert!(total > 0.0);
+    assert_eq!(baseline.report.tenants[0].slo_aborted, 0, "no budget ⇒ nothing stranded");
+
+    let budget = total * 0.5;
+    tenants[0].budget_dollars = Some(budget);
+    let out = run_tenants_chaos(&tenants, &fleet, &cfg, &OutageSchedule::empty(), true);
+    let capped = &out.report.tenants[0];
+    assert!(capped.slo_aborted > 0, "half the budget must strand jobs");
+    assert_eq!(capped.completed + capped.slo_aborted, 24, "stranded jobs drain, not vanish");
+    let quantum = total / 24.0;
+    assert!(
+        capped.cost_dollars <= budget + quantum + 1e-9,
+        "billed {} vs budget {budget} + quantum {quantum}",
+        capped.cost_dollars
+    );
+    let free = &out.report.tenants[1];
+    assert_eq!(free.slo_aborted, 0);
+    assert_eq!(free.completed, 24, "co-tenants keep their full service");
+}

@@ -192,6 +192,50 @@ fn tenants_cli_reports_fairness_table() {
 }
 
 #[test]
+fn chaos_cli_reports_outage_degradation() {
+    // happy path: a small harsh run over the default fleet — the outage
+    // damage line renders next to the usual placement telemetry
+    let out = run_ok(&[
+        "chaos", "--jobs", "200", "--severity", "harsh", "--horizon", "4000", "--seed", "7",
+        "--cloud-lanes", "32", "--local-lanes", "4",
+    ]);
+    assert!(out.contains("chaos co-simulation"), "{out}");
+    assert!(out.contains("'harsh' outages"), "{out}");
+    assert!(out.contains("chaos:") && out.contains("outage windows"), "{out}");
+    assert!(out.contains("killed") && out.contains("re-placed"), "{out}");
+    assert!(out.contains("completed 200/200"), "{out}");
+    assert!(out.contains("TOTAL"), "{out}");
+
+    // explicit windows stack on the preset and show up in the counts
+    let out = run_ok(&[
+        "chaos", "--jobs", "60", "--severity", "none", "--window", "0:drain:100:400",
+        "--brownout", "50:150:0.5", "--seed", "7", "--cloud-lanes", "8", "--local-lanes", "2",
+    ]);
+    assert!(out.contains("'none' outages (1 windows, 1 brownouts"), "{out}");
+
+    // rejected knobs fail cleanly, naming the offending value
+    for (args, needle) in [
+        (vec!["chaos", "--severity", "mars"], "unknown outage severity"),
+        (vec!["chaos", "--window", "0:drain:400"], "invalid outage window"),
+        (vec!["chaos", "--window", "0:nope:100:400"], "invalid outage window"),
+        (vec!["chaos", "--window", "99:down:100:400"], "invalid outage window"),
+        (vec!["chaos", "--window", "0:down:400:100"], "invalid outage window"),
+        (vec!["chaos", "--brownout", "50:150:7"], "factor"),
+        (vec!["chaos", "--brownout", "nope"], "invalid brownout window"),
+    ] {
+        let out = medflow().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(stderr.contains(needle), "{args:?}: {stderr}");
+    }
+
+    // --help prints the usage block instead of running a simulation
+    let out = run_ok(&["chaos", "--help"]);
+    assert!(out.contains("medflow chaos"), "{out}");
+    assert!(out.contains("--severity"), "{out}");
+}
+
+#[test]
 fn lint_cli_reports_and_gates() {
     // happy path: the committed tree is lint-clean, so --deny passes
     let out = run_ok(&["lint", "--deny"]);
