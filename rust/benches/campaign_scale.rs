@@ -13,14 +13,21 @@
 //!   loudly, not silently;
 //! * **speedup** — full mode runs the legacy path at 10⁵ too and
 //!   asserts the rewrite is ≥10× faster, then records the whole
-//!   trajectory in `BENCH_campaign_scale.json` at the repo root.
+//!   trajectory in `BENCH_campaign_scale.json` at the repo root;
+//! * **thread parity + scaling** — every mode asserts `threads=4` is
+//!   record-identical to `threads=1` on a multi-backend fleet (the
+//!   `coordinator::sync` window drivers, DESIGN.md §16); full mode
+//!   sweeps threads ∈ {1, 2, 4, 8} at 10⁶ and runs the 10⁷ frontier
+//!   at the host's available parallelism.
 //!
 //! Run: `cargo bench --bench campaign_scale` — or with `-- --test` for
 //! the reduced sweep CI runs (parity at 10³/10⁴ + the 10⁵ smoke).
 
 use std::time::Instant;
 
-use medflow::coordinator::staged::{run_staged, LanePool, SlurmSim, StagedJob, StagedOutcome};
+use medflow::coordinator::staged::{
+    run_multi_threaded, run_staged, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome,
+};
 use medflow::netsim::scheduler::TransferScheduler;
 use medflow::netsim::Env;
 use medflow::sim_legacy;
@@ -72,6 +79,24 @@ fn run_legacy_lanes(jobs: &[StagedJob]) -> Timed {
     let mut transfers = sim_legacy::TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
     let t0 = Instant::now();
     let out = sim_legacy::run_staged(jobs, &mut lanes, &mut transfers);
+    Timed {
+        wall_s: t0.elapsed().as_secs_f64(),
+        out,
+    }
+}
+
+/// A `fleet`-way lane-pool fleet through the window drivers
+/// (`coordinator::sync`): `threads = 1` takes the inline sequential
+/// driver, `threads > 1` shards the backends across worker threads.
+/// Jobs round-robin across the fleet so every backend stays busy.
+fn run_mt_lanes(jobs: &[StagedJob], fleet: usize, threads: usize) -> Timed {
+    let mut pools: Vec<LanePool> = (0..fleet).map(|_| LanePool::new(WORKERS / fleet)).collect();
+    let mut backends: Vec<&mut dyn ComputeSim> =
+        pools.iter_mut().map(|p| p as &mut dyn ComputeSim).collect();
+    let assignment: Vec<usize> = (0..jobs.len()).map(|i| i % fleet).collect();
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, STREAM_CAP, SEED);
+    let t0 = Instant::now();
+    let out = run_multi_threaded(jobs, &assignment, &mut backends, &mut transfers, threads);
     Timed {
         wall_s: t0.elapsed().as_secs_f64(),
         out,
@@ -190,6 +215,67 @@ fn main() {
         assert_complete("frontier", n, &live.out);
         metric("lanes.n1000000.live_wall_s", live.wall_s, "s");
         runs.push(json_run(n, "lanepool", "event-heap", &live));
+    }
+
+    // --- thread parity: the sharded window driver must be f64-exact ---
+    // (ISSUE 9 acceptance: `--threads 4` record-identical to
+    // `--threads 1` at 10⁵ jobs, asserted in --test mode too)
+    {
+        let n = 100_000;
+        let jobs = campaign(n, SEED + 4);
+        let seq = run_mt_lanes(&jobs, 4, 1);
+        let par = run_mt_lanes(&jobs, 4, 4);
+        assert_complete("mt-parity", n, &seq.out);
+        assert_eq!(
+            seq.out.timings, par.out.timings,
+            "n={n}: --threads 4 must be record-identical to --threads 1"
+        );
+        assert_eq!(seq.out.transfer, par.out.transfer, "n={n}: mt transfer stats");
+        assert_eq!(
+            seq.out.makespan_s.to_bits(),
+            par.out.makespan_s.to_bits(),
+            "n={n}: mt makespan must match to the bit"
+        );
+        metric("mt.n100000.t1_wall_s", seq.wall_s, "s");
+        metric("mt.n100000.t4_wall_s", par.wall_s, "s");
+        runs.push(json_run(n, "lanepool-x4", "threads-1", &seq));
+        runs.push(json_run(n, "lanepool-x4", "threads-4", &par));
+    }
+
+    // --- full mode: thread-scaling sweep at 10⁶ + the 10⁷ frontier ---
+    if !test_mode {
+        let n = 1_000_000;
+        let jobs = campaign(n, SEED + 5);
+        let mut first: Option<Timed> = None;
+        for &threads in &[1usize, 2, 4, 8] {
+            let run = run_mt_lanes(&jobs, 8, threads);
+            assert_complete(&format!("sweep-t{threads}"), n, &run.out);
+            metric(&format!("sweep.n1000000.t{threads}_wall_s"), run.wall_s, "s");
+            runs.push(json_run(n, "lanepool-x8", &format!("threads-{threads}"), &run));
+            match &first {
+                Some(f) => {
+                    assert_eq!(
+                        f.out.timings, run.out.timings,
+                        "threads={threads} must be record-identical to threads=1 at 10⁶"
+                    );
+                    metric(
+                        &format!("sweep.n1000000.t{threads}_speedup"),
+                        f.wall_s / run.wall_s.max(1e-9),
+                        "x",
+                    );
+                }
+                None => first = Some(run),
+            }
+        }
+
+        let n = 10_000_000;
+        let jobs = campaign(n, SEED + 6);
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let run = run_mt_lanes(&jobs, 8, threads);
+        assert_complete("frontier-1e7", n, &run.out);
+        metric("mt.n10000000.wall_s", run.wall_s, "s");
+        metric("mt.n10000000.threads", threads as f64, "threads");
+        runs.push(json_run(n, "lanepool-x8", "threads-native", &run));
     }
 
     // regression gate against the committed baseline (checked before

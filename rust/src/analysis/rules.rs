@@ -84,10 +84,22 @@ pub const RULES: &[Rule] = &[
         code: "DL005",
         scope: Scope::Engine,
         summary: "threading/channel primitive outside an annotated sync layer",
-        rationale: "ROADMAP item 2 will parallelize the engines behind a conservative \
-                    time-window sync layer; until that layer exists (and is file-level \
-                    allowed), any thread::spawn/mpsc/lock in engine code is schedule \
-                    nondeterminism waiting to reach a record.",
+        rationale: "the engines parallelize behind coordinator::sync's conservative \
+                    time-window layer (DESIGN.md §16), the one file-level-allowed home \
+                    for spawn/channel plumbing; a thread::spawn or mpsc anywhere else \
+                    in engine code is schedule nondeterminism waiting to reach a record.",
+    },
+    Rule {
+        id: "sync-primitive",
+        code: "DL006",
+        scope: Scope::Engine,
+        summary: "lock/atomic shared-state primitive in engine code",
+        rationale: "the window-sync layer shares nothing: workers own disjoint engine \
+                    shards and exchange owned messages at window bounds, so replay \
+                    equality holds by construction. A Mutex/RwLock/Condvar/Atomic in \
+                    engine code implies shared mutable simulation state whose access \
+                    order the OS scheduler decides — replay-breaking even inside the \
+                    annotated sync layer, hence a rule of its own.",
     },
 ];
 
@@ -136,6 +148,7 @@ pub fn scan(
             "wall-clock" => wall_clock(r, lines, excluded, &mut out),
             "lossy-cast" => lossy_cast(r, lines, excluded, &mut out),
             "thread-spawn" => thread_spawn(r, lines, excluded, &mut out),
+            "sync-primitive" => sync_primitive(r, lines, excluded, &mut out),
             other => unreachable!("rule '{other}' has no matcher"),
         }
     }
@@ -441,30 +454,46 @@ fn lossy_cast(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec
 
 // --- DL005 thread-spawn ---------------------------------------------------
 
-const SYNC_TOKENS: [&str; 9] = [
-    "thread::spawn",
-    "std::thread",
-    "mpsc",
-    "crossbeam",
-    "rayon",
-    "Mutex<",
-    "RwLock<",
-    "Condvar",
-    "Atomic",
-];
+const SYNC_TOKENS: [&str; 5] = ["thread::spawn", "std::thread", "mpsc", "crossbeam", "rayon"];
 
 fn thread_spawn(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    token_scan(r, lines, excluded, &SYNC_TOKENS, out, |tok| {
+        format!("`{tok}` — engine parallelism belongs to the annotated sync layer")
+    });
+}
+
+// --- DL006 sync-primitive -------------------------------------------------
+
+/// Shared-mutable-state primitives. `Atomic` is a prefix match by
+/// design: it catches every `AtomicU64`/`AtomicBool`/... variant (the
+/// word-boundary check still rejects identifiers merely containing it).
+const SYNC_PRIMITIVE_TOKENS: [&str; 4] = ["Mutex<", "RwLock<", "Condvar", "Atomic"];
+
+fn sync_primitive(r: &'static Rule, lines: &[Line], excluded: &[bool], out: &mut Vec<RawFinding>) {
+    token_scan(r, lines, excluded, &SYNC_PRIMITIVE_TOKENS, out, |tok| {
+        format!("`{tok}` — shared mutable state has no place in a replayable engine")
+    });
+}
+
+/// Shared matcher for the token-set rules: one finding per line (the
+/// first matching token), gated on a word boundary before the match.
+fn token_scan(
+    r: &'static Rule,
+    lines: &[Line],
+    excluded: &[bool],
+    tokens: &[&str],
+    out: &mut Vec<RawFinding>,
+    what: impl Fn(&str) -> String,
+) {
     for (lineno, code) in included(lines, excluded) {
-        for tok in SYNC_TOKENS {
+        for &tok in tokens {
             if let Some(pos) = code.find(tok) {
                 let before_ok = !code[..pos].chars().next_back().is_some_and(is_ident);
                 if before_ok {
                     out.push(RawFinding {
                         rule: r,
                         line: lineno,
-                        what: format!(
-                            "`{tok}` — engine parallelism belongs to the annotated sync layer"
-                        ),
+                        what: what(tok),
                     });
                     break;
                 }
@@ -608,6 +637,39 @@ fn f() {\n\
             assert_eq!(deny_rules("coordinator/tenancy.rs", &src), vec!["thread-spawn"], "{tok}");
         }
         assert!(deny_rules("coordinator/staged.rs", "fn f() { let x = 1; }\n").is_empty());
+    }
+
+    // -- sync-primitive ----------------------------------------------------
+
+    #[test]
+    fn sync_primitive_flags_locks_and_atomics_in_engines_only() {
+        for decl in [
+            "let m: std::sync::Mutex<u64> = std::sync::Mutex::new(0);",
+            "let l: std::sync::RwLock<f64> = std::sync::RwLock::new(0.0);",
+            "let c = std::sync::Condvar::new();",
+            "let a = std::sync::atomic::AtomicU64::new(0);",
+        ] {
+            let src = format!("fn f() {{ {decl} }}\n");
+            assert_eq!(deny_rules("netsim/scheduler.rs", &src), vec!["sync-primitive"], "{decl}");
+            assert!(deny_rules("util/bench.rs", &src).is_empty(), "util/ is not engine scope");
+        }
+        let named = "fn f() { let x = MyAtomicCounter::default(); }\n";
+        assert!(
+            deny_rules("slurm/mod.rs", named).is_empty(),
+            "identifiers merely containing a token are not hits"
+        );
+    }
+
+    #[test]
+    fn sync_primitive_is_allowed_per_site_like_any_rule() {
+        let src = "\
+// lint:allow(sync-primitive) — fixture: drained only at window bounds\n\
+static KILLS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);\n";
+        let scan = lint_source("coordinator/sync.rs", src, None);
+        assert_eq!(scan.findings.len(), 1);
+        assert_eq!(scan.findings[0].rule.code, "DL006");
+        assert!(scan.findings[0].suppressed.is_some());
+        assert!(scan.unused_allows.is_empty());
     }
 
     // -- shared machinery --------------------------------------------------

@@ -17,7 +17,9 @@
 
 pub mod placement;
 pub mod planner;
+pub mod soa;
 pub mod staged;
+pub(crate) mod sync;
 pub mod tenancy;
 
 use std::collections::BTreeMap;
@@ -94,6 +96,13 @@ pub struct CampaignConfig {
     /// `local_max_in_flight`; the HPC backend is the coordinator's
     /// cluster).
     pub cloud_lanes: usize,
+    /// Worker threads for the parallel event engines (DESIGN.md §16):
+    /// multi-backend co-simulations shard their compute engines across
+    /// this many workers under conservative time-window sync. `1` is
+    /// byte-identical to the sequential path; any value is
+    /// f64-record-identical to it. Single-backend campaigns always run
+    /// sequentially (one engine cannot shard).
+    pub threads: usize,
 }
 
 impl Default for CampaignConfig {
@@ -111,6 +120,7 @@ impl Default for CampaignConfig {
             retry_backoff_s: 60.0,
             placement: None,
             cloud_lanes: 32,
+            threads: 1,
         }
     }
 }
@@ -499,7 +509,7 @@ impl<'rt> Coordinator<'rt> {
         };
         let policy = cfg.placement.unwrap_or(PlacementPolicy::CheapestFirst);
         let plan_jobs = staged_plan(jobs, &outcomes, spec, cfg);
-        let placed = placement::execute(&plan_jobs, &fleet, policy, &pcfg);
+        let placed = placement::execute_threaded(&plan_jobs, &fleet, policy, &pcfg, cfg.threads);
 
         // fold the co-simulated timings and the assigned backend's
         // pricing back into each job outcome; wasted attempts are billed

@@ -56,7 +56,9 @@ use crate::slurm::{ArrayHandle, ClusterSpec, Scheduler};
 use crate::util::ord::F64Ord;
 use crate::util::units::{fmt_duration, gbps_to_bytes_per_sec};
 
-use super::staged::{run_multi_chaos, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome};
+use super::staged::{
+    run_multi_chaos_threaded, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome,
+};
 
 /// Salt decorrelating the shared staging path's per-transfer sampling
 /// from the campaign/faults streams ("placxfr").
@@ -384,7 +386,7 @@ pub fn plan(jobs: &[StagedJob], fleet: &[BackendSpec], policy: PlacementPolicy) 
         .zip(&assignment)
         .map(|(j, &k)| StagedJob {
             compute_s: fleet[k].effective_compute_s(j),
-            ..j.clone()
+            ..*j
         })
         .collect();
     PlacementPlan {
@@ -547,6 +549,20 @@ pub fn execute(
     run_plan(fleet, plan(jobs, fleet, policy), cfg)
 }
 
+/// [`execute`] with the fleet's engines sharded across `threads` worker
+/// threads under conservative time-window sync (DESIGN.md §16). Any
+/// thread count is f64-record-identical to [`execute`]
+/// (`rust/tests/parallel_parity.rs`).
+pub fn execute_threaded(
+    jobs: &[StagedJob],
+    fleet: &[BackendSpec],
+    policy: PlacementPolicy,
+    cfg: &PlacementConfig,
+    threads: usize,
+) -> PlacementOutcome {
+    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, None, threads)
+}
+
 /// [`execute`] under an infrastructure-fault schedule (DESIGN.md §15):
 /// each backend's outage windows go to its engine, the shared staging
 /// path gets the schedule's brownouts, and every job orphaned at an
@@ -565,10 +581,25 @@ pub fn execute_chaos(
     cfg: &PlacementConfig,
     schedule: &OutageSchedule,
 ) -> PlacementOutcome {
+    execute_chaos_threaded(jobs, fleet, policy, cfg, schedule, 1)
+}
+
+/// [`execute_chaos`] on `threads` engine workers — outage onsets,
+/// orphan re-placement, and brownouts all ride the same windowed
+/// protocol, so chaos runs too are f64-record-identical at any thread
+/// count (`rust/tests/chaos_cosim.rs` + `parallel_parity.rs`).
+pub fn execute_chaos_threaded(
+    jobs: &[StagedJob],
+    fleet: &[BackendSpec],
+    policy: PlacementPolicy,
+    cfg: &PlacementConfig,
+    schedule: &OutageSchedule,
+    threads: usize,
+) -> PlacementOutcome {
     if let Err(e) = schedule.validate() {
         panic!("execute_chaos: {e}");
     }
-    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, Some(schedule))
+    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, Some(schedule), threads)
 }
 
 /// [`execute`] with every job pinned to one backend — the frontier's
@@ -672,7 +703,7 @@ pub(crate) fn fold_backend_usage(
 }
 
 fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -> PlacementOutcome {
-    run_plan_chaos(fleet, plan, cfg, None)
+    run_plan_chaos(fleet, plan, cfg, None, 1)
 }
 
 fn run_plan_chaos(
@@ -680,6 +711,7 @@ fn run_plan_chaos(
     plan: PlacementPlan,
     cfg: &PlacementConfig,
     schedule: Option<&OutageSchedule>,
+    threads: usize,
 ) -> PlacementOutcome {
     let mut engines: Vec<BackendEngine> = fleet
         .iter()
@@ -708,7 +740,14 @@ fn run_plan_chaos(
         let mut backends: Vec<&mut dyn ComputeSim> =
             engines.iter_mut().map(|e| e.as_compute()).collect();
         match schedule {
-            None => run_multi_chaos(&plan.effective, &plan.assignment, &mut backends, &mut transfers, None),
+            None => run_multi_chaos_threaded(
+                &plan.effective,
+                &plan.assignment,
+                &mut backends,
+                &mut transfers,
+                None,
+                threads,
+            ),
             Some(s) => {
                 let mut replace = |i: usize, t: f64, from: usize| {
                     let to = by_rate
@@ -720,16 +759,17 @@ fn run_plan_chaos(
                         planned_eff[i].compute_s * env_speed_factor(fleet[planned[i]].env);
                     let job = StagedJob {
                         compute_s: nominal_s / env_speed_factor(fleet[to].env),
-                        ..planned_eff[i].clone()
+                        ..planned_eff[i]
                     };
                     (to, job)
                 };
-                run_multi_chaos(
+                run_multi_chaos_threaded(
                     &plan.effective,
                     &plan.assignment,
                     &mut backends,
                     &mut transfers,
                     Some(&mut replace),
+                    threads,
                 )
             }
         }

@@ -1,0 +1,160 @@
+//! Flat structure-of-arrays job storage for the co-simulation hot loops
+//! (DESIGN.md §16).
+//!
+//! The windowed co-simulation driver ([`crate::coordinator::staged`])
+//! touches one or two fields of the campaign's working job set per
+//! hand-off — `bytes_out` when a compute completion submits its
+//! copy-back, `bytes_in` when a parked retry re-stages, `compute_s`
+//! when a completion back-computes its start instant. Keeping the
+//! working set as a `Vec<StagedJob>` drags the whole 40-byte struct
+//! through the cache for every one of those single-field reads and —
+//! before [`StagedJob`] became `Copy` — cloned it wholesale at every
+//! orphan re-placement. [`JobStore`] splits the campaign into parallel
+//! per-field columns so each hand-off reads exactly the column it
+//! needs, and jobs are addressed by index everywhere inside the loop;
+//! a [`StagedJob`] value is materialized only at the two boundaries
+//! that need one (backend submission, final effective-job export).
+//!
+//! The column values are bit-copies of the input jobs, so a loop
+//! reading `store.compute_s(i)` sees exactly the f64 the pre-SoA loop
+//! read from `jobs_eff[i].compute_s` — the store cannot perturb the
+//! f64-record parity contract (`rust/tests/engine_parity.rs`).
+
+use crate::coordinator::staged::StagedJob;
+
+/// Structure-of-arrays store over a campaign's (possibly re-placed)
+/// effective jobs: one flat column per [`StagedJob`] field, indexed by
+/// job id.
+#[derive(Debug, Clone, Default)]
+pub struct JobStore {
+    cores: Vec<u32>,
+    ram_gb: Vec<u32>,
+    compute_s: Vec<f64>,
+    bytes_in: Vec<u64>,
+    bytes_out: Vec<u64>,
+}
+
+impl JobStore {
+    /// Split `jobs` into per-field columns (bit-copies, no rescaling).
+    pub fn from_jobs(jobs: &[StagedJob]) -> Self {
+        let mut store = Self {
+            cores: Vec::with_capacity(jobs.len()),
+            ram_gb: Vec::with_capacity(jobs.len()),
+            compute_s: Vec::with_capacity(jobs.len()),
+            bytes_in: Vec::with_capacity(jobs.len()),
+            bytes_out: Vec::with_capacity(jobs.len()),
+        };
+        for j in jobs {
+            store.cores.push(j.cores);
+            store.ram_gb.push(j.ram_gb);
+            store.compute_s.push(j.compute_s);
+            store.bytes_in.push(j.bytes_in);
+            store.bytes_out.push(j.bytes_out);
+        }
+        store
+    }
+
+    pub fn len(&self) -> usize {
+        self.compute_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compute_s.is_empty()
+    }
+
+    /// Compute wall-clock column, seconds.
+    pub fn compute_s(&self, i: usize) -> f64 {
+        self.compute_s[i]
+    }
+
+    /// Stage-in size column, bytes.
+    pub fn bytes_in(&self, i: usize) -> u64 {
+        self.bytes_in[i]
+    }
+
+    /// Copy-back size column, bytes.
+    pub fn bytes_out(&self, i: usize) -> u64 {
+        self.bytes_out[i]
+    }
+
+    /// Materialize job `i` as a [`StagedJob`] value (backend submission
+    /// needs the whole row).
+    pub fn job(&self, i: usize) -> StagedJob {
+        StagedJob {
+            cores: self.cores[i],
+            ram_gb: self.ram_gb[i],
+            compute_s: self.compute_s[i],
+            bytes_in: self.bytes_in[i],
+            bytes_out: self.bytes_out[i],
+        }
+    }
+
+    /// Replace job `i` (orphan re-placement rescales compute to the new
+    /// backend's speed).
+    pub fn set(&mut self, i: usize, job: StagedJob) {
+        self.cores[i] = job.cores;
+        self.ram_gb[i] = job.ram_gb;
+        self.compute_s[i] = job.compute_s;
+        self.bytes_in[i] = job.bytes_in;
+        self.bytes_out[i] = job.bytes_out;
+    }
+
+    /// Re-assemble the columns into owned jobs (the final effective set
+    /// billing folds against).
+    pub fn into_jobs(self) -> Vec<StagedJob> {
+        (0..self.len()).map(|i| self.job(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(k: u64) -> StagedJob {
+        StagedJob {
+            cores: 1 + (k % 3) as u32,
+            ram_gb: 4,
+            compute_s: 60.0 + k as f64,
+            bytes_in: 1_000 + k,
+            bytes_out: 500 + k,
+        }
+    }
+
+    #[test]
+    fn columns_round_trip_bit_exactly() {
+        let jobs: Vec<StagedJob> = (0..17).map(job).collect();
+        let store = JobStore::from_jobs(&jobs);
+        assert_eq!(store.len(), jobs.len());
+        assert!(!store.is_empty());
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(store.job(i), *j);
+            assert_eq!(store.compute_s(i).to_bits(), j.compute_s.to_bits());
+            assert_eq!(store.bytes_in(i), j.bytes_in);
+            assert_eq!(store.bytes_out(i), j.bytes_out);
+        }
+        assert_eq!(store.into_jobs(), jobs);
+    }
+
+    #[test]
+    fn set_replaces_one_row_only() {
+        let jobs: Vec<StagedJob> = (0..5).map(job).collect();
+        let mut store = JobStore::from_jobs(&jobs);
+        let replacement = StagedJob {
+            compute_s: 9.5,
+            ..job(2)
+        };
+        store.set(2, replacement);
+        assert_eq!(store.job(2), replacement);
+        for i in [0usize, 1, 3, 4] {
+            assert_eq!(store.job(i), jobs[i], "row {i} untouched");
+        }
+    }
+
+    #[test]
+    fn empty_store_is_empty() {
+        let store = JobStore::from_jobs(&[]);
+        assert!(store.is_empty());
+        assert_eq!(store.len(), 0);
+        assert!(store.into_jobs().is_empty());
+    }
+}

@@ -33,6 +33,8 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
+use crate::coordinator::soa::JobStore;
+use crate::coordinator::sync::{with_driver, BackendStep, WindowDriver};
 use crate::faults::outage::{OutageMode, OutageWindow};
 use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
@@ -42,8 +44,10 @@ use crate::util::rng::Rng;
 
 const EPS: f64 = 1e-9;
 
-/// One job's staged-execution plan.
-#[derive(Debug, Clone, PartialEq)]
+/// One job's staged-execution plan. `Copy`: five plain-old-data fields
+/// that the SoA store ([`crate::coordinator::soa::JobStore`]) and the
+/// window drivers pass by bit-copy instead of heap clones.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StagedJob {
     pub cores: u32,
     pub ram_gb: u32,
@@ -99,7 +103,12 @@ pub struct StagedOutcome {
 }
 
 /// A discrete-event compute backend the staged co-simulation can drive.
-pub trait ComputeSim {
+///
+/// `Send` is a supertrait so the conservative window-sync layer
+/// ([`crate::coordinator::sync`]) can hand a backend to its worker
+/// thread for the duration of a run; every engine here is plain owned
+/// state, so the bound costs nothing.
+pub trait ComputeSim: Send {
     /// Submit job `id`, ready (inputs staged) at `ready_s`.
     fn submit(&mut self, id: u64, ready_s: f64, job: &StagedJob);
     /// Time of the backend's next internal event, `None` when idle.
@@ -122,6 +131,12 @@ pub trait ComputeSim {
     /// without an outage schedule return nothing.
     fn take_orphans(&mut self) -> Vec<(u64, f64)> {
         Vec::new()
+    }
+    /// Cumulative count of jobs dropped after exhausting retries.
+    /// Admission control (tenancy) frees queue slots off the deltas
+    /// between windows; backends without injection never abort.
+    fn aborted_count(&self) -> usize {
+        0
     }
 }
 
@@ -189,6 +204,10 @@ impl ComputeSim for SlurmSim {
 
     fn take_orphans(&mut self) -> Vec<(u64, f64)> {
         self.sched.take_orphans()
+    }
+
+    fn aborted_count(&self) -> usize {
+        self.sched.aborted_ids().len()
     }
 }
 
@@ -528,6 +547,10 @@ impl ComputeSim for LanePool {
     fn take_orphans(&mut self) -> Vec<(u64, f64)> {
         std::mem::take(&mut self.orphans)
     }
+
+    fn aborted_count(&self) -> usize {
+        self.aborted.len()
+    }
 }
 
 pub(crate) const fn stage_in_id(i: usize) -> u64 {
@@ -621,7 +644,21 @@ pub fn run_multi(
     backends: &mut [&mut dyn ComputeSim],
     transfers: &mut TransferScheduler,
 ) -> StagedOutcome {
-    run_multi_chaos(jobs, assignment, backends, transfers, None).0
+    run_multi_chaos_threaded(jobs, assignment, backends, transfers, None, 1).0
+}
+
+/// [`run_multi`] with the backends fanned out across `threads` worker
+/// threads under conservative time-window sync (DESIGN.md §16). Any
+/// thread count is f64-record-identical to `threads = 1`, which is
+/// byte-identical to the sequential loop this generalizes.
+pub fn run_multi_threaded(
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    backends: &mut [&mut dyn ComputeSim],
+    transfers: &mut TransferScheduler,
+    threads: usize,
+) -> StagedOutcome {
+    run_multi_chaos_threaded(jobs, assignment, backends, transfers, None, threads).0
 }
 
 /// Extra bookkeeping from a chaos-enabled co-simulation
@@ -655,40 +692,80 @@ pub fn run_multi_chaos(
     assignment: &[usize],
     backends: &mut [&mut dyn ComputeSim],
     transfers: &mut TransferScheduler,
-    mut replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+    replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+) -> (StagedOutcome, ChaosCosim) {
+    run_multi_chaos_threaded(jobs, assignment, backends, transfers, replace, 1)
+}
+
+/// [`run_multi_chaos`] with the backends fanned out across `threads`
+/// worker threads (DESIGN.md §16). The window protocol is conservative:
+/// every engine — transfers included — contributes its next-event time,
+/// the minimum bounds the window, and no engine is advanced past it, so
+/// results at any thread count are f64-record-identical to `threads =
+/// 1` (held to account by `rust/tests/parallel_parity.rs` and all four
+/// parity batteries).
+pub fn run_multi_chaos_threaded(
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    backends: &mut [&mut dyn ComputeSim],
+    transfers: &mut TransferScheduler,
+    replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+    threads: usize,
 ) -> (StagedOutcome, ChaosCosim) {
     assert_eq!(jobs.len(), assignment.len(), "one backend assignment per job");
     assert!(!backends.is_empty(), "run_multi needs at least one backend");
     if let Some(&bad) = assignment.iter().find(|&&b| b >= backends.len()) {
         panic!("assignment names backend {bad}, but only {} exist", backends.len());
     }
+    let n_backends = backends.len();
+    with_driver(backends, threads, |driver| {
+        run_windows(driver, jobs, assignment, n_backends, transfers, replace)
+    })
+}
+
+/// The windowed co-simulation loop body, written once over
+/// [`WindowDriver`] so the sequential and pooled paths execute the
+/// same code. Per window: arm the merged event heap from the cached
+/// next-event times, advance the transfer scheduler to the bound,
+/// route landed stage-ins to their backends, advance every backend to
+/// the bound, and apply the backends' hand-offs to the transfer
+/// scheduler **in backend index order** — the same order, with the
+/// same values, as the sequential loop this was extracted from.
+fn run_windows(
+    driver: &mut dyn WindowDriver,
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    n_backends: usize,
+    transfers: &mut TransferScheduler,
+    mut replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+) -> (StagedOutcome, ChaosCosim) {
     let mut timings = vec![StagedTiming::default(); jobs.len()];
     // orphan re-placement may move a job and rescale its compute; the
-    // working copies start as exact clones, so the chaos-free path reads
-    // the same values it always did
-    let mut jobs_eff: Vec<StagedJob> = jobs.to_vec();
+    // SoA working columns start as bit-copies, so the chaos-free path
+    // reads the same values it always did
+    let mut store = JobStore::from_jobs(jobs);
     let mut assignment: Vec<usize> = assignment.to_vec();
     let mut chaos = ChaosCosim::default();
-    for (i, j) in jobs_eff.iter().enumerate() {
-        transfers.submit_at(stage_in_id(i), assignment[i] as u64, j.bytes_in, 0.0);
+    for i in 0..store.len() {
+        transfers.submit_at(stage_in_id(i), assignment[i] as u64, store.bytes_in(i), 0.0);
     }
     // transfer ids ≥ 2·jobs are re-stages; the map recovers their job
     let mut next_restage_id = (jobs.len() as u64) * 2;
     let mut restage_job: BTreeMap<u64, usize> = BTreeMap::new();
     let mut events = MergedEvents::new();
     let mut seen = 0usize;
-    let n_backends = backends.len();
+    let mut steps: Vec<BackendStep> = Vec::with_capacity(n_backends);
     loop {
         events.arm(transfers.next_event_time());
-        for backend in backends.iter() {
-            events.arm(backend.next_event_time());
+        for &next in driver.next_events() {
+            events.arm(next);
         }
         let Some(t) = events.pop_earliest() else { break };
         // every engine advances to the merged-earliest instant — the
         // hand-offs below assume a shared clock
         transfers.advance_to(t);
         // borrow, don't clone: this loop only reads the new completions
-        // (it mutates the backends and `timings`, never `transfers`)
+        // (it routes submissions through the driver, never `transfers`)
         let records = transfers.records();
         let new_from = seen;
         seen = records.len();
@@ -700,7 +777,7 @@ pub fn run_multi_chaos(
             if stage_in {
                 timings[i].stage_in_wait_s = r.queue_wait_s();
                 timings[i].stage_in_s = r.transfer_s();
-                backends[assignment[i]].submit(i as u64, r.end_s, &jobs_eff[i]);
+                driver.submit(assignment[i], i as u64, r.end_s, store.job(i));
             } else {
                 timings[i].stage_out_wait_s = r.queue_wait_s();
                 timings[i].stage_out_s = r.transfer_s();
@@ -708,21 +785,26 @@ pub fn run_multi_chaos(
                 timings[i].completed = true;
             }
         }
-        for backend in backends.iter_mut() {
-            for (id, end_s) in backend.advance_to(t) {
+        // all backends advance to the window bound (possibly on worker
+        // threads); their steps come back dense in backend index order,
+        // and every transfer-side mutation below happens here on the
+        // coordinator — in the exact sequence the sequential loop made
+        driver.advance(t, &mut steps);
+        for step in &steps {
+            for &(id, end_s) in &step.done {
                 let i = id as usize;
                 timings[i].compute_end_s = end_s;
-                timings[i].compute_start_s = end_s - jobs_eff[i].compute_s;
+                timings[i].compute_start_s = end_s - store.compute_s(i);
                 transfers.submit_at(
                     stage_out_id(i),
                     assignment[i] as u64,
-                    jobs_eff[i].bytes_out,
+                    store.bytes_out(i),
                     end_s,
                 );
             }
             // timed-out attempts hand back here: their scratch inputs are
             // gone, so the retry waits on a fresh (re-contending) stage-in
-            for (id, fail_s) in backend.take_restage() {
+            for &(id, fail_s) in &step.restage {
                 let i = id as usize;
                 let rid = next_restage_id;
                 next_restage_id += 1;
@@ -730,7 +812,7 @@ pub fn run_multi_chaos(
                 transfers.submit_at(
                     rid,
                     assignment[i] as u64,
-                    jobs_eff[i].bytes_in,
+                    store.bytes_in(i),
                     fail_s.max(transfers.clock()),
                 );
             }
@@ -739,26 +821,26 @@ pub fn run_multi_chaos(
             // goes there, and the job resubmits when it lands — if the
             // chosen backend is still inside its window, its own start
             // blocking makes the job wait the window out
-            for (id, orphan_s) in backend.take_orphans() {
+            for &(id, orphan_s) in &step.orphans {
                 let i = id as usize;
                 chaos.orphaned += 1;
                 let (to, job) = match replace.as_mut() {
                     Some(f) => f(i, orphan_s, assignment[i]),
-                    None => (assignment[i], jobs_eff[i].clone()),
+                    None => (assignment[i], store.job(i)),
                 };
                 assert!(to < n_backends, "orphan re-placed onto unknown backend {to}");
                 if to != assignment[i] {
                     chaos.re_placed += 1;
                 }
                 assignment[i] = to;
-                jobs_eff[i] = job;
+                store.set(i, job);
                 let rid = next_restage_id;
                 next_restage_id += 1;
                 restage_job.insert(rid, i);
                 transfers.submit_at(
                     rid,
                     to as u64,
-                    jobs_eff[i].bytes_in,
+                    store.bytes_in(i),
                     orphan_s.max(transfers.clock()),
                 );
             }
@@ -769,7 +851,7 @@ pub fn run_multi_chaos(
         .map(|x| x.compute_end_s)
         .fold(transfers.stats().makespan_s, f64::max);
     chaos.assignment = assignment;
-    chaos.effective = jobs_eff;
+    chaos.effective = store.into_jobs();
     (
         StagedOutcome {
             makespan_s,
@@ -797,6 +879,44 @@ mod tests {
                 bytes_out: 50_000_000,
             })
             .collect()
+    }
+
+    // Heap tie-break audit (DESIGN.md §16): the lane pool's future heap
+    // key is (ready_s, id, duration) and its due map is keyed
+    // (ready_s, id) — both total for unique ids.
+
+    #[test]
+    fn lane_future_heap_ties_start_by_id_not_submission_order() {
+        let run = |ids: &[u64]| {
+            let mut lanes = LanePool::new(1);
+            for &id in ids {
+                lanes.submit(id, 5.0, &jobs(1, 30.0)[0]);
+            }
+            let mut done = Vec::new();
+            loop {
+                let Some(t) = lanes.next_event_time() else { break };
+                done.extend(lanes.advance_to(t));
+            }
+            done
+        };
+        let fwd = run(&[1, 2, 3]);
+        let rev = run(&[3, 2, 1]);
+        assert_eq!(fwd, rev, "insertion order must not leak through equal keys");
+        let ids: Vec<u64> = fwd.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![1, 2, 3], "equal ready instants start ids ascending");
+    }
+
+    #[test]
+    fn merged_events_pop_duplicate_instants_once() {
+        let mut events = MergedEvents::new();
+        events.arm(Some(7.0));
+        events.arm(Some(7.0));
+        events.arm(Some(9.0));
+        events.arm(None);
+        // pop returns the earliest and clears the heap for the re-arm,
+        // so duplicate instants across engines cannot double-fire
+        assert_eq!(events.pop_earliest(), Some(7.0));
+        assert_eq!(events.pop_earliest(), None);
     }
 
     #[test]
@@ -1150,7 +1270,7 @@ mod tests {
             .with_host_stream_cap(0, 4)
             .with_host_stream_cap(1, 4);
         let mut transfers = TransferScheduler::new(topo, 47);
-        let mut replace = |i: usize, _orphan_s: f64, _from: usize| (1usize, js[i].clone());
+        let mut replace = |i: usize, _orphan_s: f64, _from: usize| (1usize, js[i]);
         let (out, chaos) =
             run_multi_chaos(&js, &[0, 0], &mut backends, &mut transfers, Some(&mut replace));
         assert_eq!(chaos.orphaned, 1);

@@ -1,0 +1,371 @@
+//! Conservative time-window synchronization for parallel compute
+//! engines (DESIGN.md §16).
+//!
+//! This is the **only** engine module allowed to hold threading
+//! primitives: DL005 (`thread-spawn`) gates every other engine file,
+//! and the file-level allow below is the containment boundary ROADMAP
+//! item 2 called for. Everything here preserves the sequential replay
+//! contract by construction:
+//!
+//! - The window bound `t` is computed by the caller as the minimum
+//!   next-event time across the transfer scheduler and every backend
+//!   (classic null-message-free conservative PDES lookahead). No
+//!   backend is ever advanced past `t`, so no backend can observe —
+//!   or miss — a cross-engine interaction inside a window.
+//! - Backends never read the transfer scheduler or each other; their
+//!   only inputs are `submit` calls and the window bound. Each worker
+//!   therefore replays exactly the call sequence the sequential loop
+//!   would have made: the per-worker command channel is FIFO, and the
+//!   coordinator sends all of a window's `Submit`s before its
+//!   `Advance`.
+//! - Results merge in **backend index order, never thread arrival
+//!   order**: `advance` slots each worker's reply by backend index and
+//!   the caller consumes the dense `Vec<BackendStep>` 0..n. The f64s
+//!   inside are bit-copies of what the engine computed; the merge adds
+//!   no arithmetic.
+//! - The next-event cache refreshed at the end of window N equals a
+//!   live read at the top of window N+1, because the driver's `submit`
+//!   only runs mid-window (before `advance`) — so caching it on the
+//!   worker side is observation-equivalent to the sequential arm.
+//!
+//! `rust/tests/parallel_parity.rs` and the four parity batteries hold
+//! the proof to account: any thread count must be f64-record-identical
+//! to `--threads 1`, which is byte-identical to the pre-parallel loop.
+//
+// lint:allow-file(thread-spawn) — the conservative window-sync layer
+// itself; every other engine file stays gated (DESIGN.md §16).
+
+use std::sync::mpsc;
+
+use crate::coordinator::staged::{ComputeSim, StagedJob};
+
+/// What one backend produced inside one window: completions, parked
+/// re-stages, outage orphans, and its cumulative abort count.
+#[derive(Debug, Default)]
+pub(crate) struct BackendStep {
+    /// `(job id, compute end)` pairs completed by the window bound.
+    pub done: Vec<(u64, f64)>,
+    /// `(job id, fail time)` pairs whose timeout wiped local scratch.
+    pub restage: Vec<(u64, f64)>,
+    /// `(job id, onset time)` pairs orphaned by an outage onset.
+    pub orphans: Vec<(u64, f64)>,
+    /// Cumulative aborted-job count (tenancy frees admission slots off
+    /// the delta between windows).
+    pub aborted: usize,
+}
+
+/// Uniform driver interface over N compute backends — sequential
+/// in-place or fanned out one-engine-per-worker — so the co-simulation
+/// loops in [`crate::coordinator::staged`] and
+/// [`crate::coordinator::tenancy`] are written once.
+///
+/// Protocol per window: read [`next_events`](Self::next_events) to arm
+/// the merged event queue, [`submit`](Self::submit) any jobs whose
+/// stage-ins landed, then [`advance`](Self::advance) every backend to
+/// the window bound and consume the steps in backend index order.
+pub(crate) trait WindowDriver {
+    /// Cached per-backend next-event times, valid at the top of a
+    /// window (refreshed by [`advance`](Self::advance)).
+    fn next_events(&self) -> &[Option<f64>];
+    /// Route one submission to `backend`.
+    fn submit(&mut self, backend: usize, id: u64, ready_s: f64, job: StagedJob);
+    /// Advance every backend to `t`; `out` is filled with one
+    /// [`BackendStep`] per backend, in backend index order.
+    fn advance(&mut self, t: f64, out: &mut Vec<BackendStep>);
+}
+
+/// The `--threads 1` driver: drives the borrowed engines inline, in
+/// index order, exactly as the pre-parallel loop did.
+struct SeqDriver<'a, 'b> {
+    backends: &'a mut [&'b mut dyn ComputeSim],
+    next: Vec<Option<f64>>,
+}
+
+impl WindowDriver for SeqDriver<'_, '_> {
+    fn next_events(&self) -> &[Option<f64>] {
+        &self.next
+    }
+
+    fn submit(&mut self, backend: usize, id: u64, ready_s: f64, job: StagedJob) {
+        self.backends[backend].submit(id, ready_s, &job);
+    }
+
+    fn advance(&mut self, t: f64, out: &mut Vec<BackendStep>) {
+        out.clear();
+        for (k, backend) in self.backends.iter_mut().enumerate() {
+            let done = backend.advance_to(t);
+            let step = BackendStep {
+                done,
+                restage: backend.take_restage(),
+                orphans: backend.take_orphans(),
+                aborted: backend.aborted_count(),
+            };
+            self.next[k] = backend.next_event_time();
+            out.push(step);
+        }
+    }
+}
+
+/// One window command to a worker. The per-worker channel is FIFO, so
+/// a window's `Submit`s always precede its `Advance` — the worker
+/// replays the sequential per-engine call order exactly.
+enum Cmd {
+    Submit {
+        backend: usize,
+        id: u64,
+        ready_s: f64,
+        job: StagedJob,
+    },
+    Advance {
+        t: f64,
+    },
+}
+
+/// One backend's window result plus its refreshed next-event time,
+/// tagged with the backend index for deterministic merging.
+struct WorkerStep {
+    step: BackendStep,
+    next: Option<f64>,
+}
+
+/// Worker body: owns a shard of backends for the whole run and serves
+/// window commands until the coordinator hangs up.
+fn worker_loop(
+    mut shard: Vec<(usize, &mut dyn ComputeSim)>,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<(usize, WorkerStep)>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Submit {
+                backend,
+                id,
+                ready_s,
+                job,
+            } => {
+                let sim = shard
+                    .iter_mut()
+                    .find(|(k, _)| *k == backend)
+                    .expect("submission routed to a worker that does not own the backend");
+                sim.1.submit(id, ready_s, &job);
+            }
+            Cmd::Advance { t } => {
+                for (k, sim) in shard.iter_mut() {
+                    let done = sim.advance_to(t);
+                    let step = BackendStep {
+                        done,
+                        restage: sim.take_restage(),
+                        orphans: sim.take_orphans(),
+                        aborted: sim.aborted_count(),
+                    };
+                    let next = sim.next_event_time();
+                    if tx.send((*k, WorkerStep { step, next })).is_err() {
+                        return; // coordinator gone; unwind quietly
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The `--threads N` driver: backends are sharded across workers by
+/// `index % workers`; submissions route to the owning worker, and
+/// `advance` broadcasts the window bound then collects exactly one
+/// reply per backend, slotted by index.
+struct PoolDriver {
+    cmd_txs: Vec<mpsc::Sender<Cmd>>,
+    res_rx: mpsc::Receiver<(usize, WorkerStep)>,
+    next: Vec<Option<f64>>,
+    n_backends: usize,
+    /// Reply slots reused across windows (index-ordered merge scratch).
+    slots: Vec<Option<BackendStep>>,
+}
+
+impl PoolDriver {
+    fn worker_of(&self, backend: usize) -> usize {
+        backend % self.cmd_txs.len()
+    }
+}
+
+impl WindowDriver for PoolDriver {
+    fn next_events(&self) -> &[Option<f64>] {
+        &self.next
+    }
+
+    fn submit(&mut self, backend: usize, id: u64, ready_s: f64, job: StagedJob) {
+        self.cmd_txs[self.worker_of(backend)]
+            .send(Cmd::Submit {
+                backend,
+                id,
+                ready_s,
+                job,
+            })
+            .expect("worker thread died mid-run");
+    }
+
+    fn advance(&mut self, t: f64, out: &mut Vec<BackendStep>) {
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Advance { t }).expect("worker thread died mid-run");
+        }
+        self.slots.iter_mut().for_each(|s| *s = None);
+        for _ in 0..self.n_backends {
+            let (k, ws) = self
+                .res_rx
+                .recv()
+                .expect("worker thread died before finishing the window");
+            debug_assert!(self.slots[k].is_none(), "duplicate reply for backend {k}");
+            self.next[k] = ws.next;
+            self.slots[k] = Some(ws.step);
+        }
+        out.clear();
+        for slot in &mut self.slots {
+            out.push(slot.take().expect("missing backend reply"));
+        }
+    }
+}
+
+/// Run `f` against a [`WindowDriver`] over `backends`.
+///
+/// `threads` ≤ 1 (or a single backend) drives the engines inline on
+/// the calling thread — byte-identical to the pre-parallel loop. More
+/// threads shard the backends across `min(threads, backends)` scoped
+/// workers; the scope joins them before returning, so no thread
+/// outlives the borrow.
+pub(crate) fn with_driver<R>(
+    backends: &mut [&mut dyn ComputeSim],
+    threads: usize,
+    f: impl FnOnce(&mut dyn WindowDriver) -> R,
+) -> R {
+    let n = backends.len();
+    let workers = if threads <= 1 { 1 } else { threads.min(n) };
+    // The initial cache is read before any worker exists: outage onsets
+    // make next_event_time non-None even on an idle engine, so this
+    // read must see the pre-run configuration.
+    let next: Vec<Option<f64>> = backends.iter().map(|b| b.next_event_time()).collect();
+    if workers <= 1 {
+        let mut driver = SeqDriver { backends, next };
+        return f(&mut driver);
+    }
+    std::thread::scope(|scope| {
+        let (res_tx, res_rx) = mpsc::channel();
+        let mut shards: Vec<Vec<(usize, &mut dyn ComputeSim)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (k, backend) in backends.iter_mut().enumerate() {
+            shards[k % workers].push((k, &mut **backend));
+        }
+        let mut cmd_txs = Vec::with_capacity(workers);
+        for shard in shards {
+            let (tx, rx) = mpsc::channel();
+            cmd_txs.push(tx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || worker_loop(shard, rx, res_tx));
+        }
+        drop(res_tx);
+        let mut driver = PoolDriver {
+            cmd_txs,
+            res_rx,
+            next,
+            n_backends: n,
+            slots: (0..n).map(|_| None).collect(),
+        };
+        f(&mut driver)
+        // Dropping the driver closes the command channels; workers'
+        // recv() errors out and they exit, then the scope joins them.
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::staged::LanePool;
+
+    fn pool(lanes: usize) -> LanePool {
+        LanePool::new(lanes)
+    }
+
+    fn job(compute_s: f64) -> StagedJob {
+        StagedJob {
+            cores: 1,
+            ram_gb: 4,
+            compute_s,
+            bytes_in: 1_000,
+            bytes_out: 500,
+        }
+    }
+
+    /// Drive the same 3-backend workload through the sequential and
+    /// pooled drivers and assert bit-identical steps and caches.
+    #[test]
+    fn pooled_driver_matches_sequential_bit_exactly() {
+        let run = |threads: usize| -> (Vec<Vec<(u64, f64)>>, Vec<Vec<Option<f64>>>) {
+            let mut a = pool(1);
+            let mut b = pool(2);
+            let mut c = pool(1);
+            let mut backends: Vec<&mut dyn ComputeSim> = vec![&mut a, &mut b, &mut c];
+            with_driver(&mut backends, threads, |driver| {
+                let mut done = Vec::new();
+                let mut nexts = Vec::new();
+                // window 1: one job per backend, staggered readies
+                driver.submit(0, 0, 0.0, job(10.0));
+                driver.submit(1, 1, 1.0, job(20.0));
+                driver.submit(2, 2, 2.0, job(30.0));
+                let mut out = Vec::new();
+                for t in [5.0_f64, 12.0, 22.0, 40.0] {
+                    driver.advance(t, &mut out);
+                    done.push(out.iter().flat_map(|s| s.done.iter().copied()).collect());
+                    nexts.push(driver.next_events().to_vec());
+                }
+                (done, nexts)
+            })
+        };
+        let (done1, next1) = run(1);
+        for threads in [2usize, 3, 8] {
+            let (done_n, next_n) = run(threads);
+            assert_eq!(done1, done_n, "threads={threads}");
+            for (a, b) in next1.iter().flatten().zip(next_n.iter().flatten()) {
+                assert_eq!(
+                    a.map(f64::to_bits),
+                    b.map(f64::to_bits),
+                    "next-event cache diverged at threads={threads}"
+                );
+            }
+        }
+    }
+
+    /// Steps must arrive in backend index order even when later-indexed
+    /// backends finish their windows first.
+    #[test]
+    fn merge_order_is_backend_index_not_arrival() {
+        let mut a = pool(1);
+        let mut b = pool(1);
+        let mut backends: Vec<&mut dyn ComputeSim> = vec![&mut a, &mut b];
+        with_driver(&mut backends, 2, |driver| {
+            // backend 1 gets the short job: it will finish first in
+            // wall-clock, but must still merge second.
+            driver.submit(0, 0, 0.0, job(50.0));
+            driver.submit(1, 1, 0.0, job(1.0));
+            let mut out = Vec::new();
+            driver.advance(100.0, &mut out);
+            assert_eq!(out.len(), 2);
+            assert_eq!(out[0].done, vec![(0, 50.0)]);
+            assert_eq!(out[1].done, vec![(1, 1.0)]);
+        });
+    }
+
+    /// `threads` beyond the backend count must clamp, not spawn idle
+    /// workers; zero threads means sequential.
+    #[test]
+    fn thread_count_clamps_to_backends() {
+        for threads in [0usize, 1, 7] {
+            let mut a = pool(1);
+            let mut backends: Vec<&mut dyn ComputeSim> = vec![&mut a];
+            let done = with_driver(&mut backends, threads, |driver| {
+                driver.submit(0, 0, 0.0, job(3.0));
+                let mut out = Vec::new();
+                driver.advance(10.0, &mut out);
+                out[0].done.clone()
+            });
+            assert_eq!(done, vec![(0, 3.0)], "threads={threads}");
+        }
+    }
+}

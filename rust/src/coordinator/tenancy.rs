@@ -60,9 +60,10 @@ use super::placement::{
     PlacementConfig, PlacementPolicy, PLACEMENT_TRANSFER_SALT,
 };
 use super::staged::{
-    stage_in_id, stage_out_id, synthetic_fault_campaign, MergedEvents, StagedJob, StagedOutcome,
-    StagedTiming,
+    stage_in_id, stage_out_id, synthetic_fault_campaign, ComputeSim, MergedEvents, StagedJob,
+    StagedOutcome, StagedTiming,
 };
+use super::sync::{with_driver, BackendStep, WindowDriver};
 
 /// One tenant of a shared fleet: an independent campaign with its own
 /// owner, arbitration knobs, and SLOs.
@@ -434,7 +435,7 @@ fn escalate_if_late(
     assignment[i] = ctx.fastest;
     effective[i] = StagedJob {
         compute_s: ctx.nominal_s[i] / env_speed_factor(ctx.fleet[ctx.fastest].env),
-        ..effective[i].clone()
+        ..effective[i]
     };
     escalated[k] += 1;
 }
@@ -461,6 +462,25 @@ fn run_admitted(
     transfers: &mut TransferScheduler,
     adm: &mut Admission,
     chaos: Option<&DegradeCtx>,
+    threads: usize,
+) -> (StagedOutcome, Vec<f64>, DegradeTally) {
+    let mut backends: Vec<&mut dyn ComputeSim> =
+        engines.iter_mut().map(|e| e.as_compute()).collect();
+    with_driver(&mut backends, threads, |driver| {
+        run_admitted_windows(driver, effective, assignment, transfers, adm, chaos)
+    })
+}
+
+/// The window loop of [`run_admitted`], generic over the
+/// [`WindowDriver`] so the same code path serves sequential and
+/// sharded-by-thread execution (`coordinator::sync` module docs).
+fn run_admitted_windows(
+    driver: &mut dyn WindowDriver,
+    effective: &mut [StagedJob],
+    assignment: &mut [usize],
+    transfers: &mut TransferScheduler,
+    adm: &mut Admission,
+    chaos: Option<&DegradeCtx>,
 ) -> (StagedOutcome, Vec<f64>, DegradeTally) {
     let n = effective.len();
     let mut timings = vec![StagedTiming::default(); n];
@@ -482,12 +502,13 @@ fn run_admitted(
     let mut restage_job: BTreeMap<u64, usize> = BTreeMap::new();
     let mut events = MergedEvents::new();
     let mut seen = 0usize;
-    let mut seen_engine_aborts = vec![0usize; engines.len()];
+    let mut seen_engine_aborts = vec![0usize; driver.next_events().len()];
     let mut seen_transfer_aborts = 0usize;
+    let mut steps: Vec<BackendStep> = Vec::new();
     loop {
         events.arm(transfers.next_event_time());
-        for engine in engines.iter() {
-            events.arm(engine.peek_next_event());
+        for &next in driver.next_events() {
+            events.arm(next);
         }
         let Some(t) = events.pop_earliest() else { break };
         transfers.advance_to(t);
@@ -507,7 +528,7 @@ fn run_admitted(
                 if stage_in {
                     timings[i].stage_in_wait_s = r.queue_wait_s();
                     timings[i].stage_in_s = r.transfer_s();
-                    engines[assignment[i]].as_compute().submit(i as u64, r.end_s, &effective[i]);
+                    driver.submit(assignment[i], i as u64, r.end_s, effective[i]);
                 } else {
                     timings[i].stage_out_wait_s = r.queue_wait_s();
                     timings[i].stage_out_s = r.transfer_s();
@@ -517,8 +538,9 @@ fn run_admitted(
                 }
             }
         }
-        for engine in engines.iter_mut() {
-            for (id, end_s) in engine.as_compute().advance_to(t) {
+        driver.advance(t, &mut steps);
+        for step in &steps {
+            for &(id, end_s) in &step.done {
                 let i = id as usize;
                 timings[i].compute_end_s = end_s;
                 timings[i].compute_start_s = end_s - effective[i].compute_s;
@@ -531,7 +553,7 @@ fn run_admitted(
             }
             // timed-out attempts hand back here: their scratch inputs are
             // gone, so the retry waits on a fresh (re-contending) stage-in
-            for (id, fail_s) in engine.as_compute().take_restage() {
+            for &(id, fail_s) in &step.restage {
                 let i = id as usize;
                 let rid = next_restage_id;
                 next_restage_id += 1;
@@ -548,7 +570,7 @@ fn run_admitted(
             // when none survives — its engine blocks until window end),
             // re-stage inputs there, resubmit when they land
             if let Some(ctx) = chaos {
-                for (id, orphan_s) in engine.as_compute().take_orphans() {
+                for &(id, orphan_s) in &step.orphans {
                     let i = id as usize;
                     tally.orphaned += 1;
                     let to = ctx
@@ -562,7 +584,7 @@ fn run_admitted(
                         assignment[i] = to;
                         effective[i] = StagedJob {
                             compute_s: ctx.nominal_s[i] / env_speed_factor(ctx.fleet[to].env),
-                            ..effective[i].clone()
+                            ..effective[i]
                         };
                     }
                     let rid = next_restage_id;
@@ -582,12 +604,11 @@ fn run_admitted(
         // engines record retry-exhausted jobs, the transfer scheduler
         // records dropped stage-ins/copy-backs — each dead job lands in
         // exactly one of those lists
-        for (k, engine) in engines.iter().enumerate() {
-            let count = engine.aborted_count();
-            for _ in seen_engine_aborts[k]..count {
+        for (k, step) in steps.iter().enumerate() {
+            for _ in seen_engine_aborts[k]..step.aborted {
                 freed.push(t);
             }
-            seen_engine_aborts[k] = count;
+            seen_engine_aborts[k] = step.aborted;
         }
         let transfer_aborts = transfers.aborted_ids().len();
         for _ in seen_transfer_aborts..transfer_aborts {
@@ -641,7 +662,20 @@ pub fn run_tenants(
     fleet: &[BackendSpec],
     cfg: &TenancyConfig,
 ) -> TenancyOutcome {
-    run_tenants_impl(tenants, fleet, cfg, None, false)
+    run_tenants_impl(tenants, fleet, cfg, None, false, 1)
+}
+
+/// [`run_tenants`] with the compute engines sharded across `threads`
+/// worker threads (`coordinator::sync`). `threads = 1` is byte-identical
+/// to [`run_tenants`]; any thread count is f64-record-identical
+/// (`rust/tests/parallel_parity.rs`).
+pub fn run_tenants_threaded(
+    tenants: &[TenantSpec],
+    fleet: &[BackendSpec],
+    cfg: &TenancyConfig,
+    threads: usize,
+) -> TenancyOutcome {
+    run_tenants_impl(tenants, fleet, cfg, None, false, threads)
 }
 
 /// [`run_tenants`] under an infrastructure-fault schedule with optional
@@ -672,7 +706,23 @@ pub fn run_tenants_chaos(
     if let Err(e) = schedule.validate() {
         panic!("run_tenants_chaos: {e}");
     }
-    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce)
+    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce, 1)
+}
+
+/// [`run_tenants_chaos`] with the compute engines sharded across
+/// `threads` worker threads (`coordinator::sync`).
+pub fn run_tenants_chaos_threaded(
+    tenants: &[TenantSpec],
+    fleet: &[BackendSpec],
+    cfg: &TenancyConfig,
+    schedule: &OutageSchedule,
+    enforce: bool,
+    threads: usize,
+) -> TenancyOutcome {
+    if let Err(e) = schedule.validate() {
+        panic!("run_tenants_chaos: {e}");
+    }
+    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce, threads)
 }
 
 fn run_tenants_impl(
@@ -681,6 +731,7 @@ fn run_tenants_impl(
     cfg: &TenancyConfig,
     schedule: Option<&OutageSchedule>,
     enforce: bool,
+    threads: usize,
 ) -> TenancyOutcome {
     assert!(!tenants.is_empty(), "run_tenants needs at least one tenant");
     assert!(!fleet.is_empty(), "run_tenants needs at least one backend");
@@ -775,6 +826,7 @@ fn run_tenants_impl(
         &mut transfers,
         &mut adm,
         ctx.as_ref(),
+        threads,
     );
     drop(ctx);
     let (wasted_min, compute_events) = collect_compute_faults(&engines, effective.len());

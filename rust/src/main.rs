@@ -375,6 +375,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         faults,
         max_retries: args.num("retries", 3) as u32,
         placement,
+        threads: threads_arg(args)?,
         ..Default::default()
     };
     let r = coord.run_campaign(&ds, pipeline, target, &cfg)?;
@@ -400,6 +401,20 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         print!("{}", report::format_placement(&label, usage));
     }
     Ok(())
+}
+
+/// `--threads N` for the parallel co-sim engines (`coordinator::sync`).
+/// Defaults to the machine's available parallelism; explicit values
+/// must be ≥ 1. `--threads 1` is byte-identical to the sequential
+/// engine (the replay contract's parity gate).
+fn threads_arg(args: &Args) -> Result<usize> {
+    match args.get("threads") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => bail!("invalid --threads '{v}' (must be an integer ≥ 1)"),
+        },
+        None => Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)),
+    }
 }
 
 fn parse_fault_model(name: &str) -> Result<FaultModel> {
@@ -470,7 +485,7 @@ fn cmd_place(args: &Args) -> Result<()> {
         "placement co-simulation: {n} jobs across {} backends (retries {retries}, seed {seed})",
         fleet.len()
     );
-    let out = placement::execute(&jobs, &fleet, policy, &cfg);
+    let out = placement::execute_threaded(&jobs, &fleet, policy, &cfg, threads_arg(args)?);
     let completed = out.staged.timings.iter().filter(|t| t.completed).count();
     println!(
         "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
@@ -577,7 +592,7 @@ fn cmd_tenants(args: &Args) -> Result<()> {
         "tenancy co-simulation: {n_tenants} tenants × {jobs_per} jobs across {} backends (retries {retries}, seed {seed})",
         fleet.len()
     );
-    let out = tenancy::run_tenants(&tenants, &fleet, &cfg);
+    let out = tenancy::run_tenants_threaded(&tenants, &fleet, &cfg, threads_arg(args)?);
     print!("{}", report::format_tenancy(&out.report));
     println!();
     print!("{}", report::format_placement(&policy.label(), &out.report.per_backend));
@@ -644,7 +659,8 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         schedule.compute.len(),
         schedule.brownouts.len()
     );
-    let out = placement::execute_chaos(&jobs, &fleet, policy, &cfg, &schedule);
+    let threads = threads_arg(args)?;
+    let out = placement::execute_chaos_threaded(&jobs, &fleet, policy, &cfg, &schedule, threads);
     let completed = out.staged.timings.iter().filter(|t| t.completed).count();
     println!(
         "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
@@ -946,7 +962,7 @@ USAGE:
   medflow query     --root DIR --dataset NAME --pipeline P [--full] [--workers N]
   medflow index     --root DIR --dataset NAME [--rebuild | --invalidate PIPELINE]
   medflow campaign  --root DIR --dataset NAME --pipeline P [--local WORKERS]
-                    [--faults none|typical|harsh] [--retries N]
+                    [--faults none|typical|harsh] [--retries N] [--threads N]
                     [--placement cheapest|deadline|budget [--deadline SECS] [--budget DOLLARS]]
   medflow status    --root DIR
   medflow sweep     --root DIR --dataset NAME     (all 16 pipelines, dependency order)
@@ -958,15 +974,15 @@ USAGE:
                     [--backoff SECS] [--seed S]   (in-engine failure/retry co-simulation)
   medflow place     [--policy cheapest|deadline|budget] [--deadline SECS] [--budget DOLLARS]
                     [--jobs N] [--frontier [STEPS]] [--faults none|typical|harsh]
-                    [--cloud-lanes N] [--local-lanes N] [--seed S]
+                    [--cloud-lanes N] [--local-lanes N] [--seed S] [--threads N]
                                                   (heterogeneous fleet placement, DESIGN.md §12)
   medflow tenants   [--tenants N] [--jobs-per N] [--depth CAP] [--weights W1,W2,…]
                     [--priorities P1,P2,…] [--policy cheapest|deadline|budget]
-                    [--faults none|typical|harsh] [--retries N] [--seed S]
+                    [--faults none|typical|harsh] [--retries N] [--seed S] [--threads N]
                                                   (multi-tenant shared fleet, DESIGN.md §13)
   medflow chaos     [--severity none|mild|harsh] [--jobs N] [--horizon SECS]
                     [--window BACKEND:down|drain:START:END] [--brownout START:END:FACTOR]
-                    [--policy cheapest|deadline|budget] [--retries N] [--seed S]
+                    [--policy cheapest|deadline|budget] [--retries N] [--seed S] [--threads N]
                                                   (infrastructure outages + graceful degradation, DESIGN.md §15)
   medflow lint      [--src DIR] [--rules id1,id2,…] [--deny] [--list]
                                                   (determinism static analysis, DESIGN.md §14)

@@ -248,7 +248,6 @@ struct ActiveStream {
     start_s: f64,
     latency_s: f64,
     stream_gbps: f64,
-    bytes_left: f64,
 }
 
 impl ActiveStream {
@@ -285,6 +284,11 @@ pub struct TransferScheduler {
     /// `active`); hosts at zero are evicted.
     host_active: BTreeMap<u64, usize>,
     active: Vec<ActiveStream>,
+    /// Remaining bytes per open stream, split out of [`ActiveStream`]
+    /// into a flat column aligned with `active` (DESIGN.md §16): the
+    /// per-event `integrate` walk touches only this column and `rates`,
+    /// not the 7-field stream records.
+    bytes_left: Vec<f64>,
     /// Fair-share allocation cache, aligned with `active`; recomputed
     /// only when the flowing composition changes (admission, completion,
     /// latency expiry) — the pre-PR engine recomputed it inside every
@@ -337,6 +341,7 @@ impl TransferScheduler {
             queued: 0,
             host_active: BTreeMap::new(),
             active: Vec::new(),
+            bytes_left: Vec::new(),
             rates: Vec::new(),
             rates_dirty: false,
             next_flow_start: f64::INFINITY,
@@ -584,6 +589,7 @@ impl TransferScheduler {
             .max(0.01)
             / 1e3;
         *self.host_active.entry(q.host).or_insert(0) += 1;
+        self.bytes_left.push(q.bytes as f64);
         self.active.push(ActiveStream {
             id: q.id,
             host: q.host,
@@ -592,7 +598,6 @@ impl TransferScheduler {
             start_s: self.clock,
             latency_s,
             stream_gbps,
-            bytes_left: q.bytes as f64,
         });
         self.peak_streams = self.peak_streams.max(self.active.len());
         self.rates_dirty = true;
@@ -646,11 +651,11 @@ impl TransferScheduler {
             debug_assert!(submit.0 > self.clock + EPS, "due arrival left undrained");
             t = t.min(submit.0);
         }
-        for (a, &r) in self.active.iter().zip(&self.rates) {
+        for ((a, &r), &left) in self.active.iter().zip(&self.rates).zip(&self.bytes_left) {
             if self.clock + EPS < a.flow_start_s() {
                 t = t.min(a.flow_start_s());
             } else if r > 0.0 {
-                t = t.min(self.clock + a.bytes_left.max(0.0) / gbps_to_bytes_per_sec(r));
+                t = t.min(self.clock + left.max(0.0) / gbps_to_bytes_per_sec(r));
             }
         }
         if !self.active.is_empty() {
@@ -672,9 +677,10 @@ impl TransferScheduler {
         if !self.active.is_empty() {
             self.busy_s += dt;
         }
-        for (a, &r) in self.active.iter_mut().zip(&self.rates) {
+        // pure column walk: two flat f64 slices, no stream records
+        for (left, &r) in self.bytes_left.iter_mut().zip(&self.rates) {
             if r > 0.0 {
-                a.bytes_left -= gbps_to_bytes_per_sec(r) * dt;
+                *left -= gbps_to_bytes_per_sec(r) * dt;
             }
         }
     }
@@ -683,8 +689,9 @@ impl TransferScheduler {
         let mut i = 0;
         while i < self.active.len() {
             let a = &self.active[i];
-            if self.clock + EPS >= a.flow_start_s() && a.bytes_left <= DONE_BYTES {
+            if self.clock + EPS >= a.flow_start_s() && self.bytes_left[i] <= DONE_BYTES {
                 let a = self.active.swap_remove(i);
+                self.bytes_left.swap_remove(i);
                 self.rates.swap_remove(i);
                 self.rates_dirty = true;
                 if let Some(c) = self.host_active.get_mut(&a.host) {
@@ -998,6 +1005,54 @@ mod tests {
         assert_eq!(recs[1].queue_wait_s(), 0.0, "host 0 admits both");
         assert!(recs[3].queue_wait_s() > 0.0, "host 1 cap 1 must queue its second");
         assert!(recs[3].start_s + 1e-9 >= recs[2].end_s);
+    }
+
+    // Heap tie-break audit (DESIGN.md §16): the arrivals heap key is
+    // (submit_s, id, host, bytes) and the admission heads heap key is
+    // (submit_s, id, host) — both total for unique ids, so equal submit
+    // instants resolve by id, never by heap insertion order.
+
+    #[test]
+    fn arrival_heap_ties_admit_by_id_not_submission_order() {
+        let run = |first: u64, second: u64| {
+            let mut sim = TransferScheduler::for_env(Env::Hpc, 1, 9);
+            sim.submit_at(first, 0, GB, 5.0);
+            sim.submit_at(second, 0, GB, 5.0);
+            sim.run_to_completion();
+            sim.records().to_vec()
+        };
+        let fwd = run(0, 1);
+        let rev = run(1, 0);
+        assert_eq!(fwd, rev, "insertion order must not leak through equal keys");
+        assert_eq!(fwd[0].id, 0, "lower id admits first under a cap of 1");
+        assert_eq!(fwd[0].queue_wait_s(), 0.0);
+        assert!(fwd[1].queue_wait_s() > 0.0);
+    }
+
+    #[test]
+    fn admission_heads_interleave_across_hosts_by_id() {
+        // both hosts capped at 1 with a queued second transfer; the
+        // running pair drains at the same fair-shared instant, so both
+        // heads become admissible in the same admit() pass — the
+        // (submit_s, id, host) heads key pins the global order
+        let run = |order: &[(u64, u64)]| {
+            let mut sim = TransferScheduler::for_env(Env::Local, 1, 13);
+            for &(id, host) in order {
+                // a future submit instant routes every transfer through
+                // the arrivals heap (t=0 submissions admit eagerly in
+                // call order, which is semantics, not a heap tie)
+                sim.submit_at(id, host, 100_000_000, 5.0);
+            }
+            sim.run_to_completion();
+            let mut recs = sim.records().to_vec();
+            recs.sort_by_key(|r| r.id);
+            recs
+        };
+        let fwd = run(&[(0, 0), (1, 1), (2, 0), (3, 1)]);
+        let rev = run(&[(3, 1), (2, 0), (1, 1), (0, 0)]);
+        assert_eq!(fwd, rev, "insertion order must not leak through equal keys");
+        assert!(fwd[2].queue_wait_s() > 0.0);
+        assert!(fwd[3].queue_wait_s() > 0.0);
     }
 
     #[test]

@@ -183,13 +183,31 @@ struct Running {
     start_seq: u64,
 }
 
+/// A pending job as a flat `Copy` row (DESIGN.md §16): the owned user
+/// `String` of [`SimJob`] is interned to a dense id at submission, so
+/// the scheduling pass examines candidates by copy instead of cloning a
+/// heap-allocated `SimJob` per examined job per pass. The full
+/// [`SimJob`] is re-materialized only when an attempt actually starts
+/// (it must outlive the pending row inside [`JobRecord`]s).
+#[derive(Debug, Clone, Copy)]
+struct DueJob {
+    id: u64,
+    /// Index into `Scheduler::user_names` / `Scheduler::usage`.
+    user: u32,
+    cores: u32,
+    ram_gb: u32,
+    duration_s: f64,
+    submit_s: f64,
+    array: Option<ArrayHandle>,
+}
+
 /// A not-yet-due submission, heap-ordered by (submit_s, id, seq). The
 /// submission sequence number disambiguates pathological duplicate ids
 /// so the heap order stays total.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct FutureJob {
     key: (F64Ord, u64, u64),
-    job: SimJob,
+    job: DueJob,
 }
 
 impl PartialEq for FutureJob {
@@ -231,9 +249,10 @@ pub struct Scheduler {
     /// Not-yet-due submissions, min-heap by (submit_s, id).
     future: BinaryHeap<Reverse<FutureJob>>,
     submit_seq: u64,
-    /// Arrived-and-waiting jobs (submit_s ≤ clock), unordered; each pass
-    /// sorts priority keys over it, started jobs leave via swap-remove.
-    due: Vec<SimJob>,
+    /// Arrived-and-waiting jobs (submit_s ≤ clock) as flat [`DueJob`]
+    /// rows, unordered; each pass sorts priority keys over it, started
+    /// jobs leave via swap-remove.
+    due: Vec<DueJob>,
     running: Vec<Running>,
     /// Job id → position in `running`, maintained across swap-removals
     /// so end-heap pops translate to positions in O(1).
@@ -247,9 +266,15 @@ pub struct Scheduler {
     /// Monotone start counter feeding `Running::start_seq`.
     start_seq: u64,
     records: Vec<JobRecord>,
-    /// Fairshare: accumulated core-seconds per user (decayed); lower usage
-    /// → higher priority.
-    usage: BTreeMap<String, f64>,
+    /// Fairshare: accumulated core-seconds per user, indexed by interned
+    /// user id; lower usage → higher priority. The per-user cells see
+    /// the exact update sequence the pre-SoA `BTreeMap<String, f64>`
+    /// did, so every f64 is bit-identical.
+    usage: Vec<f64>,
+    /// Interned user names, indexed by [`DueJob::user`].
+    user_names: Vec<String>,
+    /// User name → interned id (keyed access only — never iterated).
+    user_ids: HashMap<String, u32>,
     maintenance: Vec<Maintenance>,
     /// Running count per array id (for `%max_concurrent`).
     array_running: BTreeMap<u64, u32>,
@@ -322,7 +347,9 @@ impl Scheduler {
             ends: BinaryHeap::new(),
             start_seq: 0,
             records: Vec::new(),
-            usage: BTreeMap::new(),
+            usage: Vec::new(),
+            user_names: Vec::new(),
+            user_ids: HashMap::new(),
             maintenance: Vec::new(),
             array_running: BTreeMap::new(),
             core_seconds_capacity: 0.0,
@@ -429,8 +456,8 @@ impl Scheduler {
                     // start; refund the part the kill never let it hold
                     let unheld = (r.end_s - self.clock).max(0.0) * r.job.cores as f64;
                     self.core_seconds_used -= unheld;
-                    if let Some(u) = self.usage.get_mut(&r.job.user) {
-                        *u -= unheld;
+                    if let Some(&uid) = self.user_ids.get(&r.job.user) {
+                        self.usage[uid as usize] -= unheld;
                     }
                     self.outage_killed += 1;
                     self.outage_wasted_s += self.clock - r.start_s;
@@ -501,6 +528,19 @@ impl Scheduler {
         self.maintenance.iter().any(|w| t >= w.start_s && t < w.end_s)
     }
 
+    /// Intern a user name to its dense id, allocating a fresh fairshare
+    /// cell on first sight.
+    fn intern_user(&mut self, name: &str) -> u32 {
+        if let Some(&uid) = self.user_ids.get(name) {
+            return uid;
+        }
+        let uid = self.user_names.len() as u32;
+        self.user_names.push(name.to_string());
+        self.user_ids.insert(name.to_string(), uid);
+        self.usage.push(0.0);
+        uid
+    }
+
     pub fn submit(&mut self, job: SimJob) {
         assert!(
             job.submit_s >= self.clock,
@@ -511,13 +551,22 @@ impl Scheduler {
         );
         self.needs_schedule = true;
         self.sched_dirty = true;
-        if job.submit_s <= self.clock {
-            self.due.push(job);
+        let row = DueJob {
+            id: job.id,
+            user: self.intern_user(&job.user),
+            cores: job.cores,
+            ram_gb: job.ram_gb,
+            duration_s: job.duration_s,
+            submit_s: job.submit_s,
+            array: job.array,
+        };
+        if row.submit_s <= self.clock {
+            self.due.push(row);
         } else {
             self.submit_seq += 1;
             self.future.push(Reverse(FutureJob {
-                key: (F64Ord(job.submit_s), job.id, self.submit_seq),
-                job,
+                key: (F64Ord(row.submit_s), row.id, self.submit_seq),
+                job: row,
             }));
         }
     }
@@ -543,32 +592,32 @@ impl Scheduler {
         self.core_seconds_used / self.core_seconds_capacity
     }
 
-    fn priority(&self, job: &SimJob) -> (f64, f64, u64) {
+    fn priority(&self, job: &DueJob) -> (f64, f64, u64) {
         // fairshare first (lower accumulated usage wins), then FIFO.
         let usage = if self.policy.fairshare {
-            self.usage.get(&job.user).copied().unwrap_or(0.0)
+            self.usage[job.user as usize]
         } else {
             0.0
         };
         (usage, job.submit_s, job.id)
     }
 
-    fn fits_on(&self, node: usize, job: &SimJob) -> bool {
+    fn fits_on(&self, node: usize, job: &DueJob) -> bool {
         self.nodes[node].free_cores >= job.cores && self.nodes[node].free_ram_gb >= job.ram_gb
     }
 
-    fn first_fit(&self, job: &SimJob) -> Option<usize> {
+    fn first_fit(&self, job: &DueJob) -> Option<usize> {
         (0..self.nodes.len()).find(|&n| self.fits_on(n, job))
     }
 
-    fn array_ok(&self, job: &SimJob) -> bool {
+    fn array_ok(&self, job: &DueJob) -> bool {
         match &job.array {
             None => true,
             Some(h) => self.array_running.get(&h.array_id).copied().unwrap_or(0) < h.max_concurrent,
         }
     }
 
-    fn start_job(&mut self, job: SimJob, node: usize) {
+    fn start_job(&mut self, job: DueJob, node: usize) {
         let attempt = self.attempts.get(&job.id).copied().unwrap_or(0);
         let fail = match &self.faults {
             Some(inj) => inj.sample(job.id, attempt),
@@ -587,14 +636,24 @@ impl Scheduler {
         if let Some(h) = &job.array {
             *self.array_running.entry(h.array_id).or_insert(0) += 1;
         }
-        *self.usage.entry(job.user.clone()).or_insert(0.0) += job.cores as f64 * alloc_s;
+        self.usage[job.user as usize] += job.cores as f64 * alloc_s;
         self.core_seconds_used += job.cores as f64 * alloc_s;
         let end_s = self.clock + alloc_s;
         self.start_seq += 1;
         self.ends.push(Reverse((F64Ord(end_s), job.id, self.start_seq)));
         self.running_pos.insert(job.id, self.running.len());
+        // the only per-start heap allocation left: materialize the owned
+        // SimJob the eventual JobRecord needs
         self.running.push(Running {
-            job,
+            job: SimJob {
+                id: job.id,
+                user: self.user_names[job.user as usize].clone(),
+                cores: job.cores,
+                ram_gb: job.ram_gb,
+                duration_s: job.duration_s,
+                submit_s: job.submit_s,
+                array: job.array,
+            },
             node,
             start_s: self.clock,
             end_s,
@@ -660,7 +719,9 @@ impl Scheduler {
         // instead of once per pending job.
         let mut failed_reqs: Vec<(u32, u32)> = Vec::new();
         for &(idx, _) in &order {
-            let job = self.due[idx].clone();
+            // a flat Copy row — the pre-SoA engine cloned an owned
+            // SimJob (heap String) per examined job per pass here
+            let job = self.due[idx];
             if !self.array_ok(&job) {
                 continue;
             }
@@ -711,7 +772,7 @@ impl Scheduler {
     /// after each release just that node needs re-checking —
     /// O(R log R + R + N) over a reused scratch buffer, versus the
     /// pre-PR full-node rescan per release (O(R·N)) on a fresh clone.
-    fn earliest_start_estimate(&mut self, job: &SimJob) -> f64 {
+    fn earliest_start_estimate(&mut self, job: &DueJob) -> f64 {
         debug_assert!(
             self.first_fit(job).is_none(),
             "estimate asked while the job already fits"
@@ -1003,6 +1064,60 @@ mod tests {
         s.submit(job(2, 4, 100.0, 0.0));
         s.run_to_completion();
         assert_eq!(s.makespan(), 100.0);
+    }
+
+    // Heap tie-break audit (DESIGN.md §16): every pop site's key is
+    // total, so equal primary keys resolve by the pinned secondary key
+    // — never by insertion order or user-name interning order.
+
+    #[test]
+    fn future_heap_ties_drain_by_id_not_submission_order() {
+        // equal submit instants on a one-job-at-a-time cluster: the
+        // (submit_s, id, seq) arrival key + the (usage, submit_s, id)
+        // priority key start ids ascending however they were submitted
+        let run = |ids: &[u64]| {
+            let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+            for &id in ids {
+                s.submit(job(id, 4, 50.0, 10.0));
+            }
+            s.run_to_completion().to_vec()
+        };
+        let fwd = run(&[1, 2, 3]);
+        let rev = run(&[3, 2, 1]);
+        assert_eq!(fwd, rev, "insertion order must not leak through equal keys");
+        let ids: Vec<u64> = fwd.iter().map(|r| r.job.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn fairshare_ties_ignore_user_interning_order() {
+        // distinct users with identical (zero) usage: the tie falls to
+        // (submit_s, id), not to the interned user ids — user "z"
+        // interns first here but its job id loses the tie
+        let mut s = Scheduler::new(ClusterSpec::small(1, 4, 16));
+        let mut j2 = job(2, 4, 50.0, 0.0);
+        j2.user = "z".into();
+        let mut j1 = job(1, 4, 50.0, 0.0);
+        j1.user = "a".into();
+        s.submit(j2);
+        s.submit(j1);
+        let recs = s.run_to_completion();
+        assert_eq!(recs[0].job.id, 1);
+        assert_eq!(recs[1].job.id, 2);
+    }
+
+    #[test]
+    fn ends_heap_ties_emit_in_start_order() {
+        // both attempts end at exactly t=100: the (end_s, id, start_seq)
+        // key plus the ascending-position replay emit id 1 (started
+        // first) before id 2
+        let mut s = Scheduler::new(ClusterSpec::small(2, 4, 16));
+        s.submit(job(2, 4, 100.0, 0.0));
+        s.submit(job(1, 4, 100.0, 0.0));
+        let recs = s.run_to_completion();
+        let ids: Vec<u64> = recs.iter().map(|r| r.job.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(recs[0].end_s, recs[1].end_s);
     }
 
     #[test]

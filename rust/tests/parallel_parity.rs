@@ -1,0 +1,327 @@
+//! Parallel-engine parity battery (DESIGN.md §16): the conservative
+//! time-window driver (`coordinator::sync`) must make every thread
+//! count **f64-record-identical** to the sequential loop — not close,
+//! not statistically equal, identical to the bit. The cases here aim
+//! at the places a windowed parallel run could diverge:
+//!
+//! * **zero-length windows** — identical jobs land simultaneous events
+//!   on every backend, so consecutive window bounds coincide;
+//! * **simultaneous cross-backend events** — completions at the exact
+//!   same instant on different backends must merge in backend index
+//!   order, never thread-arrival order;
+//! * **outage onset exactly at a window edge** — a chaos window whose
+//!   start is bit-equal to a record instant from a clean run;
+//! * **harsh faults + outages at 10³ jobs** — the full chaos surface
+//!   replayed seed-identically at 1 vs N threads;
+//! * **tenancy admission** — queue-depth admission control through the
+//!   sharded drivers.
+
+use medflow::coordinator::placement::{
+    execute, execute_chaos, execute_chaos_threaded, execute_threaded, BackendKind, BackendSpec,
+    PlacementConfig, PlacementPolicy,
+};
+use medflow::coordinator::staged::{
+    run_multi, run_multi_threaded, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome,
+};
+use medflow::coordinator::tenancy::{
+    run_tenants, run_tenants_chaos, run_tenants_chaos_threaded, run_tenants_threaded,
+    TenancyConfig, TenantSpec,
+};
+use medflow::faults::outage::{ComputeOutage, OutageMode, OutageSchedule, OutageSeverity};
+use medflow::faults::FaultModel;
+use medflow::netsim::scheduler::TransferScheduler;
+use medflow::netsim::Env;
+use medflow::slurm::{ArrayHandle, ClusterSpec, Scheduler};
+use medflow::util::rng::Rng;
+
+fn staged_jobs(n: usize, seed: u64) -> Vec<StagedJob> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| StagedJob {
+            cores: 1 + rng.below(3) as u32,
+            ram_gb: 1 + rng.below(8) as u32,
+            compute_s: 20.0 + rng.next_f64() * 400.0,
+            bytes_in: 10_000_000 + rng.below(150_000_000),
+            bytes_out: 1_000_000 + rng.below(50_000_000),
+        })
+        .collect()
+}
+
+/// Run a lane-pool fleet (worker counts per pool) over a shared
+/// transfer scheduler, jobs assigned round-robin across the pools.
+fn run_lanes(jobs: &[StagedJob], pools: &[usize], threads: usize, cap: usize) -> StagedOutcome {
+    let mut fleet: Vec<LanePool> = pools.iter().map(|&w| LanePool::new(w)).collect();
+    let mut backends: Vec<&mut dyn ComputeSim> =
+        fleet.iter_mut().map(|p| p as &mut dyn ComputeSim).collect();
+    let assignment: Vec<usize> = (0..jobs.len()).map(|i| i % pools.len()).collect();
+    let mut transfers = TransferScheduler::for_env(Env::Hpc, cap, 7);
+    if threads == 0 {
+        run_multi(jobs, &assignment, &mut backends, &mut transfers)
+    } else {
+        run_multi_threaded(jobs, &assignment, &mut backends, &mut transfers, threads)
+    }
+}
+
+fn assert_same(tag: &str, a: &StagedOutcome, b: &StagedOutcome) {
+    assert_eq!(a.timings, b.timings, "{tag}: timings");
+    assert_eq!(a.transfer, b.transfer, "{tag}: transfer stats");
+    assert_eq!(
+        a.makespan_s.to_bits(),
+        b.makespan_s.to_bits(),
+        "{tag}: makespan must match to the bit"
+    );
+}
+
+/// Identical jobs on identical backends: every stage-in admits at t=0,
+/// shares the link rate equally, and lands at the same instant — so
+/// the compute backends see simultaneous submissions, simultaneous
+/// completions, and runs of zero-length windows between coinciding
+/// event times. Any thread count must reproduce the sequential records.
+#[test]
+fn zero_length_windows_from_identical_jobs_stay_exact() {
+    let jobs = vec![
+        StagedJob {
+            cores: 1,
+            ram_gb: 2,
+            compute_s: 300.0,
+            bytes_in: 50_000_000,
+            bytes_out: 5_000_000,
+        };
+        16
+    ];
+    // cap 64 ≥ all 32 transfers: nothing queues, everything overlaps
+    let seq = run_lanes(&jobs, &[8, 8], 0, 64);
+
+    // the scenario must actually produce simultaneous cross-backend
+    // events, or this test gates nothing
+    let t0 = seq.timings[0];
+    assert!(
+        seq.timings[1..].iter().all(|t| {
+            t.compute_start_s.to_bits() == t0.compute_start_s.to_bits()
+                && t.compute_end_s.to_bits() == t0.compute_end_s.to_bits()
+        }),
+        "identical jobs on symmetric backends must complete simultaneously"
+    );
+
+    for threads in [1, 2, 4, 8] {
+        let par = run_lanes(&jobs, &[8, 8], threads, 64);
+        assert_same(&format!("threads={threads}"), &seq, &par);
+    }
+}
+
+/// A mixed campaign over a heterogeneous fleet — two uneven lane pools
+/// plus a constrained SLURM cluster — where backends genuinely race:
+/// simultaneous cross-backend events must merge in backend index
+/// order. `threads = 8` on 3 backends also exercises the
+/// more-workers-than-backends clamp.
+#[test]
+fn heterogeneous_fleet_parity_across_thread_counts() {
+    let jobs = staged_jobs(240, 17);
+    let assignment: Vec<usize> = (0..jobs.len()).map(|i| i % 3).collect();
+    let run = |threads: usize| -> StagedOutcome {
+        let mut lanes_a = LanePool::new(6);
+        let mut lanes_b = LanePool::new(2);
+        let handle = ArrayHandle {
+            array_id: 1,
+            max_concurrent: 16,
+        };
+        let mut slurm =
+            SlurmSim::new(Scheduler::new(ClusterSpec::small(6, 8, 64)), "medflow", Some(handle));
+        let mut backends: Vec<&mut dyn ComputeSim> = vec![&mut lanes_a, &mut lanes_b, &mut slurm];
+        let mut transfers = TransferScheduler::for_env(Env::Hpc, 8, 17);
+        if threads == 0 {
+            run_multi(&jobs, &assignment, &mut backends, &mut transfers)
+        } else {
+            run_multi_threaded(&jobs, &assignment, &mut backends, &mut transfers, threads)
+        }
+    };
+    let seq = run(0);
+    assert!(seq.timings.iter().all(|t| t.completed));
+    for threads in [1, 2, 3, 8] {
+        assert_same(&format!("threads={threads}"), &seq, &run(threads));
+    }
+}
+
+fn trio_fleet() -> Vec<BackendSpec> {
+    vec![
+        BackendSpec {
+            name: "hpc".into(),
+            env: Env::Hpc,
+            kind: BackendKind::Slurm {
+                cluster: ClusterSpec::small(6, 8, 64),
+                max_concurrent: 24,
+            },
+            faults: None,
+            transfer_streams: 6,
+        },
+        BackendSpec {
+            name: "cloud".into(),
+            env: Env::Cloud,
+            kind: BackendKind::Lanes { workers: 16 },
+            faults: None,
+            transfer_streams: 4,
+        },
+        BackendSpec {
+            name: "local".into(),
+            env: Env::Local,
+            kind: BackendKind::Lanes { workers: 2 },
+            faults: None,
+            transfer_streams: 2,
+        },
+    ]
+}
+
+fn clean_cfg(seed: u64) -> PlacementConfig {
+    PlacementConfig {
+        seed,
+        transfer_faults: None,
+        max_retries: 3,
+        retry_backoff_s: 30.0,
+    }
+}
+
+/// An outage whose onset is **bit-equal** to a record instant from a
+/// clean run — a compute completion and a stage-in landing, each of
+/// which is a window bound in the windowed loop. The conservative
+/// protocol must place the onset in the same window at every thread
+/// count, or kills/orphans shift between runs.
+#[test]
+fn outage_onset_exactly_at_a_window_edge_is_thread_invariant() {
+    let js = staged_jobs(120, 41);
+    let fleet = trio_fleet();
+    let cfg = clean_cfg(41);
+    let clean = execute(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+    let mid = &clean.staged.timings[js.len() / 2];
+    for onset in [mid.compute_end_s, mid.compute_start_s] {
+        let mut schedule = OutageSchedule::empty();
+        schedule.compute.push(ComputeOutage {
+            backend: clean.plan.assignment[js.len() / 2],
+            mode: OutageMode::Down,
+            start_s: onset,
+            end_s: onset + 400.0,
+        });
+        let seq = execute_chaos(&js, &fleet, PlacementPolicy::CheapestFirst, &cfg, &schedule);
+        for threads in [2, 4] {
+            let par = execute_chaos_threaded(
+                &js,
+                &fleet,
+                PlacementPolicy::CheapestFirst,
+                &cfg,
+                &schedule,
+                threads,
+            );
+            let tag = format!("onset={onset} threads={threads}");
+            assert_same(&tag, &seq.staged, &par.staged);
+            assert_eq!(seq.plan.assignment, par.plan.assignment, "{tag}");
+            assert_eq!(seq.per_backend, par.per_backend, "{tag}");
+            assert_eq!(seq.total_cost_dollars, par.total_cost_dollars, "{tag}");
+            assert_eq!(seq.outage, par.outage, "{tag}");
+            assert_eq!(seq.aborted, par.aborted, "{tag}");
+        }
+        assert!(seq.outage.expect("chaos run reports stats").windows > 0);
+    }
+}
+
+/// The full chaos surface at campaign scale: harsh synthetic outages
+/// *and* harsh transfer-checksum faults over 10³ jobs. One thread and
+/// many threads must replay seed-identically, and the damage must
+/// actually bite so the gate is not vacuous.
+#[test]
+fn harsh_chaos_with_transfer_faults_replays_identically_at_one_vs_many_threads() {
+    let n = 1_000;
+    let js = staged_jobs(n, 73);
+    let fleet = trio_fleet();
+    let schedule = OutageSchedule::synthetic(OutageSeverity::Harsh, fleet.len(), 20_000.0, 73);
+    let cfg = PlacementConfig {
+        seed: 73,
+        transfer_faults: Some(FaultModel::harsh()),
+        max_retries: 3,
+        retry_backoff_s: 30.0,
+    };
+    let policy = PlacementPolicy::CheapestFirst;
+    let run =
+        |threads: usize| execute_chaos_threaded(&js, &fleet, policy, &cfg, &schedule, threads);
+    let seq = run(1);
+    for threads in [2, 4] {
+        let par = run(threads);
+        let tag = format!("threads={threads}");
+        assert_same(&tag, &seq.staged, &par.staged);
+        assert_eq!(seq.per_backend, par.per_backend, "{tag}");
+        assert_eq!(seq.total_cost_dollars, par.total_cost_dollars, "{tag}");
+        assert_eq!(seq.compute_events, par.compute_events, "{tag}");
+        assert_eq!(seq.transfer_events, par.transfer_events, "{tag}");
+        assert_eq!(seq.outage, par.outage, "{tag}");
+        assert_eq!(seq.aborted, par.aborted, "{tag}");
+    }
+    // replay determinism at a fixed thread count, run to run
+    let again = run(4);
+    assert_same("replay", &seq.staged, &again.staged);
+    let o = seq.outage.expect("chaos run reports outage stats");
+    assert!(o.killed > 0 && o.orphaned > 0, "harsh schedule must bite: {o:?}");
+    assert!(!seq.transfer_events.is_empty(), "harsh faults must bite");
+}
+
+/// Fault-free placement parity for every policy — the threaded entry
+/// point is what `medflow place --threads N` calls.
+#[test]
+fn every_placement_policy_is_thread_invariant() {
+    let js = staged_jobs(90, 53);
+    let fleet = trio_fleet();
+    let cfg = clean_cfg(53);
+    for policy in [
+        PlacementPolicy::CheapestFirst,
+        PlacementPolicy::DeadlineAware { deadline_s: 2_000.0 },
+        PlacementPolicy::BudgetCapped { budget_dollars: 5.0 },
+        PlacementPolicy::Pinned(1),
+    ] {
+        let seq = execute(&js, &fleet, policy, &cfg);
+        let par = execute_threaded(&js, &fleet, policy, &cfg, 4);
+        assert_same(&format!("{policy:?}"), &seq.staged, &par.staged);
+        assert_eq!(seq.plan.assignment, par.plan.assignment, "{policy:?}");
+        assert_eq!(seq.total_cost_dollars, par.total_cost_dollars, "{policy:?}");
+    }
+}
+
+/// Queue-depth admission control and SLO enforcement through the
+/// sharded drivers: the tenancy layer frees admission slots off
+/// per-window abort deltas, so a window-boundary slip would re-order
+/// every later admission grant.
+#[test]
+fn tenancy_admission_and_chaos_are_thread_invariant() {
+    let tenants = vec![
+        TenantSpec {
+            weight: 1.0,
+            ..TenantSpec::new("a", staged_jobs(40, 11))
+        },
+        TenantSpec {
+            weight: 2.0,
+            ..TenantSpec::new("b", staged_jobs(40, 12))
+        },
+        TenantSpec {
+            priority: 1,
+            ..TenantSpec::new("c", staged_jobs(40, 13))
+        },
+    ];
+    let fleet = trio_fleet();
+    let cfg = TenancyConfig {
+        seed: 91,
+        queue_depth: Some(6),
+        ..Default::default()
+    };
+    let seq = run_tenants(&tenants, &fleet, &cfg);
+    let par = run_tenants_threaded(&tenants, &fleet, &cfg, 4);
+    assert_same("tenants", &seq.staged, &par.staged);
+    assert_eq!(seq.admit_s, par.admit_s, "admission grant instants");
+    assert_eq!(seq.assignment, par.assignment);
+    assert_eq!(seq.report.tenants, par.report.tenants);
+    assert_eq!(seq.report.per_backend, par.report.per_backend);
+
+    let schedule = OutageSchedule::synthetic(OutageSeverity::Harsh, fleet.len(), 20_000.0, 91);
+    let seq = run_tenants_chaos(&tenants, &fleet, &cfg, &schedule, true);
+    let par = run_tenants_chaos_threaded(&tenants, &fleet, &cfg, &schedule, true, 4);
+    assert_same("tenants-chaos", &seq.staged, &par.staged);
+    assert_eq!(seq.admit_s, par.admit_s, "chaos admission grant instants");
+    assert_eq!(seq.report.tenants, par.report.tenants);
+    assert_eq!(seq.report.outage, par.report.outage);
+    assert_eq!(seq.report.aborted, par.report.aborted);
+}
