@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Bench: event-engine scaling — the ISSUE 3 tentpole numbers. Sweeps
 //! staged-campaign sizes 10³→10⁶ through the rewritten engines
 //! (`coordinator::staged` + `netsim::scheduler` + `slurm`) and, on the

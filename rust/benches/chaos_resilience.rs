@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Bench: chaos-resilience sweep — the DESIGN.md §15 tentpole numbers.
 //! The shared synthetic campaign runs through `placement::execute_chaos`
 //! under seeded infrastructure-fault schedules, swept over outage

@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Bench: heterogeneous multi-environment placement — the ISSUE 5
 //! tentpole numbers. One campaign split across a constrained HPC
 //! cluster, a wide cloud lane pool, and a few local workstations, all

@@ -1,0 +1,181 @@
+//! Bench: streaming-ingest year trace (DESIGN.md §17). A 10⁶-session
+//! longitudinal campaign arrives steadily over 365 simulated days and
+//! is drained by the epoch re-planning loop (`coordinator::stream`)
+//! with weekly planning epochs, asserting in **both** modes:
+//!
+//! * **t=0 parity** — an `AtStart` trace degenerates to one epoch that
+//!   is f64-record-identical to the one-shot `RunSpec` run, at any
+//!   `--threads N`;
+//! * **replay determinism** — the same `(config, seed)` reproduces the
+//!   full `StreamReport`, every epoch row, and every latency sample;
+//! * **bounded backlog** — with a fleet sized to the arrival rate, no
+//!   epoch's admitted batch exceeds a small multiple of the expected
+//!   per-epoch arrivals, and the stream drains (`backlog_final == 0`);
+//! * **conservation** — arrived = processed + aborted + backlog.
+//!
+//! Run: `cargo bench --bench stream_ingest` — full mode drains the
+//! 10⁶-session year and writes `BENCH_stream_ingest.json`; `-- --test`
+//! is the reduced CI sweep at 10⁴ sessions. `--check-baseline <path>`
+//! gates this run's wall clocks against a committed baseline.
+
+use std::time::Instant;
+
+use medflow::coordinator::placement::{default_fleet, BackendSpec, PlacementConfig};
+use medflow::coordinator::stream::{
+    run_stream, stream_campaign, ArrivalPattern, StreamConfig, StreamOutcome, DAY_S,
+};
+use medflow::coordinator::RunSpec;
+use medflow::slurm::ClusterSpec;
+use medflow::util::bench::{gate_against_baseline, metric};
+use medflow::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// The default heterogeneous fleet, scaled so the weekly arrival mass
+/// (~330 core-seconds per session) drains well inside one epoch.
+fn fleet() -> Vec<BackendSpec> {
+    default_fleet(ClusterSpec::accre(), 2_000, 256, 16)
+}
+
+fn pcfg() -> PlacementConfig {
+    PlacementConfig {
+        seed: SEED,
+        ..Default::default()
+    }
+}
+
+fn json_run(scenario: &str, wall_s: f64, out: &StreamOutcome) -> Json {
+    let r = &out.report;
+    let mut o = Json::obj();
+    o.set("scenario", Json::str(scenario))
+        .set("sessions", Json::num(r.sessions as f64))
+        .set("wall_s", Json::num(wall_s))
+        .set("epochs", Json::num(r.epochs as f64))
+        .set("processed", Json::num(r.processed as f64))
+        .set("latency_p50_s", Json::num(r.latency_p50_s))
+        .set("latency_p95_s", Json::num(r.latency_p95_s))
+        .set("backlog_peak", Json::num(r.backlog_peak as f64))
+        .set("cost_per_session_dollars", Json::num(r.cost_per_session_dollars))
+        .set("total_dollars", Json::num(r.total_cost_dollars));
+    Json::Obj(o)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    println!("=== Streaming-ingest year trace (DESIGN.md §17) ===");
+    let sessions = if test_mode { 10_000 } else { 1_000_000 };
+    let fleet = fleet();
+    let pcfg = pcfg();
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- t=0 parity: the stream loop is a composition of the one-shot
+    // engines, not a new engine. Epoch 0 runs under the unsalted base
+    // seed, so an AtStart trace must reproduce RunSpec::execute
+    // record-for-record at any thread count ---
+    let parity_threads: &[usize] = if test_mode { &[1, 4] } else { &[8] };
+    for &threads in parity_threads {
+        let cfg = StreamConfig {
+            sessions,
+            horizon_s: 7.0 * DAY_S,
+            pattern: ArrivalPattern::AtStart,
+            seed: SEED,
+            ..Default::default()
+        };
+        let spec = RunSpec::new().threads(threads);
+        let streamed = run_stream(&cfg, &fleet, &pcfg, &spec);
+        let one_shot = spec.execute(&stream_campaign(&cfg), &fleet, &pcfg);
+        assert_eq!(streamed.report.epochs, 1, "t=0 arrivals are one epoch");
+        let one_shot_done: Vec<f64> = one_shot
+            .staged
+            .timings
+            .iter()
+            .filter(|t| t.completed)
+            .map(|t| t.done_s)
+            .collect();
+        assert_eq!(
+            streamed.latencies_s, one_shot_done,
+            "acceptance: t=0 stream must replay the one-shot run f64-record-identically \
+             (threads={threads})"
+        );
+        assert_eq!(streamed.report.total_cost_dollars, one_shot.total_cost_dollars);
+        assert_eq!(streamed.epochs[0].makespan_s, one_shot.makespan_s);
+        println!("parity OK at n={sessions}, threads={threads}: t=0 stream ≡ one-shot RunSpec");
+    }
+
+    // --- the trace: steady arrivals over a year (test mode: a quarter),
+    // weekly planning epochs ---
+    let cfg = StreamConfig {
+        sessions,
+        horizon_s: if test_mode { 91.0 * DAY_S } else { 365.0 * DAY_S },
+        epoch_s: 7.0 * DAY_S,
+        pattern: ArrivalPattern::Steady,
+        seed: SEED,
+        ..Default::default()
+    };
+    let spec = RunSpec::new().threads(if test_mode { 2 } else { 8 });
+    let t0 = Instant::now();
+    let out = run_stream(&cfg, &fleet, &pcfg, &spec);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let r = &out.report;
+
+    assert_eq!(
+        r.processed + r.aborted + r.backlog_final,
+        r.sessions,
+        "acceptance: arrived = processed + aborted + backlog"
+    );
+    assert_eq!(r.backlog_final, 0, "a fleet sized to the rate must drain the stream");
+    assert!(r.epochs > 10, "weekly epochs over the horizon must re-plan many times");
+    let expected_per_epoch = sessions as f64 * cfg.epoch_s / cfg.horizon_s;
+    assert!(
+        (r.backlog_peak as f64) <= 3.0 * expected_per_epoch.ceil(),
+        "acceptance: bounded backlog — peak admitted batch {} vs expected/epoch {:.0}",
+        r.backlog_peak,
+        expected_per_epoch
+    );
+    assert!(r.latency_p95_s >= r.latency_p50_s && r.latency_p50_s > 0.0);
+
+    metric("stream.year.wall_s", wall_s, "s");
+    metric("stream.year.latency_p50_s", r.latency_p50_s, "s");
+    metric("stream.year.latency_p95_s", r.latency_p95_s, "s");
+    metric("stream.year.cost_per_session", r.cost_per_session_dollars, "$");
+    metric("stream.year.backlog_peak", r.backlog_peak as f64, "");
+    metric("stream.year.epochs", r.epochs as f64, "");
+    runs.push(json_run(if test_mode { "quarter-10e4" } else { "year-10e6" }, wall_s, &out));
+    println!(
+        "trace OK: {} sessions, {} epochs, p50 {:.0} s, p95 {:.0} s, ${:.4}/session",
+        r.sessions, r.epochs, r.latency_p50_s, r.latency_p95_s, r.cost_per_session_dollars
+    );
+
+    // --- replay determinism: the full trace reproduces from the seed ---
+    {
+        let replay = run_stream(&cfg, &fleet, &pcfg, &spec);
+        assert_eq!(
+            replay.report, out.report,
+            "acceptance: same (config, seed) must replay the report exactly"
+        );
+        assert_eq!(replay.epochs, out.epochs);
+        assert_eq!(replay.latencies_s, out.latencies_s);
+        println!("determinism OK: the trace replays f64-identically");
+    }
+
+    // --- regression gate vs the committed baseline, then (full mode)
+    // refresh the trajectory file ---
+    gate_against_baseline(&runs);
+    if !test_mode {
+        let mut doc = Json::obj();
+        doc.set("bench", Json::str("stream_ingest"))
+            .set(
+                "scenario",
+                Json::str(
+                    "10⁶-session year-long steady trace drained by weekly planning epochs on \
+                     the default heterogeneous fleet, seed 42 (see benches/stream_ingest.rs)",
+                ),
+            )
+            .set("runs", Json::Arr(runs));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_stream_ingest.json");
+        std::fs::write(path, Json::Obj(doc).to_string_pretty()).expect("write bench trajectory");
+        println!("trajectory written to {path}");
+    }
+
+    println!("stream_ingest OK");
+}

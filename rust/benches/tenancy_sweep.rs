@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Bench: multi-tenant co-simulation sweep — the ISSUE 6 tentpole
 //! numbers. N independent tenant campaigns share ONE heterogeneous
 //! fleet and ONE staging path (`coordinator::tenancy`, DESIGN.md §13),

@@ -109,12 +109,18 @@ pub fn rule(id: &str) -> Option<&'static Rule> {
 }
 
 /// Whether `rel_path` (slash-separated, relative to `src/`) is patrolled
-/// by `scope`.
+/// by `scope`. The engine set is every replay-contract directory —
+/// `coordinator/` includes the streaming loop (`coordinator/stream.rs`,
+/// DESIGN.md §17) — plus two standalone files feeding engine decisions:
+/// the legacy simulator and the stream's arrival ledger
+/// (`query/incremental.rs`).
 pub fn in_scope(scope: Scope, rel_path: &str) -> bool {
     const ENGINE_DIRS: [&str; 5] = ["slurm/", "netsim/", "coordinator/", "faults/", "compute/"];
+    const ENGINE_FILES: [&str; 2] = ["sim_legacy.rs", "query/incremental.rs"];
     match scope {
         Scope::Engine => {
-            ENGINE_DIRS.iter().any(|d| rel_path.starts_with(d)) || rel_path == "sim_legacy.rs"
+            ENGINE_DIRS.iter().any(|d| rel_path.starts_with(d))
+                || ENGINE_FILES.contains(&rel_path)
         }
         Scope::Billing => rel_path.starts_with("cost/"),
     }
@@ -506,6 +512,18 @@ fn token_scan(
 mod tests {
     use super::*;
     use crate::analysis::lint_source;
+
+    #[test]
+    fn engine_scope_gates_stream_loop_and_arrival_ledger() {
+        // the streaming coordinator rides the coordinator/ prefix; the
+        // arrival ledger is a standalone engine file — both must stay
+        // deny-gated or the replay contract silently loses coverage
+        assert!(in_scope(Scope::Engine, "coordinator/stream.rs"));
+        assert!(in_scope(Scope::Engine, "query/incremental.rs"));
+        assert!(in_scope(Scope::Engine, "sim_legacy.rs"));
+        assert!(!in_scope(Scope::Engine, "query/mod.rs"));
+        assert!(!in_scope(Scope::Billing, "coordinator/stream.rs"));
+    }
 
     fn deny_rules(path: &str, src: &str) -> Vec<String> {
         let scan = lint_source(path, src, None);

@@ -18,9 +18,13 @@
 pub mod placement;
 pub mod planner;
 pub mod soa;
+pub mod spec;
 pub mod staged;
+pub mod stream;
 pub(crate) mod sync;
 pub mod tenancy;
+
+pub use self::spec::RunSpec;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -509,7 +513,10 @@ impl<'rt> Coordinator<'rt> {
         };
         let policy = cfg.placement.unwrap_or(PlacementPolicy::CheapestFirst);
         let plan_jobs = staged_plan(jobs, &outcomes, spec, cfg);
-        let placed = placement::execute_threaded(&plan_jobs, &fleet, policy, &pcfg, cfg.threads);
+        let placed = RunSpec::new()
+            .policy(policy)
+            .threads(cfg.threads)
+            .execute(&plan_jobs, &fleet, &pcfg);
 
         // fold the co-simulated timings and the assigned backend's
         // pricing back into each job outcome; wasted attempts are billed

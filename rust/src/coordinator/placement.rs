@@ -56,9 +56,8 @@ use crate::slurm::{ArrayHandle, ClusterSpec, Scheduler};
 use crate::util::ord::F64Ord;
 use crate::util::units::{fmt_duration, gbps_to_bytes_per_sec};
 
-use super::staged::{
-    run_multi_chaos_threaded, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome,
-};
+use super::spec::RunSpec;
+use super::staged::{run_multi_impl, ComputeSim, LanePool, SlurmSim, StagedJob, StagedOutcome};
 
 /// Salt decorrelating the shared staging path's per-transfer sampling
 /// from the campaign/faults streams ("placxfr").
@@ -398,10 +397,10 @@ pub fn plan(jobs: &[StagedJob], fleet: &[BackendSpec], policy: PlacementPolicy) 
     }
 }
 
-/// One backend's live engine (kept alive past `run_multi` so fault
+/// One backend's live engine (kept alive past the windowed run so fault
 /// telemetry can be drained). Shared with [`super::tenancy`], whose
 /// N=1 parity gate depends on constructing engines through the exact
-/// same path as [`run_plan`].
+/// same path as [`run_plan_chaos`].
 pub(crate) enum BackendEngine {
     Slurm(SlurmSim),
     Lanes(LanePool),
@@ -540,19 +539,27 @@ pub struct PlacementOutcome {
 /// Plan under `policy`, then co-simulate the fleet (every backend's
 /// engine advancing in lockstep against the shared staging path) and
 /// fold per-backend cost at each environment's slot rate.
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .policy(p) and call RunSpec::execute"
+)]
 pub fn execute(
     jobs: &[StagedJob],
     fleet: &[BackendSpec],
     policy: PlacementPolicy,
     cfg: &PlacementConfig,
 ) -> PlacementOutcome {
-    run_plan(fleet, plan(jobs, fleet, policy), cfg)
+    RunSpec::new().policy(policy).execute(jobs, fleet, cfg)
 }
 
 /// [`execute`] with the fleet's engines sharded across `threads` worker
 /// threads under conservative time-window sync (DESIGN.md §16). Any
 /// thread count is f64-record-identical to [`execute`]
 /// (`rust/tests/parallel_parity.rs`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .policy(p).threads(n) and call RunSpec::execute"
+)]
 pub fn execute_threaded(
     jobs: &[StagedJob],
     fleet: &[BackendSpec],
@@ -560,7 +567,7 @@ pub fn execute_threaded(
     cfg: &PlacementConfig,
     threads: usize,
 ) -> PlacementOutcome {
-    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, None, threads)
+    RunSpec::new().policy(policy).threads(threads).execute(jobs, fleet, cfg)
 }
 
 /// [`execute`] under an infrastructure-fault schedule (DESIGN.md §15):
@@ -574,6 +581,10 @@ pub fn execute_threaded(
 /// [`execute`], so the outcome is f64-record-identical
 /// (`rust/tests/chaos_cosim.rs`); panics if the schedule fails
 /// [`OutageSchedule::validate`].
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .policy(p).outages(s) and call RunSpec::execute"
+)]
 pub fn execute_chaos(
     jobs: &[StagedJob],
     fleet: &[BackendSpec],
@@ -581,13 +592,17 @@ pub fn execute_chaos(
     cfg: &PlacementConfig,
     schedule: &OutageSchedule,
 ) -> PlacementOutcome {
-    execute_chaos_threaded(jobs, fleet, policy, cfg, schedule, 1)
+    RunSpec::new().policy(policy).outages(schedule.clone()).execute(jobs, fleet, cfg)
 }
 
 /// [`execute_chaos`] on `threads` engine workers — outage onsets,
 /// orphan re-placement, and brownouts all ride the same windowed
 /// protocol, so chaos runs too are f64-record-identical at any thread
 /// count (`rust/tests/chaos_cosim.rs` + `parallel_parity.rs`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .policy(p).outages(s).threads(n) and call RunSpec::execute"
+)]
 pub fn execute_chaos_threaded(
     jobs: &[StagedJob],
     fleet: &[BackendSpec],
@@ -596,21 +611,26 @@ pub fn execute_chaos_threaded(
     schedule: &OutageSchedule,
     threads: usize,
 ) -> PlacementOutcome {
-    if let Err(e) = schedule.validate() {
-        panic!("execute_chaos: {e}");
-    }
-    run_plan_chaos(fleet, plan(jobs, fleet, policy), cfg, Some(schedule), threads)
+    RunSpec::new()
+        .policy(policy)
+        .outages(schedule.clone())
+        .threads(threads)
+        .execute(jobs, fleet, cfg)
 }
 
 /// [`execute`] with every job pinned to one backend — the frontier's
 /// anchors and the parity gate against the single-backend staged path.
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .policy(PlacementPolicy::Pinned(k)) and call RunSpec::execute"
+)]
 pub fn execute_pinned(
     jobs: &[StagedJob],
     fleet: &[BackendSpec],
     backend: usize,
     cfg: &PlacementConfig,
 ) -> PlacementOutcome {
-    execute(jobs, fleet, PlacementPolicy::Pinned(backend), cfg)
+    RunSpec::new().policy(PlacementPolicy::Pinned(backend)).execute(jobs, fleet, cfg)
 }
 
 /// The per-job billing rule shared by placement and tenancy (the one
@@ -702,11 +722,10 @@ pub(crate) fn fold_backend_usage(
     per_backend
 }
 
-fn run_plan(fleet: &[BackendSpec], plan: PlacementPlan, cfg: &PlacementConfig) -> PlacementOutcome {
-    run_plan_chaos(fleet, plan, cfg, None, 1)
-}
-
-fn run_plan_chaos(
+/// The one placement funnel every entry point drains into
+/// ([`crate::coordinator::RunSpec::execute`] and, through it, the
+/// deprecated `execute*` shims).
+pub(crate) fn run_plan_chaos(
     fleet: &[BackendSpec],
     plan: PlacementPlan,
     cfg: &PlacementConfig,
@@ -740,7 +759,7 @@ fn run_plan_chaos(
         let mut backends: Vec<&mut dyn ComputeSim> =
             engines.iter_mut().map(|e| e.as_compute()).collect();
         match schedule {
-            None => run_multi_chaos_threaded(
+            None => run_multi_impl(
                 &plan.effective,
                 &plan.assignment,
                 &mut backends,
@@ -763,7 +782,7 @@ fn run_plan_chaos(
                     };
                     (to, job)
                 };
-                run_multi_chaos_threaded(
+                run_multi_impl(
                     &plan.effective,
                     &plan.assignment,
                     &mut backends,
@@ -847,7 +866,7 @@ pub fn frontier_sweep(
     let mut fastest = f64::INFINITY;
     let mut slowest = 0.0f64;
     for (k, backend) in fleet.iter().enumerate() {
-        let out = execute_pinned(jobs, fleet, k, cfg);
+        let out = RunSpec::new().policy(PlacementPolicy::Pinned(k)).execute(jobs, fleet, cfg);
         fastest = fastest.min(out.makespan_s);
         slowest = slowest.max(out.makespan_s);
         points.push(frontier_point(format!("all-{}", backend.name), fleet.len(), &out));
@@ -855,7 +874,9 @@ pub fn frontier_sweep(
     for s in 0..steps {
         let frac = (s as f64 + 1.0) / (steps as f64 + 1.0);
         let deadline_s = fastest + (slowest - fastest) * frac;
-        let out = execute(jobs, fleet, PlacementPolicy::DeadlineAware { deadline_s }, cfg);
+        let out = RunSpec::new()
+            .policy(PlacementPolicy::DeadlineAware { deadline_s })
+            .execute(jobs, fleet, cfg);
         points.push(frontier_point(
             format!("deadline {}", fmt_duration(deadline_s)),
             fleet.len(),
@@ -887,6 +908,9 @@ pub fn pareto(mut points: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
 }
 
 #[cfg(test)]
+// the unit tests deliberately exercise the deprecated shims: they are
+// the compatibility surface the parity batteries pin
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

@@ -1,0 +1,270 @@
+//! `RunSpec` — the one composable front door to every co-simulation
+//! entry point (PR 10's API redesign).
+//!
+//! The engines used to be reachable through a 14-way cartesian product
+//! of names: `run_multi` / `run_multi_threaded` / `run_multi_chaos` /
+//! `run_multi_chaos_threaded`, `execute` / `execute_threaded` /
+//! `execute_chaos` / `execute_chaos_threaded` / `execute_pinned`, and
+//! `run_tenants` / `run_tenants_threaded` / `run_tenants_chaos` /
+//! `run_tenants_chaos_threaded` — every new axis (threads, outages,
+//! SLO enforcement) doubled the surface. `RunSpec` collapses the axes
+//! into builder options and leaves one run method per *input family*:
+//!
+//! * [`RunSpec::run_multi`] — raw staged jobs on caller-built backends;
+//! * [`RunSpec::execute`] — a campaign placed across a fleet;
+//! * [`RunSpec::run_tenants`] — N tenants arbitrated over one fleet.
+//!
+//! The old names survive as thin `#[deprecated]` shims delegating
+//! here, so the four parity batteries (`engine_parity`,
+//! `placement_parity`, `tenancy_parity`, `chaos_cosim`) pin
+//! f64-record-identical equivalence between the legacy surface and the
+//! builder. New call sites — `main.rs` and the streaming coordinator
+//! (`coordinator::stream`) — compose a `RunSpec` instead of picking a
+//! name from the matrix.
+//!
+//! Every option is orthogonal and defaulted: `RunSpec::new()` is the
+//! sequential, chaos-free, report-only-SLO, cheapest-first run.
+//!
+//! ```no_run
+//! use medflow::coordinator::RunSpec;
+//! use medflow::coordinator::placement::{default_fleet, PlacementConfig, PlacementPolicy};
+//! use medflow::coordinator::staged::synthetic_fault_campaign;
+//! use medflow::faults::outage::{OutageSchedule, OutageSeverity};
+//! use medflow::slurm::ClusterSpec;
+//!
+//! let jobs = synthetic_fault_campaign(500, 42);
+//! let fleet = default_fleet(ClusterSpec::accre(), 2_000, 64, 8);
+//! let schedule = OutageSchedule::synthetic(OutageSeverity::Mild, fleet.len(), 14_400.0, 42);
+//! let out = RunSpec::new()
+//!     .policy(PlacementPolicy::CheapestFirst)
+//!     .outages(schedule)
+//!     .threads(4)
+//!     .execute(&jobs, &fleet, &PlacementConfig::default());
+//! assert_eq!(out.staged.timings.len(), 500);
+//! ```
+
+use crate::faults::outage::OutageSchedule;
+use crate::netsim::scheduler::TransferScheduler;
+
+use super::placement::{
+    plan, run_plan_chaos, BackendSpec, PlacementConfig, PlacementOutcome, PlacementPolicy,
+};
+use super::staged::{run_multi_impl, ChaosCosim, ComputeSim, StagedJob, StagedOutcome};
+use super::tenancy::{run_tenants_impl, TenancyConfig, TenancyOutcome, TenantSpec};
+
+/// Composable run options for the co-simulation engines (module docs).
+///
+/// Cloneable so a long-lived base spec (e.g. the streaming
+/// coordinator's) can be re-composed per planning epoch.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub(crate) threads: usize,
+    pub(crate) outages: Option<OutageSchedule>,
+    pub(crate) enforce_slos: bool,
+    pub(crate) policy: Option<PlacementPolicy>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunSpec {
+    /// The sequential, chaos-free baseline: 1 thread, no outage
+    /// schedule, SLOs report-only, cheapest-first placement.
+    pub fn new() -> Self {
+        Self {
+            threads: 1,
+            outages: None,
+            enforce_slos: false,
+            policy: None,
+        }
+    }
+
+    /// Shard the compute engines across `n` worker threads under
+    /// conservative time-window sync (DESIGN.md §16). `n = 1` is
+    /// byte-identical to the sequential loop; any `n` is
+    /// f64-record-identical (`rust/tests/parallel_parity.rs`).
+    pub fn threads(mut self, n: usize) -> Self {
+        assert!(n >= 1, "RunSpec::threads: need at least one worker thread");
+        self.threads = n;
+        self
+    }
+
+    /// Arm an infrastructure-fault schedule (DESIGN.md §15): per-backend
+    /// Down/Drain windows, link brownouts, orphan re-placement. An
+    /// *empty* schedule still marks the run as chaos-aware (outage
+    /// telemetry is reported, as zeros) — exactly the legacy
+    /// `execute_chaos` / `run_tenants_chaos` contract. Panics if the
+    /// schedule fails [`OutageSchedule::validate`].
+    pub fn outages(mut self, schedule: OutageSchedule) -> Self {
+        if let Err(e) = schedule.validate() {
+            panic!("RunSpec::outages: {e}");
+        }
+        self.outages = Some(schedule);
+        self
+    }
+
+    /// Arm SLO *enforcement* for tenancy runs (DESIGN.md §15): budget
+    /// burn-down stops admission, deadline misses escalate to the
+    /// fastest backend. `false` (the default) keeps SLOs report-only.
+    /// Ignored by the staged and placement families, which have no
+    /// per-tenant SLOs.
+    pub fn enforce_slos(mut self, on: bool) -> Self {
+        self.enforce_slos = on;
+        self
+    }
+
+    /// Placement policy for [`RunSpec::execute`] (default
+    /// [`PlacementPolicy::CheapestFirst`]). Ignored by
+    /// [`RunSpec::run_multi`] (the caller already assigned backends)
+    /// and [`RunSpec::run_tenants`] (each tenant carries its own
+    /// policy in its [`TenantSpec`]).
+    pub fn policy(mut self, p: PlacementPolicy) -> Self {
+        self.policy = Some(p);
+        self
+    }
+
+    /// The staged family: co-simulate pre-assigned jobs on caller-built
+    /// backends against one shared transfer scheduler. `replace` is the
+    /// chaos re-placement hook — `(job, orphan instant, old backend) →
+    /// (new backend, rescaled job)`; `None` re-stages orphans to their
+    /// original backend. Outage windows on the *engines* are the
+    /// caller's to install here (the engines are the caller's);
+    /// [`Self::outages`] drives the fleet families, which own their
+    /// engines.
+    pub fn run_multi(
+        &self,
+        jobs: &[StagedJob],
+        assignment: &[usize],
+        backends: &mut [&mut dyn ComputeSim],
+        transfers: &mut TransferScheduler,
+        replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+    ) -> (StagedOutcome, ChaosCosim) {
+        run_multi_impl(jobs, assignment, backends, transfers, replace, self.threads)
+    }
+
+    /// The placement family: plan `jobs` across `fleet` under
+    /// [`Self::policy`], then co-simulate every backend's engine in
+    /// lockstep against the shared staging path — with
+    /// [`Self::outages`]' windows on the engines and its brownouts on
+    /// the link when armed.
+    pub fn execute(
+        &self,
+        jobs: &[StagedJob],
+        fleet: &[BackendSpec],
+        cfg: &PlacementConfig,
+    ) -> PlacementOutcome {
+        let policy = self.policy.unwrap_or(PlacementPolicy::CheapestFirst);
+        run_plan_chaos(
+            fleet,
+            plan(jobs, fleet, policy),
+            cfg,
+            self.outages.as_ref(),
+            self.threads,
+        )
+    }
+
+    /// The tenancy family: arbitrate N tenants' campaigns over one
+    /// shared fleet and staging path (weighted fair-share + strict
+    /// priority at admission), with [`Self::outages`] and
+    /// [`Self::enforce_slos`] applied when armed.
+    pub fn run_tenants(
+        &self,
+        tenants: &[TenantSpec],
+        fleet: &[BackendSpec],
+        cfg: &TenancyConfig,
+    ) -> TenancyOutcome {
+        run_tenants_impl(
+            tenants,
+            fleet,
+            cfg,
+            self.outages.as_ref(),
+            self.enforce_slos,
+            self.threads,
+        )
+    }
+}
+
+#[cfg(test)]
+// the equivalence tests drive the deprecated shims on purpose: they
+// pin that every legacy name is a pure delegation to the builder
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::{default_fleet, execute, execute_chaos_threaded};
+    use crate::coordinator::staged::synthetic_fault_campaign;
+    use crate::coordinator::tenancy::{run_tenants, synthetic_tenants};
+    use crate::faults::outage::OutageSeverity;
+    use crate::slurm::ClusterSpec;
+
+    fn small_fleet() -> Vec<BackendSpec> {
+        default_fleet(ClusterSpec::accre(), 64, 8, 4)
+    }
+
+    #[test]
+    fn builder_defaults_are_the_sequential_chaos_free_run() {
+        let s = RunSpec::new();
+        assert_eq!(s.threads, 1);
+        assert!(s.outages.is_none());
+        assert!(!s.enforce_slos);
+        assert!(s.policy.is_none());
+    }
+
+    #[test]
+    fn execute_matches_legacy_shim_exactly() {
+        let jobs = synthetic_fault_campaign(120, 7);
+        let fleet = small_fleet();
+        let cfg = PlacementConfig::default();
+        let a = RunSpec::new().policy(PlacementPolicy::CheapestFirst).execute(&jobs, &fleet, &cfg);
+        let b = execute(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+        assert_eq!(a.staged.timings, b.staged.timings);
+        assert_eq!(a.total_cost_dollars, b.total_cost_dollars);
+        assert!(a.outage.is_none() && b.outage.is_none());
+    }
+
+    #[test]
+    fn chaos_options_compose_like_the_threaded_chaos_shim() {
+        let jobs = synthetic_fault_campaign(90, 11);
+        let fleet = small_fleet();
+        let cfg = PlacementConfig::default();
+        let schedule = OutageSchedule::synthetic(OutageSeverity::Mild, fleet.len(), 4_000.0, 11);
+        let a = RunSpec::new()
+            .policy(PlacementPolicy::CheapestFirst)
+            .outages(schedule.clone())
+            .threads(2)
+            .execute(&jobs, &fleet, &cfg);
+        let b = execute_chaos_threaded(
+            &jobs,
+            &fleet,
+            PlacementPolicy::CheapestFirst,
+            &cfg,
+            &schedule,
+            2,
+        );
+        assert_eq!(a.staged.timings, b.staged.timings);
+        assert_eq!(a.outage, b.outage);
+    }
+
+    #[test]
+    fn tenancy_defaults_match_legacy_run_tenants() {
+        let tenants = synthetic_tenants(3, 15, 5);
+        let fleet = small_fleet();
+        let cfg = TenancyConfig {
+            seed: 5,
+            ..Default::default()
+        };
+        let a = RunSpec::new().run_tenants(&tenants, &fleet, &cfg);
+        let b = run_tenants(&tenants, &fleet, &cfg);
+        assert_eq!(a.staged.timings, b.staged.timings);
+        assert_eq!(a.report.total_cost_dollars, b.report.total_cost_dollars);
+        assert!(!a.report.enforced);
+    }
+
+    #[test]
+    #[should_panic(expected = "RunSpec::threads")]
+    fn zero_threads_is_rejected() {
+        let _ = RunSpec::new().threads(0);
+    }
+}

@@ -34,6 +34,7 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 use crate::coordinator::soa::JobStore;
+use crate::coordinator::spec::RunSpec;
 use crate::coordinator::sync::{with_driver, BackendStep, WindowDriver};
 use crate::faults::outage::{OutageMode, OutageWindow};
 use crate::faults::{FailureMode, FaultAction, FaultEvent, Injection};
@@ -622,7 +623,7 @@ pub fn run_staged(
     transfers: &mut TransferScheduler,
 ) -> StagedOutcome {
     let assignment = vec![0usize; jobs.len()];
-    run_multi(jobs, &assignment, &mut [compute], transfers)
+    run_multi_impl(jobs, &assignment, &mut [compute], transfers, None, 1).0
 }
 
 /// Multi-backend staged co-simulation (DESIGN.md §12): one campaign
@@ -638,19 +639,27 @@ pub fn run_staged(
 /// `advance_to` instants, hand-offs, re-stages — is identical call for
 /// call, so single-backend outcomes are f64-record-identical to the
 /// staged path (enforced by `rust/tests/placement_parity.rs`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec and call RunSpec::run_multi"
+)]
 pub fn run_multi(
     jobs: &[StagedJob],
     assignment: &[usize],
     backends: &mut [&mut dyn ComputeSim],
     transfers: &mut TransferScheduler,
 ) -> StagedOutcome {
-    run_multi_chaos_threaded(jobs, assignment, backends, transfers, None, 1).0
+    RunSpec::new().run_multi(jobs, assignment, backends, transfers, None).0
 }
 
 /// [`run_multi`] with the backends fanned out across `threads` worker
 /// threads under conservative time-window sync (DESIGN.md §16). Any
 /// thread count is f64-record-identical to `threads = 1`, which is
 /// byte-identical to the sequential loop this generalizes.
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .threads(n) and call RunSpec::run_multi"
+)]
 pub fn run_multi_threaded(
     jobs: &[StagedJob],
     assignment: &[usize],
@@ -658,7 +667,7 @@ pub fn run_multi_threaded(
     transfers: &mut TransferScheduler,
     threads: usize,
 ) -> StagedOutcome {
-    run_multi_chaos_threaded(jobs, assignment, backends, transfers, None, threads).0
+    RunSpec::new().threads(threads).run_multi(jobs, assignment, backends, transfers, None).0
 }
 
 /// Extra bookkeeping from a chaos-enabled co-simulation
@@ -687,6 +696,10 @@ pub struct ChaosCosim {
 /// outage schedules installed the engine-call sequence is identical to
 /// [`run_multi`] call for call, so chaos-free runs stay
 /// f64-record-identical (`rust/tests/chaos_cosim.rs`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec and call RunSpec::run_multi with a replace hook"
+)]
 pub fn run_multi_chaos(
     jobs: &[StagedJob],
     assignment: &[usize],
@@ -694,17 +707,35 @@ pub fn run_multi_chaos(
     transfers: &mut TransferScheduler,
     replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
 ) -> (StagedOutcome, ChaosCosim) {
-    run_multi_chaos_threaded(jobs, assignment, backends, transfers, replace, 1)
+    RunSpec::new().run_multi(jobs, assignment, backends, transfers, replace)
 }
 
 /// [`run_multi_chaos`] with the backends fanned out across `threads`
-/// worker threads (DESIGN.md §16). The window protocol is conservative:
+/// worker threads (DESIGN.md §16).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .threads(n) and call RunSpec::run_multi"
+)]
+pub fn run_multi_chaos_threaded(
+    jobs: &[StagedJob],
+    assignment: &[usize],
+    backends: &mut [&mut dyn ComputeSim],
+    transfers: &mut TransferScheduler,
+    replace: Option<&mut dyn FnMut(usize, f64, usize) -> (usize, StagedJob)>,
+    threads: usize,
+) -> (StagedOutcome, ChaosCosim) {
+    RunSpec::new().threads(threads).run_multi(jobs, assignment, backends, transfers, replace)
+}
+
+/// The one staged funnel every entry point drains into
+/// ([`crate::coordinator::RunSpec::run_multi`] and, through it, the
+/// deprecated `run_multi*` shims). The window protocol is conservative:
 /// every engine — transfers included — contributes its next-event time,
 /// the minimum bounds the window, and no engine is advanced past it, so
 /// results at any thread count are f64-record-identical to `threads =
 /// 1` (held to account by `rust/tests/parallel_parity.rs` and all four
 /// parity batteries).
-pub fn run_multi_chaos_threaded(
+pub(crate) fn run_multi_impl(
     jobs: &[StagedJob],
     assignment: &[usize],
     backends: &mut [&mut dyn ComputeSim],
@@ -863,6 +894,9 @@ fn run_windows(
 }
 
 #[cfg(test)]
+// the unit tests deliberately exercise the deprecated shims: they are
+// the compatibility surface the parity batteries pin
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::netsim::scheduler::TransferScheduler;

@@ -1,0 +1,712 @@
+//! Streaming coordinator (DESIGN.md §17): a long-running ingest loop
+//! driven by a seeded, replay-deterministic arrival process.
+//!
+//! The batch coordinator answers "run this campaign now"; real archives
+//! do not arrive as one batch. Longitudinal studies land in waves,
+//! scanners follow day/night duty cycles, and retrospective backfills
+//! dump months of sessions in an afternoon. This module simulates that
+//! regime end to end: an [`ArrivalPattern`] lays sessions across a
+//! simulated horizon, a [`crate::query::DeltaLedger`] feeds each
+//! planning epoch exactly the newly-arrived delta (the simulated-time
+//! analogue of the incremental query), and the loop re-plans placement
+//! per epoch through a [`RunSpec`] — so compute, transfers, faults,
+//! outages, and (optionally) tenancy keep contending across epochs
+//! through the same windowed parallel engines as the one-shot paths.
+//!
+//! The epoch contract (the replay guarantee the determinism lint and
+//! `rust/tests/stream_cosim.rs` pin):
+//!
+//! * planning instants are multiples of [`StreamConfig::epoch_s`] and
+//!   never precede the stream clock;
+//! * each epoch admits the full arrived-unadmitted backlog, re-plans it
+//!   (fresh placement — `coordinator::placement` re-decides as backlog
+//!   and effective rates shift), and co-simulates it to completion on
+//!   epoch-fresh engines; the stream clock then advances over the
+//!   epoch's makespan to the next epoch boundary;
+//! * idle gaps jump straight to the boundary covering the next arrival
+//!   — no empty epochs are simulated;
+//! * epoch `e` runs under seed `seed ^ (e · SALT)` — epoch 0 is
+//!   bit-identical to a one-shot [`RunSpec`] run of the same batch
+//!   (the t=0 parity contract), later epochs decorrelate;
+//! * an armed outage schedule is absolute on the stream clock: each
+//!   epoch sees the suffix of windows still ahead of its plan instant,
+//!   shifted into epoch-local time.
+//!
+//! Steady-state telemetry folds into a [`StreamReport`]:
+//! ingest-to-processed latency percentiles, backlog depth over time,
+//! cost per session, and re-plan/escalation counts.
+
+use crate::faults::outage::{Brownout, ComputeOutage, OutageSchedule, OutageStats};
+use crate::query::DeltaLedger;
+use crate::util::rng::Rng;
+use crate::util::units::percentiles;
+
+use super::placement::{BackendSpec, PlacementConfig, PlacementPolicy};
+use super::spec::RunSpec;
+use super::staged::{synthetic_fault_campaign, StagedJob, StagedTiming};
+use super::tenancy::{TenancyConfig, TenantSpec};
+
+/// Salt decorrelating the arrival-process stream from the workload
+/// stream sharing [`StreamConfig::seed`].
+pub const STREAM_ARRIVAL_SALT: u64 = 0x6172_7269_7665_3031; // "arrive01"
+
+/// Per-epoch seed salt: epoch `e` runs under `seed ^ (e · SALT)`, so
+/// epoch 0 keeps the base seed bit-for-bit (the t=0 parity contract)
+/// and later epochs draw decorrelated fault/transfer streams.
+pub const STREAM_EPOCH_SALT: u64 = 0x6570_6f63_6873_3137; // "epochs17"
+
+/// Seconds per simulated day (the scanner duty cycle of
+/// [`ArrivalPattern::DayNight`]).
+pub const DAY_S: f64 = 86_400.0;
+
+/// How sessions land across the simulated horizon. Every pattern is a
+/// pure function of `(sessions, horizon_s, seed)` — see
+/// [`arrival_times`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Everything lands at t = 0 — degenerates to one planning epoch,
+    /// the parity anchor against the one-shot [`RunSpec`] paths.
+    AtStart,
+    /// Uniform arrivals over the horizon (a steady prospective study).
+    Steady,
+    /// `count` recruitment waves: normal clusters centered at the wave
+    /// midpoints (longitudinal study visits).
+    Waves { count: usize },
+    /// Scanner day/night duty cycle: ~85% of sessions land in the
+    /// 07:00–19:00 half of each simulated day.
+    DayNight,
+    /// Steady baseline plus a tight retrospective-backfill burst
+    /// (`burst_fraction` of all sessions) at 60% of the horizon.
+    Backfill { burst_fraction: f64 },
+}
+
+impl ArrivalPattern {
+    pub fn label(self) -> &'static str {
+        match self {
+            ArrivalPattern::AtStart => "t0",
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Waves { .. } => "waves",
+            ArrivalPattern::DayNight => "daynight",
+            ArrivalPattern::Backfill { .. } => "backfill",
+        }
+    }
+}
+
+/// Sorted arrival instants for `sessions` sessions over `[0,
+/// horizon_s)` — deterministic in the seed, shared by `medflow stream`,
+/// the co-sim tests, and `benches/stream_ingest.rs`.
+pub fn arrival_times(
+    pattern: ArrivalPattern,
+    sessions: usize,
+    horizon_s: f64,
+    seed: u64,
+) -> Vec<f64> {
+    assert!(
+        horizon_s > 0.0 && horizon_s.is_finite(),
+        "arrival horizon must be finite and > 0"
+    );
+    let mut rng = Rng::new(seed ^ STREAM_ARRIVAL_SALT);
+    // clamp ceiling just inside the horizon so `poll(horizon)` at the
+    // final boundary always drains a cutoff-free run completely
+    let hi = horizon_s * (1.0 - 1e-9);
+    let mut times: Vec<f64> = match pattern {
+        ArrivalPattern::AtStart => vec![0.0; sessions],
+        ArrivalPattern::Steady => (0..sessions)
+            .map(|_| rng.range_f64(0.0, horizon_s).min(hi))
+            .collect(),
+        ArrivalPattern::Waves { count } => {
+            let waves = count.max(1) as f64;
+            let spread = horizon_s / (waves * 8.0);
+            (0..sessions)
+                .map(|_| {
+                    let w = rng.below(count.max(1) as u64) as f64;
+                    let center = (w + 0.5) * horizon_s / waves;
+                    (center + rng.normal() * spread).clamp(0.0, hi)
+                })
+                .collect()
+        }
+        ArrivalPattern::DayNight => {
+            let days = (horizon_s / DAY_S).ceil().max(1.0) as u64;
+            (0..sessions)
+                .map(|_| {
+                    let day = rng.below(days) as f64;
+                    let hour = if rng.next_f64() < 0.85 {
+                        // daytime block: 07:00–19:00
+                        rng.range_f64(7.0, 19.0)
+                    } else {
+                        // night block: 19:00–07:00, wrapped past midnight
+                        let h = rng.range_f64(19.0, 31.0);
+                        if h >= 24.0 {
+                            h - 24.0
+                        } else {
+                            h
+                        }
+                    };
+                    (day * DAY_S + hour * 3_600.0).clamp(0.0, hi)
+                })
+                .collect()
+        }
+        ArrivalPattern::Backfill { burst_fraction } => {
+            assert!(
+                (0.0..=1.0).contains(&burst_fraction) && burst_fraction.is_finite(),
+                "backfill burst fraction must be in [0, 1] (got {burst_fraction})"
+            );
+            let burst = ((sessions as f64) * burst_fraction).round() as usize;
+            let center = 0.60 * horizon_s;
+            let width = 0.01 * horizon_s;
+            (0..sessions)
+                .map(|i| {
+                    if i < burst {
+                        rng.range_f64(center, center + width).min(hi)
+                    } else {
+                        rng.range_f64(0.0, horizon_s).min(hi)
+                    }
+                })
+                .collect()
+        }
+    };
+    times.sort_by(|a, b| a.total_cmp(b));
+    times
+}
+
+/// Configuration of one streaming run.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Total sessions the arrival process lays over the horizon.
+    pub sessions: usize,
+    /// Simulated ingest horizon, seconds (arrivals land in `[0, horizon)`).
+    pub horizon_s: f64,
+    /// Re-planning period: planning instants are multiples of this.
+    pub epoch_s: f64,
+    pub pattern: ArrivalPattern,
+    /// Seeds the workload, the arrival process (salted), and — XORed
+    /// per epoch — every epoch's engines.
+    pub seed: u64,
+    /// Tenants to arbitrate each epoch's batch across (round-robin
+    /// split); 1 = plain placement, no tenancy layer.
+    pub tenants: usize,
+    /// Stop admitting at this instant: sessions arriving later stay in
+    /// the ledger and surface as final backlog (operator shutdown /
+    /// budget-freeze drills). `None` runs the stream to drain.
+    pub cutoff_s: Option<f64>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 1_000,
+            horizon_s: 30.0 * DAY_S,
+            epoch_s: DAY_S,
+            pattern: ArrivalPattern::Steady,
+            seed: 42,
+            tenants: 1,
+            cutoff_s: None,
+        }
+    }
+}
+
+impl StreamConfig {
+    fn validate(&self) {
+        assert!(
+            self.horizon_s > 0.0 && self.horizon_s.is_finite(),
+            "stream horizon must be finite and > 0"
+        );
+        assert!(
+            self.epoch_s > 0.0 && self.epoch_s.is_finite(),
+            "stream epoch must be finite and > 0"
+        );
+        assert!(self.tenants >= 1, "stream needs at least one tenant");
+        if let Some(c) = self.cutoff_s {
+            assert!(c >= 0.0 && c.is_finite(), "stream cutoff must be finite and ≥ 0");
+        }
+    }
+}
+
+/// The deterministic per-session workload of a streaming run — session
+/// `i` of the run is job `i` here. Public so the parity tests and the
+/// bench can hand the *same* batch to a one-shot [`RunSpec`] run.
+pub fn stream_campaign(cfg: &StreamConfig) -> Vec<StagedJob> {
+    synthetic_fault_campaign(cfg.sessions, cfg.seed)
+}
+
+/// One planning epoch's fold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochStats {
+    pub index: usize,
+    /// Planning instant on the stream clock (a multiple of `epoch_s`).
+    pub t_plan_s: f64,
+    /// Backlog admitted at the plan instant (= arrived, unadmitted).
+    pub admitted: usize,
+    pub processed: usize,
+    pub aborted: usize,
+    /// Epoch-local makespan of the admitted batch.
+    pub makespan_s: f64,
+    pub cost_dollars: f64,
+    /// Whether backlog pressure escalated the placement policy this
+    /// epoch (see [`run_stream`]).
+    pub escalated: bool,
+}
+
+/// Steady-state telemetry of one streaming run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamReport {
+    pub pattern: &'static str,
+    /// Total sessions the arrival process ingested.
+    pub sessions: usize,
+    /// Sessions that reached a verified copy-back.
+    pub processed: usize,
+    /// Admitted sessions dropped by their epoch (retry exhaustion).
+    pub aborted: usize,
+    /// Sessions never admitted (nonzero only under a cutoff).
+    pub backlog_final: usize,
+    /// Planning epochs executed = placement re-plans.
+    pub epochs: usize,
+    /// Epochs where backlog pressure escalated the policy.
+    pub escalations: usize,
+    /// Final stream clock (last epoch's plan instant + makespan).
+    pub stream_clock_s: f64,
+    /// Ingest-to-processed latency (arrival → verified copy-back).
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_mean_s: f64,
+    /// Deepest per-epoch admitted backlog.
+    pub backlog_peak: usize,
+    pub total_cost_dollars: f64,
+    /// Total cost over *processed* sessions (0 when nothing processed).
+    pub cost_per_session_dollars: f64,
+    /// Outage telemetry summed across epochs; `Some` exactly when the
+    /// base [`RunSpec`] armed a schedule.
+    pub outage: Option<OutageStats>,
+}
+
+/// Full result of [`run_stream`]: the report plus the record-level
+/// detail the co-sim battery asserts on.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    pub report: StreamReport,
+    pub epochs: Vec<EpochStats>,
+    /// Ingest-to-processed latency per processed session, in epoch
+    /// completion order.
+    pub latencies_s: Vec<f64>,
+}
+
+/// An armed schedule is absolute on the stream clock; an epoch's
+/// engines run in epoch-local time. Keep the windows still (partly)
+/// ahead of the plan instant, shifted by `-t_plan` with starts clamped
+/// to 0.
+fn shift_schedule(sched: &OutageSchedule, t_plan_s: f64) -> OutageSchedule {
+    OutageSchedule {
+        compute: sched
+            .compute
+            .iter()
+            .filter(|w| w.end_s > t_plan_s)
+            .map(|w| ComputeOutage {
+                backend: w.backend,
+                mode: w.mode,
+                start_s: (w.start_s - t_plan_s).max(0.0),
+                end_s: w.end_s - t_plan_s,
+            })
+            .collect(),
+        brownouts: sched
+            .brownouts
+            .iter()
+            .filter(|b| b.end_s > t_plan_s)
+            .map(|b| Brownout {
+                start_s: (b.start_s - t_plan_s).max(0.0),
+                end_s: b.end_s - t_plan_s,
+                factor: b.factor,
+            })
+            .collect(),
+        kill_backoff_s: sched.kill_backoff_s,
+    }
+}
+
+fn sum_outage(acc: &mut Option<OutageStats>, epoch: Option<OutageStats>) {
+    if let Some(e) = epoch {
+        let a = acc.get_or_insert_with(OutageStats::default);
+        a.windows += e.windows;
+        a.brownouts += e.brownouts;
+        a.killed += e.killed;
+        a.orphaned += e.orphaned;
+        a.re_placed += e.re_placed;
+        a.killed_wasted_s += e.killed_wasted_s;
+    }
+}
+
+/// One epoch's engine-level fold, shared by the placement and tenancy
+/// paths: timings indexed by the epoch's admitted order, plus cost and
+/// makespan.
+struct EpochRun {
+    timings: Vec<StagedTiming>,
+    makespan_s: f64,
+    cost_dollars: f64,
+    outage: Option<OutageStats>,
+}
+
+/// Run the streaming coordinator: lay `cfg.sessions` arrivals over the
+/// horizon, then loop planning epochs until the ledger drains (or the
+/// cutoff stops admission). `spec` carries the composed run options —
+/// threads, outage schedule (absolute on the stream clock), SLO
+/// enforcement, base placement policy; the loop re-composes it per
+/// epoch (epoch seed, shifted schedule, possibly escalated policy).
+///
+/// Backlog-pressure escalation: when an epoch (after the first) admits
+/// more than 2× the expected per-epoch arrivals, the epoch plans
+/// [`PlacementPolicy::DeadlineAware`] with the epoch period as the
+/// deadline — placement re-decides toward faster backends to drain the
+/// backlog, and the switch is counted in
+/// [`StreamReport::escalations`]. Epoch 0 never escalates, preserving
+/// the t=0 parity contract.
+pub fn run_stream(
+    cfg: &StreamConfig,
+    fleet: &[BackendSpec],
+    pcfg: &PlacementConfig,
+    spec: &RunSpec,
+) -> StreamOutcome {
+    cfg.validate();
+    assert!(!fleet.is_empty(), "stream needs a non-empty fleet");
+
+    let jobs = stream_campaign(cfg);
+    let arrivals = arrival_times(cfg.pattern, cfg.sessions, cfg.horizon_s, cfg.seed);
+    let mut ledger = DeltaLedger::from_arrivals(&arrivals);
+    let base_policy = spec.policy.unwrap_or(PlacementPolicy::CheapestFirst);
+    let expected_per_epoch = cfg.sessions as f64 * cfg.epoch_s / cfg.horizon_s;
+
+    let mut epochs: Vec<EpochStats> = Vec::new();
+    let mut latencies_s: Vec<f64> = Vec::new();
+    let mut processed = 0usize;
+    let mut aborted = 0usize;
+    let mut escalations = 0usize;
+    let mut total_cost = 0.0f64;
+    let mut outage: Option<OutageStats> = None;
+    let mut clock = 0.0f64;
+    let mut t_plan = 0.0f64;
+
+    loop {
+        if let Some(c) = cfg.cutoff_s {
+            if t_plan > c {
+                break;
+            }
+        }
+        let admitted = ledger.poll(t_plan);
+        if admitted.is_empty() {
+            // idle gap: jump to the epoch boundary covering the next
+            // arrival instead of simulating empty epochs
+            let Some(next) = ledger.next_arrival_s() else { break };
+            let mut jump = (next / cfg.epoch_s).ceil() * cfg.epoch_s;
+            if jump <= t_plan {
+                jump = t_plan + cfg.epoch_s;
+            }
+            t_plan = jump;
+            continue;
+        }
+
+        let index = epochs.len();
+        let escalate = index > 0 && (admitted.len() as f64) > 2.0 * expected_per_epoch;
+        let policy = if escalate {
+            PlacementPolicy::DeadlineAware { deadline_s: cfg.epoch_s }
+        } else {
+            base_policy
+        };
+        // epoch 0 XORs with 0: bit-identical to the one-shot seed
+        let epoch_seed = pcfg.seed ^ (index as u64).wrapping_mul(STREAM_EPOCH_SALT);
+        let mut epoch_spec = spec.clone().policy(policy);
+        epoch_spec.outages = spec.outages.as_ref().map(|s| shift_schedule(s, t_plan));
+
+        let batch: Vec<StagedJob> = admitted.iter().map(|&id| jobs[id as usize]).collect();
+        let run = run_epoch(cfg, &batch, fleet, pcfg, epoch_seed, &epoch_spec);
+
+        let mut epoch_processed = 0usize;
+        for (i, t) in run.timings.iter().enumerate() {
+            if t.completed {
+                epoch_processed += 1;
+                latencies_s.push(t_plan + t.done_s - arrivals[admitted[i] as usize]);
+            }
+        }
+        ledger.record_completion(epoch_processed as u64);
+        processed += epoch_processed;
+        aborted += admitted.len() - epoch_processed;
+        total_cost += run.cost_dollars;
+        sum_outage(&mut outage, run.outage);
+        if escalate {
+            escalations += 1;
+        }
+        epochs.push(EpochStats {
+            index,
+            t_plan_s: t_plan,
+            admitted: admitted.len(),
+            processed: epoch_processed,
+            aborted: admitted.len() - epoch_processed,
+            makespan_s: run.makespan_s,
+            cost_dollars: run.cost_dollars,
+            escalated: escalate,
+        });
+
+        clock = t_plan + run.makespan_s;
+        let mut next = (clock / cfg.epoch_s).ceil() * cfg.epoch_s;
+        if next <= t_plan {
+            next = t_plan + cfg.epoch_s;
+        }
+        t_plan = next;
+    }
+
+    let lat = percentiles(&latencies_s, &[50.0, 95.0]);
+    let latency_mean_s = if latencies_s.is_empty() {
+        0.0
+    } else {
+        latencies_s.iter().sum::<f64>() / latencies_s.len() as f64
+    };
+    let report = StreamReport {
+        pattern: cfg.pattern.label(),
+        sessions: cfg.sessions,
+        processed,
+        aborted,
+        backlog_final: ledger.pending(),
+        epochs: epochs.len(),
+        escalations,
+        stream_clock_s: clock,
+        latency_p50_s: lat[0],
+        latency_p95_s: lat[1],
+        latency_mean_s,
+        backlog_peak: epochs.iter().map(|e| e.admitted).max().unwrap_or(0),
+        total_cost_dollars: total_cost,
+        cost_per_session_dollars: if processed > 0 {
+            total_cost / processed as f64
+        } else {
+            0.0
+        },
+        outage,
+    };
+    StreamOutcome {
+        report,
+        epochs,
+        latencies_s,
+    }
+}
+
+/// Execute one epoch's admitted batch through the composed spec: plain
+/// placement for a single tenant, the tenancy arbiter for several
+/// (round-robin split of the batch). Returns timings re-ordered to the
+/// epoch's admitted order.
+fn run_epoch(
+    cfg: &StreamConfig,
+    batch: &[StagedJob],
+    fleet: &[BackendSpec],
+    pcfg: &PlacementConfig,
+    epoch_seed: u64,
+    epoch_spec: &RunSpec,
+) -> EpochRun {
+    let n_tenants = cfg.tenants.min(batch.len());
+    if n_tenants <= 1 {
+        let epoch_pcfg = PlacementConfig {
+            seed: epoch_seed,
+            ..*pcfg
+        };
+        let out = epoch_spec.execute(batch, fleet, &epoch_pcfg);
+        return EpochRun {
+            timings: out.staged.timings,
+            makespan_s: out.makespan_s,
+            cost_dollars: out.total_cost_dollars,
+            outage: out.outage,
+        };
+    }
+    // round-robin split: tenant k owns batch indices k, k + T, k + 2T…
+    let tenants: Vec<TenantSpec> = (0..n_tenants)
+        .map(|k| {
+            let jobs: Vec<StagedJob> =
+                batch.iter().skip(k).step_by(n_tenants).copied().collect();
+            let mut t = TenantSpec::new(format!("stream-{k:02}"), jobs);
+            t.policy = epoch_spec.policy.unwrap_or(PlacementPolicy::CheapestFirst);
+            t
+        })
+        .collect();
+    let tcfg = TenancyConfig {
+        seed: epoch_seed,
+        transfer_faults: pcfg.transfer_faults,
+        max_retries: pcfg.max_retries,
+        retry_backoff_s: pcfg.retry_backoff_s,
+        queue_depth: None,
+    };
+    let out = epoch_spec.run_tenants(&tenants, fleet, &tcfg);
+    // un-flatten the tenant-major global job space back to batch order
+    let mut timings = vec![StagedTiming::default(); batch.len()];
+    for (k, &(start, end)) in out.tenant_ranges.iter().enumerate() {
+        for g in start..end {
+            timings[(g - start) * n_tenants + k] = out.staged.timings[g];
+        }
+    }
+    EpochRun {
+        timings,
+        makespan_s: out.report.makespan_s,
+        cost_dollars: out.report.total_cost_dollars,
+        outage: out.report.outage,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::default_fleet;
+    use crate::slurm::ClusterSpec;
+
+    fn small_fleet() -> Vec<BackendSpec> {
+        default_fleet(ClusterSpec::accre(), 64, 8, 4)
+    }
+
+    #[test]
+    fn arrival_patterns_are_sorted_in_range_and_deterministic() {
+        let horizon = 14.0 * DAY_S;
+        for pattern in [
+            ArrivalPattern::AtStart,
+            ArrivalPattern::Steady,
+            ArrivalPattern::Waves { count: 4 },
+            ArrivalPattern::DayNight,
+            ArrivalPattern::Backfill { burst_fraction: 0.3 },
+        ] {
+            let a = arrival_times(pattern, 500, horizon, 7);
+            let b = arrival_times(pattern, 500, horizon, 7);
+            assert_eq!(a, b, "{} must replay from the seed", pattern.label());
+            assert_eq!(a.len(), 500);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{} sorted", pattern.label());
+            assert!(
+                a.iter().all(|&t| (0.0..horizon).contains(&t)),
+                "{} in range",
+                pattern.label()
+            );
+        }
+        assert!(arrival_times(ArrivalPattern::AtStart, 10, horizon, 7)
+            .iter()
+            .all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn daynight_concentrates_daytime() {
+        let a = arrival_times(ArrivalPattern::DayNight, 2_000, 7.0 * DAY_S, 3);
+        let daytime = a
+            .iter()
+            .filter(|&&t| {
+                let h = (t % DAY_S) / 3_600.0;
+                (7.0..19.0).contains(&h)
+            })
+            .count();
+        assert!(daytime as f64 > 0.75 * a.len() as f64, "daytime {daytime}/{}", a.len());
+    }
+
+    #[test]
+    fn stream_conserves_sessions_and_reports_latency() {
+        let cfg = StreamConfig {
+            sessions: 200,
+            horizon_s: 4.0 * DAY_S,
+            epoch_s: DAY_S / 2.0,
+            pattern: ArrivalPattern::Steady,
+            seed: 11,
+            ..Default::default()
+        };
+        let out = run_stream(&cfg, &small_fleet(), &PlacementConfig::default(), &RunSpec::new());
+        let r = &out.report;
+        assert_eq!(r.processed + r.aborted + r.backlog_final, r.sessions);
+        assert_eq!(r.backlog_final, 0, "cutoff-free streams drain fully");
+        assert_eq!(r.processed, out.latencies_s.len());
+        assert!(r.epochs > 1, "steady arrivals need several epochs, got {}", r.epochs);
+        assert!(r.latency_p95_s >= r.latency_p50_s);
+        assert!(r.latency_p50_s > 0.0);
+        assert!(r.cost_per_session_dollars > 0.0);
+        assert!(r.outage.is_none());
+        assert_eq!(
+            out.epochs.iter().map(|e| e.admitted).sum::<usize>(),
+            r.sessions
+        );
+    }
+
+    #[test]
+    fn at_start_runs_one_epoch_bit_identical_to_one_shot() {
+        let cfg = StreamConfig {
+            sessions: 150,
+            horizon_s: 2.0 * DAY_S,
+            pattern: ArrivalPattern::AtStart,
+            seed: 9,
+            ..Default::default()
+        };
+        let pcfg = PlacementConfig {
+            seed: 9,
+            ..Default::default()
+        };
+        let fleet = small_fleet();
+        let spec = RunSpec::new();
+        let streamed = run_stream(&cfg, &fleet, &pcfg, &spec);
+        assert_eq!(streamed.report.epochs, 1);
+        let one_shot = spec.execute(&stream_campaign(&cfg), &fleet, &pcfg);
+        assert_eq!(streamed.epochs[0].makespan_s, one_shot.makespan_s);
+        assert_eq!(streamed.report.total_cost_dollars, one_shot.total_cost_dollars);
+    }
+
+    #[test]
+    fn cutoff_strands_late_arrivals_as_backlog() {
+        let cfg = StreamConfig {
+            sessions: 120,
+            horizon_s: 10.0 * DAY_S,
+            epoch_s: DAY_S,
+            pattern: ArrivalPattern::Steady,
+            seed: 4,
+            cutoff_s: Some(3.0 * DAY_S),
+            ..Default::default()
+        };
+        let out = run_stream(&cfg, &small_fleet(), &PlacementConfig::default(), &RunSpec::new());
+        let r = &out.report;
+        assert!(r.backlog_final > 0, "arrivals past the cutoff must strand");
+        assert_eq!(r.processed + r.aborted + r.backlog_final, r.sessions);
+    }
+
+    #[test]
+    fn schedule_shift_keeps_future_windows_and_drops_past_ones() {
+        let sched = OutageSchedule {
+            compute: vec![
+                ComputeOutage {
+                    backend: 0,
+                    mode: crate::faults::outage::OutageMode::Drain,
+                    start_s: 100.0,
+                    end_s: 200.0,
+                },
+                ComputeOutage {
+                    backend: 1,
+                    mode: crate::faults::outage::OutageMode::Down,
+                    start_s: 500.0,
+                    end_s: 900.0,
+                },
+            ],
+            brownouts: vec![Brownout {
+                start_s: 250.0,
+                end_s: 700.0,
+                factor: 0.5,
+            }],
+            kill_backoff_s: 15.0,
+        };
+        let shifted = shift_schedule(&sched, 600.0);
+        // the ended drain is gone; the in-flight Down window clamps to 0
+        assert_eq!(shifted.compute.len(), 1);
+        assert_eq!(shifted.compute[0].start_s, 0.0);
+        assert_eq!(shifted.compute[0].end_s, 300.0);
+        assert_eq!(shifted.brownouts[0].start_s, 0.0);
+        assert_eq!(shifted.brownouts[0].end_s, 100.0);
+        assert_eq!(shifted.kill_backoff_s, 15.0);
+        assert!(shifted.validate().is_ok());
+    }
+
+    #[test]
+    fn multi_tenant_stream_conserves_sessions() {
+        let cfg = StreamConfig {
+            sessions: 90,
+            horizon_s: 3.0 * DAY_S,
+            epoch_s: DAY_S,
+            pattern: ArrivalPattern::Waves { count: 3 },
+            seed: 21,
+            tenants: 3,
+            ..Default::default()
+        };
+        let out = run_stream(&cfg, &small_fleet(), &PlacementConfig::default(), &RunSpec::new());
+        let r = &out.report;
+        assert_eq!(r.processed + r.aborted + r.backlog_final, r.sessions);
+        assert_eq!(r.backlog_final, 0);
+        assert!(r.latency_p50_s > 0.0);
+    }
+}

@@ -54,6 +54,8 @@ use crate::faults::{tenant_seed, FaultEvent, FaultModel, Injection};
 use crate::netsim::scheduler::{TransferScheduler, TransferStats};
 use crate::util::units::percentiles;
 
+use super::spec::RunSpec;
+
 use super::placement::{
     build_engine, collect_compute_faults, fold_backend_usage, job_billing, plan, rate_order,
     shared_topology, transfer_estimate_s, BackendEngine, BackendSpec, BackendUsage,
@@ -657,25 +659,33 @@ fn run_admitted_windows(
 /// Panics on invalid specs — non-finite or non-positive weights, a
 /// zero depth cap, an empty tenant list or fleet — matching the
 /// assert-early convention of `run_multi` and `Rng::below(0)`.
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec and call RunSpec::run_tenants"
+)]
 pub fn run_tenants(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
     cfg: &TenancyConfig,
 ) -> TenancyOutcome {
-    run_tenants_impl(tenants, fleet, cfg, None, false, 1)
+    RunSpec::new().run_tenants(tenants, fleet, cfg)
 }
 
 /// [`run_tenants`] with the compute engines sharded across `threads`
 /// worker threads (`coordinator::sync`). `threads = 1` is byte-identical
 /// to [`run_tenants`]; any thread count is f64-record-identical
 /// (`rust/tests/parallel_parity.rs`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .threads(n) and call RunSpec::run_tenants"
+)]
 pub fn run_tenants_threaded(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
     cfg: &TenancyConfig,
     threads: usize,
 ) -> TenancyOutcome {
-    run_tenants_impl(tenants, fleet, cfg, None, false, threads)
+    RunSpec::new().threads(threads).run_tenants(tenants, fleet, cfg)
 }
 
 /// [`run_tenants`] under an infrastructure-fault schedule with optional
@@ -696,6 +706,10 @@ pub fn run_tenants_threaded(
 ///   (`rust/tests/chaos_cosim.rs`).
 ///
 /// Panics if the schedule fails [`OutageSchedule::validate`].
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .outages(s).enforce_slos(b) and call RunSpec::run_tenants"
+)]
 pub fn run_tenants_chaos(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
@@ -703,14 +717,18 @@ pub fn run_tenants_chaos(
     schedule: &OutageSchedule,
     enforce: bool,
 ) -> TenancyOutcome {
-    if let Err(e) = schedule.validate() {
-        panic!("run_tenants_chaos: {e}");
-    }
-    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce, 1)
+    RunSpec::new()
+        .outages(schedule.clone())
+        .enforce_slos(enforce)
+        .run_tenants(tenants, fleet, cfg)
 }
 
 /// [`run_tenants_chaos`] with the compute engines sharded across
 /// `threads` worker threads (`coordinator::sync`).
+#[deprecated(
+    since = "0.1.0",
+    note = "compose a coordinator::RunSpec with .outages(s).enforce_slos(b).threads(n) and call RunSpec::run_tenants"
+)]
 pub fn run_tenants_chaos_threaded(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
@@ -719,13 +737,17 @@ pub fn run_tenants_chaos_threaded(
     enforce: bool,
     threads: usize,
 ) -> TenancyOutcome {
-    if let Err(e) = schedule.validate() {
-        panic!("run_tenants_chaos: {e}");
-    }
-    run_tenants_impl(tenants, fleet, cfg, Some(schedule), enforce, threads)
+    RunSpec::new()
+        .outages(schedule.clone())
+        .enforce_slos(enforce)
+        .threads(threads)
+        .run_tenants(tenants, fleet, cfg)
 }
 
-fn run_tenants_impl(
+/// The one tenancy funnel every entry point drains into
+/// ([`crate::coordinator::RunSpec::run_tenants`] and, through it, the
+/// deprecated `run_tenants*` shims).
+pub(crate) fn run_tenants_impl(
     tenants: &[TenantSpec],
     fleet: &[BackendSpec],
     cfg: &TenancyConfig,
@@ -943,6 +965,9 @@ fn run_tenants_impl(
 }
 
 #[cfg(test)]
+// the unit tests deliberately exercise the deprecated shims: they are
+// the compatibility surface the parity batteries pin
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::placement::BackendKind;

@@ -24,8 +24,9 @@ use medflow::compute::load_runtime;
 use medflow::container::ContainerArchive;
 use medflow::coordinator::placement::{self, PlacementConfig, PlacementPolicy};
 use medflow::coordinator::staged::{run_staged, synthetic_fault_campaign, SlurmSim};
+use medflow::coordinator::stream::{self, ArrivalPattern, StreamConfig};
 use medflow::coordinator::tenancy;
-use medflow::coordinator::{CampaignConfig, Coordinator, SubmitTarget};
+use medflow::coordinator::{CampaignConfig, Coordinator, RunSpec, SubmitTarget};
 use medflow::faults::outage::{Brownout, ComputeOutage, OutageMode, OutageSchedule, OutageSeverity};
 use medflow::faults::{FaultModel, FaultTelemetry, Injection};
 use medflow::netsim::scheduler::{Topology, TransferScheduler};
@@ -132,6 +133,7 @@ fn run() -> Result<()> {
         "place" => cmd_place(&args),
         "tenants" => cmd_tenants(&args),
         "chaos" => cmd_chaos(&args),
+        "stream" => cmd_stream(&args),
         "lint" => cmd_lint(&args),
         "growth" => {
             let models = medflow::archive::growth::default_models();
@@ -485,7 +487,10 @@ fn cmd_place(args: &Args) -> Result<()> {
         "placement co-simulation: {n} jobs across {} backends (retries {retries}, seed {seed})",
         fleet.len()
     );
-    let out = placement::execute_threaded(&jobs, &fleet, policy, &cfg, threads_arg(args)?);
+    let out = RunSpec::new()
+        .policy(policy)
+        .threads(threads_arg(args)?)
+        .execute(&jobs, &fleet, &cfg);
     let completed = out.staged.timings.iter().filter(|t| t.completed).count();
     println!(
         "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
@@ -592,7 +597,9 @@ fn cmd_tenants(args: &Args) -> Result<()> {
         "tenancy co-simulation: {n_tenants} tenants × {jobs_per} jobs across {} backends (retries {retries}, seed {seed})",
         fleet.len()
     );
-    let out = tenancy::run_tenants_threaded(&tenants, &fleet, &cfg, threads_arg(args)?);
+    let out = RunSpec::new()
+        .threads(threads_arg(args)?)
+        .run_tenants(&tenants, &fleet, &cfg);
     print!("{}", report::format_tenancy(&out.report));
     println!();
     print!("{}", report::format_placement(&policy.label(), &out.report.per_backend));
@@ -660,7 +667,11 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         schedule.brownouts.len()
     );
     let threads = threads_arg(args)?;
-    let out = placement::execute_chaos_threaded(&jobs, &fleet, policy, &cfg, &schedule, threads);
+    let out = RunSpec::new()
+        .policy(policy)
+        .outages(schedule)
+        .threads(threads)
+        .execute(&jobs, &fleet, &cfg);
     let completed = out.staged.timings.iter().filter(|t| t.completed).count();
     println!(
         "completed {completed}/{n}   cost ${:.2}   makespan {}\n",
@@ -716,6 +727,119 @@ fn parse_brownout(spec: &str) -> Result<Brownout> {
         end_s,
         factor,
     })
+}
+
+/// `medflow stream`: drive the streaming coordinator (DESIGN.md §17) —
+/// a seeded arrival process lays sessions over simulated weeks, each
+/// planning epoch admits the arrived delta, re-plans placement through
+/// the composed [`RunSpec`], and co-simulates it on the shared fleet —
+/// then print the steady-state telemetry (ingest-to-processed latency
+/// percentiles, backlog over time, cost per session, re-plan counts).
+fn cmd_stream(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print_usage();
+        return Ok(());
+    }
+    let sessions = args.num("sessions", 2_000);
+    if sessions < 1 {
+        bail!("invalid --sessions '{sessions}' (must be an integer ≥ 1)");
+    }
+    let horizon_days = args.num("horizon-days", 30);
+    if horizon_days < 1 {
+        bail!("invalid --horizon-days '{horizon_days}' (must be an integer ≥ 1)");
+    }
+    let epoch_hours = args.num("epoch-hours", 24);
+    if epoch_hours < 1 {
+        bail!("invalid --epoch-hours '{epoch_hours}' (must be an integer ≥ 1)");
+    }
+    let tenants = args.num("tenants", 1);
+    if tenants < 1 {
+        bail!("invalid --tenants '{tenants}' (must be an integer ≥ 1)");
+    }
+    let pattern = match args.get("pattern").unwrap_or("steady") {
+        "t0" => ArrivalPattern::AtStart,
+        "steady" => ArrivalPattern::Steady,
+        "waves" => ArrivalPattern::Waves {
+            count: args.num("waves", 4).max(1) as usize,
+        },
+        "daynight" => ArrivalPattern::DayNight,
+        "backfill" => match args.get("burst").unwrap_or("0.3").parse::<f64>() {
+            Ok(f) if f.is_finite() && (0.0..=1.0).contains(&f) => {
+                ArrivalPattern::Backfill { burst_fraction: f }
+            }
+            _ => bail!(
+                "invalid --burst '{}' (must be a number in [0, 1])",
+                args.get("burst").unwrap_or("")
+            ),
+        },
+        other => {
+            bail!("unknown arrival pattern '{other}' (t0 | steady | waves | daynight | backfill)")
+        }
+    };
+    let cutoff_s = match args.get("cutoff-days") {
+        Some(d) => match d.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => Some(v * 86_400.0),
+            _ => bail!("invalid --cutoff-days '{d}' (must be a number ≥ 0)"),
+        },
+        None => None,
+    };
+    let severity = match args.get("severity").unwrap_or("none") {
+        "none" => OutageSeverity::None,
+        "mild" => OutageSeverity::Mild,
+        "harsh" => OutageSeverity::Harsh,
+        other => bail!("unknown outage severity '{other}' (none | mild | harsh)"),
+    };
+    let policy = parse_placement_policy(args.get("policy").unwrap_or("cheapest"), args)?;
+    let model = match args.get("faults") {
+        Some(name) => Some(parse_fault_model(name)?),
+        None if args.has("faults") => Some(FaultModel::typical()),
+        None => None,
+    };
+    if let Some(m) = &model {
+        m.validate().map_err(anyhow::Error::msg)?;
+    }
+    let seed = args.num("seed", 42);
+    let retries = args.num("retries", 3) as u32;
+    let mut fleet = placement::default_fleet(
+        ClusterSpec::accre(),
+        args.num("concurrent", 2_000) as u32,
+        args.num("cloud-lanes", 64).max(1) as usize,
+        args.num("local-lanes", 8).max(1) as usize,
+    );
+    if let Some(m) = model {
+        for backend in &mut fleet {
+            backend.faults = Some(m);
+        }
+    }
+    let horizon_s = horizon_days as f64 * 86_400.0;
+    let cfg = StreamConfig {
+        sessions: sessions as usize,
+        horizon_s,
+        epoch_s: epoch_hours as f64 * 3_600.0,
+        pattern,
+        seed,
+        tenants: tenants as usize,
+        cutoff_s,
+    };
+    let pcfg = PlacementConfig {
+        seed,
+        transfer_faults: model,
+        max_retries: retries,
+        retry_backoff_s: args.num("backoff", 60) as f64,
+    };
+    let mut spec = RunSpec::new().policy(policy).threads(threads_arg(args)?);
+    if severity != OutageSeverity::None {
+        spec = spec.outages(OutageSchedule::synthetic(severity, fleet.len(), horizon_s, seed));
+    }
+    println!(
+        "stream co-simulation: {sessions} sessions over {horizon_days} simulated days \
+         ('{}' arrivals, epoch {epoch_hours} h, {} backends, seed {seed})",
+        pattern.label(),
+        fleet.len()
+    );
+    let out = stream::run_stream(&cfg, &fleet, &pcfg, &spec);
+    print!("{}", report::format_stream(&out));
+    Ok(())
 }
 
 /// `medflow faults`: run the shared synthetic campaign
@@ -984,6 +1108,12 @@ USAGE:
                     [--window BACKEND:down|drain:START:END] [--brownout START:END:FACTOR]
                     [--policy cheapest|deadline|budget] [--retries N] [--seed S] [--threads N]
                                                   (infrastructure outages + graceful degradation, DESIGN.md §15)
+  medflow stream    [--sessions N] [--horizon-days D] [--epoch-hours H]
+                    [--pattern t0|steady|waves|daynight|backfill] [--waves N] [--burst F]
+                    [--tenants N] [--policy cheapest|deadline|budget] [--cutoff-days D]
+                    [--faults none|typical|harsh] [--severity none|mild|harsh]
+                    [--retries N] [--seed S] [--threads N]
+                                                  (streaming ingest + epoch re-planning, DESIGN.md §17)
   medflow lint      [--src DIR] [--rules id1,id2,…] [--deny] [--list]
                                                   (determinism static analysis, DESIGN.md §14)
   medflow pipelines

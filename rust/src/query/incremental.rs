@@ -346,6 +346,101 @@ impl IncrementalEngine {
     }
 }
 
+/// Arrival-delta ledger for the streaming coordinator
+/// (`coordinator::stream`, DESIGN.md §17) — the simulated-time
+/// counterpart of [`IncrementalEngine`]'s on-disk delta query.
+///
+/// Where the engine answers "which sessions changed since the last
+/// campaign" against a filesystem, the ledger answers "which sessions
+/// *landed* since the last planning epoch" against a simulated arrival
+/// process: sessions are ingested in arrival order, and each
+/// [`poll`](Self::poll) drains exactly the sessions whose arrival
+/// instant is ≤ the stream clock — O(delta) per epoch, like the engine.
+/// Conservation is auditable at any instant: `arrived = drained +
+/// pending`, and the stream loop folds its own processed/aborted split
+/// back via [`record_completion`](Self::record_completion).
+#[derive(Debug, Clone, Default)]
+pub struct DeltaLedger {
+    /// `(arrival_s, session id)` in non-decreasing arrival order.
+    arrivals: Vec<(f64, u64)>,
+    /// First not-yet-drained arrival.
+    cursor: usize,
+    /// Completions folded back by the consumer (telemetry only).
+    completed: u64,
+}
+
+impl DeltaLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a ledger from pre-sorted arrival instants; session ids are
+    /// the positions `0..times.len()`.
+    pub fn from_arrivals(times: &[f64]) -> Self {
+        let mut ledger = Self::new();
+        for (id, &t) in times.iter().enumerate() {
+            ledger.ingest(t, id as u64);
+        }
+        ledger
+    }
+
+    /// Append one arrival. Arrivals must be fed in non-decreasing time
+    /// order (the arrival generators sort before ingesting) — a
+    /// time-travelling arrival would silently never drain once the
+    /// cursor passed it, so it is rejected loudly instead.
+    pub fn ingest(&mut self, arrival_s: f64, id: u64) {
+        assert!(
+            arrival_s.is_finite() && arrival_s >= 0.0,
+            "DeltaLedger::ingest: arrival instant must be finite and ≥ 0 (got {arrival_s})"
+        );
+        if let Some(&(last, _)) = self.arrivals.last() {
+            assert!(
+                arrival_s >= last,
+                "DeltaLedger::ingest: arrivals must be non-decreasing \
+                 (got {arrival_s} after {last})"
+            );
+        }
+        self.arrivals.push((arrival_s, id));
+    }
+
+    /// Drain every session whose arrival instant is ≤ `now_s`, in
+    /// arrival order — the per-epoch delta the re-planning loop admits.
+    pub fn poll(&mut self, now_s: f64) -> Vec<u64> {
+        let start = self.cursor;
+        while self.cursor < self.arrivals.len() && self.arrivals[self.cursor].0 <= now_s {
+            self.cursor += 1;
+        }
+        self.arrivals[start..self.cursor].iter().map(|&(_, id)| id).collect()
+    }
+
+    /// Arrival instant of the next undrained session, if any — the
+    /// stream loop uses it to jump idle gaps to the covering epoch
+    /// boundary instead of spinning through empty epochs.
+    pub fn next_arrival_s(&self) -> Option<f64> {
+        self.arrivals.get(self.cursor).map(|&(t, _)| t)
+    }
+
+    /// Sessions ingested but not yet drained by a poll.
+    pub fn pending(&self) -> usize {
+        self.arrivals.len() - self.cursor
+    }
+
+    /// Sessions drained so far.
+    pub fn drained(&self) -> usize {
+        self.cursor
+    }
+
+    /// Fold `n` completions back (telemetry; mirrors
+    /// [`IncrementalEngine::record_completion`]).
+    pub fn record_completion(&mut self, n: u64) {
+        self.completed += n;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+}
+
 fn skip_cache_path(ds: &BidsDataset) -> std::path::PathBuf {
     ds.index_dir().join("skipcache.json")
 }
@@ -607,6 +702,32 @@ mod tests {
         assert_eq!(s3.sessions_examined, 1);
         assert_eq!(r3.runnable.len(), 1);
         cleanup(&ds);
+    }
+
+    #[test]
+    fn ledger_polls_exactly_the_arrived_delta() {
+        let mut ledger = DeltaLedger::from_arrivals(&[0.0, 10.0, 10.0, 25.0]);
+        assert_eq!(ledger.pending(), 4);
+        assert_eq!(ledger.next_arrival_s(), Some(0.0));
+        assert_eq!(ledger.poll(10.0), vec![0, 1, 2]);
+        assert_eq!(ledger.pending(), 1);
+        assert_eq!(ledger.drained(), 3);
+        // re-polling the same instant drains nothing (delta, not scan)
+        assert!(ledger.poll(10.0).is_empty());
+        assert_eq!(ledger.next_arrival_s(), Some(25.0));
+        assert_eq!(ledger.poll(1e9), vec![3]);
+        assert_eq!(ledger.pending(), 0);
+        assert_eq!(ledger.next_arrival_s(), None);
+        ledger.record_completion(4);
+        assert_eq!(ledger.completed(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn ledger_rejects_time_travelling_arrivals() {
+        let mut ledger = DeltaLedger::new();
+        ledger.ingest(5.0, 0);
+        ledger.ingest(4.0, 1);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 pub mod incremental;
 
-pub use incremental::IncrementalEngine;
+pub use incremental::{DeltaLedger, IncrementalEngine};
 
 use std::path::PathBuf;
 

@@ -530,6 +530,60 @@ pub fn format_tenancy(report: &crate::coordinator::tenancy::TenancyReport) -> St
     s
 }
 
+/// Render a streaming run's steady-state telemetry (`medflow stream`;
+/// DESIGN.md §17): ingest-to-processed latency percentiles, cost per
+/// session, and the per-epoch backlog/re-plan table (capped at 20 rows
+/// — year-long traces run hundreds of epochs).
+pub fn format_stream(out: &crate::coordinator::stream::StreamOutcome) -> String {
+    let r = &out.report;
+    let mut s = format!(
+        "stream co-simulation [{} arrivals, {} sessions, {} epochs]\n",
+        r.pattern, r.sessions, r.epochs
+    );
+    s.push_str(&format!(
+        "processed {}   aborted {}   stranded backlog {}   stream clock {}\n",
+        r.processed,
+        r.aborted,
+        r.backlog_final,
+        fmt_duration(r.stream_clock_s)
+    ));
+    s.push_str(&format!(
+        "ingest→processed latency: p50 {}   p95 {}   mean {}\n",
+        fmt_duration(r.latency_p50_s),
+        fmt_duration(r.latency_p95_s),
+        fmt_duration(r.latency_mean_s)
+    ));
+    s.push_str(&format!(
+        "cost ${:.4} total   ${:.4}/session   backlog peak {}   escalations {}\n",
+        r.total_cost_dollars, r.cost_per_session_dollars, r.backlog_peak, r.escalations
+    ));
+    s.push_str(&format!(
+        "{:<7}{:>12}{:>10}{:>10}{:>9}{:>12}{:>12}{:>7}\n",
+        "epoch", "plan at", "admitted", "done", "aborted", "makespan", "cost ($)", "esc"
+    ));
+    const MAX_ROWS: usize = 20;
+    for e in out.epochs.iter().take(MAX_ROWS) {
+        s.push_str(&format!(
+            "{:<7}{:>12}{:>10}{:>10}{:>9}{:>12}{:>12.4}{:>7}\n",
+            e.index,
+            fmt_duration(e.t_plan_s),
+            e.admitted,
+            e.processed,
+            e.aborted,
+            fmt_duration(e.makespan_s),
+            e.cost_dollars,
+            if e.escalated { "yes" } else { "" }
+        ));
+    }
+    if out.epochs.len() > MAX_ROWS {
+        s.push_str(&format!("… {} more epochs\n", out.epochs.len() - MAX_ROWS));
+    }
+    if let Some(o) = &r.outage {
+        s.push_str(&format_outage(o));
+    }
+    s
+}
+
 /// Render a cost-vs-makespan Pareto frontier (`medflow place
 /// --frontier`; DESIGN.md §12) — the full curve Fig. 1 only showed two
 /// points of. Points arrive pruned ([`crate::coordinator::placement::pareto`]):
@@ -787,7 +841,8 @@ mod tests {
     #[test]
     fn format_tenancy_renders_enforcement_and_outage_bands() {
         use crate::coordinator::placement::{BackendKind, BackendSpec};
-        use crate::coordinator::tenancy::{run_tenants_chaos, synthetic_tenants, TenancyConfig};
+        use crate::coordinator::tenancy::{synthetic_tenants, TenancyConfig};
+        use crate::coordinator::RunSpec;
         use crate::faults::outage::OutageSchedule;
         let fleet = vec![BackendSpec {
             name: "hpc".into(),
@@ -797,13 +852,10 @@ mod tests {
             transfer_streams: 4,
         }];
         let tenants = synthetic_tenants(3, 2, 5);
-        let out = run_tenants_chaos(
-            &tenants,
-            &fleet,
-            &TenancyConfig::default(),
-            &OutageSchedule::empty(),
-            true,
-        );
+        let out = RunSpec::new()
+            .outages(OutageSchedule::empty())
+            .enforce_slos(true)
+            .run_tenants(&tenants, &fleet, &TenancyConfig::default());
         let s = format_tenancy(&out.report);
         assert!(s.contains("SLO enforcement: 0 stranded"), "{s}");
         assert!(s.contains("chaos: 0 outage windows, 0 brownouts"), "{s}");

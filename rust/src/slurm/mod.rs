@@ -164,9 +164,14 @@ struct NodeState {
     free_ram_gb: u32,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct Running {
-    job: SimJob,
+    /// The flat interned row (ROADMAP item 2 follow-up): a start holds
+    /// the `Copy` row, so starting an attempt allocates nothing. The
+    /// owned [`SimJob`] is materialized from the user-name arena only
+    /// when a *completed* attempt's [`JobRecord`] is emitted — killed
+    /// and failed attempts never pay for one.
+    job: DueJob,
     node: usize,
     start_s: f64,
     /// When this *attempt* releases its allocation: the nominal end for
@@ -186,9 +191,10 @@ struct Running {
 /// A pending job as a flat `Copy` row (DESIGN.md §16): the owned user
 /// `String` of [`SimJob`] is interned to a dense id at submission, so
 /// the scheduling pass examines candidates by copy instead of cloning a
-/// heap-allocated `SimJob` per examined job per pass. The full
-/// [`SimJob`] is re-materialized only when an attempt actually starts
-/// (it must outlive the pending row inside [`JobRecord`]s).
+/// heap-allocated `SimJob` per examined job per pass. Running attempts
+/// hold the same row; the full [`SimJob`] is re-materialized from the
+/// interned-name arena only when a completed attempt's [`JobRecord`]
+/// is emitted.
 #[derive(Debug, Clone, Copy)]
 struct DueJob {
     id: u64,
@@ -456,14 +462,13 @@ impl Scheduler {
                     // start; refund the part the kill never let it hold
                     let unheld = (r.end_s - self.clock).max(0.0) * r.job.cores as f64;
                     self.core_seconds_used -= unheld;
-                    if let Some(&uid) = self.user_ids.get(&r.job.user) {
-                        self.usage[uid as usize] -= unheld;
-                    }
+                    // the row's user id indexes the fairshare cell directly
+                    self.usage[r.job.user as usize] -= unheld;
                     self.outage_killed += 1;
                     self.outage_wasted_s += self.clock - r.start_s;
                     let mut job = r.job;
                     job.submit_s = self.clock + self.outage_backoff_s;
-                    self.submit(job);
+                    self.submit_row(job);
                     // the killed attempt's ends-heap entry is now stale;
                     // its start_seq no longer matches and is skipped
                 }
@@ -542,15 +547,6 @@ impl Scheduler {
     }
 
     pub fn submit(&mut self, job: SimJob) {
-        assert!(
-            job.submit_s >= self.clock,
-            "cannot submit in the past (job {} at {}, clock {})",
-            job.id,
-            job.submit_s,
-            self.clock
-        );
-        self.needs_schedule = true;
-        self.sched_dirty = true;
         let row = DueJob {
             id: job.id,
             user: self.intern_user(&job.user),
@@ -560,6 +556,22 @@ impl Scheduler {
             submit_s: job.submit_s,
             array: job.array,
         };
+        self.submit_row(row);
+    }
+
+    /// Requeue an already-interned row (fault retries, outage kills):
+    /// the internal resubmission path allocates nothing — the row IS
+    /// the arena-backed form of the job.
+    fn submit_row(&mut self, row: DueJob) {
+        assert!(
+            row.submit_s >= self.clock,
+            "cannot submit in the past (job {} at {}, clock {})",
+            row.id,
+            row.submit_s,
+            self.clock
+        );
+        self.needs_schedule = true;
+        self.sched_dirty = true;
         if row.submit_s <= self.clock {
             self.due.push(row);
         } else {
@@ -642,18 +654,11 @@ impl Scheduler {
         self.start_seq += 1;
         self.ends.push(Reverse((F64Ord(end_s), job.id, self.start_seq)));
         self.running_pos.insert(job.id, self.running.len());
-        // the only per-start heap allocation left: materialize the owned
-        // SimJob the eventual JobRecord needs
+        // allocation-free start: the attempt holds the flat row; the
+        // owned SimJob is materialized only if this attempt completes
+        // and emits a JobRecord
         self.running.push(Running {
-            job: SimJob {
-                id: job.id,
-                user: self.user_names[job.user as usize].clone(),
-                cores: job.cores,
-                ram_gb: job.ram_gb,
-                duration_s: job.duration_s,
-                submit_s: job.submit_s,
-                array: job.array,
-            },
+            job,
             node,
             start_s: self.clock,
             end_s,
@@ -661,6 +666,22 @@ impl Scheduler {
             fail,
             start_seq: self.start_seq,
         });
+    }
+
+    /// Materialize the owned [`SimJob`] a [`JobRecord`] needs from its
+    /// flat row — the single remaining per-*record* allocation (the
+    /// user `String` clone out of the interned-name arena); starts,
+    /// retries, and outage kills are allocation-free.
+    fn materialize(&self, row: DueJob) -> SimJob {
+        SimJob {
+            id: row.id,
+            user: self.user_names[row.user as usize].clone(),
+            cores: row.cores,
+            ram_gb: row.ram_gb,
+            duration_s: row.duration_s,
+            submit_s: row.submit_s,
+            array: row.array,
+        }
     }
 
     /// Migrate heap-ordered arrivals whose submit time has passed into
@@ -891,12 +912,15 @@ impl Scheduler {
             }
             self.sched_dirty = true;
             match r.fail {
-                None => self.records.push(JobRecord {
-                    start_s: r.start_s,
-                    end_s: r.end_s,
-                    node: r.node,
-                    job: r.job,
-                }),
+                None => {
+                    let job = self.materialize(r.job);
+                    self.records.push(JobRecord {
+                        start_s: r.start_s,
+                        end_s: r.end_s,
+                        node: r.node,
+                        job,
+                    });
+                }
                 Some(mode) => self.fail_attempt(r, mode),
             }
         }
@@ -933,7 +957,7 @@ impl Scheduler {
                 self.attempts.insert(id, attempt + 1);
                 let mut job = job;
                 job.submit_s = (end_s + inj.backoff_s(attempt)).max(self.clock);
-                self.submit(job);
+                self.submit_row(job);
             }
         }
         self.fault_events.push(FaultEvent {

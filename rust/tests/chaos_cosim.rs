@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Chaos co-simulation gates (DESIGN.md §15): the infrastructure-fault
 //! layer must cost exactly nothing when the schedule is empty — every
 //! chaos entry point is **f64-record-identical** to its plain sibling —

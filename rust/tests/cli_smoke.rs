@@ -260,6 +260,79 @@ fn lint_cli_reports_and_gates() {
 }
 
 #[test]
+fn stream_cli_reports_epoch_telemetry() {
+    // happy path: a small two-day steady trace with half-day epochs
+    let out = run_ok(&[
+        "stream", "--sessions", "60", "--horizon-days", "2", "--epoch-hours", "12",
+        "--seed", "7", "--cloud-lanes", "16", "--local-lanes", "2",
+    ]);
+    assert!(out.contains("stream co-simulation"), "{out}");
+    assert!(out.contains("ingest→processed latency"), "{out}");
+    assert!(out.contains("stranded backlog"), "{out}");
+    assert!(out.contains("/session"), "{out}");
+    assert!(out.contains("plan at") && out.contains("makespan"), "{out}");
+
+    // every arrival pattern resolves and labels its report
+    for (flags, label) in [
+        (vec!["--pattern", "t0"], "t0"),
+        (vec!["--pattern", "waves", "--waves", "2"], "waves"),
+        (vec!["--pattern", "daynight"], "daynight"),
+        (vec!["--pattern", "backfill", "--burst", "0.5"], "backfill"),
+    ] {
+        let mut args = vec![
+            "stream", "--sessions", "40", "--horizon-days", "2", "--epoch-hours", "12",
+            "--seed", "7", "--cloud-lanes", "8", "--local-lanes", "2",
+        ];
+        args.extend(flags.iter());
+        let out = run_ok(&args);
+        assert!(out.contains(&format!("'{label}' arrivals")), "{label}: {out}");
+    }
+
+    // rejected knobs fail cleanly, naming the offending value
+    for (args, needle) in [
+        (vec!["stream", "--sessions", "0"], "invalid --sessions"),
+        (vec!["stream", "--epoch-hours", "0"], "invalid --epoch-hours"),
+        (vec!["stream", "--tenants", "0"], "invalid --tenants"),
+        (vec!["stream", "--pattern", "mars"], "unknown arrival pattern"),
+        (vec!["stream", "--pattern", "backfill", "--burst", "2.0"], "invalid --burst"),
+        (vec!["stream", "--cutoff-days", "nope"], "invalid --cutoff-days"),
+        (vec!["stream", "--severity", "mars"], "unknown outage severity"),
+    ] {
+        let out = medflow().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+        assert!(stderr.contains(needle), "{args:?}: {stderr}");
+    }
+
+    // --help prints the usage block instead of running a simulation
+    let out = run_ok(&["stream", "--help"]);
+    assert!(out.contains("medflow stream"), "{out}");
+    assert!(out.contains("--pattern"), "{out}");
+}
+
+/// The pre-RunSpec entry points survive as deprecated shims: a caller
+/// that has not migrated yet gets the exact run the builder produces.
+#[test]
+#[allow(deprecated)]
+fn deprecated_entry_points_still_delegate() {
+    use medflow::coordinator::placement::{
+        self, default_fleet, PlacementConfig, PlacementPolicy,
+    };
+    use medflow::coordinator::RunSpec;
+    use medflow::coordinator::staged::synthetic_fault_campaign;
+    use medflow::slurm::ClusterSpec;
+
+    let jobs = synthetic_fault_campaign(40, 7);
+    let fleet = default_fleet(ClusterSpec::accre(), 32, 8, 2);
+    let cfg = PlacementConfig { seed: 7, ..Default::default() };
+    let old = placement::execute(&jobs, &fleet, PlacementPolicy::CheapestFirst, &cfg);
+    let new = RunSpec::new().policy(PlacementPolicy::CheapestFirst).execute(&jobs, &fleet, &cfg);
+    assert_eq!(old.total_cost_dollars, new.total_cost_dollars);
+    assert_eq!(old.makespan_s, new.makespan_s);
+    assert_eq!(old.staged.timings, new.staged.timings);
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     let out = medflow().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

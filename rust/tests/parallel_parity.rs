@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Parallel-engine parity battery (DESIGN.md §16): the conservative
 //! time-window driver (`coordinator::sync`) must make every thread
 //! count **f64-record-identical** to the sequential loop — not close,

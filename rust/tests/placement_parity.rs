@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Placement gates (DESIGN.md §12): single-backend parity with the
 //! staged path, per-(job, backend, attempt) determinism, and Pareto
 //! frontier properties.

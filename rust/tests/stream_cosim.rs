@@ -1,0 +1,198 @@
+//! Streaming-coordinator gates (DESIGN.md §17): the epoch loop must be
+//! a *composition* of the one-shot engines, not a new engine — t=0
+//! arrivals reproduce a one-shot `RunSpec` run f64-record-identically
+//! (at any thread count), multi-epoch harsh-fault traces replay
+//! bit-for-bit from the seed, sessions are conserved through cutoffs
+//! and tenancy, and a link brownout can only push ingest-to-processed
+//! latency up.
+
+use medflow::coordinator::placement::{default_fleet, BackendSpec, PlacementConfig};
+use medflow::coordinator::stream::{
+    run_stream, stream_campaign, ArrivalPattern, StreamConfig, DAY_S,
+};
+use medflow::coordinator::RunSpec;
+use medflow::faults::outage::{Brownout, OutageSchedule, OutageSeverity};
+use medflow::faults::FaultModel;
+use medflow::slurm::ClusterSpec;
+
+fn fleet() -> Vec<BackendSpec> {
+    default_fleet(ClusterSpec::accre(), 64, 8, 4)
+}
+
+fn pcfg(seed: u64) -> PlacementConfig {
+    PlacementConfig {
+        seed,
+        ..Default::default()
+    }
+}
+
+/// t=0 arrivals degenerate to one planning epoch whose engines run
+/// under the unsalted base seed — the stream loop must reproduce the
+/// one-shot RunSpec run record-for-record: same completion set, same
+/// `done_s` per session (= the stream latencies), same cost and
+/// makespan. Holds at `--threads 1` and at a sharded thread count.
+#[test]
+fn t0_arrivals_match_one_shot_runspec_at_any_thread_count() {
+    let cfg = StreamConfig {
+        sessions: 250,
+        horizon_s: 2.0 * DAY_S,
+        pattern: ArrivalPattern::AtStart,
+        seed: 17,
+        ..Default::default()
+    };
+    let fleet = fleet();
+    let pcfg = pcfg(17);
+    for threads in [1usize, 4] {
+        let spec = RunSpec::new().threads(threads);
+        let streamed = run_stream(&cfg, &fleet, &pcfg, &spec);
+        assert_eq!(streamed.report.epochs, 1, "t=0 arrivals are one epoch");
+        assert_eq!(streamed.report.backlog_final, 0);
+
+        let one_shot = spec.execute(&stream_campaign(&cfg), &fleet, &pcfg);
+        let one_shot_done: Vec<f64> = one_shot
+            .staged
+            .timings
+            .iter()
+            .filter(|t| t.completed)
+            .map(|t| t.done_s)
+            .collect();
+        // arrivals are all 0.0, so latency ≡ done_s: record-identical
+        assert_eq!(streamed.latencies_s, one_shot_done, "threads={threads}");
+        assert_eq!(streamed.report.total_cost_dollars, one_shot.total_cost_dollars);
+        assert_eq!(streamed.epochs[0].makespan_s, one_shot.makespan_s);
+        assert_eq!(
+            streamed.report.processed,
+            one_shot.staged.timings.iter().filter(|t| t.completed).count()
+        );
+    }
+}
+
+/// The replay contract extends across planning epochs: a steady trace
+/// under a harsh outage schedule plus in-engine fault injection must
+/// reproduce every report field, every epoch row, and every latency
+/// sample from `(config, seed)` alone.
+#[test]
+fn multi_epoch_harsh_fault_trace_replays_from_the_seed() {
+    let cfg = StreamConfig {
+        sessions: 200,
+        horizon_s: 5.0 * DAY_S,
+        epoch_s: DAY_S,
+        pattern: ArrivalPattern::Waves { count: 3 },
+        seed: 23,
+        ..Default::default()
+    };
+    let fleet = fleet();
+    let pcfg = PlacementConfig {
+        seed: 23,
+        transfer_faults: Some(FaultModel::typical()),
+        ..Default::default()
+    };
+    let schedule = OutageSchedule::synthetic(
+        OutageSeverity::Harsh,
+        fleet.len(),
+        cfg.horizon_s,
+        23,
+    );
+    let spec = RunSpec::new().outages(schedule).threads(2);
+    let a = run_stream(&cfg, &fleet, &pcfg, &spec);
+    let b = run_stream(&cfg, &fleet, &pcfg, &spec);
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.epochs, b.epochs);
+    assert_eq!(a.latencies_s, b.latencies_s);
+    assert!(a.report.epochs > 1, "waves over 5 days must re-plan");
+    assert!(a.report.outage.is_some(), "harsh schedule must report outage stats");
+    assert_eq!(
+        a.report.processed + a.report.aborted + a.report.backlog_final,
+        a.report.sessions
+    );
+}
+
+/// Conservation: every arrival is exactly one of processed, aborted,
+/// or stranded backlog. A cutoff strands the tail; without one the
+/// stream drains. Holds through the tenancy path too.
+#[test]
+fn backlog_conservation_under_cutoff_and_tenancy() {
+    let base = StreamConfig {
+        sessions: 160,
+        horizon_s: 8.0 * DAY_S,
+        epoch_s: DAY_S,
+        pattern: ArrivalPattern::Steady,
+        seed: 31,
+        ..Default::default()
+    };
+    let fleet = fleet();
+
+    let cut = StreamConfig {
+        cutoff_s: Some(3.0 * DAY_S),
+        ..base.clone()
+    };
+    let out = run_stream(&cut, &fleet, &pcfg(31), &RunSpec::new());
+    assert!(out.report.backlog_final > 0, "post-cutoff arrivals must strand");
+    assert_eq!(
+        out.report.processed + out.report.aborted + out.report.backlog_final,
+        out.report.sessions
+    );
+    // the stranded tail is exactly the sessions arriving past the last
+    // admitted epoch — nothing double-counted across epochs
+    assert_eq!(
+        out.epochs.iter().map(|e| e.admitted).sum::<usize>() + out.report.backlog_final,
+        out.report.sessions
+    );
+
+    let tenanted = StreamConfig {
+        tenants: 4,
+        ..base
+    };
+    let out = run_stream(&tenanted, &fleet, &pcfg(31), &RunSpec::new());
+    assert_eq!(out.report.backlog_final, 0, "cutoff-free streams drain");
+    assert_eq!(
+        out.report.processed + out.report.aborted,
+        out.report.sessions
+    );
+    assert_eq!(out.report.processed, out.latencies_s.len());
+}
+
+/// Throttling the shared link can only slow verified copy-back:
+/// against the same t=0 batch, a half-capacity brownout covering the
+/// run must leave every latency quantile at or above the clean run's.
+#[test]
+fn brownout_pushes_ingest_latency_monotonically_up() {
+    let cfg = StreamConfig {
+        sessions: 180,
+        horizon_s: 2.0 * DAY_S,
+        pattern: ArrivalPattern::AtStart,
+        seed: 41,
+        ..Default::default()
+    };
+    let fleet = fleet();
+    let pcfg = pcfg(41);
+    let clean = run_stream(&cfg, &fleet, &pcfg, &RunSpec::new());
+
+    let mut schedule = OutageSchedule::empty();
+    schedule.brownouts.push(Brownout {
+        start_s: 0.0,
+        end_s: 30.0 * DAY_S,
+        factor: 0.5,
+    });
+    let browned = run_stream(&cfg, &fleet, &pcfg, &RunSpec::new().outages(schedule));
+
+    assert_eq!(clean.report.processed, browned.report.processed);
+    assert!(
+        browned.report.latency_p50_s >= clean.report.latency_p50_s,
+        "brownout p50 {} must not beat clean {}",
+        browned.report.latency_p50_s,
+        clean.report.latency_p50_s
+    );
+    assert!(
+        browned.report.latency_p95_s >= clean.report.latency_p95_s,
+        "brownout p95 {} must not beat clean {}",
+        browned.report.latency_p95_s,
+        clean.report.latency_p95_s
+    );
+    assert!(
+        browned.report.latency_mean_s > clean.report.latency_mean_s,
+        "a half-capacity link must measurably slow the mean"
+    );
+    let o = browned.report.outage.expect("armed schedule reports outage stats");
+    assert!(o.brownouts >= 1);
+}

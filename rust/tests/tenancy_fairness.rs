@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Tenancy fairness gates (DESIGN.md §13): the ISSUE 6 test battery
 //! over `coordinator::tenancy` — starvation freedom, weighted-share
 //! convergence, priority dominance, seed determinism, and

@@ -1,3 +1,8 @@
+// This battery deliberately drives the deprecated pre-RunSpec entry
+// points: it pins that every legacy name delegates to the builder
+// f64-record-identically (see coordinator::spec).
+#![allow(deprecated)]
+
 //! Tenancy parity gates (DESIGN.md §13): a single tenant with no
 //! admission cap IS the placement engine. `run_tenants` over one
 //! `TenantSpec` must be **f64-record-identical** to
